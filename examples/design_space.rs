@@ -1,0 +1,79 @@
+//! Design-space exploration: "The number of MACs per PE may be determined
+//! during the design phase" (paper §III). This example sweeps MACs-per-PE
+//! and the PSB depth for a fixed total MAC budget, reporting cycles, energy,
+//! area and MAC utilisation — the trade study a Maple adopter would run.
+//!
+//! ```text
+//! cargo run --release --example design_space
+//! ```
+
+use maple::accel::accelerator_pe_area;
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::sim::{profile_workload, simulate_workload};
+use maple::sparse::suite;
+
+fn main() {
+    let spec = suite::by_name("poisson3Da").expect("dataset registered");
+    let a = spec.generate_scaled(7, 2);
+    let w = profile_workload(&a, &a);
+    println!(
+        "dataset {} (1/2 scale): {}x{}, {} nnz, {} products\n",
+        spec.name,
+        a.rows(),
+        a.cols(),
+        a.nnz(),
+        w.total_products
+    );
+
+    // Fixed budget of 128 MACs, like the Extensor comparison (§IV.B.2).
+    const MAC_BUDGET: usize = 128;
+    println!(
+        "{:>8} {:>6} {:>10} {:>12} {:>10} {:>10} {:>8}",
+        "macs/pe", "pes", "cycles", "energy(uJ)", "area(mm2)", "util(%)", "balance"
+    );
+    for k in [1, 2, 4, 8, 16, 32, 64] {
+        let num_pes = MAC_BUDGET / k;
+        let mut cfg = AcceleratorConfig::extensor_maple();
+        cfg.name = format!("maple-k{k}");
+        cfg.pe.macs_per_pe = k;
+        cfg.num_pes = num_pes;
+        // Scale PE buffers with lane count: wider PEs need deeper BRB/PSB.
+        cfg.pe.brb_entries = 16 * k;
+        cfg.pe.psb_entries = 16 * k;
+        cfg.noc = maple::noc::Topology::Mesh {
+            width: num_pes.min(16),
+            height: num_pes.div_ceil(num_pes.min(16)),
+        };
+        let r = simulate_workload(&cfg, &w, Policy::GreedyBalance);
+        let area = accelerator_pe_area(&cfg).total_mm2();
+        println!(
+            "{:>8} {:>6} {:>10} {:>12.2} {:>10.3} {:>10.1} {:>8.3}",
+            k,
+            num_pes,
+            r.cycles_compute,
+            r.energy.total_pj() / 1e6,
+            area,
+            100.0 * r.mac_utilisation(&cfg),
+            r.balance
+        );
+    }
+
+    // PSB depth ablation at the paper's 16-MAC point: how small can the
+    // accumulator array get before segmentation passes bite?
+    println!("\nPSB depth ablation (16 MACs/PE, 8 PEs):");
+    println!("{:>8} {:>10} {:>12} {:>14}", "psb", "cycles", "energy(uJ)", "arb re-reads");
+    for psb in [32, 64, 128, 256, 512, 1024] {
+        let mut cfg = AcceleratorConfig::extensor_maple();
+        cfg.name = format!("maple-psb{psb}");
+        cfg.pe.psb_entries = psb;
+        let r = simulate_workload(&cfg, &w, Policy::GreedyBalance);
+        println!(
+            "{:>8} {:>10} {:>12.2} {:>14}",
+            psb,
+            r.cycles_compute,
+            r.energy.total_pj() / 1e6,
+            r.counters.arb_read
+        );
+    }
+}

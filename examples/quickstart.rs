@@ -1,0 +1,40 @@
+//! Quickstart: simulate the paper's headline comparison on one dataset.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::sim::{profile_workload, simulate_workload};
+use maple::sparse::suite;
+
+fn main() {
+    // 1. A Table-I workload (synthetic wikiVote-like; C = A × A as in §IV.A).
+    let spec = suite::by_name("wikiVote").expect("dataset registered");
+    let a = spec.generate(7);
+    println!("dataset: {} — {}x{}, {} nnz", spec.name, a.rows(), a.cols(), a.nnz());
+
+    // 2. Profile once (exact functional execution), reuse for both configs.
+    let w = profile_workload(&a, &a);
+    println!("workload: {} products -> {} output nnz", w.total_products, w.out_nnz);
+
+    // 3. Baseline Extensor vs Maple-based Extensor (128 MACs each).
+    let base = simulate_workload(&AcceleratorConfig::extensor_baseline(), &w, Policy::RoundRobin);
+    let mpl = simulate_workload(&AcceleratorConfig::extensor_maple(), &w, Policy::RoundRobin);
+
+    println!("\n{:<22} {:>14} {:>14}", "", "baseline", "maple");
+    println!("{:<22} {:>14} {:>14}", "cycles", base.cycles_compute, mpl.cycles_compute);
+    println!(
+        "{:<22} {:>14.1} {:>14.1}",
+        "energy (uJ)",
+        base.energy.total_pj() / 1e6,
+        mpl.energy.total_pj() / 1e6
+    );
+    println!(
+        "\nenergy benefit: {:.1}%   speedup: {:.1}%   (paper: ~60%, ~22%)",
+        mpl.energy_benefit_pct(&base),
+        mpl.speedup_pct(&base)
+    );
+    assert_eq!(base.checksum, mpl.checksum, "both configs computed the same C");
+}

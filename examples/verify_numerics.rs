@@ -1,0 +1,98 @@
+//! Numeric verification across all three layers:
+//!
+//! * L3 functional simulator (`MaplePe::simulate_row`) vs
+//! * software Gustavson reference (`spgemm_rowwise`) vs
+//! * the AOT-compiled Pallas datapath executed through PJRT
+//!   (`artifacts/maple_pe.hlo.txt`, built by `make artifacts`).
+//!
+//! ```text
+//! make artifacts && cargo run --release --example verify_numerics
+//! ```
+
+use maple::config::AcceleratorConfig;
+use maple::gustavson::spgemm_rowwise;
+use maple::pe::MaplePe;
+use maple::runtime::{artifacts_dir, MapleDatapath};
+use maple::sparse::gen::{generate, Profile};
+use maple::trace::Counters;
+
+fn main() {
+    let a = generate(96, 96, 900, Profile::PowerLaw { alpha: 0.6 }, 42);
+    let reference = spgemm_rowwise(&a, &a);
+    println!("workload: {}x{} matrix, {} nnz, C=A*A has {} nnz", a.rows(), a.cols(), a.nnz(), reference.nnz());
+
+    // --- L3 functional PE vs reference ---
+    let pe = MaplePe::from_config(&AcceleratorConfig::extensor_maple());
+    let mut counters = Counters::default();
+    let mut max_err = 0f32;
+    for i in 0..a.rows() {
+        let (cols, vals, _) = pe.simulate_row(&a, &a, i, &mut counters);
+        assert_eq!(cols.as_slice(), reference.row_cols(i), "row {i}: column set");
+        for (v, r) in vals.iter().zip(reference.row_values(i)) {
+            max_err = max_err.max((v - r).abs());
+        }
+    }
+    println!("L3 functional Maple PE vs reference: {} rows, max |err| = {max_err:.2e}", a.rows());
+    assert!(max_err < 1e-4);
+
+    // --- AOT Pallas datapath vs reference ---
+    let client = xla::PjRtClient::cpu().expect("CPU PJRT client");
+    let dp = match MapleDatapath::load(&client, &artifacts_dir()) {
+        Ok(dp) => dp,
+        Err(e) => {
+            eprintln!("SKIP: compiled datapath unavailable ({e}); run `make artifacts`");
+            return;
+        }
+    };
+    let meta = dp.meta();
+    println!("AOT datapath tile: kt={} nt={} (from artifacts/meta.json)", meta.kt, meta.nt);
+
+    let mut rows_checked = 0usize;
+    let mut max_err = 0f32;
+    for i in 0..a.rows() {
+        let out_cols = reference.row_cols(i);
+        if out_cols.is_empty() {
+            continue;
+        }
+        // Process the row in PSB windows of nt columns and ARB tiles of kt
+        // A-elements — exactly the Maple segmentation (paper §III).
+        let mut result = vec![0f32; out_cols.len()];
+        let lo0 = out_cols[0] as usize;
+        let hi = *out_cols.last().unwrap() as usize;
+        let mut win = lo0;
+        while win <= hi {
+            for (ci, chunk) in a.row_cols(i).chunks(meta.kt).enumerate() {
+                let base = a.row_ptr[i] + ci * meta.kt;
+                let mut a_vals = vec![0f32; meta.kt];
+                let mut b_dense = vec![0f32; meta.kt * meta.nt];
+                for (lane, &k) in chunk.iter().enumerate() {
+                    a_vals[lane] = a.value[base + lane];
+                    for (j, bv) in a.row_iter(k as usize) {
+                        let off = j as i64 - win as i64;
+                        if (0..meta.nt as i64).contains(&off) {
+                            b_dense[lane * meta.nt + off as usize] = bv;
+                        }
+                    }
+                }
+                let psb = dp.run_tile(&a_vals, &b_dense).expect("tile executes");
+                for (slot, &c) in out_cols.iter().enumerate() {
+                    let off = c as i64 - win as i64;
+                    if (0..meta.nt as i64).contains(&off) {
+                        result[slot] += psb[off as usize];
+                    }
+                }
+            }
+            win += meta.nt;
+        }
+        for (r, &want) in result.iter().zip(reference.row_values(i)) {
+            max_err = max_err.max((r - want).abs());
+        }
+        rows_checked += 1;
+        if rows_checked >= 48 {
+            break; // enough coverage; each row is many PJRT executions
+        }
+    }
+    println!("AOT Pallas datapath vs reference: {rows_checked} rows, max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-3, "compiled datapath diverges");
+    println!("OK: all three layers agree");
+}

@@ -1,0 +1,100 @@
+"""AOT pipeline: lower the L1 kernel and L2 model to HLO **text** artifacts.
+
+Interchange is HLO text, NOT ``lowered.compile()`` / serialized protos:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+pinned xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. Lower via stablehlo ->
+XlaComputation with ``return_tuple=True`` and unwrap with ``to_tuple1()``
+on the rust side (see /opt/xla-example/README.md).
+
+Usage::
+
+    cd python && python -m compile.aot --out-dir ../artifacts \
+        [--kt 16] [--nt 128] [--rows 8] [--block-n 64]
+
+Python runs ONCE at build time; `make artifacts` skips the rebuild when the
+inputs are unchanged.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import maple_pe
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_kernel(kt: int, nt: int, block_n: int) -> str:
+    """Lower one Maple-PE tile invocation: (kt,) x (kt, nt) -> (nt,)."""
+    a = jax.ShapeDtypeStruct((kt,), jnp.float32)
+    b = jax.ShapeDtypeStruct((kt, nt), jnp.float32)
+    lowered = jax.jit(
+        lambda av, bd: maple_pe.maple_pe(av, bd, block_n=block_n)
+    ).lower(a, b)
+    return to_hlo_text(lowered)
+
+
+def lower_model(rows: int, kt: int, nt: int, block_n: int) -> str:
+    """Lower the batched PE model: (rows, kt) x (kt, nt) -> (rows, nt)."""
+    a = jax.ShapeDtypeStruct((rows, kt), jnp.float32)
+    b = jax.ShapeDtypeStruct((kt, nt), jnp.float32)
+    lowered = jax.jit(
+        lambda ar, bd: model.maple_model(ar, bd, block_n=block_n)
+    ).lower(a, b)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--kt", type=int, default=maple_pe.KT)
+    ap.add_argument("--nt", type=int, default=maple_pe.NT)
+    ap.add_argument("--rows", type=int, default=8)
+    ap.add_argument("--block-n", type=int, default=maple_pe.BLOCK_N)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    kernel_hlo = lower_kernel(args.kt, args.nt, args.block_n)
+    kernel_path = os.path.join(args.out_dir, "maple_pe.hlo.txt")
+    with open(kernel_path, "w") as f:
+        f.write(kernel_hlo)
+    print(f"wrote {len(kernel_hlo)} chars to {kernel_path}")
+
+    model_hlo = lower_model(args.rows, args.kt, args.nt, args.block_n)
+    model_path = os.path.join(args.out_dir, "model.hlo.txt")
+    with open(model_path, "w") as f:
+        f.write(model_hlo)
+    print(f"wrote {len(model_hlo)} chars to {model_path}")
+
+    meta = {"kt": args.kt, "nt": args.nt, "rows": args.rows}
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f)
+    print(f"wrote {meta} to {meta_path}")
+
+    # Static perf notes for DESIGN.md §Perf (interpret=True gives no real
+    # TPU timing; structure is what we can assert at build time).
+    words = maple_pe.vmem_words(args.kt, args.nt, args.block_n)
+    util = maple_pe.mxu_utilization_estimate(args.kt, args.block_n)
+    print(
+        f"VMEM working set per grid step: {words['total']} f32 words "
+        f"({words}); MXU pass occupancy estimate: {util:.3f}"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Layer 1 — the Maple PE datapath as a Pallas kernel.
+
+The paper's PE (Fig. 6) is k scalar MACs with a scatter-addressed PSB
+register file at 45 nm. A TPU has neither scalar lanes nor a
+scatter-addressed register file, so the kernel re-expresses the insight —
+*do as much local work per operand fetch as possible* — in TPU terms
+(DESIGN.md §Hardware-Adaptation):
+
+* ARB / BRB / PSB map to **VMEM tiles** via ``BlockSpec``; the HBM↔VMEM
+  schedule plays the role of the paper's L1↔L0 staging.
+* the k-lane multiply plus the per-register adder array (Eqs. 3/7/8) become
+  one **MXU pass**: ``psb = a_vals @ b_dense`` where ``b_dense[k, n]`` is the
+  BRB content expanded over the PSB window — the systolic array performs the
+  parallel multiplies *and* the parallel accumulation in one shot.
+* "MACs per PE" becomes the PSB-window block width ``block_n``, swept by
+  the AOT pipeline exactly like the paper's design-phase MAC-count knob.
+
+The kernel must run with ``interpret=True``: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute (aot_recipe).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile geometry: one ARB load (kt A-elements) against one PSB
+# window of nt output columns, processed in block_n-wide MXU passes.
+KT = 16
+NT = 128
+BLOCK_N = 64
+
+
+def _maple_pe_block(a_ref, b_ref, o_ref):
+    """One PSB block: o[n] = sum_k a[k] * b[k, n] (Eq. 3 + Eq. 7).
+
+    ``a_ref`` is the whole ARB (kt values, VMEM-resident for every block —
+    an A-element is fetched once and reused across the PSB window, the
+    locality Maple's ARB exists to provide). ``b_ref`` is the BRB slice for
+    this block; the dot contracts over k on the MXU.
+    """
+    a = a_ref[...]  # (kt,)
+    b = b_ref[...]  # (kt, block_n)
+    # MXU pass: parallel multiply + parallel accumulate (the adder array).
+    o_ref[...] = jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _maple_pe_core(a_vals: jax.Array, b_dense: jax.Array, block_n: int) -> jax.Array:
+    """Differentiable core: forward runs the Pallas kernel; the VJP is the
+    closed-form transpose (interpret-mode Pallas does not provide
+    reverse-mode autodiff in this JAX version, and the explicit rule is
+    what a production kernel would ship anyway)."""
+    kt, nt = b_dense.shape
+    grid = (nt // block_n,)
+    return pl.pallas_call(
+        _maple_pe_block,
+        grid=grid,
+        in_specs=[
+            # ARB: replicated to every block (A-value reuse).
+            pl.BlockSpec((kt,), lambda n: (0,)),
+            # BRB: one PSB-window slice per block.
+            pl.BlockSpec((kt, block_n), lambda n: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda n: (n,)),
+        out_shape=jax.ShapeDtypeStruct((nt,), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(a_vals, b_dense)
+
+
+def _maple_pe_fwd(a_vals, b_dense, block_n):
+    return _maple_pe_core(a_vals, b_dense, block_n), (a_vals, b_dense)
+
+
+def _maple_pe_bwd(block_n, res, g):
+    a_vals, b_dense = res
+    # psb = a @ b  =>  d a = g @ bᵀ,  d b = a ⊗ g.
+    return (g @ b_dense.T, jnp.outer(a_vals, g))
+
+
+_maple_pe_core.defvjp(_maple_pe_fwd, _maple_pe_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def maple_pe(a_vals: jax.Array, b_dense: jax.Array, *, block_n: int = BLOCK_N) -> jax.Array:
+    """PSB contents for one (A-row-tile, PSB-window) pair.
+
+    Args:
+      a_vals: ``(kt,)`` f32 — ARB lane values (zero-padded when the A row
+        has fewer nonzeros; zeros contribute nothing, matching the PE
+        control's ``row_ptr`` gating, Fig. 7).
+      b_dense: ``(kt, nt)`` f32 — BRB content: row ``k`` holds the nonzeros
+        of ``B[k',:]`` expanded over the PSB window's column range (the C/D
+        expansion the rust runtime performs from CSR metadata).
+      block_n: PSB columns per MXU pass (the "MACs per PE" analogue).
+
+    Returns:
+      ``(nt,)`` f32 — the PSB after accumulation (Eq. 8).
+    """
+    kt, nt = b_dense.shape
+    if a_vals.shape != (kt,):
+        raise ValueError(f"a_vals {a_vals.shape} incompatible with b_dense {b_dense.shape}")
+    if nt % block_n != 0:
+        raise ValueError(f"nt={nt} not a multiple of block_n={block_n}")
+    return _maple_pe_core(a_vals, b_dense, block_n)
+
+
+def vmem_words(kt: int = KT, nt: int = NT, block_n: int = BLOCK_N) -> dict:
+    """Static VMEM footprint estimate per grid step (DESIGN.md §Perf):
+    the resident working set is ARB + one BRB block + one PSB block."""
+    return {
+        "arb": kt,
+        "brb_block": kt * block_n,
+        "psb_block": block_n,
+        "total": kt + kt * block_n + block_n,
+    }
+
+
+def mxu_utilization_estimate(kt: int = KT, block_n: int = BLOCK_N) -> float:
+    """Fraction of a 128x128 MXU pass doing useful work for one block:
+    a (1,kt)x(kt,block_n) product occupies kt rows and block_n columns."""
+    return min(kt, 128) * min(block_n, 128) / (128.0 * 128.0)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Everything here is straight-line jnp with no Pallas, no blocking and no
+cleverness: `maple_pe_ref` is literally Eqs. (3)+(7) of the paper on the
+expanded tile.
+"""
+
+import jax.numpy as jnp
+
+
+def maple_pe_ref(a_vals, b_dense):
+    """PSB reference: psb[n] = sum_k a[k] * b[k, n]."""
+    return jnp.einsum("k,kn->n", a_vals, b_dense)
+
+
+def maple_batch_ref(a_rows, b_dense):
+    """Batched-rows reference: out[r, n] = sum_k a[r, k] * b[k, n]."""
+    return jnp.einsum("rk,kn->rn", a_rows, b_dense)
+
+
+def gustavson_dense_ref(a, b):
+    """Dense Gustavson reference: row-by-row accumulation of scaled B rows,
+    written exactly as the paper's Eq. (1)/(2) (used to cross-check that the
+    tile decomposition reconstructs full SpGEMM)."""
+    m = a.shape[0]
+    rows = []
+    for i in range(m):
+        # C[i,:] = sum_k A[i,k] * B[k,:]
+        rows.append(jnp.sum(a[i][:, None] * b, axis=0))
+    return jnp.stack(rows)

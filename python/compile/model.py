@@ -1,0 +1,48 @@
+"""Layer 2 — the Gustavson compute graph, calling the Layer-1 kernel.
+
+The "model" for a sparse-accelerator paper is the dataflow itself: a batch
+of A-row tiles multiplied against a shared BRB expansion — what one Maple PE
+does for `rows` consecutive output rows of `C = A x B` (the coordinator's
+per-PE batch, rust `coordinator::batch_rows_by_reuse`).
+
+This module is build-time only: `aot.py` lowers [`maple_model`] to HLO text
+once; the rust runtime executes the artifact via PJRT with no Python on the
+request path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import maple_pe
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def maple_model(a_rows: jax.Array, b_dense: jax.Array, *, block_n: int = maple_pe.BLOCK_N):
+    """A PE batch: `rows` A-row tiles against one shared BRB expansion.
+
+    Args:
+      a_rows: ``(rows, kt)`` f32 — ARB contents for a batch of output rows
+        (zero-padded lanes).
+      b_dense: ``(kt, nt)`` f32 — shared BRB expansion; batching rows that
+        reference the same B rows is exactly the reuse the coordinator's
+        batcher creates.
+
+    Returns:
+      ``(rows, nt)`` f32 — one PSB window per output row.
+    """
+    # vmap over the batch: each row is an independent Maple PE invocation;
+    # XLA fuses the batch into one (rows,kt)x(kt,nt) MXU product.
+    return jax.vmap(lambda a: maple_pe.maple_pe(a, b_dense, block_n=block_n))(a_rows)
+
+
+def loss_fn(a_rows, b_dense, target):
+    """A scalar objective over the model output, used only to exercise the
+    backward pass: grads w.r.t. the ARB values flow through the Pallas
+    kernel (interpret mode differentiates cleanly)."""
+    out = maple_model(a_rows, b_dense)
+    return jnp.sum((out - target) ** 2)
+
+
+maple_model_grad = jax.jit(jax.grad(loss_fn, argnums=0))

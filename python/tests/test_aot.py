@@ -1,0 +1,75 @@
+"""AOT pipeline tests: HLO-text artifacts are produced, parse as HLO, and
+stay within the version constraints the rust loader depends on."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from compile import aot
+from compile.kernels import maple_pe
+
+
+def test_kernel_lowers_to_hlo_text():
+    hlo = aot.lower_kernel(kt=16, nt=128, block_n=64)
+    assert hlo.startswith("HloModule")
+    # Lowered with return_tuple=True: the root must be a tuple (the rust
+    # side unwraps with to_tuple1()).
+    assert "f32[128]" in hlo
+    assert "ROOT" in hlo and "tuple" in hlo
+
+
+def test_model_lowers_to_hlo_text():
+    hlo = aot.lower_model(rows=8, kt=16, nt=128, block_n=64)
+    assert hlo.startswith("HloModule")
+    assert "f32[8,128]" in hlo
+
+
+def test_interpret_mode_leaves_no_custom_calls():
+    """interpret=True must lower to plain HLO ops — a Mosaic custom-call
+    would be unloadable by the CPU PJRT client (aot_recipe)."""
+    hlo = aot.lower_kernel(kt=16, nt=128, block_n=64)
+    assert "custom-call" not in hlo, "Mosaic custom-call leaked into the artifact"
+
+
+def test_cli_writes_all_artifacts(tmp_path):
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "compile.aot",
+            "--out-dir",
+            str(out),
+            "--kt",
+            "8",
+            "--nt",
+            "64",
+            "--rows",
+            "4",
+            "--block-n",
+            "32",
+        ],
+        check=True,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env,
+    )
+    assert (out / "maple_pe.hlo.txt").exists()
+    assert (out / "model.hlo.txt").exists()
+    meta = json.loads((out / "meta.json").read_text())
+    assert meta == {"kt": 8, "nt": 64, "rows": 4}
+
+
+@pytest.mark.parametrize("kt,nt,block_n", [(8, 64, 32), (16, 128, 64), (32, 256, 128)])
+def test_lowering_shape_matrix(kt, nt, block_n):
+    hlo = aot.lower_kernel(kt=kt, nt=nt, block_n=block_n)
+    assert f"f32[{nt}]" in hlo
+
+
+def test_meta_matches_kernel_defaults():
+    assert maple_pe.KT == 16
+    assert maple_pe.NT == 128
+    assert maple_pe.NT % maple_pe.BLOCK_N == 0

@@ -1,0 +1,124 @@
+"""L1 correctness: the Pallas Maple-PE kernel against the pure-jnp oracle.
+
+Hypothesis sweeps tile shapes, block widths and value distributions;
+every case asserts allclose against `ref.maple_pe_ref`.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import maple_pe, ref
+
+hypothesis.settings.register_profile(
+    "kernel", deadline=None, max_examples=40, derandomize=True
+)
+hypothesis.settings.load_profile("kernel")
+
+
+def _rand(rng, shape, sparsity=0.0):
+    x = rng.standard_normal(shape).astype(np.float32)
+    if sparsity > 0.0:
+        mask = rng.random(shape) < sparsity
+        x = np.where(mask, 0.0, x)
+    return x
+
+
+def test_single_tile_matches_ref():
+    rng = np.random.default_rng(0)
+    a = _rand(rng, (maple_pe.KT,))
+    b = _rand(rng, (maple_pe.KT, maple_pe.NT))
+    got = maple_pe.maple_pe(a, b)
+    want = ref.maple_pe_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_zero_padded_lanes_are_inert():
+    """Zero ARB lanes (row_ptr gating, Fig. 7) must not perturb the PSB."""
+    rng = np.random.default_rng(1)
+    kt, nt = maple_pe.KT, maple_pe.NT
+    a = _rand(rng, (kt,))
+    b = _rand(rng, (kt, nt))
+    a_padded = a.copy()
+    a_padded[kt // 2 :] = 0.0
+    got = maple_pe.maple_pe(a_padded, b)
+    want = ref.maple_pe_ref(a_padded, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # And equals the half-tile contraction explicitly.
+    want_half = ref.maple_pe_ref(a[: kt // 2], b[: kt // 2])
+    np.testing.assert_allclose(got, want_half, rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.given(
+    kt=st.sampled_from([4, 8, 16, 32]),
+    nblocks=st.integers(min_value=1, max_value=4),
+    block_n=st.sampled_from([8, 32, 64, 128]),
+    sparsity=st.sampled_from([0.0, 0.5, 0.9]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_shape_sweep(kt, nblocks, block_n, sparsity, seed):
+    nt = nblocks * block_n
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (kt,), sparsity)
+    b = _rand(rng, (kt, nt), sparsity)
+    got = maple_pe.maple_pe(a, b, block_n=block_n)
+    want = ref.maple_pe_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.given(
+    scale=st.sampled_from([1e-6, 1.0, 1e6]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_value_range_sweep(scale, seed):
+    """Magnitude sweep: tiny and huge values stay allclose (fp32)."""
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, (maple_pe.KT,)) * scale
+    b = _rand(rng, (maple_pe.KT, maple_pe.NT))
+    got = maple_pe.maple_pe(a, b)
+    want = ref.maple_pe_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5 * scale)
+
+
+def test_block_width_is_numerically_irrelevant():
+    """block_n (the MACs-per-PE analogue) changes scheduling, not values."""
+    rng = np.random.default_rng(3)
+    a = _rand(rng, (maple_pe.KT,))
+    b = _rand(rng, (maple_pe.KT, maple_pe.NT))
+    outs = [
+        np.asarray(maple_pe.maple_pe(a, b, block_n=w)) for w in (8, 16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], rtol=1e-6, atol=1e-6)
+
+
+def test_shape_validation():
+    a = jnp.zeros((8,), jnp.float32)
+    b = jnp.zeros((16, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        maple_pe.maple_pe(a, b)
+    with pytest.raises(ValueError):
+        maple_pe.maple_pe(jnp.zeros((16,)), b, block_n=96)  # 128 % 96 != 0
+
+
+def test_vmem_and_mxu_estimates_monotone():
+    """Structural perf model sanity: bigger blocks = bigger working set and
+    higher MXU occupancy (until the 128-lane edge)."""
+    small = maple_pe.vmem_words(block_n=32)["total"]
+    large = maple_pe.vmem_words(block_n=128)["total"]
+    assert large > small
+    assert maple_pe.mxu_utilization_estimate(16, 128) > maple_pe.mxu_utilization_estimate(16, 32)
+    assert maple_pe.mxu_utilization_estimate(128, 128) == 1.0
+
+
+def test_kernel_is_differentiable():
+    """Interpret-mode Pallas must differentiate (the L2 backward pass)."""
+    rng = np.random.default_rng(4)
+    a = jnp.asarray(_rand(rng, (maple_pe.KT,)))
+    b = jnp.asarray(_rand(rng, (maple_pe.KT, maple_pe.NT)))
+    g = jax.grad(lambda av: jnp.sum(maple_pe.maple_pe(av, b) ** 2))(a)
+    want = 2.0 * (ref.maple_pe_ref(a, b) @ b.T)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(want), rtol=1e-4, atol=1e-4)

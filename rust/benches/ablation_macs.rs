@@ -1,0 +1,76 @@
+//! Bench: ablation of the design choices DESIGN.md calls out —
+//! MACs-per-PE (the paper's central design knob, §III), PSB depth (the
+//! segmentation trade-off), Matraptor merge passes, and partition policy.
+//!
+//! ```text
+//! cargo bench --bench ablation_macs
+//! ```
+
+include!("harness.rs");
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::sim::{profile_workload, simulate_workload};
+
+fn main() {
+    let scale = bench_scale();
+    let spec = maple::sparse::suite::by_name("p3").unwrap();
+    let a = spec.generate_scaled(7, scale.min(4));
+    let w = profile_workload(&a, &a);
+    println!(
+        "dataset {} (1/{} scale): {} products, {} out nnz\n",
+        spec.abbrev,
+        scale.min(4),
+        w.total_products,
+        w.out_nnz
+    );
+
+    println!("--- MACs/PE at a fixed 128-MAC budget (who wins where?) ---");
+    println!("{:>8} {:>6} {:>12} {:>12} {:>9}", "macs/pe", "pes", "cycles", "energy uJ", "util %");
+    for k in [1, 2, 4, 8, 16, 32] {
+        let mut cfg = AcceleratorConfig::extensor_maple();
+        cfg.pe.macs_per_pe = k;
+        cfg.num_pes = 128 / k;
+        cfg.pe.brb_entries = 16 * k;
+        cfg.pe.psb_entries = 16 * k;
+        let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+        println!(
+            "{:>8} {:>6} {:>12} {:>12.2} {:>9.1}",
+            k,
+            cfg.num_pes,
+            r.cycles_compute,
+            r.energy.total_pj() / 1e6,
+            100.0 * r.mac_utilisation(&cfg)
+        );
+    }
+
+    println!("\n--- PSB depth (segmentation cost) ---");
+    println!("{:>8} {:>12} {:>12}", "psb", "cycles", "arb re-reads");
+    for psb in [16, 32, 64, 128, 256, 512] {
+        let mut cfg = AcceleratorConfig::extensor_maple();
+        cfg.pe.psb_entries = psb;
+        let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+        println!("{:>8} {:>12} {:>12}", psb, r.cycles_compute, r.counters.arb_read);
+    }
+
+    println!("\n--- Matraptor baseline merge passes (round-robin accumulate depth) ---");
+    println!("{:>8} {:>12} {:>14}", "passes", "queue words", "energy uJ");
+    for passes in [1, 2, 4, 6, 8] {
+        let mut cfg = AcceleratorConfig::matraptor_baseline();
+        cfg.merge_passes = passes;
+        let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+        println!(
+            "{:>8} {:>12} {:>14.2}",
+            passes,
+            r.counters.queue_read + r.counters.queue_write,
+            r.energy.total_pj() / 1e6
+        );
+    }
+
+    println!("\n--- Partition policy (coordinator ablation) ---");
+    println!("{:>14} {:>12} {:>9}", "policy", "cycles", "balance");
+    for policy in [Policy::RoundRobin, Policy::Chunked, Policy::GreedyBalance] {
+        let r = simulate_workload(&AcceleratorConfig::extensor_maple(), &w, policy);
+        println!("{:>14} {:>12} {:>9.3}", format!("{policy:?}"), r.cycles_compute, r.balance);
+    }
+}

@@ -1,0 +1,83 @@
+//! Bench: transaction-level DES vs the analytic pipeline model — the
+//! methodology check behind every Fig.-9(b) number (DESIGN.md §4 `sim/`).
+//! Prints, per dataset family and configuration, both cycle counts and
+//! their ratio; the DES includes DRAM/NoC fetch latency the analytic model
+//! idealises, so ratios sit modestly above 1.0 and both models must agree
+//! on the Maple-vs-baseline winner.
+//!
+//! ```text
+//! cargo bench --bench des_validation
+//! ```
+
+include!("harness.rs");
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::sim::{profile_workload, simulate_des, simulate_workload};
+
+fn main() {
+    let scale = bench_scale();
+    println!("=== DES vs analytic cycle model (scale 1/{scale}) ===\n");
+    println!(
+        "{:<8} {:<22} {:>12} {:>12} {:>12} {:>7} {:>7} {:>12}",
+        "dataset", "config", "analytic", "fetch-bnd", "DES", "ratio", "util%", "regime"
+    );
+    let mut agreements = 0;
+    let mut comparisons = 0;
+    for name in ["wg", "of", "sc", "wv"] {
+        let spec = maple::sparse::suite::by_name(name).unwrap();
+        let a = spec.generate_scaled(7, scale.max(32));
+        let w = profile_workload(&a, &a);
+        // The DES models the *un-idealised* fetch path: every row pulls its
+        // own operands (2·a_nnz + 2·products words) from DRAM, so its lower
+        // bound is that volume over the port bandwidth — not the compulsory
+        // bound the analytic energy model idealises (DESIGN.md §6b.1).
+        let fetch_words: u64 =
+            w.profiles.iter().map(|p| 2 * p.a_nnz as u64 + 2 * p.products).sum();
+        let mut rows = Vec::new();
+        for cfg in AcceleratorConfig::paper_configs() {
+            let analytic = simulate_workload(&cfg, &w, Policy::RoundRobin);
+            let fetch_bound = (fetch_words as f64 / cfg.dram.words_per_cycle).ceil() as u64;
+            let expected = analytic.cycles_compute.max(fetch_bound);
+            let des = simulate_des(&cfg, &w, Policy::RoundRobin);
+            let regime = if fetch_bound > analytic.cycles_compute { "fetch" } else { "datapath" };
+            println!(
+                "{:<8} {:<22} {:>12} {:>12} {:>12} {:>7.2} {:>7.1} {:>12}",
+                name,
+                cfg.name,
+                analytic.cycles_compute,
+                fetch_bound,
+                des.cycles,
+                des.cycles as f64 / expected as f64,
+                100.0 * des.pe_utilisation,
+                regime
+            );
+            rows.push((expected, des.cycles, regime));
+        }
+        // Winner agreement within each pair, on the bound-aware expectation.
+        for pair in [(0usize, 1usize), (2, 3)] {
+            comparisons += 1;
+            let expect_maple_wins_or_ties = rows[pair.1].0 <= rows[pair.0].0;
+            // Allow 2% slack for event-ordering noise when DRAM-saturated.
+            let des_maple_wins_or_ties =
+                rows[pair.1].1 as f64 <= rows[pair.0].1 as f64 * 1.02;
+            if expect_maple_wins_or_ties == des_maple_wins_or_ties {
+                agreements += 1;
+            }
+        }
+    }
+    println!(
+        "\nbound-aware winner agreement: {agreements}/{comparisons} comparisons \
+         (DES ratio ≈ 1 in the fetch regime, 1–2 in the datapath regime)"
+    );
+
+    // DES throughput.
+    let spec = maple::sparse::suite::by_name("wv").unwrap();
+    let a = spec.generate_scaled(7, 4);
+    let w = profile_workload(&a, &a);
+    let cfg = AcceleratorConfig::extensor_maple();
+    let (iters, total) = measure(std::time::Duration::from_millis(700), || {
+        std::hint::black_box(simulate_des(&cfg, &w, Policy::RoundRobin).cycles);
+    });
+    report_line("simulate_des[extensor-maple]", iters, total, Some((w.rows as u64, "rows")));
+}

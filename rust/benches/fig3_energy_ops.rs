@@ -1,0 +1,47 @@
+//! Bench: regenerate **Fig. 3** — normalized energy cost of computation and
+//! data movement at 45 nm — and measure the energy-aggregation hot path.
+//!
+//! ```text
+//! cargo bench --bench fig3_energy_ops
+//! ```
+
+include!("harness.rs");
+
+use maple::energy::{BufferSizes, EnergyBreakdown, TechModel};
+use maple::report;
+use maple::trace::Counters;
+
+fn main() {
+    println!("=== Fig. 3 (paper §III) ===\n{}", report::fig3(true));
+
+    // Sanity: the figure's message — movement dominates arithmetic.
+    let t = TechModel::tech45();
+    let rows: std::collections::HashMap<_, _> = t.fig3_rows().into_iter().collect();
+    println!(
+        "L2<->MAC / MAC = {:.0}x   L1<->MAC / MAC = {:.1}x   PE<->MAC / MAC = {:.1}x",
+        rows["L2<->MAC"], rows["L1<->MAC"], rows["PE<->MAC"]
+    );
+
+    // Aggregation throughput (the per-run energy fold).
+    let c = Counters {
+        mac_mul: 1 << 20,
+        mac_add: 1 << 20,
+        brb_read: 1 << 21,
+        psb_write: 1 << 20,
+        l1_read: 1 << 19,
+        dram_read: 1 << 18,
+        noc_flit_hops: 1 << 19,
+        ..Default::default()
+    };
+    let sizes = BufferSizes {
+        pe_buffer_bytes: 48 << 10,
+        l1_bytes: 512 << 10,
+        pob_bytes: 0,
+        reg_bytes: 2 << 10,
+    };
+    let (iters, total) = measure(std::time::Duration::from_millis(300), || {
+        let e = EnergyBreakdown::from_counters(&c, &t, &sizes);
+        std::hint::black_box(e.total_pj());
+    });
+    report_line("EnergyBreakdown::from_counters", iters, total, None);
+}

@@ -1,0 +1,39 @@
+//! Bench: regenerate **Fig. 8(a)+(b)** — PE area, baseline vs Maple, for
+//! both reference accelerators, with the paper's headline ratios.
+//!
+//! ```text
+//! cargo bench --bench fig8_area
+//! ```
+
+include!("harness.rs");
+
+use maple::config::AcceleratorConfig;
+use maple::report;
+
+fn main() {
+    println!("=== Fig. 8(a) — Matraptor (paper: 5.9x / 84% less) ===");
+    print!(
+        "{}",
+        report::fig8_report(
+            &AcceleratorConfig::matraptor_baseline(),
+            &AcceleratorConfig::matraptor_maple(),
+            true,
+        )
+    );
+    println!("\n=== Fig. 8(b) — Extensor (paper: 15.5x / 90% less) ===");
+    print!(
+        "{}",
+        report::fig8_report(
+            &AcceleratorConfig::extensor_baseline(),
+            &AcceleratorConfig::extensor_maple(),
+            true,
+        )
+    );
+
+    let (iters, total) = measure(std::time::Duration::from_millis(200), || {
+        for cfg in AcceleratorConfig::paper_configs() {
+            std::hint::black_box(maple::accel::accelerator_pe_area(&cfg).total_mm2());
+        }
+    });
+    report_line("accelerator_pe_area (4 configs)", iters, total, None);
+}

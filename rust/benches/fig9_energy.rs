@@ -1,0 +1,67 @@
+//! Bench: regenerate **Fig. 9(a)** — per-dataset energy benefit (%) of the
+//! Maple-based configurations over the baselines, plus the paper-style mean
+//! (paper: ~50% Matraptor, ~60% Extensor).
+//!
+//! ```text
+//! cargo bench --bench fig9_energy
+//! MAPLE_BENCH_SCALE=1 cargo bench --bench fig9_energy    # full Table-I scale
+//! ```
+
+include!("harness.rs");
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::report::Fig9Row;
+use maple::sim::{profile_workload, simulate_workload};
+use maple::sparse::suite;
+
+fn main() {
+    let scale = bench_scale();
+    println!("=== Fig. 9(a) — energy benefit %, scale 1/{scale} ===\n");
+    println!(
+        "{:<8} {:>14} {:>14} | {:>14} {:>14}",
+        "dataset", "matraptor %", "extensor %", "base uJ (mat)", "maple uJ (mat)"
+    );
+
+    let rows: Vec<(Fig9Row, Fig9Row)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = suite::TABLE_I
+            .iter()
+            .map(|spec| {
+                scope.spawn(move || {
+                    let a = if scale <= 1 {
+                        spec.generate(7)
+                    } else {
+                        spec.generate_scaled(7, scale)
+                    };
+                    let w = profile_workload(&a, &a);
+                    let run = |c: &AcceleratorConfig| simulate_workload(c, &w, Policy::RoundRobin);
+                    let mb = run(&AcceleratorConfig::matraptor_baseline());
+                    let mm = run(&AcceleratorConfig::matraptor_maple());
+                    let eb = run(&AcceleratorConfig::extensor_baseline());
+                    let em = run(&AcceleratorConfig::extensor_maple());
+                    (
+                        Fig9Row::from_results(spec.abbrev, &mb, &mm),
+                        Fig9Row::from_results(spec.abbrev, &eb, &em),
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (m, e) in &rows {
+        println!(
+            "{:<8} {:>14.1} {:>14.1} | {:>14.1} {:>14.1}",
+            m.dataset,
+            m.energy_benefit_pct,
+            e.energy_benefit_pct,
+            m.baseline_pj / 1e6,
+            m.maple_pj / 1e6
+        );
+    }
+    let mean_m =
+        rows.iter().map(|(m, _)| m.energy_benefit_pct).sum::<f64>() / rows.len() as f64;
+    let mean_e =
+        rows.iter().map(|(_, e)| e.energy_benefit_pct).sum::<f64>() / rows.len() as f64;
+    println!("\nmean energy benefit: Matraptor {mean_m:.1}% (paper ~50%), Extensor {mean_e:.1}% (paper ~60%)");
+}

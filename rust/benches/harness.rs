@@ -1,0 +1,45 @@
+// Shared micro-bench helpers for the harness-less (`harness = false`)
+// benches — the offline build has no criterion (DESIGN.md §Dependencies).
+// Each bench is a plain binary that prints a stable, grep-able report.
+//
+// Pulled into each bench via `include!("harness.rs")`.
+
+use std::time::{Duration, Instant};
+
+/// Benchmark scale divisor for the Table-I matrices; override with
+/// `MAPLE_BENCH_SCALE=1` for full-size runs.
+#[allow(dead_code)]
+fn bench_scale() -> usize {
+    std::env::var("MAPLE_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(24)
+}
+
+/// Run `f` repeatedly for at least `min_time`, returning (iters, total).
+#[allow(dead_code)]
+fn measure<F: FnMut()>(min_time: Duration, mut f: F) -> (u32, Duration) {
+    // Warm-up.
+    f();
+    let start = Instant::now();
+    let mut iters = 0u32;
+    while start.elapsed() < min_time {
+        f();
+        iters += 1;
+    }
+    (iters, start.elapsed())
+}
+
+/// Print one benchmark line: name, per-iteration time, optional throughput.
+#[allow(dead_code)]
+fn report_line(name: &str, iters: u32, total: Duration, items_per_iter: Option<(u64, &str)>) {
+    let per_iter = total.as_secs_f64() / iters.max(1) as f64;
+    match items_per_iter {
+        Some((n, unit)) => {
+            let rate = n as f64 / per_iter;
+            println!(
+                "{name:<44} {:>12.3} ms/iter   {:>14.0} {unit}/s",
+                per_iter * 1e3,
+                rate
+            );
+        }
+        None => println!("{name:<44} {:>12.3} ms/iter", per_iter * 1e3),
+    }
+}

@@ -1,0 +1,72 @@
+//! Bench: the L3 hot paths — profile pass throughput, full-simulation
+//! throughput, functional PE datapath, reference SpGEMM, and partition
+//! policies. This is the §Perf working set (EXPERIMENTS.md).
+//!
+//! ```text
+//! cargo bench --bench hotpath
+//! ```
+
+include!("harness.rs");
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::{partition, Policy};
+use maple::gustavson::spgemm_rowwise;
+
+fn main() {
+    // Workload: wikiVote-like at half scale — large enough to be
+    // representative (~1M products), small enough to iterate.
+    let spec = maple::sparse::suite::by_name("wv").unwrap();
+    let a = spec.generate_scaled(7, 2);
+    let w = maple::sim::profile_workload(&a, &a);
+    println!(
+        "workload: {}x{}, {} nnz, {} products, {} out nnz\n",
+        a.rows(),
+        a.cols(),
+        a.nnz(),
+        w.total_products,
+        w.out_nnz
+    );
+
+    // 1. Profile pass (exact functional execution).
+    let (iters, total) = measure(std::time::Duration::from_secs(1), || {
+        std::hint::black_box(maple::sim::profile_workload(&a, &a).total_products);
+    });
+    report_line("profile_workload", iters, total, Some((w.total_products, "products")));
+
+    // 2. Reference SpGEMM (materialises C).
+    let (iters, total) = measure(std::time::Duration::from_secs(1), || {
+        std::hint::black_box(spgemm_rowwise(&a, &a).nnz());
+    });
+    report_line("spgemm_rowwise", iters, total, Some((w.total_products, "products")));
+
+    // 3. Cost-model simulation per config (given a profile).
+    for cfg in AcceleratorConfig::paper_configs() {
+        let (iters, total) = measure(std::time::Duration::from_millis(700), || {
+            std::hint::black_box(
+                maple::sim::simulate_workload(&cfg, &w, Policy::RoundRobin).cycles_compute,
+            );
+        });
+        report_line(&format!("simulate[{}]", cfg.name), iters, total, Some((w.rows as u64, "rows")));
+    }
+
+    // 4. Functional Maple PE datapath (element-exact simulation).
+    let pe = maple::pe::MaplePe::from_config(&AcceleratorConfig::extensor_maple());
+    let (iters, total) = measure(std::time::Duration::from_secs(1), || {
+        let mut c = maple::trace::Counters::default();
+        let mut acc = 0u64;
+        for i in 0..a.rows().min(512) {
+            let (cols, _, cyc) = pe.simulate_row(&a, &a, i, &mut c);
+            acc += cols.len() as u64 + cyc;
+        }
+        std::hint::black_box(acc);
+    });
+    report_line("MaplePe::simulate_row (512 rows)", iters, total, Some((512, "rows")));
+
+    // 5. Partition policies.
+    for policy in [Policy::RoundRobin, Policy::Chunked, Policy::GreedyBalance] {
+        let (iters, total) = measure(std::time::Duration::from_millis(400), || {
+            std::hint::black_box(partition(policy, 128, &w.profiles).total_rows());
+        });
+        report_line(&format!("partition[{policy:?}]"), iters, total, Some((w.rows as u64, "rows")));
+    }
+}

@@ -1,0 +1,46 @@
+//! Bench: regenerate **Table I** — synthesise every dataset, validate its
+//! statistics against the paper's columns, and measure generator throughput.
+//!
+//! ```text
+//! cargo bench --bench table1_datasets
+//! MAPLE_BENCH_SCALE=1 cargo bench --bench table1_datasets   # full scale
+//! ```
+
+include!("harness.rs");
+
+use maple::report;
+use maple::sparse::{stats, suite};
+
+fn main() {
+    let scale = bench_scale();
+    println!("=== Table I (paper §IV.A) ===\n{}", report::table1(true));
+    println!("=== synthesis at scale 1/{scale}: measured statistics ===");
+    println!(
+        "{:<20} {:>9} {:>10} {:>11} {:>11} {:>9}",
+        "dataset", "rows", "nnz", "density", "paper", "gen ms"
+    );
+    for spec in suite::TABLE_I {
+        let t0 = std::time::Instant::now();
+        let a = if scale <= 1 { spec.generate(7) } else { spec.generate_scaled(7, scale) };
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let s = stats::row_stats(&a);
+        println!(
+            "{:<20} {:>9} {:>10} {:>11.2e} {:>11.2e} {:>9.1}",
+            spec.abbrev,
+            s.rows,
+            s.nnz,
+            s.density,
+            spec.density(),
+            ms
+        );
+    }
+
+    // Generator throughput micro-bench on the densest dataset.
+    let spec = suite::by_name("fb").unwrap();
+    let (iters, total) = measure(std::time::Duration::from_millis(500), || {
+        let a = spec.generate_scaled(7, scale.max(2));
+        std::hint::black_box(a.nnz());
+    });
+    let nnz = spec.generate_scaled(7, scale.max(2)).nnz() as u64;
+    report_line("generate(facebook, scaled)", iters, total, Some((nnz, "nnz")));
+}

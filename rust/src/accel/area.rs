@@ -1,0 +1,131 @@
+//! PE and accelerator area assembly — reproduces the paper's Fig. 8.
+//!
+//! Fig. 8 splits PE area into MAC / buffers / logic and compares the
+//! baseline PE complex against the Maple PE complex for each reference
+//! accelerator; the headline ratios are **5.9×** (Matraptor) and **15.5×**
+//! (Extensor) smaller total PE area ("Maple consumes 84% and 90% less
+//! area", §IV.B.3 — the same comparison expressed as a percentage).
+
+use crate::area::{adder_mm2, control_mm2, latch_mm2, mac_mm2, sram_mm2, PeArea};
+use crate::config::{AcceleratorConfig, PeKind};
+
+/// Area of one PE under `cfg`, split into Fig. 8's categories.
+pub fn pe_area(cfg: &AcceleratorConfig) -> PeArea {
+    let k = cfg.pe.macs_per_pe;
+    match cfg.pe.kind {
+        PeKind::Baseline => PeArea {
+            mac_mm2: k as f64 * mac_mm2(),
+            // Sorting queues (Matraptor) or PEB (Extensor) — SRAM macros.
+            buffers_mm2: sram_mm2(cfg.pe.baseline_buffer_bytes()),
+            logic_mm2: control_mm2(k),
+        },
+        PeKind::Maple => PeArea {
+            mac_mm2: k as f64 * mac_mm2(),
+            // ARB + BRB + PSB as latch arrays (value + col_id per entry).
+            buffers_mm2: latch_mm2(cfg.pe.maple_buffer_bytes()),
+            // "Maple logic consumes the most area because it uses more
+            // computational components, such as parallel adders" (§IV.B.3):
+            // the PSB accumulate tree is 2 adders per MAC lane, plus the
+            // row_ptr control FSM (Fig. 7).
+            logic_mm2: 2.0 * k as f64 * adder_mm2() + control_mm2(k),
+        },
+    }
+}
+
+/// Total PE-complex area (all PEs) under `cfg`.
+pub fn accelerator_pe_area(cfg: &AcceleratorConfig) -> PeArea {
+    pe_area(cfg).scaled(cfg.num_pes)
+}
+
+/// One row of the Fig. 8 report.
+#[derive(Debug, Clone)]
+pub struct Fig8Row {
+    pub config: String,
+    pub num_pes: usize,
+    pub macs_per_pe: usize,
+    pub mac_mm2: f64,
+    pub buffers_mm2: f64,
+    pub logic_mm2: f64,
+    pub total_mm2: f64,
+}
+
+/// Produce the Fig. 8 comparison for one reference accelerator:
+/// `(baseline_row, maple_row, area_ratio)`.
+pub fn fig8(base: &AcceleratorConfig, maple: &AcceleratorConfig) -> (Fig8Row, Fig8Row, f64) {
+    let row = |cfg: &AcceleratorConfig| {
+        let a = accelerator_pe_area(cfg);
+        Fig8Row {
+            config: cfg.name.clone(),
+            num_pes: cfg.num_pes,
+            macs_per_pe: cfg.pe.macs_per_pe,
+            mac_mm2: a.mac_mm2,
+            buffers_mm2: a.buffers_mm2,
+            logic_mm2: a.logic_mm2,
+            total_mm2: a.total_mm2(),
+        }
+    };
+    let rb = row(base);
+    let rm = row(maple);
+    let ratio = rb.total_mm2 / rm.total_mm2;
+    (rb, rm, ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matraptor_area_ratio_in_paper_band() {
+        // Paper: 5.9× smaller PE area (84% less).
+        let (_, _, ratio) = fig8(
+            &AcceleratorConfig::matraptor_baseline(),
+            &AcceleratorConfig::matraptor_maple(),
+        );
+        assert!((4.5..7.5).contains(&ratio), "matraptor ratio {ratio:.2} vs paper 5.9");
+    }
+
+    #[test]
+    fn extensor_area_ratio_in_paper_band() {
+        // Paper: 15.5× smaller PE area (90% less).
+        let (_, _, ratio) = fig8(
+            &AcceleratorConfig::extensor_baseline(),
+            &AcceleratorConfig::extensor_maple(),
+        );
+        assert!((12.0..19.0).contains(&ratio), "extensor ratio {ratio:.2} vs paper 15.5");
+    }
+
+    #[test]
+    fn baseline_buffers_dominate_baseline_pe() {
+        // §IV.B.3: "the PEB in Extensor and the PE's sorting queues in
+        // Matraptor consume a significant amount of area".
+        for cfg in [AcceleratorConfig::matraptor_baseline(), AcceleratorConfig::extensor_baseline()] {
+            let a = pe_area(&cfg);
+            assert!(a.buffers_mm2 > a.mac_mm2 + a.logic_mm2, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn maple_compute_dominates_maple_pe() {
+        // §IV.B.3: "Maple logic consumes the most area because it uses more
+        // computational components" — computational area (MAC + adder/ctrl
+        // logic) exceeds the buffer area in the Maple PE.
+        for cfg in [AcceleratorConfig::matraptor_maple(), AcceleratorConfig::extensor_maple()] {
+            let a = pe_area(&cfg);
+            assert!(
+                a.mac_mm2 + a.logic_mm2 > a.buffers_mm2,
+                "{}: mac {} logic {} buffers {}",
+                cfg.name,
+                a.mac_mm2,
+                a.logic_mm2,
+                a.buffers_mm2
+            );
+        }
+    }
+
+    #[test]
+    fn per_pe_maple_is_smaller_than_baseline_pe() {
+        let b = pe_area(&AcceleratorConfig::matraptor_baseline()).total_mm2();
+        let m = pe_area(&AcceleratorConfig::matraptor_maple()).total_mm2();
+        assert!(m < b);
+    }
+}

@@ -1,0 +1,172 @@
+//! Accelerator assemblies: the four evaluated machines (§IV.B), composed
+//! from PE models, the coordinator's partition, run-level memory/NoC flows,
+//! and the energy/area models.
+
+mod area;
+mod flows;
+
+pub use area::{accelerator_pe_area, fig8, pe_area, Fig8Row};
+
+use crate::config::{AcceleratorConfig, PeKind};
+use crate::coordinator::{partition, Policy};
+use crate::energy::EnergyBreakdown;
+use crate::pe::{ExtensorPe, MaplePe, MatraptorPe, PeModel, RowCost};
+use crate::sim::{SimResult, Workload};
+use crate::trace::Counters;
+
+/// One configured accelerator instance.
+pub struct Accelerator {
+    cfg: AcceleratorConfig,
+}
+
+impl Accelerator {
+    /// Assemble from a configuration.
+    pub fn new(cfg: AcceleratorConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// The configuration.
+    pub fn config(&self) -> &AcceleratorConfig {
+        &self.cfg
+    }
+
+    /// Instantiate the configured PE cost model.
+    pub fn pe_model(&self) -> Box<dyn PeModel> {
+        match (self.cfg.kind, self.cfg.pe.kind) {
+            (_, PeKind::Maple) => Box::new(MaplePe::from_config(&self.cfg)),
+            (crate::config::AcceleratorKind::Matraptor, PeKind::Baseline) => {
+                Box::new(MatraptorPe::from_config(&self.cfg))
+            }
+            (crate::config::AcceleratorKind::Extensor, PeKind::Baseline) => {
+                Box::new(ExtensorPe::from_config(&self.cfg))
+            }
+        }
+    }
+
+    /// Execute a profiled workload: PE timelines + run-level flows + energy.
+    pub fn run(&self, w: &Workload, policy: Policy) -> SimResult {
+        let pe = self.pe_model();
+        // Column-tile giant output rows (both reference dataflows do) so a
+        // single wide row cannot serialise one PE; threshold scales with the
+        // workload's mean row work.
+        let split_at = (4 * w.total_products / (w.rows as u64).max(1)).max(2048);
+        let profiles = crate::coordinator::split_wide_rows(&w.profiles, split_at);
+        let part = partition(policy, self.cfg.num_pes, &profiles);
+
+        let mut counters = Counters::default();
+        let mut max_pe_cycles = 0u64;
+
+        // Per-PE two-stage pipeline with queue-decoupled overlap: the
+        // front (multiply) and back (merge / POB / drain) stages run
+        // concurrently, buffered by the PE's queues, so the PE's makespan is
+        // the slower *aggregate* stage plus the first-row fill and last-row
+        // drain that cannot overlap anything.
+        for rows in &part.assignments {
+            let mut sum_front = 0u64;
+            let mut sum_back = 0u64;
+            let mut first_front = 0u64;
+            let mut last_back = 0u64;
+            for &r in rows {
+                let RowCost { front, back } = pe.row_cost(&profiles[r as usize], &mut counters);
+                if sum_front == 0 {
+                    first_front = front;
+                }
+                sum_front += front;
+                sum_back += back;
+                last_back = back;
+            }
+            let t = if sum_back >= sum_front {
+                // Back-stage (merge) bound: pipeline fills with the first
+                // front, then merge throughput dominates.
+                first_front + sum_back
+            } else {
+                sum_front + last_back
+            };
+            max_pe_cycles = max_pe_cycles.max(t);
+        }
+
+        // Run-level memory-hierarchy and interconnect flows.
+        flows::account_run_flows(&self.cfg, w, &mut counters);
+
+        let dram_words = w.compulsory_dram_words();
+        let cycles_dram_bound = (dram_words as f64 / self.cfg.dram.words_per_cycle).ceil() as u64;
+
+        let energy = EnergyBreakdown::from_counters(
+            &counters,
+            &crate::energy::TechModel::tech45(),
+            &self.cfg.buffer_sizes(),
+        );
+
+        SimResult {
+            config: self.cfg.name.clone(),
+            cycles_compute: max_pe_cycles,
+            cycles_dram_bound,
+            cycles: max_pe_cycles.max(cycles_dram_bound),
+            counters,
+            energy,
+            out_nnz: w.out_nnz,
+            checksum: w.checksum,
+            total_products: w.total_products,
+            balance: part.balance(&profiles),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profile_workload;
+    use crate::sparse::gen::{generate, Profile};
+
+    #[test]
+    fn pe_model_dispatch() {
+        assert_eq!(
+            Accelerator::new(AcceleratorConfig::matraptor_baseline()).pe_model().name(),
+            "matraptor-baseline"
+        );
+        assert_eq!(
+            Accelerator::new(AcceleratorConfig::matraptor_maple()).pe_model().name(),
+            "maple"
+        );
+        assert_eq!(
+            Accelerator::new(AcceleratorConfig::extensor_baseline()).pe_model().name(),
+            "extensor-baseline"
+        );
+        assert_eq!(
+            Accelerator::new(AcceleratorConfig::extensor_maple()).pe_model().name(),
+            "maple"
+        );
+    }
+
+    #[test]
+    fn more_pes_fewer_cycles() {
+        let a = generate(256, 256, 2600, Profile::Uniform, 23);
+        let w = profile_workload(&a, &a);
+        let mut small = AcceleratorConfig::extensor_maple();
+        small.num_pes = 2;
+        let mut large = AcceleratorConfig::extensor_maple();
+        large.num_pes = 16;
+        let rs = Accelerator::new(small).run(&w, Policy::RoundRobin);
+        let rl = Accelerator::new(large).run(&w, Policy::RoundRobin);
+        assert!(rl.cycles_compute < rs.cycles_compute);
+    }
+
+    #[test]
+    fn pipeline_back_stage_overlaps() {
+        // A config whose back stage is large must still be bounded by
+        // Σ max(front, back) + last back, not Σ (front + back).
+        let a = generate(64, 64, 640, Profile::Uniform, 29);
+        let w = profile_workload(&a, &a);
+        let cfg = AcceleratorConfig::extensor_baseline();
+        let r = Accelerator::new(cfg.clone()).run(&w, Policy::RoundRobin);
+        let pe = Accelerator::new(cfg).pe_model();
+        // Serial upper bound.
+        let mut serial = 0u64;
+        let mut c = Counters::default();
+        for p in &w.profiles {
+            let cost = pe.row_cost(p, &mut c);
+            serial += cost.front + cost.back;
+        }
+        assert!(r.cycles_compute <= serial);
+    }
+}

@@ -1,0 +1,49 @@
+//! Datapath / control logic area at 45 nm.
+//!
+//! Anchors (FreePDK45-class synthesis, matching the table popularised by
+//! Horowitz ISSCC'14 and Han et al.): fp32 multiplier ≈ 0.0081 mm²,
+//! fp32 adder ≈ 0.0042 mm², int32 adder ≈ 0.000137 mm². Control is modelled
+//! as a base FSM plus per-MAC decode overhead — Maple's control counts the
+//! multiplications per A-element from `row_ptr` (paper Fig. 7), which is a
+//! subtractor + counter per PE, not per MAC.
+
+/// fp32 multiplier area, mm².
+pub fn multiplier_mm2() -> f64 {
+    0.0081
+}
+
+/// fp32 adder area, mm².
+pub fn adder_mm2() -> f64 {
+    0.0042
+}
+
+/// One MAC datapath (multiplier + adder + pipeline registers), mm².
+pub fn mac_mm2() -> f64 {
+    multiplier_mm2() + adder_mm2() + 0.0006
+}
+
+/// Control area for a PE with `n_macs` MAC units: a base FSM with `row_ptr`
+/// subtract/count logic plus per-MAC operand steering.
+pub fn control_mm2(n_macs: usize) -> f64 {
+    const BASE: f64 = 0.0030; // FSM + row_ptr counter + address gen
+    const PER_MAC: f64 = 0.0009; // operand mux / steering per MAC
+    BASE + PER_MAC * n_macs as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mac_is_mult_plus_add_plus_pipe() {
+        assert!(mac_mm2() > multiplier_mm2() + adder_mm2());
+        assert!(mac_mm2() < 0.02);
+    }
+
+    #[test]
+    fn control_grows_with_macs() {
+        assert!(control_mm2(16) > control_mm2(1));
+        // ...but sub-linearly vs the MAC datapath itself.
+        assert!(control_mm2(16) - control_mm2(1) < 15.0 * mac_mm2());
+    }
+}

@@ -1,0 +1,56 @@
+//! 45 nm area model (the CACTI 7.0 / Aladdin / Yosys-FreePDK45 substitution,
+//! paper §IV.B.3).
+//!
+//! The paper sizes memories with CACTI 7.0 and logic with Aladdin, verified
+//! by Verilog + Yosys on FreePDK45. We use published FreePDK45/45 nm
+//! figures for the same primitives; Fig. 8's split (MAC vs buffers vs logic)
+//! is produced by [`PeArea`] and the accelerator-level comparison by
+//! [`crate::accel`].
+
+mod logic;
+mod sram;
+
+pub use logic::{adder_mm2, control_mm2, mac_mm2, multiplier_mm2};
+pub use sram::{latch_mm2, regfile_mm2, sram_mm2};
+
+/// Area of one processing element, split into the paper's Fig.-8 categories.
+/// All values mm² at 45 nm.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PeArea {
+    /// Multiply-accumulate datapath area.
+    pub mac_mm2: f64,
+    /// PE-local buffer area (sorting queues / PEB / ARB+BRB+PSB).
+    pub buffers_mm2: f64,
+    /// Everything else: parallel adders, control FSM, decoders — the paper's
+    /// "Maple logic" category.
+    pub logic_mm2: f64,
+}
+
+impl PeArea {
+    /// Total PE area.
+    pub fn total_mm2(&self) -> f64 {
+        self.mac_mm2 + self.buffers_mm2 + self.logic_mm2
+    }
+
+    /// Scale by the number of PE instances in the accelerator.
+    pub fn scaled(&self, n: usize) -> PeArea {
+        PeArea {
+            mac_mm2: self.mac_mm2 * n as f64,
+            buffers_mm2: self.buffers_mm2 * n as f64,
+            logic_mm2: self.logic_mm2 * n as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_scaling() {
+        let p = PeArea { mac_mm2: 1.0, buffers_mm2: 2.0, logic_mm2: 0.5 };
+        assert!((p.total_mm2() - 3.5).abs() < 1e-12);
+        let s = p.scaled(4);
+        assert!((s.total_mm2() - 14.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,306 @@
+//! Accelerator configuration system.
+//!
+//! Every experiment is a pure function of an [`AcceleratorConfig`]; the four
+//! paper configurations (§IV.B) ship as presets and any variant can be
+//! loaded from TOML (see `configs/*.toml` and the `design_space` example).
+
+pub mod toml_io;
+
+use crate::mem::DramParams;
+use crate::noc::Topology;
+
+/// Which reference accelerator the configuration instantiates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AcceleratorKind {
+    /// Srivastava et al., MICRO'20 — crossbar, SpAL/SpBL L1, sorting-queue PEs.
+    Matraptor,
+    /// Hegde et al., MICRO'19 — mesh NoC, LLB+POB L1, PEB PEs.
+    Extensor,
+}
+
+/// Which processing element fills the PE array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeKind {
+    /// The reference accelerator's own PE (1 MAC + large PE buffer).
+    Baseline,
+    /// The paper's Maple PE (k MACs + ARB/BRB/PSB).
+    Maple,
+}
+
+/// Processing-element micro-architecture parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PeConfig {
+    pub kind: PeKind,
+    /// MAC units per PE (1 for baselines; "determined during the design
+    /// phase" for Maple, paper §III).
+    pub macs_per_pe: usize,
+    /// ARB capacity in (value, col_id) element pairs (Maple only).
+    pub arb_entries: usize,
+    /// BRB capacity in element pairs (Maple only).
+    pub brb_entries: usize,
+    /// PSB register count (Maple only) — the `1 × N` accumulator array.
+    pub psb_entries: usize,
+    /// Sorting-queue count per PE (Matraptor baseline only).
+    pub num_queues: usize,
+    /// Total sorting-queue bytes per PE (Matraptor baseline only).
+    pub queue_bytes: usize,
+    /// PEB bytes per PE (Extensor baseline only).
+    pub peb_bytes: usize,
+}
+
+impl PeConfig {
+    /// Maple register-buffer footprint in bytes. ARB and BRB store
+    /// (value, col_id) pairs; the PSB stores values only — it is *addressed
+    /// by* `j'` (paper Eq. 8), so the output coordinate is implicit in the
+    /// register index.
+    pub fn maple_buffer_bytes(&self) -> usize {
+        (self.arb_entries + self.brb_entries) * 8 + self.psb_entries * 4
+    }
+
+    /// The L0 SRAM footprint of a baseline PE.
+    pub fn baseline_buffer_bytes(&self) -> usize {
+        self.queue_bytes + self.peb_bytes
+    }
+}
+
+/// A complete accelerator instance description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AcceleratorConfig {
+    /// Human-readable configuration name.
+    pub name: String,
+    pub kind: AcceleratorKind,
+    pub pe: PeConfig,
+    /// Number of processing elements.
+    pub num_pes: usize,
+    /// L1 storage-element bytes (SpAL+SpBL for Matraptor, LLB for Extensor).
+    /// Zero when the configuration has no L1 (Maple-based Matraptor, §IV.B.1).
+    pub l1_bytes: usize,
+    /// Partial-output-buffer bytes (Extensor baseline only).
+    pub pob_bytes: usize,
+    /// Interconnect topology.
+    pub noc: Topology,
+    /// DRAM port model.
+    pub dram: DramParams,
+    /// Merge passes the Matraptor baseline performs over each partial sum
+    /// (round-robin accumulate, §IV.B.4); derived from `num_queues`.
+    pub merge_passes: u32,
+    /// POB bandwidth share per PE in words/cycle (Extensor baseline).
+    pub pob_words_per_cycle_per_pe: f64,
+}
+
+impl AcceleratorConfig {
+    /// Total MAC units — the paper equalises this across compared configs
+    /// (8 vs 8 for Matraptor, 128 vs 128 for Extensor).
+    pub fn total_macs(&self) -> usize {
+        self.num_pes * self.pe.macs_per_pe
+    }
+
+    /// Baseline Matraptor (§IV.B.1): 8 PEs × 1 MAC, SpAL/SpBL (L1) +
+    /// per-PE sorting queues (L0), crossbar to DRAM.
+    pub fn matraptor_baseline() -> Self {
+        let num_queues = 12;
+        AcceleratorConfig {
+            name: "matraptor-baseline".into(),
+            kind: AcceleratorKind::Matraptor,
+            pe: PeConfig {
+                kind: PeKind::Baseline,
+                macs_per_pe: 1,
+                arb_entries: 0,
+                brb_entries: 0,
+                psb_entries: 0,
+                num_queues,
+                queue_bytes: 48 << 10, // 12 × 4 KiB
+                peb_bytes: 0,
+            },
+            num_pes: 8,
+            l1_bytes: 256 << 10, // SpAL + SpBL, 128 KiB each
+            pob_bytes: 0,
+            noc: Topology::Crossbar { ports: 8 },
+            dram: DramParams::default(),
+            merge_passes: (num_queues as f64).log2().ceil() as u32,
+            pob_words_per_cycle_per_pe: 0.0,
+        }
+    }
+
+    /// Maple-based Matraptor (§IV.B.1): 4 PEs × 2 MACs, a single memory
+    /// level (ARB/BRB/PSB as L0), same simplified crossbar.
+    pub fn matraptor_maple() -> Self {
+        AcceleratorConfig {
+            name: "matraptor-maple".into(),
+            kind: AcceleratorKind::Matraptor,
+            pe: PeConfig {
+                kind: PeKind::Maple,
+                macs_per_pe: 2,
+                arb_entries: 16,
+                brb_entries: 64,
+                psb_entries: 128,
+                num_queues: 0,
+                queue_bytes: 0,
+                peb_bytes: 0,
+            },
+            num_pes: 4,
+            l1_bytes: 0, // "consists of one memory level" (§IV.B.1)
+            pob_bytes: 0,
+            noc: Topology::Crossbar { ports: 4 },
+            dram: DramParams::default(),
+            merge_passes: 0,
+            pob_words_per_cycle_per_pe: 0.0,
+        }
+    }
+
+    /// Baseline Extensor (§IV.B.2): 128 PEs × 1 MAC in a 16 × 8 mesh,
+    /// LLB + POB (L1), PEB per PE (L0).
+    pub fn extensor_baseline() -> Self {
+        AcceleratorConfig {
+            name: "extensor-baseline".into(),
+            kind: AcceleratorKind::Extensor,
+            pe: PeConfig {
+                kind: PeKind::Baseline,
+                macs_per_pe: 1,
+                arb_entries: 0,
+                brb_entries: 0,
+                psb_entries: 0,
+                num_queues: 0,
+                queue_bytes: 0,
+                peb_bytes: 80 << 10,
+            },
+            num_pes: 128,
+            l1_bytes: 2 << 20,  // LLB
+            pob_bytes: 1 << 20, // POB
+            noc: Topology::Mesh { width: 16, height: 8 },
+            dram: DramParams::default(),
+            merge_passes: 0,
+            pob_words_per_cycle_per_pe: 12.0,
+        }
+    }
+
+    /// Maple-based Extensor (§IV.B.2): 8 PEs × 16 MACs (128 MACs total),
+    /// LLB retained as L1, Maple buffers as L0 — no POB ("there is no need
+    /// to utilize POB to store partial sums", §IV.B.4).
+    pub fn extensor_maple() -> Self {
+        AcceleratorConfig {
+            name: "extensor-maple".into(),
+            kind: AcceleratorKind::Extensor,
+            pe: PeConfig {
+                kind: PeKind::Maple,
+                macs_per_pe: 16,
+                arb_entries: 32,
+                brb_entries: 256,
+                psb_entries: 256,
+                num_queues: 0,
+                queue_bytes: 0,
+                peb_bytes: 0,
+            },
+            num_pes: 8,
+            l1_bytes: 2 << 20, // LLB retained
+            pob_bytes: 0,
+            noc: Topology::Mesh { width: 4, height: 2 },
+            dram: DramParams::default(),
+            merge_passes: 0,
+            pob_words_per_cycle_per_pe: 0.0,
+        }
+    }
+
+    /// The four paper configurations, in comparison order.
+    pub fn paper_configs() -> Vec<AcceleratorConfig> {
+        vec![
+            Self::matraptor_baseline(),
+            Self::matraptor_maple(),
+            Self::extensor_baseline(),
+            Self::extensor_maple(),
+        ]
+    }
+
+    /// The Maple counterpart of a baseline config (or vice versa).
+    pub fn counterpart(&self) -> AcceleratorConfig {
+        match (self.kind, self.pe.kind) {
+            (AcceleratorKind::Matraptor, PeKind::Baseline) => Self::matraptor_maple(),
+            (AcceleratorKind::Matraptor, PeKind::Maple) => Self::matraptor_baseline(),
+            (AcceleratorKind::Extensor, PeKind::Baseline) => Self::extensor_maple(),
+            (AcceleratorKind::Extensor, PeKind::Maple) => Self::extensor_baseline(),
+        }
+    }
+
+    /// Buffer sizes for the energy aggregation.
+    pub fn buffer_sizes(&self) -> crate::energy::BufferSizes {
+        crate::energy::BufferSizes {
+            pe_buffer_bytes: self.pe.baseline_buffer_bytes(),
+            l1_bytes: self.l1_bytes,
+            pob_bytes: self.pob_bytes,
+            reg_bytes: self.pe.maple_buffer_bytes(),
+        }
+    }
+
+    /// Serialise to TOML.
+    pub fn to_toml(&self) -> String {
+        toml_io::to_toml(self)
+    }
+
+    /// Parse from TOML.
+    pub fn from_toml(s: &str) -> Result<Self, toml_io::ConfigError> {
+        toml_io::from_toml(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mac_counts_are_equalised() {
+        // §IV.B: "we compare two different configurations with eight MAC
+        // units" and "two configurations with 128 MAC units each".
+        assert_eq!(AcceleratorConfig::matraptor_baseline().total_macs(), 8);
+        assert_eq!(AcceleratorConfig::matraptor_maple().total_macs(), 8);
+        assert_eq!(AcceleratorConfig::extensor_baseline().total_macs(), 128);
+        assert_eq!(AcceleratorConfig::extensor_maple().total_macs(), 128);
+    }
+
+    #[test]
+    fn paper_pe_counts() {
+        assert_eq!(AcceleratorConfig::matraptor_baseline().num_pes, 8);
+        assert_eq!(AcceleratorConfig::matraptor_maple().num_pes, 4);
+        assert_eq!(AcceleratorConfig::extensor_baseline().num_pes, 128);
+        assert_eq!(AcceleratorConfig::extensor_maple().num_pes, 8);
+    }
+
+    #[test]
+    fn maple_matraptor_has_single_memory_level() {
+        let c = AcceleratorConfig::matraptor_maple();
+        assert_eq!(c.l1_bytes, 0);
+        assert_eq!(c.pob_bytes, 0);
+        assert!(c.pe.maple_buffer_bytes() > 0);
+    }
+
+    #[test]
+    fn maple_extensor_keeps_llb_drops_pob() {
+        let c = AcceleratorConfig::extensor_maple();
+        assert!(c.l1_bytes > 0);
+        assert_eq!(c.pob_bytes, 0);
+    }
+
+    #[test]
+    fn counterparts_are_involutive() {
+        for c in AcceleratorConfig::paper_configs() {
+            assert_eq!(c.counterpart().counterpart().name, c.name);
+        }
+    }
+
+    #[test]
+    fn toml_round_trip() {
+        for c in AcceleratorConfig::paper_configs() {
+            let s = c.to_toml();
+            let back = AcceleratorConfig::from_toml(&s).unwrap();
+            assert_eq!(back, c);
+        }
+    }
+
+    #[test]
+    fn extensor_mesh_matches_pe_count() {
+        let c = AcceleratorConfig::extensor_baseline();
+        match c.noc {
+            Topology::Mesh { width, height } => assert_eq!(width * height, c.num_pes),
+            _ => panic!("extensor uses a mesh"),
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal in-tree TOML subset (sections, `key = value` with strings,
+//! integers, floats) — the offline build has no external TOML dependency
+//! (DESIGN.md §Dependencies). Only what [`AcceleratorConfig`] needs.
+
+use super::{AcceleratorConfig, AcceleratorKind, PeConfig, PeKind};
+use crate::mem::DramParams;
+use crate::noc::Topology;
+use std::collections::BTreeMap;
+
+/// Config (de)serialisation error.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("line {0}: {1}")]
+    Parse(usize, String),
+    #[error("missing key: {0}")]
+    Missing(&'static str),
+    #[error("bad value for {0}: {1}")]
+    BadValue(&'static str, String),
+}
+
+/// A parsed scalar.
+#[derive(Debug, Clone, PartialEq)]
+enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+}
+
+/// Parse the TOML subset into `(section.key → value)`.
+fn parse_flat(s: &str) -> Result<BTreeMap<String, Value>, ConfigError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (no, raw) in s.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line
+            .split_once('=')
+            .ok_or_else(|| ConfigError::Parse(no + 1, format!("expected key = value: {line}")))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        let v = v.trim();
+        let value = if let Some(q) = v.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+            Value::Str(q.to_string())
+        } else if let Ok(i) = v.parse::<i64>() {
+            Value::Int(i)
+        } else if let Ok(f) = v.parse::<f64>() {
+            Value::Float(f)
+        } else {
+            return Err(ConfigError::Parse(no + 1, format!("unparseable value: {v}")));
+        };
+        out.insert(key, value);
+    }
+    Ok(out)
+}
+
+fn get_str(m: &BTreeMap<String, Value>, k: &'static str) -> Result<String, ConfigError> {
+    match m.get(k) {
+        Some(Value::Str(s)) => Ok(s.clone()),
+        Some(v) => Err(ConfigError::BadValue(k, format!("{v:?}"))),
+        None => Err(ConfigError::Missing(k)),
+    }
+}
+
+fn get_usize(m: &BTreeMap<String, Value>, k: &'static str) -> Result<usize, ConfigError> {
+    match m.get(k) {
+        Some(Value::Int(i)) if *i >= 0 => Ok(*i as usize),
+        Some(v) => Err(ConfigError::BadValue(k, format!("{v:?}"))),
+        None => Err(ConfigError::Missing(k)),
+    }
+}
+
+fn get_f64(m: &BTreeMap<String, Value>, k: &'static str) -> Result<f64, ConfigError> {
+    match m.get(k) {
+        Some(Value::Float(f)) => Ok(*f),
+        Some(Value::Int(i)) => Ok(*i as f64),
+        Some(v) => Err(ConfigError::BadValue(k, format!("{v:?}"))),
+        None => Err(ConfigError::Missing(k)),
+    }
+}
+
+/// Serialise a configuration to the TOML subset.
+pub fn to_toml(c: &AcceleratorConfig) -> String {
+    let kind = match c.kind {
+        AcceleratorKind::Matraptor => "matraptor",
+        AcceleratorKind::Extensor => "extensor",
+    };
+    let pe_kind = match c.pe.kind {
+        PeKind::Baseline => "baseline",
+        PeKind::Maple => "maple",
+    };
+    let mut s = String::new();
+    s.push_str(&format!("name = \"{}\"\n", c.name));
+    s.push_str(&format!("kind = \"{kind}\"\n"));
+    s.push_str(&format!("num_pes = {}\n", c.num_pes));
+    s.push_str(&format!("l1_bytes = {}\n", c.l1_bytes));
+    s.push_str(&format!("pob_bytes = {}\n", c.pob_bytes));
+    s.push_str(&format!("merge_passes = {}\n", c.merge_passes));
+    s.push_str(&format!(
+        "pob_words_per_cycle_per_pe = {:?}\n",
+        c.pob_words_per_cycle_per_pe
+    ));
+    s.push_str("\n[pe]\n");
+    s.push_str(&format!("kind = \"{pe_kind}\"\n"));
+    s.push_str(&format!("macs_per_pe = {}\n", c.pe.macs_per_pe));
+    s.push_str(&format!("arb_entries = {}\n", c.pe.arb_entries));
+    s.push_str(&format!("brb_entries = {}\n", c.pe.brb_entries));
+    s.push_str(&format!("psb_entries = {}\n", c.pe.psb_entries));
+    s.push_str(&format!("num_queues = {}\n", c.pe.num_queues));
+    s.push_str(&format!("queue_bytes = {}\n", c.pe.queue_bytes));
+    s.push_str(&format!("peb_bytes = {}\n", c.pe.peb_bytes));
+    s.push_str("\n[noc]\n");
+    match c.noc {
+        Topology::Crossbar { ports } => {
+            s.push_str("topology = \"crossbar\"\n");
+            s.push_str(&format!("ports = {ports}\n"));
+        }
+        Topology::Mesh { width, height } => {
+            s.push_str("topology = \"mesh\"\n");
+            s.push_str(&format!("width = {width}\nheight = {height}\n"));
+        }
+    }
+    s.push_str("\n[dram]\n");
+    s.push_str(&format!("words_per_cycle = {:?}\n", c.dram.words_per_cycle));
+    s.push_str(&format!("access_latency = {}\n", c.dram.access_latency));
+    s.push_str(&format!("burst_words = {}\n", c.dram.burst_words));
+    s
+}
+
+/// Parse a configuration from the TOML subset.
+pub fn from_toml(s: &str) -> Result<AcceleratorConfig, ConfigError> {
+    let m = parse_flat(s)?;
+    let kind = match get_str(&m, "kind")?.as_str() {
+        "matraptor" => AcceleratorKind::Matraptor,
+        "extensor" => AcceleratorKind::Extensor,
+        other => return Err(ConfigError::BadValue("kind", other.to_string())),
+    };
+    let pe_kind = match get_str(&m, "pe.kind")?.as_str() {
+        "baseline" => PeKind::Baseline,
+        "maple" => PeKind::Maple,
+        other => return Err(ConfigError::BadValue("pe.kind", other.to_string())),
+    };
+    let noc = match get_str(&m, "noc.topology")?.as_str() {
+        "crossbar" => Topology::Crossbar { ports: get_usize(&m, "noc.ports")? },
+        "mesh" => Topology::Mesh {
+            width: get_usize(&m, "noc.width")?,
+            height: get_usize(&m, "noc.height")?,
+        },
+        other => return Err(ConfigError::BadValue("noc.topology", other.to_string())),
+    };
+    Ok(AcceleratorConfig {
+        name: get_str(&m, "name")?,
+        kind,
+        pe: PeConfig {
+            kind: pe_kind,
+            macs_per_pe: get_usize(&m, "pe.macs_per_pe")?,
+            arb_entries: get_usize(&m, "pe.arb_entries")?,
+            brb_entries: get_usize(&m, "pe.brb_entries")?,
+            psb_entries: get_usize(&m, "pe.psb_entries")?,
+            num_queues: get_usize(&m, "pe.num_queues")?,
+            queue_bytes: get_usize(&m, "pe.queue_bytes")?,
+            peb_bytes: get_usize(&m, "pe.peb_bytes")?,
+        },
+        num_pes: get_usize(&m, "num_pes")?,
+        l1_bytes: get_usize(&m, "l1_bytes")?,
+        pob_bytes: get_usize(&m, "pob_bytes")?,
+        noc,
+        dram: DramParams {
+            words_per_cycle: get_f64(&m, "dram.words_per_cycle")?,
+            access_latency: get_usize(&m, "dram.access_latency")? as u64,
+            burst_words: get_usize(&m, "dram.burst_words")? as u64,
+        },
+        merge_passes: get_usize(&m, "merge_passes")? as u32,
+        pob_words_per_cycle_per_pe: get_f64(&m, "pob_words_per_cycle_per_pe")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(from_toml("nonsense").is_err());
+        assert!(from_toml("name = \"x\"\nkind = \"bogus\"\n").is_err());
+    }
+
+    #[test]
+    fn parse_flat_handles_comments_and_sections() {
+        let m = parse_flat("# hi\na = 1\n[s]\nb = \"x\" # trail\nc = 2.5\n").unwrap();
+        assert_eq!(m["a"], Value::Int(1));
+        assert_eq!(m["s.b"], Value::Str("x".into()));
+        assert_eq!(m["s.c"], Value::Float(2.5));
+    }
+
+    #[test]
+    fn round_trip_all_presets() {
+        for c in AcceleratorConfig::paper_configs() {
+            let s = to_toml(&c);
+            let back = from_toml(&s).unwrap();
+            assert_eq!(back, c, "preset {} does not round-trip", c.name);
+        }
+    }
+}

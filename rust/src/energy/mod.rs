@@ -1,0 +1,144 @@
+//! Per-action energy model (the Accelergy/CACTI substitution).
+//!
+//! [`TechModel`] holds the 45 nm per-action energies; [`EnergyBreakdown`]
+//! aggregates a run's [`Counters`](crate::trace::Counters) into the paper's
+//! Fig.-3 lanes (compute vs data movement per memory level).
+
+pub mod tech45;
+
+pub use tech45::TechModel;
+
+use crate::trace::Counters;
+
+/// Buffer capacities an energy aggregation needs (SRAM energy is
+/// capacity-dependent; see [`TechModel::sram_pj`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BufferSizes {
+    /// Per-PE L0 SRAM (Matraptor sorting queues / Extensor PEB), bytes.
+    pub pe_buffer_bytes: usize,
+    /// L1 storage element (SpAL+SpBL / LLB), bytes.
+    pub l1_bytes: usize,
+    /// Partial-output buffer (Extensor POB), bytes; 0 when absent.
+    pub pob_bytes: usize,
+    /// Maple register buffers (ARB+BRB+PSB), bytes; 0 for baseline PEs.
+    pub reg_bytes: usize,
+}
+
+/// Energy of one simulated run, split into the paper's reporting lanes.
+/// All values in picojoules.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    /// MAC arithmetic (multiplies + adds).
+    pub mac_pj: f64,
+    /// Intersection comparisons.
+    pub intersect_pj: f64,
+    /// CSR compress / decompress.
+    pub cd_pj: f64,
+    /// L0 register-buffer traffic (ARB/BRB/PSB) — the `L0 ↔ MAC` lane.
+    pub l0_pj: f64,
+    /// PE-level SRAM traffic (queues/PEB) — the `PE ↔ MAC` lane.
+    pub pe_buffer_pj: f64,
+    /// L1 traffic (SpAL/SpBL/LLB + POB) — the `L1 ↔ MAC` lane.
+    pub l1_pj: f64,
+    /// DRAM traffic — the `L2 ↔ MAC` lane.
+    pub dram_pj: f64,
+    /// NoC flit-hop traffic.
+    pub noc_pj: f64,
+}
+
+impl EnergyBreakdown {
+    /// Aggregate raw action counts into energy, Accelergy-style.
+    pub fn from_counters(c: &Counters, tech: &TechModel, sizes: &BufferSizes) -> Self {
+        let reg_pj = tech.regfile_pj(sizes.reg_bytes.max(64));
+        let pe_sram_pj = tech.sram_pj(sizes.pe_buffer_bytes.max(1024));
+        let l1_sram_pj = tech.sram_pj(sizes.l1_bytes.max(4096));
+        let pob_sram_pj = tech.sram_pj(sizes.pob_bytes.max(4096));
+        EnergyBreakdown {
+            mac_pj: c.mac_mul as f64 * tech.mult_pj() + c.mac_add as f64 * tech.add_pj(),
+            intersect_pj: c.intersect_cmp as f64 * tech.intersect_pj(),
+            cd_pj: c.cd_elems as f64 * tech.cd_pj(),
+            l0_pj: c.l0_accesses() as f64 * reg_pj,
+            pe_buffer_pj: c.pe_buffer_accesses() as f64 * pe_sram_pj,
+            l1_pj: (c.l1_read + c.l1_write) as f64 * l1_sram_pj
+                + (c.pob_read + c.pob_write) as f64 * pob_sram_pj,
+            dram_pj: c.dram_accesses() as f64 * tech.dram_pj(),
+            noc_pj: c.noc_flit_hops as f64 * tech.noc_hop_pj(),
+        }
+    }
+
+    /// Total energy in pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.mac_pj
+            + self.intersect_pj
+            + self.cd_pj
+            + self.l0_pj
+            + self.pe_buffer_pj
+            + self.l1_pj
+            + self.dram_pj
+            + self.noc_pj
+    }
+
+    /// Compute (arithmetic) share of the total.
+    pub fn compute_pj(&self) -> f64 {
+        self.mac_pj + self.intersect_pj + self.cd_pj
+    }
+
+    /// Data-movement share of the total (everything that isn't arithmetic).
+    pub fn movement_pj(&self) -> f64 {
+        self.total_pj() - self.compute_pj()
+    }
+
+    /// Element-wise sum.
+    pub fn merge(&mut self, o: &EnergyBreakdown) {
+        self.mac_pj += o.mac_pj;
+        self.intersect_pj += o.intersect_pj;
+        self.cd_pj += o.cd_pj;
+        self.l0_pj += o.l0_pj;
+        self.pe_buffer_pj += o.pe_buffer_pj;
+        self.l1_pj += o.l1_pj;
+        self.dram_pj += o.dram_pj;
+        self.noc_pj += o.noc_pj;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sizes() -> BufferSizes {
+        BufferSizes { pe_buffer_bytes: 24 << 10, l1_bytes: 512 << 10, pob_bytes: 128 << 10, reg_bytes: 2048 }
+    }
+
+    #[test]
+    fn zero_counters_zero_energy() {
+        let e = EnergyBreakdown::from_counters(&Counters::default(), &TechModel::tech45(), &sizes());
+        assert_eq!(e.total_pj(), 0.0);
+    }
+
+    #[test]
+    fn movement_dominates_for_dram_heavy_runs() {
+        // The paper's Fig.-3 message: data movement ≫ arithmetic.
+        let c = Counters { mac_mul: 1000, mac_add: 1000, dram_read: 1000, ..Default::default() };
+        let e = EnergyBreakdown::from_counters(&c, &TechModel::tech45(), &sizes());
+        assert!(e.movement_pj() > 10.0 * e.compute_pj());
+    }
+
+    #[test]
+    fn aggregation_is_linear_in_counts() {
+        let c1 = Counters { mac_mul: 10, l1_read: 5, ..Default::default() };
+        let mut c2 = c1.clone();
+        c2.merge(&c1);
+        let t = TechModel::tech45();
+        let e1 = EnergyBreakdown::from_counters(&c1, &t, &sizes());
+        let e2 = EnergyBreakdown::from_counters(&c2, &t, &sizes());
+        assert!((e2.total_pj() - 2.0 * e1.total_pj()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pob_energy_counts_into_l1_lane() {
+        let c = Counters { pob_read: 100, ..Default::default() };
+        let e = EnergyBreakdown::from_counters(&c, &TechModel::tech45(), &sizes());
+        assert!(e.l1_pj > 0.0);
+        assert_eq!(e.dram_pj, 0.0);
+    }
+}

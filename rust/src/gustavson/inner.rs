@@ -1,0 +1,119 @@
+//! Inner-product dataflow baseline (paper §I: "maximizes output matrix
+//! reuse... inefficient with highly sparse matrices").
+//!
+//! `C[i,j] = A[i,:] · B[:,j]` — every output element requires an
+//! *intersection* of a CSR row of A with a CSC column of B; with very sparse
+//! inputs most intersections are empty, which is exactly the inefficiency
+//! the paper's intersection-energy discussion (Fig. 3, `IN`) quantifies.
+
+use crate::sparse::Csr;
+
+/// `C = A × B` by inner product. Also a reference model for the intersection
+/// unit: [`intersect_count`] counts the comparisons a two-finger merge does.
+pub fn spgemm_inner(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.cols(), b.rows(), "dimension mismatch");
+    let bt = b.to_csc();
+    let mut row_ptr = Vec::with_capacity(a.rows() + 1);
+    row_ptr.push(0usize);
+    let mut col_id = Vec::new();
+    let mut value = Vec::new();
+    for i in 0..a.rows() {
+        let (ac, av) = (a.row_cols(i), a.row_values(i));
+        if ac.is_empty() {
+            row_ptr.push(col_id.len());
+            continue;
+        }
+        for j in 0..b.cols() {
+            let (bc, bv) = (bt.col_rows(j), bt.col_values(j));
+            if bc.is_empty() {
+                continue;
+            }
+            let mut sum = 0f32;
+            let mut hit = false;
+            let (mut p, mut q) = (0usize, 0usize);
+            while p < ac.len() && q < bc.len() {
+                match ac[p].cmp(&bc[q]) {
+                    std::cmp::Ordering::Less => p += 1,
+                    std::cmp::Ordering::Greater => q += 1,
+                    std::cmp::Ordering::Equal => {
+                        sum += av[p] * bv[q];
+                        hit = true;
+                        p += 1;
+                        q += 1;
+                    }
+                }
+            }
+            if hit {
+                col_id.push(j as u32);
+                value.push(sum);
+            }
+        }
+        row_ptr.push(col_id.len());
+    }
+    Csr::try_new(a.rows(), b.cols(), row_ptr, col_id, value).expect("inner produced invalid CSR")
+}
+
+/// Number of index comparisons a two-finger merge intersection performs for
+/// the full inner-product `A × B` (used by the dataflow-comparison example).
+pub fn intersect_count(a: &Csr, b: &Csr) -> u64 {
+    assert_eq!(a.cols(), b.rows());
+    let bt = b.to_csc();
+    let mut n = 0u64;
+    for i in 0..a.rows() {
+        let ac = a.row_cols(i);
+        if ac.is_empty() {
+            continue;
+        }
+        for j in 0..b.cols() {
+            let bc = bt.col_rows(j);
+            if bc.is_empty() {
+                continue;
+            }
+            let (mut p, mut q) = (0usize, 0usize);
+            while p < ac.len() && q < bc.len() {
+                n += 1;
+                match ac[p].cmp(&bc[q]) {
+                    std::cmp::Ordering::Less => p += 1,
+                    std::cmp::Ordering::Greater => q += 1,
+                    std::cmp::Ordering::Equal => {
+                        p += 1;
+                        q += 1;
+                    }
+                }
+            }
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gustavson::{dense_matmul, max_abs_diff};
+    use crate::sparse::gen::{generate, Profile};
+
+    #[test]
+    fn matches_dense() {
+        let a = generate(15, 12, 40, Profile::Uniform, 31);
+        let b = generate(12, 18, 50, Profile::Uniform, 32);
+        let c = spgemm_inner(&a, &b);
+        assert!(max_abs_diff(&c, &dense_matmul(&a, &b)) < 1e-4);
+    }
+
+    #[test]
+    fn intersection_count_scales_with_density() {
+        // Denser matrices force more comparisons per output element.
+        let sparse_a = generate(30, 30, 60, Profile::Uniform, 1);
+        let dense_a = generate(30, 30, 500, Profile::Uniform, 1);
+        assert!(intersect_count(&dense_a, &dense_a) > intersect_count(&sparse_a, &sparse_a));
+    }
+
+    #[test]
+    fn empty_intersections_emit_nothing() {
+        // A hits only column 0, B's row 0 is empty -> C must be empty.
+        let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 0, 2.0)]);
+        let b = Csr::from_triplets(2, 2, vec![(1, 1, 3.0)]);
+        let c = spgemm_inner(&a, &b);
+        assert_eq!(c.nnz(), 0);
+    }
+}

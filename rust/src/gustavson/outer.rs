@@ -1,0 +1,71 @@
+//! Outer-product dataflow baseline (paper §I: "maximizes the input matrix
+//! reuse and sacrifices output matrix reuse... suffers from merging large
+//! partial output matrices", cf. OuterSPACE).
+//!
+//! `C = Σ_k A[:,k] ⊗ B[k,:]` — each k produces a rank-1 partial matrix; all
+//! of them must be merged, which is the data-movement cost the row-wise
+//! product avoids.
+
+use crate::sparse::{Coo, Csr};
+
+/// `C = A × B` by outer product: generate all rank-1 partial products, then
+/// merge. Exposes the partial-matrix volume via [`outer_partial_nnz`].
+pub fn spgemm_outer(a: &Csr, b: &Csr) -> Csr {
+    assert_eq!(a.cols(), b.rows(), "dimension mismatch");
+    let at = a.to_csc();
+    let mut partials = Coo::zero(a.rows(), b.cols());
+    for k in 0..a.cols() {
+        for (i, av) in at.col_iter(k) {
+            for (j, bv) in b.row_iter(k) {
+                partials.push(i, j, av * bv);
+            }
+        }
+    }
+    // The merge phase: COO -> CSR with duplicate folding is exactly the
+    // "merging large partial output matrices" step.
+    partials.to_csr()
+}
+
+/// Total partial-product entries the outer-product dataflow materialises
+/// before merging (its memory-traffic Achilles heel).
+pub fn outer_partial_nnz(a: &Csr, b: &Csr) -> u64 {
+    assert_eq!(a.cols(), b.rows());
+    let at = a.to_csc();
+    (0..a.cols()).map(|k| at.col_nnz(k) as u64 * b.row_nnz(k) as u64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gustavson::{dense_matmul, max_abs_diff, multiply_count};
+    use crate::sparse::gen::{generate, Profile};
+
+    #[test]
+    fn matches_dense() {
+        let a = generate(14, 10, 35, Profile::Uniform, 41);
+        let b = generate(10, 16, 45, Profile::Uniform, 42);
+        let c = spgemm_outer(&a, &b);
+        assert!(max_abs_diff(&c, &dense_matmul(&a, &b)) < 1e-4);
+    }
+
+    #[test]
+    fn partial_volume_equals_multiply_count() {
+        // Outer and row-wise products perform the same multiplications;
+        // they differ in *where* partial sums live. The counts must agree.
+        let a = generate(20, 20, 80, Profile::Uniform, 51);
+        assert_eq!(outer_partial_nnz(&a, &a), multiply_count(&a, &a));
+    }
+
+    #[test]
+    fn rank_one_case() {
+        // A = e0 column, B = single row -> C is that row scaled.
+        let a = Csr::from_triplets(3, 1, vec![(0, 0, 2.0), (2, 0, -1.0)]);
+        let b = Csr::from_triplets(1, 3, vec![(0, 0, 1.0), (0, 2, 4.0)]);
+        let c = spgemm_outer(&a, &b);
+        assert_eq!(c.get(0, 0), 2.0);
+        assert_eq!(c.get(0, 2), 8.0);
+        assert_eq!(c.get(2, 0), -1.0);
+        assert_eq!(c.get(2, 2), -4.0);
+        assert_eq!(c.nnz(), 4);
+    }
+}

@@ -1,0 +1,179 @@
+//! Row-wise product (Gustavson's algorithm), paper §III Eqs. (1)–(7).
+//!
+//! `C[i,:] = Σ_k A[i,k] · B[k,:]` — each output row is formed by scaling and
+//! merging the B-rows selected by row i's nonzero columns
+//! (`k' ← A.col_id[i]`, Eq. 4). The merge uses a sparse accumulator (SPA):
+//! a dense value array with generation tags, so clearing is O(1) per row.
+
+use crate::sparse::Csr;
+
+/// Reusable sparse-accumulator scratch space, sized to `b.cols()`.
+///
+/// Allocated once and reused across rows (and across calls), which keeps the
+/// hot loop allocation-free — the same discipline the hardware enforces with
+/// its fixed PSB register file.
+pub struct RowwiseScratch {
+    /// Interleaved (generation tag, accumulated value) per output column —
+    /// one cache line per SPA touch (EXPERIMENTS.md §Perf).
+    spa: Vec<(u32, f32)>,
+    /// Touched output columns of the current row (unsorted).
+    touched: Vec<u32>,
+    generation: u32,
+}
+
+impl RowwiseScratch {
+    /// Scratch for output width `cols`.
+    pub fn new(cols: usize) -> Self {
+        Self { spa: vec![(0, 0.0); cols], touched: Vec::with_capacity(256), generation: 0 }
+    }
+
+    /// Grow (never shrink) to accommodate `cols` output columns.
+    pub fn ensure(&mut self, cols: usize) {
+        if self.spa.len() < cols {
+            self.spa.resize(cols, (0, 0.0));
+        }
+    }
+
+    /// Compute one output row `C[i,:] = Σ A[i,k']·B[k',:]` into `(cols, vals)`,
+    /// appending in sorted column order. Returns the row's nnz.
+    pub fn compute_row(
+        &mut self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        out_cols: &mut Vec<u32>,
+        out_vals: &mut Vec<f32>,
+    ) -> usize {
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            // Tag wrap: reset tags once every 2^32 rows.
+            self.spa.fill((0, 0.0));
+            self.generation = 1;
+        }
+        let gen = self.generation;
+        self.touched.clear();
+
+        for (k, av) in a.row_iter(i) {
+            let k = k as usize;
+            let bc = b.row_cols(k);
+            let bv = b.row_values(k);
+            for p in 0..bc.len() {
+                // SAFETY: p < bc.len() == bv.len(); col ids < cols by the
+                // CSR invariant (Csr::try_new).
+                let (j, v) = unsafe { (*bc.get_unchecked(p), *bv.get_unchecked(p)) };
+                let cell = unsafe { self.spa.get_unchecked_mut(j as usize) };
+                if cell.0 == gen {
+                    cell.1 += av * v;
+                } else {
+                    *cell = (gen, av * v);
+                    self.touched.push(j);
+                }
+            }
+        }
+
+        self.touched.sort_unstable();
+        let start = out_cols.len();
+        for &j in &self.touched {
+            let v = self.spa[j as usize].1;
+            // A partial sum that cancels to exactly 0.0 is still stored by
+            // real accelerators; we follow suit.
+            out_cols.push(j);
+            out_vals.push(v);
+        }
+        out_cols.len() - start
+    }
+}
+
+/// `C = A × B` by row-wise product. Allocates its own scratch; for repeated
+/// calls reuse a [`RowwiseScratch`] via [`spgemm_rowwise_with`].
+pub fn spgemm_rowwise(a: &Csr, b: &Csr) -> Csr {
+    let mut scratch = RowwiseScratch::new(b.cols());
+    spgemm_rowwise_with(a, b, &mut scratch)
+}
+
+/// `C = A × B` using caller-provided scratch.
+pub fn spgemm_rowwise_with(a: &Csr, b: &Csr, scratch: &mut RowwiseScratch) -> Csr {
+    assert_eq!(a.cols(), b.rows(), "dimension mismatch");
+    scratch.ensure(b.cols());
+    let mut row_ptr = Vec::with_capacity(a.rows() + 1);
+    row_ptr.push(0);
+    let mut col_id = Vec::new();
+    let mut value = Vec::new();
+    for i in 0..a.rows() {
+        scratch.compute_row(a, b, i, &mut col_id, &mut value);
+        row_ptr.push(col_id.len());
+    }
+    Csr::try_new(a.rows(), b.cols(), row_ptr, col_id, value).expect("rowwise produced invalid CSR")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gustavson::{dense_matmul, max_abs_diff};
+    use crate::sparse::gen::{generate, Profile};
+
+    #[test]
+    fn paper_fig5_example() {
+        // Fig. 5: A row 0 = {A[0,0]=y, A[0,2]=y'}, B rows 0 and 2 as drawn.
+        // We use concrete numbers: A[0,0]=2, A[0,2]=3; B[0,0]=5, B[0,2]=7,
+        // B[2,2]=11. Then C[0,0] = 10 and C[0,2] = 2*7 + 3*11 = 47 — the
+        // "yellow + blue = green" accumulation of C^0[0,2] and C^2[0,2].
+        let a = Csr::from_triplets(4, 4, vec![(0, 0, 2.0), (0, 2, 3.0)]);
+        let b = Csr::from_triplets(4, 4, vec![(0, 0, 5.0), (0, 2, 7.0), (2, 2, 11.0)]);
+        let c = spgemm_rowwise(&a, &b);
+        assert_eq!(c.get(0, 0), 10.0);
+        assert_eq!(c.get(0, 2), 47.0);
+        assert_eq!(c.row_nnz(0), 2);
+    }
+
+    #[test]
+    fn matches_dense_on_random_pairs() {
+        for seed in 0..5 {
+            let a = generate(20, 16, 60, Profile::Uniform, seed);
+            let b = generate(16, 24, 80, Profile::Uniform, seed + 100);
+            let c = spgemm_rowwise(&a, &b);
+            assert!(max_abs_diff(&c, &dense_matmul(&a, &b)) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn square_self_multiply_like_paper_workload() {
+        // The paper evaluates C = A × A (§IV.A).
+        let a = generate(30, 30, 90, Profile::PowerLaw { alpha: 0.7 }, 9);
+        let c = spgemm_rowwise(&a, &a);
+        assert!(max_abs_diff(&c, &dense_matmul(&a, &a)) < 1e-4);
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean_across_calls() {
+        let mut s = RowwiseScratch::new(8);
+        let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 1, 2.0)]);
+        let i = Csr::identity(2);
+        let c1 = spgemm_rowwise_with(&a, &i, &mut s);
+        let c2 = spgemm_rowwise_with(&a, &i, &mut s);
+        assert_eq!(c1, c2);
+        assert_eq!(c1, a);
+    }
+
+    #[test]
+    fn empty_rows_produce_empty_output_rows() {
+        let a = Csr::from_triplets(3, 3, vec![(1, 0, 1.0)]);
+        let b = Csr::identity(3);
+        let c = spgemm_rowwise(&a, &b);
+        assert_eq!(c.row_nnz(0), 0);
+        assert_eq!(c.row_nnz(1), 1);
+        assert_eq!(c.row_nnz(2), 0);
+    }
+
+    #[test]
+    fn output_columns_are_sorted() {
+        let a = generate(40, 40, 200, Profile::Uniform, 77);
+        let c = spgemm_rowwise(&a, &a);
+        for i in 0..c.rows() {
+            let cols = c.row_cols(i);
+            for w in cols.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Intersection logic (the `∩` blocks of paper Fig. 2).
+//!
+//! "The intersection logic identifies matching non-zero values that must be
+//! multiplied from each of the two input matrices" (§II.C). Extensor places
+//! it between DRAM and L1; Matraptor between SpAL and SpBL. In Gustavson
+//! dataflow the intersection is between the *column ids of an A row* and the
+//! *row ids present in B* — a B row with no stored elements produces no work
+//! and should be filtered before it moves down the hierarchy.
+//!
+//! Two hardware strategies are modelled, both counted in comparisons:
+//! two-finger merge (streaming, what Matraptor's loaders do) and skip-based
+//! (binary-search, what Extensor's hierarchical intersection approximates).
+
+use crate::trace::Counters;
+
+/// Result of an intersection: the matching positions of the left list.
+pub type Matches = Vec<usize>;
+
+/// Two-finger merge intersection of two sorted id lists. Counts one
+/// comparison per pointer advance, like a streaming comparator array.
+/// Returns positions `p` in `a` such that `a[p] ∈ b`.
+pub fn merge_intersect(c: &mut Counters, a: &[u32], b: &[u32]) -> Matches {
+    let mut out = Vec::new();
+    let (mut p, mut q) = (0usize, 0usize);
+    while p < a.len() && q < b.len() {
+        c.intersect_cmp += 1;
+        match a[p].cmp(&b[q]) {
+            std::cmp::Ordering::Less => p += 1,
+            std::cmp::Ordering::Greater => q += 1,
+            std::cmp::Ordering::Equal => {
+                out.push(p);
+                p += 1;
+                q += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Skip-based intersection: for each id of the (shorter) list `a`, binary
+/// search in `b`. Counts log₂ comparisons per probe. Wins when
+/// `|a| ≪ |b|` — the shape Extensor's hierarchical scheme exploits.
+pub fn skip_intersect(c: &mut Counters, a: &[u32], b: &[u32]) -> Matches {
+    let mut out = Vec::new();
+    for (p, &x) in a.iter().enumerate() {
+        let mut lo = 0usize;
+        let mut hi = b.len();
+        let mut found = false;
+        while lo < hi {
+            c.intersect_cmp += 1;
+            let mid = (lo + hi) / 2;
+            match b[mid].cmp(&x) {
+                std::cmp::Ordering::Less => lo = mid + 1,
+                std::cmp::Ordering::Greater => hi = mid,
+                std::cmp::Ordering::Equal => {
+                    found = true;
+                    break;
+                }
+            }
+        }
+        if found {
+            out.push(p);
+        }
+    }
+    out
+}
+
+/// Filter an A row's column ids against the set of non-empty B rows:
+/// the Gustavson-specific intersection both reference accelerators perform
+/// before fetching B rows. `b_row_nnz[k] > 0` marks a useful row. Counts one
+/// comparison (a row_ptr subtract + test, paper Fig. 7) per id.
+pub fn filter_nonempty(c: &mut Counters, a_cols: &[u32], b_row_nnz: impl Fn(usize) -> usize) -> Matches {
+    let mut out = Vec::new();
+    for (p, &k) in a_cols.iter().enumerate() {
+        c.intersect_cmp += 1;
+        if b_row_nnz(k as usize) > 0 {
+            out.push(p);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_and_skip_agree() {
+        let a = [1u32, 4, 6, 9, 12];
+        let b = [2u32, 4, 9, 10, 30];
+        let mut c1 = Counters::default();
+        let mut c2 = Counters::default();
+        let m1 = merge_intersect(&mut c1, &a, &b);
+        let m2 = skip_intersect(&mut c2, &a, &b);
+        assert_eq!(m1, vec![1, 3]);
+        assert_eq!(m1, m2);
+        assert!(c1.intersect_cmp > 0 && c2.intersect_cmp > 0);
+    }
+
+    #[test]
+    fn skip_wins_when_sizes_are_lopsided() {
+        let a: Vec<u32> = (0..4).map(|i| i * 1000).collect();
+        let b: Vec<u32> = (0..4096).collect();
+        let mut cm = Counters::default();
+        let mut cs = Counters::default();
+        merge_intersect(&mut cm, &a, &b);
+        skip_intersect(&mut cs, &a, &b);
+        assert!(cs.intersect_cmp < cm.intersect_cmp);
+    }
+
+    #[test]
+    fn merge_wins_on_similar_dense_lists() {
+        let a: Vec<u32> = (0..256).collect();
+        let b: Vec<u32> = (0..256).collect();
+        let mut cm = Counters::default();
+        let mut cs = Counters::default();
+        merge_intersect(&mut cm, &a, &b);
+        skip_intersect(&mut cs, &a, &b);
+        assert!(cm.intersect_cmp < cs.intersect_cmp);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let mut c = Counters::default();
+        assert!(merge_intersect(&mut c, &[], &[1, 2]).is_empty());
+        assert!(skip_intersect(&mut c, &[1], &[]).is_empty());
+        assert_eq!(c.intersect_cmp, 0);
+    }
+
+    #[test]
+    fn filter_nonempty_drops_empty_b_rows() {
+        let nnz = [2usize, 0, 3, 0];
+        let mut c = Counters::default();
+        let m = filter_nonempty(&mut c, &[0, 1, 2, 3], |k| nnz[k]);
+        assert_eq!(m, vec![0, 2]);
+        assert_eq!(c.intersect_cmp, 4);
+    }
+}

@@ -1,0 +1,60 @@
+//! # Maple — row-wise product sparse tensor accelerator framework
+//!
+//! A full reproduction of *"Maple: A Processing Element for Row-Wise Product
+//! Based Sparse Tensor Accelerators"* (Reshadi & Gregg, DAC'23) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the accelerator simulation framework: sparse
+//!   matrix substrate, the Maple / Matraptor / Extensor processing-element
+//!   micro-architectures, memory hierarchy, NoC, intersection units, a
+//!   discrete-event simulator with per-action energy accounting, a
+//!   CACTI-style area model, a row-partitioning coordinator, and report
+//!   emitters for every table and figure in the paper.
+//! * **Layer 2 (python/compile/model.py)** — the Gustavson dataflow as a JAX
+//!   compute graph, AOT-lowered to HLO text at build time.
+//! * **Layer 1 (python/compile/kernels/maple_pe.py)** — the Maple PE datapath
+//!   as a Pallas kernel, validated against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts via PJRT so the Rust hot
+//! path can execute the compiled datapath with **no Python at runtime**.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use maple::prelude::*;
+//!
+//! // A Table-I-like synthetic workload.
+//! let a = maple::sparse::suite::by_name("wikiVote").unwrap().generate(7);
+//! // The paper's headline comparison: Maple-based vs baseline Extensor.
+//! let base = AcceleratorConfig::extensor_baseline();
+//! let mpl  = AcceleratorConfig::extensor_maple();
+//! let rb = maple::sim::simulate_spmspm(&base, &a, &a);
+//! let rm = maple::sim::simulate_spmspm(&mpl, &a, &a);
+//! println!("energy benefit: {:.1}%", 100.0 * (1.0 - rm.energy.total_pj() / rb.energy.total_pj()));
+//! ```
+
+pub mod accel;
+pub mod area;
+pub mod config;
+pub mod coordinator;
+pub mod energy;
+pub mod gustavson;
+pub mod intersect;
+pub mod mem;
+pub mod noc;
+pub mod pe;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sparse;
+pub mod trace;
+
+/// Convenient re-exports for downstream users.
+pub mod prelude {
+    pub use crate::accel::Accelerator;
+    pub use crate::config::{AcceleratorConfig, AcceleratorKind, PeKind};
+    pub use crate::energy::{EnergyBreakdown, TechModel};
+    pub use crate::gustavson::spgemm_rowwise;
+    pub use crate::sim::{simulate_spmspm, SimResult};
+    pub use crate::sparse::{Coo, Csc, Csr};
+}

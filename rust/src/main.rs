@@ -1,0 +1,286 @@
+//! `maple` — CLI launcher for the row-wise product accelerator framework.
+//!
+//! Every table and figure of the paper regenerates from here:
+//!
+//! ```text
+//! maple datasets                     # Table I
+//! maple fig3                         # Fig. 3  (energy of ops at 45nm)
+//! maple fig8 --accel matraptor       # Fig. 8a (PE area comparison)
+//! maple fig8 --accel extensor        # Fig. 8b
+//! maple fig9 --scale 16              # Fig. 9a+9b over all 14 datasets
+//! maple simulate --config matraptor-maple --dataset wv
+//! maple sweep --dataset wv --macs 1,2,4,8,16,32
+//! maple config --preset extensor-maple > my.toml
+//! ```
+//!
+//! Argument parsing is in-tree (the offline build has no CLI dependency;
+//! DESIGN.md §Dependencies).
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::report;
+use maple::sim::{profile_workload, simulate_workload};
+use maple::sparse::suite;
+
+/// Minimal `--key value` / flag argument scanner.
+struct Args {
+    argv: Vec<String>,
+}
+
+impl Args {
+    fn new(argv: Vec<String>) -> Self {
+        Self { argv }
+    }
+
+    /// Value of `--key`, if present.
+    fn opt(&self, key: &str) -> Option<&str> {
+        self.argv
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.argv.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    /// Value of `--key` or a default.
+    fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    /// Presence of a bare flag.
+    fn flag(&self, key: &str) -> bool {
+        self.argv.iter().any(|a| a == key)
+    }
+
+    /// Parsed value of `--key` or a default.
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad value for {key}: {v}")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+maple — row-wise product sparse tensor accelerator framework
+
+USAGE: maple <command> [options] [--csv]
+
+COMMANDS:
+  datasets                 Table I (the simulation datasets)
+  fig3                     Fig. 3 (normalized energy of ops at 45nm)
+  fig8   --accel <name>    Fig. 8 (PE area, baseline vs Maple);
+                           name = matraptor | extensor
+  fig9   [--scale N] [--datasets wv,fb,...] [--seed S]
+                           Fig. 9 (energy benefit + speedup per dataset)
+  simulate --config <preset|file.toml> --dataset <name>
+           [--scale N] [--seed S] [--policy round-robin|chunked|greedy]
+  sweep  --dataset <name> [--macs 1,2,4,...] [--scale N] [--seed S]
+  config --preset <name>   Dump a preset configuration as TOML
+  validate [--artifacts DIR]
+                           Load the AOT Pallas datapath via PJRT and verify
+                           it against the software reference (needs
+                           `make artifacts`)
+";
+
+fn parse_config(name: &str) -> anyhow::Result<AcceleratorConfig> {
+    match name {
+        "matraptor-baseline" => Ok(AcceleratorConfig::matraptor_baseline()),
+        "matraptor-maple" => Ok(AcceleratorConfig::matraptor_maple()),
+        "extensor-baseline" => Ok(AcceleratorConfig::extensor_baseline()),
+        "extensor-maple" => Ok(AcceleratorConfig::extensor_maple()),
+        path => {
+            let s = std::fs::read_to_string(path).map_err(|e| {
+                anyhow::anyhow!("config {path} is not a preset and not readable: {e}")
+            })?;
+            Ok(AcceleratorConfig::from_toml(&s)?)
+        }
+    }
+}
+
+fn parse_policy(name: &str) -> anyhow::Result<Policy> {
+    match name {
+        "round-robin" => Ok(Policy::RoundRobin),
+        "chunked" => Ok(Policy::Chunked),
+        "greedy" => Ok(Policy::GreedyBalance),
+        other => anyhow::bail!("unknown policy {other}"),
+    }
+}
+
+fn gen_dataset(name: &str, scale: usize, seed: u64) -> anyhow::Result<maple::sparse::Csr> {
+    let spec = suite::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
+    Ok(if scale <= 1 { spec.generate(seed) } else { spec.generate_scaled(seed, scale) })
+}
+
+/// Fig. 9 across datasets, one worker thread per dataset (leader/worker).
+fn fig9(scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> anyhow::Result<()> {
+    let names: Vec<&'static str> = match datasets {
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                suite::by_name(s.trim())
+                    .map(|d| d.abbrev)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {s}"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => suite::TABLE_I.iter().map(|d| d.abbrev).collect(),
+    };
+
+    let results: Vec<(report::Fig9Row, report::Fig9Row)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = names
+            .iter()
+            .map(|&abbrev| {
+                scope.spawn(move || {
+                    let spec = suite::by_name(abbrev).unwrap();
+                    let a = if scale <= 1 {
+                        spec.generate(seed)
+                    } else {
+                        spec.generate_scaled(seed, scale)
+                    };
+                    let w = profile_workload(&a, &a);
+                    let run =
+                        |cfg: &AcceleratorConfig| simulate_workload(cfg, &w, Policy::RoundRobin);
+                    let mb = run(&AcceleratorConfig::matraptor_baseline());
+                    let mm = run(&AcceleratorConfig::matraptor_maple());
+                    let eb = run(&AcceleratorConfig::extensor_baseline());
+                    let em = run(&AcceleratorConfig::extensor_maple());
+                    (
+                        report::Fig9Row::from_results(abbrev, &mb, &mm),
+                        report::Fig9Row::from_results(abbrev, &eb, &em),
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    let matraptor: Vec<_> = results.iter().map(|(m, _)| m.clone()).collect();
+    let extensor: Vec<_> = results.iter().map(|(_, e)| e.clone()).collect();
+    println!("{}", report::fig9_report("Fig. 9 — Matraptor (Maple vs baseline)", &matraptor, !csv));
+    println!("{}", report::fig9_report("Fig. 9 — Extensor (Maple vs baseline)", &extensor, !csv));
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    };
+    let args = Args::new(argv[1..].to_vec());
+    let csv = args.flag("--csv");
+    let md = !csv;
+
+    match cmd.as_str() {
+        "datasets" => print!("{}", report::table1(md)),
+        "fig3" => print!("{}", report::fig3(md)),
+        "fig8" => {
+            let accel = args.opt_or("--accel", "matraptor");
+            let (b, m) = match accel {
+                "matraptor" => {
+                    (AcceleratorConfig::matraptor_baseline(), AcceleratorConfig::matraptor_maple())
+                }
+                "extensor" => {
+                    (AcceleratorConfig::extensor_baseline(), AcceleratorConfig::extensor_maple())
+                }
+                other => anyhow::bail!("unknown accelerator {other}"),
+            };
+            print!("{}", report::fig8_report(&b, &m, md));
+        }
+        "fig9" => {
+            let scale = args.parse_or("--scale", 16usize)?;
+            let seed = args.parse_or("--seed", 7u64)?;
+            fig9(scale, args.opt("--datasets"), seed, csv)?;
+        }
+        "simulate" => {
+            let cfg = parse_config(args.opt_or("--config", "extensor-maple"))?;
+            let dataset = args.opt_or("--dataset", "wikiVote");
+            let scale = args.parse_or("--scale", 1usize)?;
+            let seed = args.parse_or("--seed", 7u64)?;
+            let a = gen_dataset(dataset, scale, seed)?;
+            let w = profile_workload(&a, &a);
+            let r = simulate_workload(&cfg, &w, parse_policy(args.opt_or("--policy", "round-robin"))?);
+            println!("config            : {}", r.config);
+            println!("dataset           : {dataset} (scale 1/{scale})");
+            println!("rows x cols       : {} x {}", a.rows(), a.cols());
+            println!("nnz(A)            : {}", a.nnz());
+            println!("nnz(C)            : {}", r.out_nnz);
+            println!("products          : {}", r.total_products);
+            println!("cycles (compute)  : {}", r.cycles_compute);
+            println!("cycles (dram-bnd) : {}", r.cycles_dram_bound);
+            println!("MAC utilisation   : {:.1}%", 100.0 * r.mac_utilisation(&cfg));
+            println!("PE balance        : {:.3}", r.balance);
+            println!("energy total      : {:.3} uJ", r.energy.total_pj() / 1e6);
+            println!("  mac             : {:.3} uJ", r.energy.mac_pj / 1e6);
+            println!("  l0 (regs)       : {:.3} uJ", r.energy.l0_pj / 1e6);
+            println!("  pe buffers      : {:.3} uJ", r.energy.pe_buffer_pj / 1e6);
+            println!("  l1              : {:.3} uJ", r.energy.l1_pj / 1e6);
+            println!("  dram            : {:.3} uJ", r.energy.dram_pj / 1e6);
+            println!("  noc             : {:.3} uJ", r.energy.noc_pj / 1e6);
+            println!("checksum          : {:.6e}", r.checksum);
+        }
+        "sweep" => {
+            let dataset = args.opt_or("--dataset", "wikiVote");
+            let scale = args.parse_or("--scale", 4usize)?;
+            let seed = args.parse_or("--seed", 7u64)?;
+            let a = gen_dataset(dataset, scale, seed)?;
+            let w = profile_workload(&a, &a);
+            let header = ["MACs/PE", "cycles", "speedup vs k=1", "energy uJ", "util %"];
+            let mut rows = Vec::new();
+            let mut base_cycles = 0u64;
+            for k in args.opt_or("--macs", "1,2,4,8,16,32").split(',') {
+                let k: usize = k.trim().parse()?;
+                let mut cfg = AcceleratorConfig::extensor_maple();
+                cfg.pe.macs_per_pe = k;
+                cfg.name = format!("extensor-maple-k{k}");
+                let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+                if base_cycles == 0 {
+                    base_cycles = r.cycles_compute;
+                }
+                rows.push(vec![
+                    k.to_string(),
+                    r.cycles_compute.to_string(),
+                    format!("{:.2}x", base_cycles as f64 / r.cycles_compute as f64),
+                    format!("{:.3}", r.energy.total_pj() / 1e6),
+                    format!("{:.1}", 100.0 * r.mac_utilisation(&cfg)),
+                ]);
+            }
+            let out =
+                if md { report::markdown_table(&header, &rows) } else { report::csv(&header, &rows) };
+            print!("{out}");
+        }
+        "config" => print!("{}", parse_config(args.opt_or("--preset", "extensor-maple"))?.to_toml()),
+        "validate" => {
+            let dir = args
+                .opt("--artifacts")
+                .map(std::path::PathBuf::from)
+                .unwrap_or_else(maple::runtime::artifacts_dir);
+            let client = xla::PjRtClient::cpu()?;
+            let dp = maple::runtime::MapleDatapath::load(&client, &dir)?;
+            let meta = dp.meta();
+            println!("loaded {} (kt={} nt={})", dir.join("maple_pe.hlo.txt").display(), meta.kt, meta.nt);
+            // Drive random tiles through the compiled kernel vs scalar math.
+            let mut rng = maple::sparse::SplitMix64::new(1234);
+            let mut max_err = 0f32;
+            const TILES: usize = 32;
+            for _ in 0..TILES {
+                let a: Vec<f32> = (0..meta.kt).map(|_| rng.value()).collect();
+                let b: Vec<f32> = (0..meta.kt * meta.nt).map(|_| rng.value()).collect();
+                let psb = dp.run_tile(&a, &b)?;
+                for n in 0..meta.nt {
+                    let want: f32 = (0..meta.kt).map(|k| a[k] * b[k * meta.nt + n]).sum();
+                    max_err = max_err.max((psb[n] - want).abs());
+                }
+            }
+            println!("{TILES} tiles executed via PJRT, max |err| vs reference = {max_err:.2e}");
+            anyhow::ensure!(max_err < 1e-4, "compiled datapath diverges from reference");
+            println!("validate OK — artifacts are healthy");
+        }
+        "--help" | "-h" | "help" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command: {other}\n");
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

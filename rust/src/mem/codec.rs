@@ -1,0 +1,55 @@
+//! CSR compressor / decompressor unit (the `C/D` blocks of paper Fig. 2).
+//!
+//! Baseline accelerators that buffer *uncompressed* rows must pass every
+//! element through a C/D unit at the level boundary. Maple operates
+//! *directly* on CSR data using metadata (paper §I: "there is no need to use
+//! separate logic in the input and output ports of the Maple PE to perform
+//! intersection and the CSR decompression functions"), so Maple-based
+//! configurations only use C/D at the DRAM boundary.
+
+use crate::trace::Counters;
+
+/// A counted compress/decompress unit.
+#[derive(Debug, Clone, Default)]
+pub struct CsrCodec {
+    elems: u64,
+}
+
+impl CsrCodec {
+    /// New codec.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pass `n` elements through the decompressor (CSR → expanded form).
+    pub fn decompress(&mut self, c: &mut Counters, n: u64) {
+        c.cd_elems += n;
+        self.elems += n;
+    }
+
+    /// Pass `n` elements through the compressor (row → CSR).
+    pub fn compress(&mut self, c: &mut Counters, n: u64) {
+        c.cd_elems += n;
+        self.elems += n;
+    }
+
+    /// Total elements processed by this unit.
+    pub fn total_elems(&self) -> u64 {
+        self.elems
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_counts_both_directions() {
+        let mut cd = CsrCodec::new();
+        let mut c = Counters::default();
+        cd.decompress(&mut c, 10);
+        cd.compress(&mut c, 5);
+        assert_eq!(c.cd_elems, 15);
+        assert_eq!(cd.total_elems(), 15);
+    }
+}

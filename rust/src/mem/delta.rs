@@ -1,0 +1,163 @@
+//! Functional CSR metadata codec: delta + varint encoding of `col_id` runs.
+//!
+//! The C/D units of paper Fig. 2 are modelled energetically by
+//! [`super::CsrCodec`]; this module is the *functional* counterpart — the
+//! actual bitstream a compressor at a level boundary would produce. Column
+//! ids within a row are strictly increasing (CSR invariant), so their
+//! first-order deltas are small positive integers; LEB128 varints then give
+//! ~1 byte per nonzero on clustered rows versus 4 uncompressed — which is
+//! why the paper's accelerators ship compressed metadata between levels.
+
+/// Encode a strictly-increasing column-id slice as delta + LEB128 varints.
+/// First value is encoded absolutely (plus one, so empty ≠ zero).
+pub fn encode_cols(cols: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(cols.len() + 4);
+    let mut prev: i64 = -1;
+    for &c in cols {
+        debug_assert!((c as i64) > prev, "col_id must be strictly increasing");
+        let delta = (c as i64 - prev) as u64; // ≥ 1
+        push_varint(&mut out, delta);
+        prev = c as i64;
+    }
+    out
+}
+
+/// Decode a [`encode_cols`] bitstream back to column ids.
+pub fn decode_cols(bytes: &[u8]) -> Result<Vec<u32>, CodecError> {
+    let mut out = Vec::new();
+    let mut prev: i64 = -1;
+    let mut pos = 0usize;
+    while pos < bytes.len() {
+        let (delta, next) = read_varint(bytes, pos)?;
+        if delta == 0 {
+            return Err(CodecError::ZeroDelta { pos });
+        }
+        let v = prev + delta as i64;
+        if v > u32::MAX as i64 {
+            return Err(CodecError::Overflow { pos });
+        }
+        out.push(v as u32);
+        prev = v;
+        pos = next;
+    }
+    Ok(out)
+}
+
+/// Codec failure modes.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum CodecError {
+    #[error("truncated varint at byte {pos}")]
+    Truncated { pos: usize },
+    #[error("zero delta at byte {pos} (col_id not strictly increasing)")]
+    ZeroDelta { pos: usize },
+    #[error("column id overflow at byte {pos}")]
+    Overflow { pos: usize },
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+fn read_varint(bytes: &[u8], mut pos: usize) -> Result<(u64, usize), CodecError> {
+    let start = pos;
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = bytes.get(pos) else {
+            return Err(CodecError::Truncated { pos: start });
+        };
+        pos += 1;
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok((v, pos));
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(CodecError::Overflow { pos: start });
+        }
+    }
+}
+
+/// Compression ratio (uncompressed bytes / encoded bytes) of a whole
+/// matrix's metadata. Clustered (banded/FEM) matrices approach 4×; random
+/// hypersparse rows approach ~1.3× — the statistic behind the paper's use
+/// of CSR between levels.
+pub fn metadata_compression_ratio(a: &crate::sparse::Csr) -> f64 {
+    let mut encoded = 0usize;
+    for i in 0..a.rows() {
+        encoded += encode_cols(a.row_cols(i)).len();
+    }
+    if encoded == 0 {
+        return 1.0;
+    }
+    (a.nnz() * 4) as f64 / encoded as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{generate, Profile};
+
+    #[test]
+    fn round_trip_simple() {
+        let cols = vec![0u32, 1, 2, 100, 1000, 1_000_000];
+        let enc = encode_cols(&cols);
+        assert_eq!(decode_cols(&enc).unwrap(), cols);
+    }
+
+    #[test]
+    fn empty_row_is_empty_stream() {
+        assert!(encode_cols(&[]).is_empty());
+        assert_eq!(decode_cols(&[]).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn adjacent_runs_compress_to_one_byte_each() {
+        // A run of consecutive ids: every delta = 1 = one varint byte.
+        let cols: Vec<u32> = (10..200).collect();
+        let enc = encode_cols(&cols);
+        assert_eq!(enc.len(), cols.len());
+    }
+
+    #[test]
+    fn round_trip_every_row_of_generated_matrices() {
+        for (seed, profile) in [
+            (1, Profile::Uniform),
+            (2, Profile::PowerLaw { alpha: 0.7 }),
+            (3, Profile::Banded { rel_bandwidth: 0.05, cluster: 4 }),
+        ] {
+            let a = generate(200, 4000, 3000, profile, seed);
+            for i in 0..a.rows() {
+                let enc = encode_cols(a.row_cols(i));
+                assert_eq!(decode_cols(&enc).unwrap(), a.row_cols(i), "seed {seed} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_compresses_better_than_random() {
+        let banded = generate(500, 5000, 10_000, Profile::Banded { rel_bandwidth: 0.01, cluster: 6 }, 4);
+        let uniform = generate(500, 5000, 10_000, Profile::Uniform, 4);
+        let rb = metadata_compression_ratio(&banded);
+        let ru = metadata_compression_ratio(&uniform);
+        assert!(rb > ru, "banded {rb:.2} vs uniform {ru:.2}");
+        assert!(rb > 2.5, "clustered metadata must compress well, got {rb:.2}");
+    }
+
+    #[test]
+    fn corrupt_streams_are_rejected() {
+        assert_eq!(decode_cols(&[0x80]), Err(CodecError::Truncated { pos: 0 }));
+        assert_eq!(decode_cols(&[0x00]), Err(CodecError::ZeroDelta { pos: 0 }));
+        // 10-byte varint overflows the shift guard.
+        let huge = vec![0xFF; 10];
+        assert!(matches!(decode_cols(&huge), Err(CodecError::Overflow { .. })));
+    }
+}

@@ -1,0 +1,125 @@
+//! Bounded FIFO — the structural model behind ARB and BRB (paper §III:
+//! "the multiply operation requires two FIFO buffers to store non-zero
+//! elements ..."). Tracks high-water mark and stall events so buffer-sizing
+//! sweeps can see when a configuration would have back-pressured.
+
+/// A bounded FIFO with occupancy statistics.
+#[derive(Debug, Clone)]
+pub struct Fifo<T> {
+    buf: std::collections::VecDeque<T>,
+    capacity: usize,
+    high_water: usize,
+    /// Pushes rejected because the FIFO was full.
+    stalls: u64,
+    total_pushes: u64,
+}
+
+impl<T> Fifo<T> {
+    /// A FIFO holding at most `capacity` entries.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "FIFO capacity must be positive");
+        Self {
+            buf: std::collections::VecDeque::with_capacity(capacity),
+            capacity,
+            high_water: 0,
+            stalls: 0,
+            total_pushes: 0,
+        }
+    }
+
+    /// Try to enqueue; returns the value back on overflow (a stall).
+    pub fn push(&mut self, v: T) -> Result<(), T> {
+        if self.buf.len() == self.capacity {
+            self.stalls += 1;
+            return Err(v);
+        }
+        self.buf.push_back(v);
+        self.total_pushes += 1;
+        self.high_water = self.high_water.max(self.buf.len());
+        Ok(())
+    }
+
+    /// Dequeue the oldest entry.
+    pub fn pop(&mut self) -> Option<T> {
+        self.buf.pop_front()
+    }
+
+    /// Current occupancy.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// True when at capacity.
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.capacity
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Maximum occupancy ever reached.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
+    /// Number of rejected pushes.
+    pub fn stalls(&self) -> u64 {
+        self.stalls
+    }
+
+    /// Total accepted pushes.
+    pub fn total_pushes(&self) -> u64 {
+        self.total_pushes
+    }
+
+    /// Drop all contents (end of a row/tile), keeping statistics.
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_and_capacity() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(1).is_ok());
+        assert!(f.push(2).is_ok());
+        assert!(f.is_full());
+        assert_eq!(f.push(3), Err(3));
+        assert_eq!(f.stalls(), 1);
+        assert_eq!(f.pop(), Some(1));
+        assert_eq!(f.pop(), Some(2));
+        assert_eq!(f.pop(), None);
+    }
+
+    #[test]
+    fn high_water_tracks_peak() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(i).unwrap();
+        }
+        f.pop();
+        f.pop();
+        assert_eq!(f.high_water(), 5);
+        assert_eq!(f.len(), 3);
+        f.clear();
+        assert!(f.is_empty());
+        assert_eq!(f.high_water(), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_capacity_rejected() {
+        let _ = Fifo::<u32>::new(0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Network-on-Chip models (paper §II.C: "All the components of an
+//! accelerator are connected through the NoC... Extensor uses an NoC with
+//! unicast, multicast, and broadcast capabilities. Matraptor and GAMMA
+//! employ a customized and simplified crossbar").
+
+use crate::trace::Counters;
+
+/// NoC topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Single-stage crossbar with `ports` endpoints (Matraptor-style).
+    Crossbar { ports: usize },
+    /// 2-D mesh of `width × height` routers (Extensor-style), XY-routed.
+    Mesh { width: usize, height: usize },
+}
+
+/// Delivery pattern for one transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cast<'a> {
+    /// One source to one destination.
+    Unicast { src: usize, dst: usize },
+    /// One source to an explicit destination set.
+    Multicast { src: usize, dsts: &'a [usize] },
+    /// One source to every endpoint.
+    Broadcast { src: usize },
+}
+
+/// A counted NoC instance.
+#[derive(Debug, Clone)]
+pub struct Noc {
+    topology: Topology,
+    /// Cycles for one flit to cross one hop (router + link).
+    cycles_per_hop: u64,
+    /// 32-bit words per flit.
+    words_per_flit: u64,
+    total_transfers: u64,
+}
+
+impl Noc {
+    /// New NoC with 1-cycle hops and 1-word flits (the common setup for
+    /// 32-bit datapaths).
+    pub fn new(topology: Topology) -> Self {
+        Self { topology, cycles_per_hop: 1, words_per_flit: 1, total_transfers: 0 }
+    }
+
+    /// Endpoint count.
+    pub fn endpoints(&self) -> usize {
+        match self.topology {
+            Topology::Crossbar { ports } => ports,
+            Topology::Mesh { width, height } => width * height,
+        }
+    }
+
+    /// Hop count between two endpoints.
+    pub fn hops(&self, src: usize, dst: usize) -> u64 {
+        match self.topology {
+            // A crossbar is a single traversal regardless of port pair.
+            Topology::Crossbar { .. } => 1,
+            Topology::Mesh { width, .. } => {
+                let (sx, sy) = (src % width, src / width);
+                let (dx, dy) = (dst % width, dst / width);
+                (sx.abs_diff(dx) + sy.abs_diff(dy)).max(1) as u64
+            }
+        }
+    }
+
+    /// Transfer `words` according to `cast`; counts flit-hops and returns the
+    /// serialisation latency in cycles (head-flit hops + pipeline drain).
+    pub fn transfer(&mut self, c: &mut Counters, cast: Cast<'_>, words: u64) -> u64 {
+        self.total_transfers += 1;
+        let flits = words.div_ceil(self.words_per_flit).max(1);
+        match cast {
+            Cast::Unicast { src, dst } => {
+                let h = self.hops(src, dst);
+                c.noc_flit_hops += flits * h;
+                h * self.cycles_per_hop + flits - 1
+            }
+            Cast::Multicast { src, dsts } => {
+                // Tree multicast: flits traverse shared prefix paths once; we
+                // approximate the tree as the union cost = max path + extra
+                // leaf hops, and count energy on every delivered copy's last
+                // hop plus one shared trunk.
+                let mut max_h = 0;
+                let mut total_h = 0;
+                for &d in dsts {
+                    let h = self.hops(src, d);
+                    max_h = max_h.max(h);
+                    total_h += h;
+                }
+                // Energy: trunk (max path) + one extra hop per additional
+                // destination (tree fan-out approximation).
+                let tree_hops = max_h + (dsts.len().saturating_sub(1)) as u64;
+                let _ = total_h;
+                c.noc_flit_hops += flits * tree_hops.max(1);
+                max_h.max(1) * self.cycles_per_hop + flits - 1
+            }
+            Cast::Broadcast { src } => {
+                let n = self.endpoints();
+                let max_h = (0..n).map(|d| self.hops(src, d)).max().unwrap_or(1);
+                let tree_hops = max_h + (n.saturating_sub(1)) as u64;
+                c.noc_flit_hops += flits * tree_hops;
+                max_h * self.cycles_per_hop + flits - 1
+            }
+        }
+    }
+
+    /// Transfers issued.
+    pub fn total_transfers(&self) -> u64 {
+        self.total_transfers
+    }
+
+    /// The topology this NoC implements.
+    pub fn topology(&self) -> Topology {
+        self.topology
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crossbar_is_single_hop() {
+        let mut n = Noc::new(Topology::Crossbar { ports: 8 });
+        let mut c = Counters::default();
+        let lat = n.transfer(&mut c, Cast::Unicast { src: 0, dst: 7 }, 4);
+        assert_eq!(c.noc_flit_hops, 4);
+        assert_eq!(lat, 1 + 3);
+    }
+
+    #[test]
+    fn mesh_hops_are_manhattan() {
+        let n = Noc::new(Topology::Mesh { width: 4, height: 4 });
+        assert_eq!(n.hops(0, 15), 6); // (0,0) -> (3,3)
+        assert_eq!(n.hops(5, 5), 1); // self-delivery still crosses the NIC
+        assert_eq!(n.hops(1, 2), 1);
+    }
+
+    #[test]
+    fn multicast_cheaper_than_repeated_unicast() {
+        let mut n1 = Noc::new(Topology::Mesh { width: 4, height: 2 });
+        let mut n2 = Noc::new(Topology::Mesh { width: 4, height: 2 });
+        let mut cm = Counters::default();
+        let mut cu = Counters::default();
+        let dsts = [3, 5, 6, 7];
+        n1.transfer(&mut cm, Cast::Multicast { src: 0, dsts: &dsts }, 8);
+        for &d in &dsts {
+            n2.transfer(&mut cu, Cast::Unicast { src: 0, dst: d }, 8);
+        }
+        assert!(cm.noc_flit_hops < cu.noc_flit_hops);
+    }
+
+    #[test]
+    fn broadcast_reaches_all_endpoints() {
+        let mut n = Noc::new(Topology::Mesh { width: 2, height: 2 });
+        let mut c = Counters::default();
+        let lat = n.transfer(&mut c, Cast::Broadcast { src: 0 }, 1);
+        assert!(c.noc_flit_hops >= 4);
+        assert!(lat >= 2);
+    }
+
+    #[test]
+    fn endpoints_match_topology() {
+        assert_eq!(Noc::new(Topology::Crossbar { ports: 5 }).endpoints(), 5);
+        assert_eq!(Noc::new(Topology::Mesh { width: 16, height: 8 }).endpoints(), 128);
+    }
+}

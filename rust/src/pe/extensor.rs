@@ -1,0 +1,143 @@
+//! The Extensor baseline PE (paper §II.C, §IV.B.2; Hegde et al., MICRO'19).
+//!
+//! One MAC per PE behind a PE buffer (PEB); partial output rows spill to the
+//! shared partial-output buffer (POB) and are re-read once per k-tile group
+//! to accumulate final sums ("the baseline Extensor has a data movement
+//! between PE and POB that does not occur in the Maple based Extensor",
+//! §IV.B.4). The POB round trips are the back stage; a k-tile of width
+//! `ktile` determines how many groups a row's accumulation spans.
+
+use super::{PeModel, RowCost, RowProfile};
+use crate::config::AcceleratorConfig;
+use crate::trace::Counters;
+
+/// A-column tile width: distinct k' handled per POB round trip.
+const KTILE: u64 = 4;
+/// Exposed cycles per POB round trip (request + NoC traversal + bank access
+/// + return — the POB sits across the mesh from the PE).
+const POB_ROUND_TRIP: u64 = 12;
+/// Row-setup cycles.
+const ROW_SETUP: u64 = 1;
+/// POB accumulation-round cap: beyond this the hierarchical merge folds
+/// pairwise and the re-read volume is geometric, not linear.
+const ROUNDS_CAP: u64 = 6;
+
+/// Cost model of one baseline-Extensor PE.
+#[derive(Debug, Clone)]
+pub struct ExtensorPe {
+    /// Reciprocal of the POB drain bandwidth share (words/cycle/PE) —
+    /// stored inverted because the cost model multiplies per row
+    /// (EXPERIMENTS.md §Perf).
+    inv_pob_bw: f64,
+}
+
+impl ExtensorPe {
+    /// Build from an accelerator config.
+    pub fn from_config(cfg: &AcceleratorConfig) -> Self {
+        Self { inv_pob_bw: 1.0 / cfg.pob_words_per_cycle_per_pe.max(1.0) }
+    }
+
+    /// POB drain bandwidth share in words per cycle.
+    pub fn pob_words_per_cycle(&self) -> f64 {
+        1.0 / self.inv_pob_bw
+    }
+
+    /// POB accumulation groups for a row with `a_nnz` A-elements.
+    pub fn rounds(&self, a_nnz: u32) -> u64 {
+        (a_nnz as u64).div_ceil(KTILE).max(1)
+    }
+}
+
+impl PeModel for ExtensorPe {
+    fn row_cost(&self, p: &RowProfile, c: &mut Counters) -> RowCost {
+        if p.products == 0 {
+            c.intersect_cmp += p.a_nnz as u64;
+            return RowCost { front: if p.a_nnz > 0 { ROW_SETUP } else { 0 }, back: 0 };
+        }
+        let rounds = self.rounds(p.a_nnz);
+
+        // Hierarchical intersection on the way in (DRAM→LLB→PE, §II.C).
+        c.intersect_cmp += p.a_nnz as u64 + p.products;
+
+        // -- PEB traffic: operands staged + partial-sum read-modify-write.
+        //    PEB partials are coordinate-tagged (value + col_id), so the
+        //    psum RMW is two words each way — exactly the tag overhead
+        //    Maple's directly-indexed PSB eliminates (paper Eq. 8). --
+        c.peb_write += 2 * p.products + 2 * p.products; // operands + tagged psum
+        c.peb_read += 2 * p.products + 2 * p.products;
+
+        // -- MAC --
+        c.mac_mul += p.products;
+        c.mac_add += p.products;
+
+        // -- POB spill: each group writes its partial row once; the final
+        //    accumulation re-reads every group's partials (pairwise-folded
+        //    beyond ROUNDS_CAP, so both volume and latency saturate). --
+        let eff_rounds = rounds.min(ROUNDS_CAP);
+        let pob_write = 2 * p.products;
+        let pob_read = 2 * p.products * eff_rounds;
+        c.pob_write += pob_write;
+        c.pob_read += pob_read;
+
+        let front = ROW_SETUP + p.products;
+        // POB drain at the PE's bandwidth share plus exposed round trips.
+        let back = ((pob_write + pob_read) as f64 * self.inv_pob_bw).ceil() as u64
+            + eff_rounds * POB_ROUND_TRIP;
+        RowCost { front, back }
+    }
+
+    fn macs(&self) -> usize {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "extensor-baseline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+
+    fn pe() -> ExtensorPe {
+        ExtensorPe::from_config(&AcceleratorConfig::extensor_baseline())
+    }
+
+    #[test]
+    fn rounds_follow_ktile() {
+        let m = pe();
+        assert_eq!(m.rounds(1), 1);
+        assert_eq!(m.rounds(4), 1);
+        assert_eq!(m.rounds(5), 2);
+        assert_eq!(m.rounds(16), 4);
+    }
+
+    #[test]
+    fn pob_traffic_present_and_grows_with_rounds() {
+        let mut c1 = Counters::default();
+        let mut c4 = Counters::default();
+        pe().row_cost(&RowProfile { a_nnz: 2, products: 100, out_nnz: 90 }, &mut c1);
+        pe().row_cost(&RowProfile { a_nnz: 16, products: 100, out_nnz: 90 }, &mut c4);
+        assert!(c4.pob_read > c1.pob_read);
+        assert_eq!(c1.pob_write, c4.pob_write);
+    }
+
+    #[test]
+    fn back_stage_reflects_pob_round_trips() {
+        let m = pe();
+        let p = RowProfile { a_nnz: 8, products: 50, out_nnz: 45 };
+        let mut c = Counters::default();
+        let cost = m.row_cost(&p, &mut c);
+        assert!(cost.back >= m.rounds(8) * POB_ROUND_TRIP);
+        assert_eq!(cost.front, ROW_SETUP + 50);
+    }
+
+    #[test]
+    fn peb_rmw_traffic_is_eight_words_per_product() {
+        // 2 operand words + 2 coordinate-tagged psum words, each way.
+        let mut c = Counters::default();
+        pe().row_cost(&RowProfile { a_nnz: 1, products: 10, out_nnz: 10 }, &mut c);
+        assert_eq!(c.peb_read + c.peb_write, 80);
+    }
+}

@@ -1,0 +1,320 @@
+//! The Maple processing element (paper §III, Figs. 6–7).
+//!
+//! Datapath: a row of **A** is loaded into the ARB (values + `col_id` +
+//! `row_ptr` metadata); for each `k' ← A.col_id[i]` the nonzeros of
+//! `B[k',:]` stream through the BRB; `k` MAC units consume the product
+//! stream in parallel; each product `A.value[i][k'] × B.value[k'][j']`
+//! accumulates into the PSB register addressed by `j'` (Eq. 8), whose
+//! per-register adder performs Eq. (7) locally. Final sums drain straight
+//! from the PSB — no sorting queues, no POB.
+//!
+//! When an output row has more distinct `j'` than PSB registers, the row is
+//! processed in disjoint **column segments**: each pass handles one PSB-load
+//! of output columns, re-scanning the ARB to re-issue B-row fetches for the
+//! next range. Segments are exact (ranges are disjoint) so no re-merge is
+//! ever needed; the cost is the extra ARB re-reads and per-segment setup,
+//! which [`MaplePe::row_cost`] charges.
+
+use super::{PeModel, RowCost, RowProfile};
+use crate::config::{AcceleratorConfig, PeConfig};
+use crate::sparse::Csr;
+use crate::trace::Counters;
+
+/// Cycles to refill the pipeline at each segment boundary.
+const SEGMENT_SETUP: u64 = 4;
+/// Row-setup cycles exposed per row: zero — the ARB is a double-buffered
+/// FIFO (paper §III), so the next row's A elements and `row_ptr` metadata
+/// stream in while the current row computes.
+const ROW_SETUP: u64 = 0;
+
+/// Cost + functional model of one Maple PE.
+#[derive(Debug, Clone)]
+pub struct MaplePe {
+    macs: usize,
+    arb_entries: usize,
+    brb_entries: usize,
+    psb_entries: usize,
+}
+
+impl MaplePe {
+    /// Build from the PE section of an accelerator config.
+    pub fn from_config(cfg: &AcceleratorConfig) -> Self {
+        Self::new(&cfg.pe)
+    }
+
+    /// Build from a PE config (must be [`PeKind::Maple`](crate::config::PeKind::Maple)-shaped).
+    pub fn new(pe: &PeConfig) -> Self {
+        assert!(pe.macs_per_pe >= 1, "Maple PE needs at least one MAC");
+        assert!(pe.psb_entries >= 1, "Maple PE needs a PSB");
+        Self {
+            macs: pe.macs_per_pe,
+            arb_entries: pe.arb_entries.max(1),
+            brb_entries: pe.brb_entries.max(1),
+            psb_entries: pe.psb_entries,
+        }
+    }
+
+    /// Number of column segments a row of `out_nnz` outputs needs.
+    pub fn segments(&self, out_nnz: u32) -> u64 {
+        (out_nnz as u64).div_ceil(self.psb_entries as u64).max(1)
+    }
+
+    /// ARB capacity in element pairs.
+    pub fn arb_entries(&self) -> usize {
+        self.arb_entries
+    }
+
+    /// BRB capacity in element pairs.
+    pub fn brb_entries(&self) -> usize {
+        self.brb_entries
+    }
+
+    /// PSB register count (the paper's `N`).
+    pub fn psb_entries(&self) -> usize {
+        self.psb_entries
+    }
+
+    /// Functional execution of one output row `C[i,:] = Σ A[i,k']·B[k',:]`
+    /// through the Maple datapath: segment-by-segment, lane-by-lane. Returns
+    /// `(col_ids, values, cycles)` and counts every buffer action.
+    ///
+    /// This is the numerics oracle for the cost model: tests assert the
+    /// result equals the software reference and the counters/cycles equal
+    /// [`Self::row_cost`]'s closed forms.
+    pub fn simulate_row(
+        &self,
+        a: &Csr,
+        b: &Csr,
+        i: usize,
+        c: &mut Counters,
+    ) -> (Vec<u32>, Vec<f32>, u64) {
+        let a_cols = a.row_cols(i);
+        let a_vals = a.row_values(i);
+
+        // Row load: ARB is double-buffered; charge the writes.
+        c.arb_write += 2 * a_cols.len() as u64;
+        // Control filters empty B rows via row_ptr subtraction (Fig. 7).
+        c.intersect_cmp += a_cols.len() as u64;
+
+        // Pass 1 (control): discover distinct output columns to plan
+        // segments. Hardware does this with the PSB allocation itself; the
+        // planning scan below touches only metadata already in the ARB/BRB
+        // stream and is not charged extra energy.
+        let mut out_cols: Vec<u32> = Vec::new();
+        for &k in a_cols {
+            out_cols.extend_from_slice(b.row_cols(k as usize));
+        }
+        out_cols.sort_unstable();
+        out_cols.dedup();
+
+        let mut result_cols = Vec::with_capacity(out_cols.len());
+        let mut result_vals = Vec::with_capacity(out_cols.len());
+        let mut row_products = 0u64;
+        let mut cycles = ROW_SETUP;
+
+        let nseg = out_cols.len().div_ceil(self.psb_entries).max(1);
+        for seg in 0..nseg {
+            let lo_idx = seg * self.psb_entries;
+            let hi_idx = ((seg + 1) * self.psb_entries).min(out_cols.len());
+            if lo_idx >= out_cols.len() && seg > 0 {
+                break;
+            }
+            let (lo, hi) = if out_cols.is_empty() {
+                (0u32, u32::MAX)
+            } else {
+                (out_cols[lo_idx], out_cols[hi_idx - 1])
+            };
+            if seg > 0 {
+                // Segment transition: only the pipeline-refill bubble is
+                // exposed — the ARB re-scan overlaps the previous segment's
+                // PSB drain (double-buffered), though its reads still cost
+                // energy (charged below).
+                cycles += SEGMENT_SETUP;
+            }
+            // ARB re-scan for this segment.
+            c.arb_read += a_cols.len() as u64;
+
+            // PSB state for this segment, directly indexed by `j' − lo_idx`
+            // over the segment's (sorted, deduped) output columns — the
+            // software image of Eq. (8)'s register addressing. O(log) lookup
+            // into the sorted column window, O(1) accumulate.
+            let seg_cols = &out_cols[lo_idx..hi_idx];
+            let mut psb_vals = vec![0f32; seg_cols.len()];
+
+            for (&k, &av) in a_cols.iter().zip(a_vals) {
+                let bc = b.row_cols(k as usize);
+                let bv = b.row_values(k as usize);
+                // BRB streams only the in-range slice (metadata skip).
+                let start = bc.partition_point(|&x| x < lo);
+                let end = bc.partition_point(|&x| x <= hi);
+                for p in start..end {
+                    let j = bc[p];
+                    c.brb_write += 2;
+                    c.brb_read += 2;
+                    // MAC: multiply, then the PSB register's adder (Eq. 7).
+                    c.mac_mul += 1;
+                    c.mac_add += 1;
+                    c.psb_read += 1;
+                    c.psb_write += 1;
+                    row_products += 1;
+                    let pos = seg_cols.binary_search(&j).expect("j' is in the planned window");
+                    psb_vals[pos] += av * bv[p];
+                }
+            }
+            // Drain final sums (overlaps the next segment's fill in
+            // hardware; the cost model charges it to the back stage).
+            c.psb_read += seg_cols.len() as u64;
+            result_cols.extend_from_slice(seg_cols);
+            result_vals.extend_from_slice(&psb_vals);
+        }
+        // k MAC lanes consume the whole row's product stream; lanes stay
+        // filled across segment boundaries apart from the setup bubbles
+        // charged above.
+        cycles += row_products.div_ceil(self.macs as u64);
+
+        (result_cols, result_vals, cycles)
+    }
+}
+
+impl PeModel for MaplePe {
+    fn row_cost(&self, p: &RowProfile, c: &mut Counters) -> RowCost {
+        if p.products == 0 {
+            // Control still inspects row_ptr to skip the row (Fig. 7).
+            c.intersect_cmp += p.a_nnz as u64;
+            return RowCost { front: if p.a_nnz > 0 { ROW_SETUP } else { 0 }, back: 0 };
+        }
+        let segs = self.segments(p.out_nnz);
+
+        // -- action counts (closed forms of simulate_row) --
+        c.arb_write += 2 * p.a_nnz as u64;
+        c.arb_read += p.a_nnz as u64 * segs;
+        c.intersect_cmp += p.a_nnz as u64;
+        c.brb_write += 2 * p.products;
+        c.brb_read += 2 * p.products;
+        c.mac_mul += p.products;
+        c.mac_add += p.products;
+        c.psb_read += p.products + p.out_nnz as u64;
+        c.psb_write += p.products;
+
+        // -- cycles --
+        // Each product is processed exactly once (segments partition the
+        // output columns), so the multiply stream is products/k; segment
+        // transitions expose only the pipeline-refill bubble (the ARB
+        // re-scan overlaps the previous segment's drain).
+        let front = ROW_SETUP
+            + p.products.div_ceil(self.macs as u64)
+            + (segs - 1) * SEGMENT_SETUP;
+        // PSB drain overlaps the next row (double buffering); drain width
+        // scales with the lane count — the final sums leave on the k
+        // accumulate-adder result buses (Fig. 6).
+        let back = (p.out_nnz as u64).div_ceil(self.macs as u64);
+        RowCost { front, back }
+    }
+
+    fn macs(&self) -> usize {
+        self.macs
+    }
+
+    fn name(&self) -> &'static str {
+        "maple"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+    use crate::gustavson::spgemm_rowwise;
+    use crate::sparse::gen::{generate, Profile};
+
+    fn maple2() -> MaplePe {
+        MaplePe::from_config(&AcceleratorConfig::matraptor_maple())
+    }
+
+    #[test]
+    fn functional_row_matches_reference() {
+        let a = generate(40, 40, 240, Profile::Uniform, 91);
+        let c_ref = spgemm_rowwise(&a, &a);
+        let pe = maple2();
+        let mut counters = Counters::default();
+        for i in 0..a.rows() {
+            let (cols, vals, _) = pe.simulate_row(&a, &a, i, &mut counters);
+            assert_eq!(cols.as_slice(), c_ref.row_cols(i), "row {i} cols");
+            for (v, r) in vals.iter().zip(c_ref.row_values(i)) {
+                assert!((v - r).abs() < 1e-4, "row {i}: {v} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn functional_counters_match_cost_model() {
+        let a = generate(30, 30, 150, Profile::PowerLaw { alpha: 0.6 }, 13);
+        let c_ref = spgemm_rowwise(&a, &a);
+        let pe = maple2();
+        for i in 0..a.rows() {
+            let profile = RowProfile {
+                a_nnz: a.row_nnz(i) as u32,
+                products: a.row_cols(i).iter().map(|&k| a.row_nnz(k as usize) as u64).sum(),
+                out_nnz: c_ref.row_nnz(i) as u32,
+            };
+            let mut c_fun = Counters::default();
+            let (_, _, cyc_fun) = pe.simulate_row(&a, &a, i, &mut c_fun);
+            let mut c_cost = Counters::default();
+            let cost = pe.row_cost(&profile, &mut c_cost);
+            if profile.products > 0 {
+                assert_eq!(c_fun, c_cost, "row {i} counters diverge");
+                assert_eq!(cyc_fun, cost.front, "row {i} cycles diverge");
+            }
+        }
+    }
+
+    #[test]
+    fn segmentation_kicks_in_beyond_psb_capacity() {
+        let pe = maple2(); // PSB = 128
+        assert_eq!(pe.segments(0), 1);
+        assert_eq!(pe.segments(128), 1);
+        assert_eq!(pe.segments(129), 2);
+        assert_eq!(pe.segments(1525), 12);
+    }
+
+    #[test]
+    fn segmented_row_still_exact() {
+        // Force segmentation: tiny PSB, wide output row.
+        let pe = MaplePe::new(&crate::config::PeConfig {
+            kind: crate::config::PeKind::Maple,
+            macs_per_pe: 2,
+            arb_entries: 8,
+            brb_entries: 8,
+            psb_entries: 4, // absurdly small on purpose
+            num_queues: 0,
+            queue_bytes: 0,
+            peb_bytes: 0,
+        });
+        let a = generate(20, 20, 120, Profile::Uniform, 5);
+        let c_ref = spgemm_rowwise(&a, &a);
+        let mut c = Counters::default();
+        for i in 0..a.rows() {
+            let (cols, vals, _) = pe.simulate_row(&a, &a, i, &mut c);
+            assert_eq!(cols.as_slice(), c_ref.row_cols(i));
+            for (v, r) in vals.iter().zip(c_ref.row_values(i)) {
+                assert!((v - r).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn more_macs_fewer_cycles_same_energy_actions() {
+        let p = RowProfile { a_nnz: 10, products: 320, out_nnz: 100 };
+        let mk = |k: usize| {
+            let mut pe_cfg = AcceleratorConfig::extensor_maple().pe;
+            pe_cfg.macs_per_pe = k;
+            MaplePe::new(&pe_cfg)
+        };
+        let mut c4 = Counters::default();
+        let mut c16 = Counters::default();
+        let f4 = mk(4).row_cost(&p, &mut c4);
+        let f16 = mk(16).row_cost(&p, &mut c16);
+        assert!(f4.front > f16.front);
+        assert_eq!(c4, c16, "MAC count changes time, not actions");
+    }
+}

@@ -1,0 +1,139 @@
+//! The Matraptor baseline PE (paper §II.C, §IV.B.1; Srivastava et al.,
+//! MICRO'20).
+//!
+//! One MAC per PE; partial sums are scattered round-robin into per-PE
+//! *sorting queues* and accumulated by a multi-pass merge ("each PE must use
+//! a large sorting queue buffers and conduct the accumulate operation
+//! repeatedly in a round-robin fashion", §IV.B.4). The PE behaves as a
+//! two-stage pipeline: row i's multiply phase overlaps row i−1's merge
+//! phase, so the visible cost is `max(front_i, back_{i-1})`.
+
+use super::{PeModel, RowCost, RowProfile};
+use crate::config::AcceleratorConfig;
+use crate::trace::Counters;
+
+/// Cycles to flush the merge tree at the end of a row.
+const MERGE_FLUSH: u64 = 8;
+/// Row-setup cycles (pointer loads, queue reset).
+const ROW_SETUP: u64 = 2;
+
+/// Cost model of one baseline-Matraptor PE.
+#[derive(Debug, Clone)]
+pub struct MatraptorPe {
+    /// Sorting queues per PE.
+    num_queues: usize,
+    /// Queue capacity in (value, col_id) entries across all queues.
+    queue_entries: u64,
+    /// Merge passes over each partial sum (round-robin accumulate).
+    merge_passes: u64,
+}
+
+impl MatraptorPe {
+    /// Build from an accelerator config.
+    pub fn from_config(cfg: &AcceleratorConfig) -> Self {
+        assert!(cfg.pe.num_queues > 0, "Matraptor baseline PE needs queues");
+        Self {
+            num_queues: cfg.pe.num_queues,
+            queue_entries: (cfg.pe.queue_bytes / 8) as u64,
+            merge_passes: cfg.merge_passes.max(1) as u64,
+        }
+    }
+
+    /// Queue count.
+    pub fn num_queues(&self) -> usize {
+        self.num_queues
+    }
+
+    /// Total queue capacity in entries.
+    pub fn queue_entries(&self) -> u64 {
+        self.queue_entries
+    }
+}
+
+impl PeModel for MatraptorPe {
+    fn row_cost(&self, p: &RowProfile, c: &mut Counters) -> RowCost {
+        if p.products == 0 {
+            c.intersect_cmp += p.a_nnz as u64;
+            return RowCost { front: if p.a_nnz > 0 { ROW_SETUP } else { 0 }, back: 0 };
+        }
+        c.intersect_cmp += p.a_nnz as u64;
+
+        // -- multiply phase --
+        // One MAC: one product per cycle; each partial sum (value, col_id)
+        // is inserted into a sorting queue.
+        c.mac_mul += p.products;
+        c.queue_write += 2 * p.products;
+
+        // Queue overflow: when a row's partial sums exceed the queues, the
+        // merge must run mid-row and the multiply stalls for the drain.
+        let overflow = p.products.saturating_sub(self.queue_entries);
+
+        // -- merge phase (round-robin, multi-pass) --
+        // Every pass re-reads each partial sum and writes the merged run
+        // back; the final pass emits final sums instead of re-writing.
+        let passes = self.merge_passes;
+        c.queue_read += 2 * p.products * passes;
+        c.queue_write += 2 * p.products * (passes - 1);
+        c.intersect_cmp += p.products * passes; // merge comparators
+        c.mac_add += p.products; // accumulation adds (Eq. 7 equivalent)
+
+        let front = ROW_SETUP + p.products + overflow;
+        // Merge tree consumes one entry per cycle per pass set; passes are
+        // pipelined through the queue banks, so the visible back-stage cost
+        // is one traversal plus the flush.
+        let back = p.products + MERGE_FLUSH;
+        RowCost { front, back }
+    }
+
+    fn macs(&self) -> usize {
+        1
+    }
+
+    fn name(&self) -> &'static str {
+        "matraptor-baseline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+
+    fn pe() -> MatraptorPe {
+        MatraptorPe::from_config(&AcceleratorConfig::matraptor_baseline())
+    }
+
+    #[test]
+    fn queue_traffic_scales_with_merge_passes() {
+        let p = RowProfile { a_nnz: 4, products: 100, out_nnz: 90 };
+        let mut c = Counters::default();
+        pe().row_cost(&p, &mut c);
+        let passes = AcceleratorConfig::matraptor_baseline().merge_passes as u64;
+        assert_eq!(c.queue_read, 2 * 100 * passes);
+        assert_eq!(c.queue_write, 2 * 100 + 2 * 100 * (passes - 1));
+    }
+
+    #[test]
+    fn merge_overlaps_as_back_stage() {
+        let p = RowProfile { a_nnz: 4, products: 100, out_nnz: 90 };
+        let mut c = Counters::default();
+        let cost = pe().row_cost(&p, &mut c);
+        assert_eq!(cost.front, ROW_SETUP + 100);
+        assert_eq!(cost.back, 100 + MERGE_FLUSH);
+    }
+
+    #[test]
+    fn overflow_stalls_the_front() {
+        let m = pe();
+        let cap = m.queue_entries();
+        let p = RowProfile { a_nnz: 10, products: cap + 500, out_nnz: 1000 };
+        let mut c = Counters::default();
+        let cost = m.row_cost(&p, &mut c);
+        assert_eq!(cost.front, ROW_SETUP + (cap + 500) + 500);
+    }
+
+    #[test]
+    fn single_mac() {
+        assert_eq!(pe().macs(), 1);
+    }
+}

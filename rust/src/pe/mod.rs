@@ -1,0 +1,149 @@
+//! Processing-element micro-architecture models.
+//!
+//! Three PEs are modelled (paper §II.C, §III, §IV.B):
+//!
+//! * [`MaplePe`] — the paper's contribution: ARB + BRB + PSB register
+//!   buffers feeding `k` MAC units, operating directly on CSR metadata.
+//! * [`MatraptorPe`] — the Matraptor baseline: one MAC plus per-PE sorting
+//!   queues with a multi-pass round-robin merge.
+//! * [`ExtensorPe`] — the Extensor baseline: one MAC plus a PEB, spilling
+//!   partial output rows to the shared POB.
+//!
+//! Each model has two faces, and tests pin them to each other:
+//!
+//! 1. a **functional datapath** (`simulate_row` on [`MaplePe`]) that executes
+//!    real CSR rows element-by-element — the numerics oracle;
+//! 2. a **row-cost model** (`row_cost`) that produces the identical action
+//!    counts plus a two-stage cycle cost from a row's work profile; the
+//!    full-scale simulator runs on this (O(rows), not O(products)).
+
+mod extensor;
+mod maple;
+mod matraptor;
+
+pub use extensor::ExtensorPe;
+pub use maple::MaplePe;
+pub use matraptor::MatraptorPe;
+
+use crate::trace::Counters;
+
+/// The per-output-row work profile every cost model consumes. Produced by
+/// the profile pass in [`crate::sim`] (an exact functional execution).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RowProfile {
+    /// nnz of the A row (`row_ptr[i+1] - row_ptr[i]`, paper Fig. 7).
+    pub a_nnz: u32,
+    /// Scalar products this row generates (Σ_k' nnz(B[k',:]), Eq. 3).
+    pub products: u64,
+    /// nnz of the output row C[i,:] (distinct j' after accumulation, Eq. 7).
+    pub out_nnz: u32,
+}
+
+/// Two-stage cycle cost of one row on one PE.
+///
+/// `front` occupies the PE's multiply datapath; `back` is post-processing
+/// (Matraptor's merge, Extensor's POB round trips, Maple's PSB drain) that
+/// overlaps the *next* row's front stage when the PE is double-buffered.
+/// The simulator composes rows as `t += max(front_i, back_{i-1})`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RowCost {
+    pub front: u64,
+    pub back: u64,
+}
+
+/// A processing-element cost model.
+pub trait PeModel {
+    /// Account one output row: bump action counters, return its cycle cost.
+    fn row_cost(&self, p: &RowProfile, c: &mut Counters) -> RowCost;
+
+    /// MAC units in this PE.
+    fn macs(&self) -> usize;
+
+    /// Human-readable model name.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AcceleratorConfig;
+
+    fn profiles() -> Vec<RowProfile> {
+        vec![
+            RowProfile { a_nnz: 0, products: 0, out_nnz: 0 },
+            RowProfile { a_nnz: 1, products: 1, out_nnz: 1 },
+            RowProfile { a_nnz: 5, products: 31, out_nnz: 29 },
+            RowProfile { a_nnz: 44, products: 1925, out_nnz: 1525 },
+        ]
+    }
+
+    /// Every model: zero-work rows cost (almost) nothing and count nothing.
+    #[test]
+    fn empty_rows_are_cheap_everywhere() {
+        let cfgs = AcceleratorConfig::paper_configs();
+        let models: Vec<Box<dyn PeModel>> = vec![
+            Box::new(MatraptorPe::from_config(&cfgs[0])),
+            Box::new(MaplePe::from_config(&cfgs[1])),
+            Box::new(ExtensorPe::from_config(&cfgs[2])),
+            Box::new(MaplePe::from_config(&cfgs[3])),
+        ];
+        for m in &models {
+            let mut c = Counters::default();
+            let cost = m.row_cost(&RowProfile::default(), &mut c);
+            assert_eq!(c.mac_mul, 0, "{}", m.name());
+            assert!(cost.front <= 2 && cost.back <= 2, "{}", m.name());
+        }
+    }
+
+    /// MAC work is invariant across PEs — the paper equalises MACs, the
+    /// dataflow only moves *where* partial sums live (§IV.B).
+    #[test]
+    fn mac_counts_identical_across_models() {
+        let cfgs = AcceleratorConfig::paper_configs();
+        for p in profiles() {
+            let mut c_base = Counters::default();
+            let mut c_maple = Counters::default();
+            MatraptorPe::from_config(&cfgs[0]).row_cost(&p, &mut c_base);
+            MaplePe::from_config(&cfgs[1]).row_cost(&p, &mut c_maple);
+            assert_eq!(c_base.mac_mul, c_maple.mac_mul);
+            assert_eq!(c_base.mac_mul, p.products);
+        }
+    }
+
+    /// Maple PEs never touch queues, PEB, or POB; baselines never touch
+    /// ARB/BRB/PSB (paper Fig. 6 vs §II.C).
+    #[test]
+    fn lane_separation_between_pe_kinds() {
+        let cfgs = AcceleratorConfig::paper_configs();
+        let p = RowProfile { a_nnz: 5, products: 31, out_nnz: 29 };
+
+        let mut c = Counters::default();
+        MaplePe::from_config(&cfgs[1]).row_cost(&p, &mut c);
+        assert_eq!(c.queue_read + c.queue_write + c.peb_read + c.peb_write, 0);
+        assert_eq!(c.pob_read + c.pob_write, 0);
+        assert!(c.psb_write > 0 && c.brb_read > 0);
+
+        let mut c = Counters::default();
+        MatraptorPe::from_config(&cfgs[0]).row_cost(&p, &mut c);
+        assert_eq!(c.arb_read + c.brb_read + c.psb_read, 0);
+        assert!(c.queue_write > 0);
+
+        let mut c = Counters::default();
+        ExtensorPe::from_config(&cfgs[2]).row_cost(&p, &mut c);
+        assert_eq!(c.arb_read + c.brb_read + c.psb_read, 0);
+        assert!(c.peb_write > 0 && c.pob_write > 0);
+    }
+
+    /// The Maple PE's front stage scales ~1/k with its MAC count (the
+    /// parallelism claim of §III).
+    #[test]
+    fn maple_front_scales_with_macs() {
+        let p = RowProfile { a_nnz: 8, products: 256, out_nnz: 200 };
+        let cfg2 = AcceleratorConfig::matraptor_maple(); // k = 2
+        let cfg16 = AcceleratorConfig::extensor_maple(); // k = 16
+        let mut c = Counters::default();
+        let f2 = MaplePe::from_config(&cfg2).row_cost(&p, &mut c).front;
+        let f16 = MaplePe::from_config(&cfg16).row_cost(&p, &mut c).front;
+        assert!(f2 > 6 * f16, "k=2 front {f2} vs k=16 front {f16}");
+    }
+}

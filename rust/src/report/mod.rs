@@ -1,0 +1,178 @@
+//! Report emitters: regenerate every table and figure of the paper as
+//! markdown (for humans) and CSV (for plotting), in the paper's own layout.
+
+use crate::accel::fig8;
+use crate::config::AcceleratorConfig;
+use crate::energy::TechModel;
+use crate::sim::SimResult;
+use crate::sparse::suite::TABLE_I;
+
+/// Render a markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("| {} |\n", header.join(" | ")));
+    s.push_str(&format!("|{}\n", "---|".repeat(header.len())));
+    for r in rows {
+        s.push_str(&format!("| {} |\n", r.join(" | ")));
+    }
+    s
+}
+
+/// Render CSV.
+pub fn csv(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = header.join(",");
+    s.push('\n');
+    for r in rows {
+        s.push_str(&r.join(","));
+        s.push('\n');
+    }
+    s
+}
+
+/// Table I: the simulation datasets.
+pub fn table1(markdown: bool) -> String {
+    let header = ["Matrix", "Dim", "nnz", "Density"];
+    let rows: Vec<Vec<String>> = TABLE_I
+        .iter()
+        .map(|d| {
+            vec![
+                format!("{} ({})", d.name, d.abbrev),
+                format!("{}K x {}K", d.rows / 1000, d.cols / 1000),
+                format!("{:.1}M", d.nnz as f64 / 1e6),
+                format!("{:.1e}", d.density()),
+            ]
+        })
+        .collect();
+    if markdown {
+        markdown_table(&header, &rows)
+    } else {
+        csv(&header, &rows)
+    }
+}
+
+/// Fig. 3: normalized energy of computation vs data movement at 45 nm.
+pub fn fig3(markdown: bool) -> String {
+    let header = ["Operation", "Normalized energy (MAC = 1)"];
+    let rows: Vec<Vec<String>> = TechModel::tech45()
+        .fig3_rows()
+        .into_iter()
+        .map(|(name, v)| vec![name.to_string(), format!("{v:.2}")])
+        .collect();
+    if markdown {
+        markdown_table(&header, &rows)
+    } else {
+        csv(&header, &rows)
+    }
+}
+
+/// Fig. 8: PE-complex area, baseline vs Maple, for one accelerator pair.
+pub fn fig8_report(base: &AcceleratorConfig, maple: &AcceleratorConfig, markdown: bool) -> String {
+    let (rb, rm, ratio) = fig8(base, maple);
+    let header = ["Config", "PEs", "MACs/PE", "MAC mm2", "Buffers mm2", "Logic mm2", "Total mm2"];
+    let row = |r: &crate::accel::Fig8Row| {
+        vec![
+            r.config.clone(),
+            r.num_pes.to_string(),
+            r.macs_per_pe.to_string(),
+            format!("{:.4}", r.mac_mm2),
+            format!("{:.4}", r.buffers_mm2),
+            format!("{:.4}", r.logic_mm2),
+            format!("{:.4}", r.total_mm2),
+        ]
+    };
+    let rows = vec![row(&rb), row(&rm)];
+    let mut s = if markdown { markdown_table(&header, &rows) } else { csv(&header, &rows) };
+    s.push_str(&format!("\narea ratio (baseline / maple): {ratio:.2}x\n"));
+    s
+}
+
+/// One dataset's row in the Fig. 9 comparison.
+#[derive(Debug, Clone)]
+pub struct Fig9Row {
+    pub dataset: String,
+    /// Fig. 9(a): energy benefit % of Maple config over baseline.
+    pub energy_benefit_pct: f64,
+    /// Fig. 9(b): speedup % of Maple config over baseline.
+    pub speedup_pct: f64,
+    pub baseline_pj: f64,
+    pub maple_pj: f64,
+    pub baseline_cycles: u64,
+    pub maple_cycles: u64,
+}
+
+impl Fig9Row {
+    /// Build from a (baseline, maple) result pair.
+    pub fn from_results(dataset: &str, base: &SimResult, maple: &SimResult) -> Self {
+        Fig9Row {
+            dataset: dataset.to_string(),
+            energy_benefit_pct: maple.energy_benefit_pct(base),
+            speedup_pct: maple.speedup_pct(base),
+            baseline_pj: base.energy.total_pj(),
+            maple_pj: maple.energy.total_pj(),
+            baseline_cycles: base.cycles_compute,
+            maple_cycles: maple.cycles_compute,
+        }
+    }
+}
+
+/// Fig. 9 report over a set of dataset rows, with the paper-style mean.
+pub fn fig9_report(title: &str, rows: &[Fig9Row], markdown: bool) -> String {
+    let header = ["Dataset", "Energy benefit %", "Speedup %"];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                format!("{:.1}", r.energy_benefit_pct),
+                format!("{:.1}", r.speedup_pct),
+            ]
+        })
+        .collect();
+    let mean_e = rows.iter().map(|r| r.energy_benefit_pct).sum::<f64>() / rows.len().max(1) as f64;
+    let mean_s = rows.iter().map(|r| r.speedup_pct).sum::<f64>() / rows.len().max(1) as f64;
+    let mut s = format!("## {title}\n\n");
+    s.push_str(&if markdown { markdown_table(&header, &body) } else { csv(&header, &body) });
+    s.push_str(&format!("\nmean energy benefit: {mean_e:.1}%   mean speedup: {mean_s:.1}%\n"));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_lists_all_fourteen() {
+        let t = table1(true);
+        assert_eq!(t.lines().count(), 2 + 14);
+        assert!(t.contains("web-Google"));
+        assert!(t.contains("6.1e-6"));
+    }
+
+    #[test]
+    fn fig3_contains_all_lanes() {
+        let f = fig3(false);
+        for lane in ["MAC", "C/D", "IN", "L0<->MAC", "PE<->MAC", "L1<->MAC", "L2<->MAC"] {
+            assert!(f.contains(lane), "missing {lane}");
+        }
+    }
+
+    #[test]
+    fn fig8_report_prints_ratio() {
+        let s = fig8_report(
+            &AcceleratorConfig::matraptor_baseline(),
+            &AcceleratorConfig::matraptor_maple(),
+            true,
+        );
+        assert!(s.contains("area ratio"));
+        assert!(s.contains("matraptor-baseline"));
+    }
+
+    #[test]
+    fn csv_and_markdown_shapes() {
+        let rows = vec![vec!["a".into(), "1".into()]];
+        let md = markdown_table(&["x", "y"], &rows);
+        assert!(md.starts_with("| x | y |"));
+        let c = csv(&["x", "y"], &rows);
+        assert_eq!(c, "x,y\na,1\n");
+    }
+}

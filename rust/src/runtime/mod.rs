@@ -1,0 +1,192 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! from the Rust hot path — Python never runs at request time.
+//!
+//! The interchange format is **HLO text** (not a serialized `HloModuleProto`):
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that the pinned
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md).
+
+use std::path::{Path, PathBuf};
+
+/// Errors from artifact loading / execution.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifact not found: {0} (run `make artifacts` first)")]
+    Missing(PathBuf),
+    #[error("artifact metadata error: {0}")]
+    Meta(String),
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Dimensions of the compiled Maple datapath tile, written by `aot.py`
+/// alongside the HLO artifacts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileMeta {
+    /// ARB tile: A-row elements per invocation (`k'` window).
+    pub kt: usize,
+    /// PSB tile: output columns per invocation (the paper's `N`).
+    pub nt: usize,
+    /// Rows per batched model invocation.
+    pub rows: usize,
+}
+
+impl TileMeta {
+    /// Parse the flat-integer-object JSON `aot.py` writes, e.g.
+    /// `{"kt": 16, "nt": 128, "rows": 8}` (no external JSON dependency in
+    /// the offline build — see DESIGN.md §Dependencies).
+    pub fn from_json(s: &str) -> Result<Self, RuntimeError> {
+        let body = s
+            .trim()
+            .strip_prefix('{')
+            .and_then(|t| t.trim_end().strip_suffix('}'))
+            .ok_or_else(|| RuntimeError::Meta("meta.json: not a JSON object".into()))?;
+        let (mut kt, mut nt, mut rows) = (None, None, None);
+        for field in body.split(',') {
+            let (key, val) = field
+                .split_once(':')
+                .ok_or_else(|| RuntimeError::Meta(format!("meta.json: bad field {field:?}")))?;
+            let key = key.trim().trim_matches('"');
+            let val: usize = val
+                .trim()
+                .parse()
+                .map_err(|_| RuntimeError::Meta(format!("meta.json: bad value for {key}")))?;
+            match key {
+                "kt" => kt = Some(val),
+                "nt" => nt = Some(val),
+                "rows" => rows = Some(val),
+                other => return Err(RuntimeError::Meta(format!("meta.json: unknown key {other}"))),
+            }
+        }
+        match (kt, nt, rows) {
+            (Some(kt), Some(nt), Some(rows)) => Ok(TileMeta { kt, nt, rows }),
+            _ => Err(RuntimeError::Meta("meta.json: missing kt/nt/rows".into())),
+        }
+    }
+
+    /// Serialise back to the same JSON shape.
+    pub fn to_json(&self) -> String {
+        format!("{{\"kt\": {}, \"nt\": {}, \"rows\": {}}}", self.kt, self.nt, self.rows)
+    }
+}
+
+/// A compiled HLO module ready to execute on the PJRT CPU client.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl LoadedModule {
+    /// Load HLO text from `path` and compile it.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self, RuntimeError> {
+        if !path.exists() {
+            return Err(RuntimeError::Missing(path.to_path_buf()));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("artifact path is valid UTF-8"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self { exe, name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned() })
+    }
+
+    /// Execute with literal inputs; returns the unwrapped tuple elements.
+    /// (aot.py lowers with `return_tuple=True`.)
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<xla::Literal, RuntimeError> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result)
+    }
+
+    /// Module name (artifact file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// The Maple PE datapath compiled from the Pallas kernel: one invocation
+/// computes `PSB[0..nt] = Σ_k ARB_vals[k] · BRB_dense[k, 0..nt]` — Eq. (3)
+/// plus the PSB accumulation of Eq. (7) for one (A-row-tile, PSB-tile) pair.
+pub struct MapleDatapath {
+    module: LoadedModule,
+    meta: TileMeta,
+}
+
+impl MapleDatapath {
+    /// Load `maple_pe.hlo.txt` + `meta.json` from the artifacts directory.
+    pub fn load(client: &xla::PjRtClient, artifacts_dir: &Path) -> Result<Self, RuntimeError> {
+        let meta_path = artifacts_dir.join("meta.json");
+        if !meta_path.exists() {
+            return Err(RuntimeError::Missing(meta_path));
+        }
+        let meta = TileMeta::from_json(&std::fs::read_to_string(meta_path)?)?;
+        let module = LoadedModule::load(client, &artifacts_dir.join("maple_pe.hlo.txt"))?;
+        Ok(Self { module, meta })
+    }
+
+    /// Tile dimensions.
+    pub fn meta(&self) -> TileMeta {
+        self.meta
+    }
+
+    /// Execute one tile: `a_vals` has length `kt` (zero-padded ARB lane
+    /// values), `b_dense` is `kt × nt` row-major (gathered/decompressed BRB
+    /// content). Returns the `nt` partial sums.
+    pub fn run_tile(&self, a_vals: &[f32], b_dense: &[f32]) -> Result<Vec<f32>, RuntimeError> {
+        let (kt, nt) = (self.meta.kt, self.meta.nt);
+        if a_vals.len() != kt || b_dense.len() != kt * nt {
+            return Err(RuntimeError::Meta(format!(
+                "tile shape mismatch: got a={}, b={}, want a={kt}, b={}",
+                a_vals.len(),
+                b_dense.len(),
+                kt * nt
+            )));
+        }
+        let a = xla::Literal::vec1(a_vals);
+        let b = xla::Literal::vec1(b_dense).reshape(&[kt as i64, nt as i64])?;
+        let out = self.module.run(&[a, b])?;
+        let tuple = out.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+}
+
+/// Default artifacts directory: `$MAPLE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("MAPLE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let client = xla::PjRtClient::cpu().expect("CPU PJRT client");
+        let err = LoadedModule::load(&client, Path::new("/nonexistent/x.hlo.txt"));
+        assert!(matches!(err, Err(RuntimeError::Missing(_))));
+        let err = MapleDatapath::load(&client, Path::new("/nonexistent"));
+        assert!(matches!(err, Err(RuntimeError::Missing(_))));
+    }
+
+    #[test]
+    fn tile_meta_round_trips_json() {
+        let m = TileMeta { kt: 16, nt: 128, rows: 8 };
+        let back = TileMeta::from_json(&m.to_json()).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn tile_meta_rejects_malformed_json() {
+        assert!(TileMeta::from_json("not json").is_err());
+        assert!(TileMeta::from_json("{\"kt\": 16}").is_err());
+        assert!(TileMeta::from_json("{\"kt\": 16, \"nt\": 1, \"bogus\": 2}").is_err());
+        assert!(TileMeta::from_json("{\"kt\": \"x\", \"nt\": 1, \"rows\": 2}").is_err());
+    }
+
+    // Execution against real artifacts is covered by rust/tests/runtime_aot.rs
+    // (integration test, requires `make artifacts`).
+}

@@ -1,0 +1,150 @@
+//! Simulation driver: the public entry point that turns (config, A, B) into
+//! cycles + energy + action counts.
+//!
+//! Pipeline: [`profile_workload`] performs the exact functional execution
+//! (once per workload — it is shared across the four configurations being
+//! compared), then [`crate::accel::Accelerator::run`] replays the per-row
+//! work profiles through the configured PE cost models, the coordinator's
+//! partition, the run-level memory/NoC flows, and the energy aggregation.
+
+pub mod des;
+mod profile;
+
+pub use des::{simulate_des, DesResult};
+pub use profile::{profile_workload, profile_workload_parallel, Workload};
+
+use crate::accel::Accelerator;
+use crate::config::AcceleratorConfig;
+use crate::coordinator::Policy;
+use crate::energy::EnergyBreakdown;
+use crate::sparse::Csr;
+use crate::trace::Counters;
+
+/// The result of simulating one workload on one accelerator configuration.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Configuration name (e.g. `matraptor-maple`).
+    pub config: String,
+    /// Datapath-limited cycle count (max over PE timelines). This is the
+    /// quantity the paper's Sparseloop methodology reports as performance
+    /// (DESIGN.md §Modeling) and what Fig. 9(b) compares.
+    pub cycles_compute: u64,
+    /// Cycles if the run were purely DRAM-bandwidth-bound.
+    pub cycles_dram_bound: u64,
+    /// max(compute, dram) — the wall-clock lower bound.
+    pub cycles: u64,
+    /// All action counts.
+    pub counters: Counters,
+    /// Energy aggregation of `counters` under the 45 nm model.
+    pub energy: EnergyBreakdown,
+    /// Output nnz (verification).
+    pub out_nnz: u64,
+    /// Numeric checksum of C (verification).
+    pub checksum: f64,
+    /// Total scalar products (work).
+    pub total_products: u64,
+    /// PE load-balance factor (max/mean products per PE).
+    pub balance: f64,
+}
+
+impl SimResult {
+    /// Energy benefit (%) of `self` over a baseline run — the paper's
+    /// Fig. 9(a) metric: `100 × (1 − E_maple / E_base)`.
+    pub fn energy_benefit_pct(&self, baseline: &SimResult) -> f64 {
+        100.0 * (1.0 - self.energy.total_pj() / baseline.energy.total_pj())
+    }
+
+    /// Speedup (%) of `self` over a baseline run — the paper's Fig. 9(b)
+    /// metric: `100 × (cycles_base / cycles_maple − 1)`.
+    pub fn speedup_pct(&self, baseline: &SimResult) -> f64 {
+        100.0 * (baseline.cycles_compute as f64 / self.cycles_compute as f64 - 1.0)
+    }
+
+    /// MAC utilisation: products / (cycles × total MACs available). Needs
+    /// the config to know the MAC count.
+    pub fn mac_utilisation(&self, cfg: &AcceleratorConfig) -> f64 {
+        if self.cycles_compute == 0 {
+            return 0.0;
+        }
+        self.total_products as f64 / (self.cycles_compute as f64 * cfg.total_macs() as f64)
+    }
+}
+
+/// Simulate `C = A × B` on `cfg` with the default (round-robin) row routing.
+pub fn simulate_spmspm(cfg: &AcceleratorConfig, a: &Csr, b: &Csr) -> SimResult {
+    let w = profile_workload(a, b);
+    simulate_workload(cfg, &w, Policy::RoundRobin)
+}
+
+/// Simulate a pre-profiled workload (reuse the profile across configs).
+pub fn simulate_workload(cfg: &AcceleratorConfig, w: &Workload, policy: Policy) -> SimResult {
+    Accelerator::new(cfg.clone()).run(w, policy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen::{generate, Profile};
+
+    fn workload() -> Workload {
+        let a = generate(400, 400, 4000, Profile::PowerLaw { alpha: 0.6 }, 17);
+        profile_workload(&a, &a)
+    }
+
+    #[test]
+    fn all_four_configs_run_and_verify() {
+        let w = workload();
+        for cfg in AcceleratorConfig::paper_configs() {
+            let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+            assert_eq!(r.out_nnz, w.out_nnz, "{}", cfg.name);
+            assert_eq!(r.total_products, w.total_products);
+            assert!(r.cycles_compute > 0);
+            assert!(r.energy.total_pj() > 0.0);
+            assert_eq!(r.counters.mac_mul, w.total_products, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn maple_beats_baseline_on_energy_and_speed() {
+        // The paper's headline (abstract): Maple-based configs win on both
+        // energy and cycles in both reference accelerators.
+        let w = workload();
+        for (base, maple) in [
+            (AcceleratorConfig::matraptor_baseline(), AcceleratorConfig::matraptor_maple()),
+            (AcceleratorConfig::extensor_baseline(), AcceleratorConfig::extensor_maple()),
+        ] {
+            let rb = simulate_workload(&base, &w, Policy::RoundRobin);
+            let rm = simulate_workload(&maple, &w, Policy::RoundRobin);
+            assert!(
+                rm.energy_benefit_pct(&rb) > 0.0,
+                "{}: energy benefit {:.1}%",
+                base.name,
+                rm.energy_benefit_pct(&rb)
+            );
+            assert!(
+                rm.speedup_pct(&rb) > 0.0,
+                "{}: speedup {:.1}%",
+                base.name,
+                rm.speedup_pct(&rb)
+            );
+        }
+    }
+
+    #[test]
+    fn greedy_policy_never_worse_than_round_robin() {
+        let w = workload();
+        let cfg = AcceleratorConfig::matraptor_maple();
+        let rr = simulate_workload(&cfg, &w, Policy::RoundRobin);
+        let greedy = simulate_workload(&cfg, &w, Policy::GreedyBalance);
+        assert!(greedy.cycles_compute <= rr.cycles_compute + rr.cycles_compute / 10);
+        assert!(greedy.balance <= rr.balance + 0.05);
+    }
+
+    #[test]
+    fn dram_bound_is_config_independent() {
+        let w = workload();
+        let r1 = simulate_workload(&AcceleratorConfig::matraptor_baseline(), &w, Policy::RoundRobin);
+        let r2 = simulate_workload(&AcceleratorConfig::matraptor_maple(), &w, Policy::RoundRobin);
+        assert_eq!(r1.cycles_dram_bound, r2.cycles_dram_bound);
+    }
+}

@@ -1,0 +1,236 @@
+//! The profile pass: one exact functional execution of `C = A × B` that
+//! produces every per-row quantity the accelerator cost models need
+//! (paper Eq. 3's product counts, Eq. 7's distinct-`j'` counts), plus a
+//! checksum for end-to-end numeric verification against the AOT-compiled
+//! Pallas datapath (see `examples/verify_numerics.rs`).
+//!
+//! The pass uses a generation-tagged sparse accumulator and never
+//! materialises C (the full output of `web-Google²` is ~0.5 GB), so
+//! profiling all fourteen Table-I workloads stays fast and memory-flat.
+
+use crate::pe::RowProfile;
+use crate::sparse::Csr;
+
+/// Everything a simulation needs to know about one `C = A × B` workload.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    /// Output rows (= rows of A).
+    pub rows: usize,
+    /// Output columns (= cols of B).
+    pub cols: usize,
+    pub nnz_a: u64,
+    pub nnz_b: u64,
+    /// nnz of the result C.
+    pub out_nnz: u64,
+    /// Total scalar products (Gustavson work).
+    pub total_products: u64,
+    /// Per-output-row work profiles.
+    pub profiles: Vec<RowProfile>,
+    /// Σ C[i,j] in f64 — the numeric fingerprint of the run.
+    pub checksum: f64,
+}
+
+impl Workload {
+    /// Compression ratio `products / out_nnz` — how much accumulation the
+    /// output needs (1.0 = no collisions).
+    pub fn accumulation_factor(&self) -> f64 {
+        if self.out_nnz == 0 {
+            1.0
+        } else {
+            self.total_products as f64 / self.out_nnz as f64
+        }
+    }
+
+    /// Compulsory DRAM traffic in 32-bit words: stream both operands' CSR
+    /// images in and the result's out (value + col_id per nonzero, row_ptr
+    /// per row). Both baseline and Maple configurations incur exactly this
+    /// (see DESIGN.md §Modeling).
+    pub fn compulsory_dram_words(&self) -> u64 {
+        let a = 2 * self.nnz_a + self.rows as u64 + 1;
+        let b = 2 * self.nnz_b + self.rows as u64 + 1;
+        let c = 2 * self.out_nnz + self.rows as u64 + 1;
+        a + b + c
+    }
+}
+
+/// Parallel profile pass: row ranges are independent, so each worker runs
+/// the serial pass over a chunk with its own SPA and the results
+/// concatenate. Deterministic for a fixed `threads` (checksum addition is
+/// reassociated across — but not within — chunk boundaries).
+pub fn profile_workload_parallel(a: &Csr, b: &Csr, threads: usize) -> Workload {
+    assert_eq!(a.cols(), b.rows(), "dimension mismatch");
+    let threads = threads.clamp(1, a.rows().max(1));
+    if threads == 1 {
+        return profile_workload(a, b);
+    }
+    let chunk = a.rows().div_ceil(threads);
+    let parts: Vec<(Vec<RowProfile>, u64, u64, f64)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let lo = t * chunk;
+                let hi = ((t + 1) * chunk).min(a.rows());
+                scope.spawn(move || profile_rows(a, b, lo, hi))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("profile worker panicked")).collect()
+    });
+    let mut profiles = Vec::with_capacity(a.rows());
+    let (mut out_nnz, mut total_products, mut checksum) = (0u64, 0u64, 0f64);
+    for (p, o, tp, cs) in parts {
+        profiles.extend(p);
+        out_nnz += o;
+        total_products += tp;
+        checksum += cs;
+    }
+    Workload {
+        rows: a.rows(),
+        cols: b.cols(),
+        nnz_a: a.nnz() as u64,
+        nnz_b: b.nnz() as u64,
+        out_nnz,
+        total_products,
+        profiles,
+        checksum,
+    }
+}
+
+/// Run the profile pass for `C = A × B`.
+pub fn profile_workload(a: &Csr, b: &Csr) -> Workload {
+    assert_eq!(a.cols(), b.rows(), "dimension mismatch");
+    let (profiles, out_nnz, total_products, checksum) = profile_rows(a, b, 0, a.rows());
+    Workload {
+        rows: a.rows(),
+        cols: b.cols(),
+        nnz_a: a.nnz() as u64,
+        nnz_b: b.nnz() as u64,
+        out_nnz,
+        total_products,
+        profiles,
+        checksum,
+    }
+}
+
+/// Serial profile over the row range `[lo, hi)` (the parallel pass's unit).
+fn profile_rows(a: &Csr, b: &Csr, lo: usize, hi: usize) -> (Vec<RowProfile>, u64, u64, f64) {
+    let cols = b.cols();
+    // Interleaved (tag, acc) cells: one cache line per SPA touch instead of
+    // two (EXPERIMENTS.md §Perf iteration 2).
+    let mut spa: Vec<(u32, f32)> = vec![(0u32, 0f32); cols];
+    let mut touched: Vec<u32> = Vec::with_capacity(1024);
+    let mut generation = 0u32;
+
+    let mut profiles = Vec::with_capacity(hi - lo);
+    let mut out_nnz = 0u64;
+    let mut total_products = 0u64;
+    let mut checksum = 0f64;
+
+    for i in lo..hi {
+        generation = generation.wrapping_add(1);
+        if generation == 0 {
+            spa.fill((0, 0.0));
+            generation = 1;
+        }
+        touched.clear();
+        let mut products = 0u64;
+        for (k, av) in a.row_iter(i) {
+            let k = k as usize;
+            let bc = b.row_cols(k);
+            let bv = b.row_values(k);
+            products += bc.len() as u64;
+            // Hot loop: bc/bv are equal-length row slices and every col_id
+            // is < cols by the CSR invariant (Csr::try_new), so unchecked
+            // indexing is sound. This is the single hottest loop in the
+            // framework (EXPERIMENTS.md §Perf).
+            for p in 0..bc.len() {
+                // SAFETY: p < bc.len() == bv.len(); col ids validated < cols.
+                let (j, v) = unsafe { (*bc.get_unchecked(p), *bv.get_unchecked(p)) };
+                let cell = unsafe { spa.get_unchecked_mut(j as usize) };
+                if cell.0 == generation {
+                    cell.1 += av * v;
+                } else {
+                    *cell = (generation, av * v);
+                    touched.push(j);
+                }
+            }
+        }
+        for &j in &touched {
+            checksum += spa[j as usize].1 as f64;
+        }
+        out_nnz += touched.len() as u64;
+        total_products += products;
+        profiles.push(RowProfile {
+            a_nnz: a.row_nnz(i) as u32,
+            products,
+            out_nnz: touched.len() as u32,
+        });
+    }
+
+    (profiles, out_nnz, total_products, checksum)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gustavson::{multiply_count, spgemm_rowwise};
+    use crate::sparse::gen::{generate, Profile};
+
+    #[test]
+    fn profile_matches_reference_spgemm() {
+        let a = generate(60, 60, 300, Profile::PowerLaw { alpha: 0.7 }, 3);
+        let w = profile_workload(&a, &a);
+        let c = spgemm_rowwise(&a, &a);
+        assert_eq!(w.out_nnz, c.nnz() as u64);
+        assert_eq!(w.total_products, multiply_count(&a, &a));
+        for i in 0..a.rows() {
+            assert_eq!(w.profiles[i].out_nnz as usize, c.row_nnz(i), "row {i}");
+            assert_eq!(w.profiles[i].a_nnz as usize, a.row_nnz(i));
+        }
+        let direct: f64 = c.value.iter().map(|&v| v as f64).sum();
+        assert!((w.checksum - direct).abs() < 1e-3 * direct.abs().max(1.0));
+    }
+
+    #[test]
+    fn identity_workload_profile() {
+        let a = generate(20, 20, 60, Profile::Uniform, 8);
+        let i = crate::sparse::Csr::identity(20);
+        let w = profile_workload(&a, &i);
+        assert_eq!(w.out_nnz, a.nnz() as u64);
+        assert_eq!(w.total_products, a.nnz() as u64);
+        assert!((w.accumulation_factor() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compulsory_words_formula() {
+        let a = generate(10, 10, 20, Profile::Uniform, 2);
+        let w = profile_workload(&a, &a);
+        let expect = (2 * 20 + 11) + (2 * 20 + 11) + (2 * w.out_nnz + 11);
+        assert_eq!(w.compulsory_dram_words(), expect);
+    }
+
+    #[test]
+    fn parallel_profile_matches_serial() {
+        let a = generate(500, 500, 5000, Profile::PowerLaw { alpha: 0.7 }, 19);
+        let serial = profile_workload(&a, &a);
+        for threads in [1, 2, 4, 7] {
+            let par = profile_workload_parallel(&a, &a, threads);
+            assert_eq!(par.profiles, serial.profiles, "threads={threads}");
+            assert_eq!(par.out_nnz, serial.out_nnz);
+            assert_eq!(par.total_products, serial.total_products);
+            // Checksum reassociates across chunks: equal within fp noise.
+            assert!(
+                (par.checksum - serial.checksum).abs() < 1e-6 * serial.checksum.abs().max(1.0),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_matrix_profiles_cleanly() {
+        let a = crate::sparse::Csr::zero(5, 5);
+        let w = profile_workload(&a, &a);
+        assert_eq!(w.out_nnz, 0);
+        assert_eq!(w.total_products, 0);
+        assert_eq!(w.checksum, 0.0);
+        assert_eq!(w.profiles.len(), 5);
+    }
+}

@@ -1,0 +1,75 @@
+//! Coordinate (triplet) format — used by outer-product dataflows (GAMMA
+//! operates on a sparse coordinate format per paper §IV.A) and as the
+//! interchange format for Matrix-Market I/O.
+
+use super::Csr;
+
+/// A sparse matrix as parallel (row, col, value) triplet vectors.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub row: Vec<u32>,
+    pub col: Vec<u32>,
+    pub value: Vec<f32>,
+}
+
+impl Coo {
+    /// An empty `rows × cols` matrix.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, row: Vec::new(), col: Vec::new(), value: Vec::new() }
+    }
+
+    /// Number of stored entries (before any duplicate folding).
+    pub fn nnz(&self) -> usize {
+        self.value.len()
+    }
+
+    /// Append one entry.
+    pub fn push(&mut self, r: u32, c: u32, v: f32) {
+        debug_assert!((r as usize) < self.rows && (c as usize) < self.cols);
+        self.row.push(r);
+        self.col.push(c);
+        self.value.push(v);
+    }
+
+    /// Convert to CSR; duplicate coordinates are summed.
+    pub fn to_csr(&self) -> Csr {
+        let t: Vec<(u32, u32, f32)> = self
+            .row
+            .iter()
+            .zip(&self.col)
+            .zip(&self.value)
+            .map(|((&r, &c), &v)| (r, c, v))
+            .collect();
+        Csr::from_triplets(self.rows, self.cols, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_convert() {
+        let mut m = Coo::zero(3, 3);
+        m.push(2, 1, 4.0);
+        m.push(0, 0, 1.0);
+        m.push(2, 1, 1.5); // duplicate -> summed in CSR
+        assert_eq!(m.nnz(), 3);
+        let c = m.to_csr();
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.get(2, 1), 5.5);
+        assert_eq!(c.get(0, 0), 1.0);
+    }
+
+    #[test]
+    fn zero_is_empty() {
+        let m = Coo::zero(5, 7);
+        assert_eq!(m.nnz(), 0);
+        let c = m.to_csr();
+        assert_eq!(c.rows(), 5);
+        assert_eq!(c.cols(), 7);
+        assert_eq!(c.nnz(), 0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Compressed Sparse Column — needed by the inner-product dataflow baseline
+//! (B is traversed by column when computing C[i,j] = A[i,:]·B[:,j]).
+
+use super::Csr;
+
+/// A sparse matrix in CSC form: the column-major dual of [`Csr`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    /// `col_ptr[j]` = offset of column j's first nonzero; length `cols + 1`.
+    pub col_ptr: Vec<usize>,
+    /// Row coordinate of each nonzero.
+    pub row_id: Vec<u32>,
+    /// The nonzero values, column-major.
+    pub value: Vec<f32>,
+}
+
+impl Csc {
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.value.len()
+    }
+
+    /// Number of nonzeros in column `j`.
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// The row ids of column `j`.
+    #[inline]
+    pub fn col_rows(&self, j: usize) -> &[u32] {
+        &self.row_id[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// The nonzero values of column `j`.
+    #[inline]
+    pub fn col_values(&self, j: usize) -> &[f32] {
+        &self.value[self.col_ptr[j]..self.col_ptr[j + 1]]
+    }
+
+    /// Iterate `(row, value)` pairs of column `j`.
+    pub fn col_iter(&self, j: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.col_rows(j).iter().copied().zip(self.col_values(j).iter().copied())
+    }
+
+    /// Convert to CSR.
+    pub fn to_csr(&self) -> Csr {
+        let mut t = Vec::with_capacity(self.nnz());
+        for j in 0..self.cols {
+            for (r, v) in self.col_iter(j) {
+                t.push((r, j as u32, v));
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Csr;
+
+    #[test]
+    fn csc_columns_match_csr_rows_of_transpose() {
+        let a = Csr::from_triplets(
+            3,
+            4,
+            vec![(0, 1, 1.0), (0, 3, 2.0), (1, 1, 3.0), (2, 0, 4.0)],
+        );
+        let c = a.to_csc();
+        assert_eq!(c.nnz(), 4);
+        assert_eq!(c.col_nnz(1), 2);
+        assert_eq!(c.col_rows(1), &[0, 1]);
+        assert_eq!(c.col_values(1), &[1.0, 3.0]);
+        assert_eq!(c.col_nnz(2), 0);
+        assert_eq!(c.to_csr(), a);
+    }
+}

@@ -1,0 +1,380 @@
+//! Compressed Sparse Row — the paper's native format (§II.B, Fig. 1).
+
+use super::{Coo, Csc};
+
+/// A sparse matrix in CSR form.
+///
+/// Using the paper's notation: `value` holds the nonzeros row-major,
+/// `col_id[p]` is the column coordinate of `value[p]`, and row `i` occupies
+/// positions `row_ptr[i] .. row_ptr[i + 1]`. `A.value[i]` in the paper maps
+/// to [`Csr::row_values`]`(i)` here, and `A.col_id[i]` to [`Csr::row_cols`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// `row_ptr[i]` = offset of row i's first nonzero; length `rows + 1`.
+    pub row_ptr: Vec<usize>,
+    /// Column coordinate of each nonzero (the CSR `col_id` metadata vector).
+    pub col_id: Vec<u32>,
+    /// The nonzero values (the CSR `value` vector).
+    pub value: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from raw parts, validating every CSR invariant:
+    /// monotone `row_ptr`, in-bounds strictly-increasing column ids per row,
+    /// and matching vector lengths.
+    pub fn try_new(
+        rows: usize,
+        cols: usize,
+        row_ptr: Vec<usize>,
+        col_id: Vec<u32>,
+        value: Vec<f32>,
+    ) -> Result<Self, String> {
+        if row_ptr.len() != rows + 1 {
+            return Err(format!(
+                "row_ptr length {} != rows + 1 = {}",
+                row_ptr.len(),
+                rows + 1
+            ));
+        }
+        if row_ptr[0] != 0 {
+            return Err("row_ptr[0] must be 0".into());
+        }
+        if *row_ptr.last().unwrap() != value.len() {
+            return Err(format!(
+                "row_ptr[rows] = {} != nnz = {}",
+                row_ptr[rows],
+                value.len()
+            ));
+        }
+        if col_id.len() != value.len() {
+            return Err(format!(
+                "col_id length {} != value length {}",
+                col_id.len(),
+                value.len()
+            ));
+        }
+        for i in 0..rows {
+            if row_ptr[i] > row_ptr[i + 1] {
+                return Err(format!("row_ptr not monotone at row {i}"));
+            }
+            let r = &col_id[row_ptr[i]..row_ptr[i + 1]];
+            for w in r.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("col_id not strictly increasing in row {i}"));
+                }
+            }
+            if let Some(&last) = r.last() {
+                if last as usize >= cols {
+                    return Err(format!("col_id {last} out of bounds (cols = {cols}) in row {i}"));
+                }
+            }
+        }
+        Ok(Self { rows, cols, row_ptr, col_id, value })
+    }
+
+    /// Build from unsorted (row, col, value) triplets; duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, mut t: Vec<(u32, u32, f32)>) -> Self {
+        t.sort_unstable_by_key(|&(r, c, _)| ((r as u64) << 32) | c as u64);
+        let mut row_ptr = vec![0usize; rows + 1];
+        let mut col_id = Vec::with_capacity(t.len());
+        let mut value = Vec::with_capacity(t.len());
+        for &(r, c, v) in &t {
+            debug_assert!((r as usize) < rows && (c as usize) < cols);
+            col_id.push(c);
+            value.push(v);
+            row_ptr[r as usize + 1] += 1;
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        // Entries are sorted, so duplicate (row, col) pairs are adjacent;
+        // merge them in a second pass.
+        Self { rows, cols, row_ptr, col_id, value }.dedup()
+    }
+
+    /// Merge equal (row, col) entries by summing their values.
+    fn dedup(self) -> Self {
+        let mut row_ptr = vec![0usize; self.rows + 1];
+        let mut col_id = Vec::with_capacity(self.col_id.len());
+        let mut value = Vec::with_capacity(self.value.len());
+        for i in 0..self.rows {
+            let (s, e) = (self.row_ptr[i], self.row_ptr[i + 1]);
+            let mut p = s;
+            while p < e {
+                let c = self.col_id[p];
+                let mut v = self.value[p];
+                let mut q = p + 1;
+                while q < e && self.col_id[q] == c {
+                    v += self.value[q];
+                    q += 1;
+                }
+                col_id.push(c);
+                value.push(v);
+                p = q;
+            }
+            row_ptr[i + 1] = col_id.len();
+        }
+        Self { rows: self.rows, cols: self.cols, row_ptr, col_id, value }
+    }
+
+    /// An `rows × cols` matrix with no nonzeros.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, row_ptr: vec![0; rows + 1], col_id: Vec::new(), value: Vec::new() }
+    }
+
+    /// The identity matrix of order `n`.
+    pub fn identity(n: usize) -> Self {
+        Self {
+            rows: n,
+            cols: n,
+            row_ptr: (0..=n).collect(),
+            col_id: (0..n as u32).collect(),
+            value: vec![1.0; n],
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.value.len()
+    }
+
+    /// Fraction of nonzero entries, `nnz / (rows * cols)`.
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Number of nonzeros in row `i` — what the paper's PE control logic
+    /// derives by subtracting adjacent `row_ptr` entries (§III, Fig. 7).
+    #[inline]
+    pub fn row_nnz(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// The nonzero values of row `i` (`A.value[i]` in the paper).
+    #[inline]
+    pub fn row_values(&self, i: usize) -> &[f32] {
+        &self.value[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// The column ids of row `i` (`A.col_id[i]` in the paper).
+    #[inline]
+    pub fn row_cols(&self, i: usize) -> &[u32] {
+        &self.col_id[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// Iterate `(col, value)` pairs of row `i`.
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        self.row_cols(i).iter().copied().zip(self.row_values(i).iter().copied())
+    }
+
+    /// Look up `A[i, j]`, returning 0.0 when the entry is not stored.
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let r = self.row_cols(i);
+        match r.binary_search(&(j as u32)) {
+            Ok(p) => self.row_values(i)[p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Transpose (CSR of Aᵀ). O(nnz + rows + cols).
+    pub fn transpose(&self) -> Csr {
+        let mut cnt = vec![0usize; self.cols + 1];
+        for &c in &self.col_id {
+            cnt[c as usize + 1] += 1;
+        }
+        for j in 0..self.cols {
+            cnt[j + 1] += cnt[j];
+        }
+        let row_ptr = cnt.clone();
+        let mut col_id = vec![0u32; self.nnz()];
+        let mut value = vec![0f32; self.nnz()];
+        for i in 0..self.rows {
+            for (c, v) in self.row_iter(i) {
+                let p = cnt[c as usize];
+                col_id[p] = i as u32;
+                value[p] = v;
+                cnt[c as usize] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, row_ptr, col_id, value }
+    }
+
+    /// Convert to COO triplets.
+    pub fn to_coo(&self) -> Coo {
+        let mut row = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            row.extend(std::iter::repeat(i as u32).take(self.row_nnz(i)));
+        }
+        Coo {
+            rows: self.rows,
+            cols: self.cols,
+            row,
+            col: self.col_id.clone(),
+            value: self.value.clone(),
+        }
+    }
+
+    /// Convert to CSC (column-compressed).
+    pub fn to_csc(&self) -> Csc {
+        let t = self.transpose();
+        Csc {
+            rows: self.rows,
+            cols: self.cols,
+            col_ptr: t.row_ptr,
+            row_id: t.col_id,
+            value: t.value,
+        }
+    }
+
+    /// Densify (row-major). Only for small test matrices.
+    pub fn to_dense(&self) -> Vec<Vec<f32>> {
+        let mut d = vec![vec![0f32; self.cols]; self.rows];
+        for i in 0..self.rows {
+            for (c, v) in self.row_iter(i) {
+                d[i][c as usize] = v;
+            }
+        }
+        d
+    }
+
+    /// Build from a dense row-major matrix, dropping exact zeros.
+    pub fn from_dense(d: &[Vec<f32>]) -> Self {
+        let rows = d.len();
+        let cols = d.first().map_or(0, |r| r.len());
+        let mut t = Vec::new();
+        for (i, r) in d.iter().enumerate() {
+            for (j, &v) in r.iter().enumerate() {
+                if v != 0.0 {
+                    t.push((i as u32, j as u32, v));
+                }
+            }
+        }
+        Self::from_triplets(rows, cols, t)
+    }
+
+    /// Total bytes of the CSR image given an element width (value bytes) and
+    /// index width — what the DRAM traffic model charges for streaming the
+    /// matrix (value + col_id per nonzero, row_ptr per row).
+    pub fn storage_bytes(&self, value_bytes: usize, index_bytes: usize) -> usize {
+        self.nnz() * (value_bytes + index_bytes) + (self.rows + 1) * index_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 1 example matrix:
+    /// row 0 = {a@1, b@2}, with a=1.0, b=2.0 etc.
+    fn fig1_matrix() -> Csr {
+        Csr::from_triplets(
+            4,
+            4,
+            vec![
+                (0, 1, 1.0), // a
+                (0, 2, 2.0), // b
+                (1, 0, 3.0), // c
+                (2, 2, 4.0), // d
+                (2, 3, 5.0), // e
+                (3, 1, 6.0), // f
+            ],
+        )
+    }
+
+    #[test]
+    fn fig1_layout_matches_paper() {
+        let a = fig1_matrix();
+        assert_eq!(a.row_ptr, vec![0, 2, 3, 5, 6]);
+        assert_eq!(a.row_cols(0), &[1, 2]);
+        assert_eq!(a.row_values(0), &[1.0, 2.0]);
+        assert_eq!(a.row_nnz(2), 2);
+        assert_eq!(a.get(0, 1), 1.0);
+        assert_eq!(a.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn try_new_validates() {
+        assert!(Csr::try_new(2, 2, vec![0, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_ok());
+        // bad row_ptr head
+        assert!(Csr::try_new(2, 2, vec![1, 1, 2], vec![0, 1], vec![1.0, 2.0]).is_err());
+        // non-monotone
+        assert!(Csr::try_new(2, 2, vec![0, 2, 1], vec![0, 1], vec![1.0, 2.0]).is_err());
+        // col out of bounds
+        assert!(Csr::try_new(1, 2, vec![0, 1], vec![5], vec![1.0]).is_err());
+        // unsorted cols
+        assert!(Csr::try_new(1, 3, vec![0, 2], vec![2, 0], vec![1.0, 2.0]).is_err());
+        // length mismatch
+        assert!(Csr::try_new(1, 3, vec![0, 2], vec![0], vec![1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn triplets_sum_duplicates() {
+        let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.5), (1, 1, 1.0)]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get(0, 0), 3.5);
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let a = fig1_matrix();
+        let att = a.transpose().transpose();
+        assert_eq!(a, att);
+    }
+
+    #[test]
+    fn transpose_moves_entries() {
+        let a = fig1_matrix();
+        let t = a.transpose();
+        assert_eq!(t.get(1, 0), 1.0);
+        assert_eq!(t.get(2, 0), 2.0);
+        assert_eq!(t.get(0, 1), 3.0);
+    }
+
+    #[test]
+    fn dense_round_trips() {
+        let a = fig1_matrix();
+        let b = Csr::from_dense(&a.to_dense());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn coo_and_csc_round_trip() {
+        let a = fig1_matrix();
+        assert_eq!(a.to_coo().to_csr(), a);
+        assert_eq!(a.to_csc().to_csr(), a);
+    }
+
+    #[test]
+    fn identity_multiplies_like_identity() {
+        let i = Csr::identity(4);
+        assert_eq!(i.nnz(), 4);
+        assert_eq!(i.get(2, 2), 1.0);
+        assert_eq!(i.get(2, 3), 0.0);
+    }
+
+    #[test]
+    fn storage_bytes_counts_csr_image() {
+        let a = fig1_matrix();
+        // 6 nnz * (4 value + 4 col_id) + 5 row_ptr * 4
+        assert_eq!(a.storage_bytes(4, 4), 6 * 8 + 5 * 4);
+    }
+
+    #[test]
+    fn density_matches_definition() {
+        let a = fig1_matrix();
+        assert!((a.density() - 6.0 / 16.0).abs() < 1e-12);
+    }
+}

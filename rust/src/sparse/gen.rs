@@ -1,0 +1,285 @@
+//! Synthetic sparse-workload generators.
+//!
+//! The SuiteSparse matrices of the paper's Table I are not redistributable
+//! inside this environment, so each dataset is synthesised to match the
+//! statistics the simulator is actually sensitive to: dimensions, nnz,
+//! density, and the row-length / locality profile of its matrix family
+//! (power-law web/social graphs, banded FEM/PDE discretisations, uniform
+//! circuit-like patterns). See DESIGN.md §2 for the substitution argument.
+
+use super::{Csr, SplitMix64};
+
+/// The structural family a generator mimics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Profile {
+    /// Row lengths and column positions uniform at random (circuit-like,
+    /// e.g. `scircuit`, `p2p-Gnutella31`).
+    Uniform,
+    /// Zipf-distributed row lengths and skewed column popularity
+    /// (web / social graphs, e.g. `web-Google`, `wikiVote`, `facebook`).
+    PowerLaw {
+        /// Zipf exponent for the row-degree distribution (≈1.5–2.2 for webs).
+        alpha: f64,
+    },
+    /// Nonzeros clustered in short contiguous runs inside a diagonal band
+    /// (FEM / PDE meshes, e.g. `offshore`, `filter3D`, `poisson3Da`).
+    /// These clusters are precisely the locality Maple's multi-MAC PE
+    /// exploits (paper §I: "local clusters of non-zero values").
+    Banded {
+        /// Half-width of the diagonal band as a fraction of `cols`.
+        rel_bandwidth: f64,
+        /// Mean contiguous-run length inside the band.
+        cluster: usize,
+    },
+}
+
+/// Generate a `rows × cols` CSR matrix with exactly `nnz` nonzeros drawn
+/// according to `profile`. Deterministic in `seed`.
+pub fn generate(rows: usize, cols: usize, nnz: usize, profile: Profile, seed: u64) -> Csr {
+    assert!(nnz <= rows * cols, "nnz exceeds capacity");
+    let mut rng = SplitMix64::new(seed);
+    let counts = match profile {
+        Profile::Uniform => spread_counts(rows, cols, nnz, &mut rng, 0.0),
+        Profile::PowerLaw { alpha } => zipf_counts(rows, cols, nnz, alpha, &mut rng),
+        Profile::Banded { .. } => spread_counts(rows, cols, nnz, &mut rng, 0.15),
+    };
+    debug_assert_eq!(counts.iter().sum::<usize>(), nnz);
+
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    row_ptr.push(0usize);
+    let mut col_id = Vec::with_capacity(nnz);
+    let mut value = Vec::with_capacity(nnz);
+    let mut scratch: Vec<u32> = Vec::new();
+
+    for (i, &k) in counts.iter().enumerate() {
+        scratch.clear();
+        match profile {
+            Profile::Uniform | Profile::PowerLaw { .. } => {
+                sample_distinct(cols, k, &mut rng, &mut scratch);
+            }
+            Profile::Banded { rel_bandwidth, cluster } => {
+                sample_banded(i, rows, cols, k, rel_bandwidth, cluster, &mut rng, &mut scratch);
+            }
+        }
+        scratch.sort_unstable();
+        scratch.dedup();
+        // Top up if clustering produced overlaps (keeps nnz exact). Banded
+        // rows top up *inside the band* so the structure stays banded.
+        let (lo, hi) = match profile {
+            Profile::Banded { rel_bandwidth, cluster } => band_range(i, rows, cols, rel_bandwidth, cluster),
+            _ => (0u32, cols as u32 - 1),
+        };
+        let mut span = (hi - lo + 1) as u64;
+        let (mut lo, mut hi) = (lo, hi);
+        while scratch.len() < k {
+            if span <= scratch.len() as u64 {
+                // Band saturated: widen it symmetrically until k fits.
+                lo = lo.saturating_sub(1);
+                hi = (hi + 1).min(cols as u32 - 1);
+                span = (hi - lo + 1) as u64;
+            }
+            let c = lo + rng.below(span) as u32;
+            if let Err(p) = scratch.binary_search(&c) {
+                scratch.insert(p, c);
+            }
+        }
+        for &c in scratch.iter() {
+            col_id.push(c);
+            value.push(rng.value());
+        }
+        row_ptr.push(col_id.len());
+    }
+
+    Csr::try_new(rows, cols, row_ptr, col_id, value).expect("generator produced invalid CSR")
+}
+
+/// Row counts: near-uniform with optional multiplicative jitter.
+fn spread_counts(rows: usize, cols: usize, nnz: usize, rng: &mut SplitMix64, jitter: f64) -> Vec<usize> {
+    let mut counts = vec![nnz / rows; rows];
+    let mut rem = nnz - (nnz / rows) * rows;
+    // Distribute the remainder over random rows.
+    while rem > 0 {
+        let i = rng.below(rows as u64) as usize;
+        if counts[i] < cols {
+            counts[i] += 1;
+            rem -= 1;
+        }
+    }
+    if jitter > 0.0 {
+        // Move entries between random row pairs to create mild variance
+        // without changing the total.
+        let moves = (rows as f64 * jitter) as usize;
+        for _ in 0..moves {
+            let a = rng.below(rows as u64) as usize;
+            let b = rng.below(rows as u64) as usize;
+            if counts[a] > 1 && counts[b] < cols {
+                counts[a] -= 1;
+                counts[b] += 1;
+            }
+        }
+    }
+    counts
+}
+
+/// Zipf row-length distribution scaled to sum exactly to `nnz`.
+fn zipf_counts(rows: usize, cols: usize, nnz: usize, alpha: f64, rng: &mut SplitMix64) -> Vec<usize> {
+    // Weight w_r = (r+1)^-alpha over a random permutation of rows, so heavy
+    // rows are scattered (as in real web graphs after vertex relabeling).
+    // Degrees are capped at 100× the mean: real web/social graphs have
+    // max-degree ≈ 10²× mean (web-Google: max out-degree 456 vs mean 5.6),
+    // whereas an uncapped Zipf head grows with the matrix size.
+    let cap = ((100 * nnz) / rows).max(8).min(cols);
+    let mut weights: Vec<f64> = (0..rows).map(|r| ((r + 1) as f64).powf(-alpha)).collect();
+    let total: f64 = weights.iter().sum();
+    // Fisher–Yates permute the weights.
+    for i in (1..rows).rev() {
+        let j = rng.below((i + 1) as u64) as usize;
+        weights.swap(i, j);
+    }
+    let mut counts: Vec<usize> = weights
+        .iter()
+        .map(|w| ((w / total) * nnz as f64).floor() as usize)
+        .map(|c| c.min(cap))
+        .collect();
+    let mut have: usize = counts.iter().sum();
+    // Fix rounding residual; add to (or steal from) random rows.
+    while have < nnz {
+        let i = rng.below(rows as u64) as usize;
+        if counts[i] < cap {
+            counts[i] += 1;
+            have += 1;
+        }
+    }
+    while have > nnz {
+        let i = rng.below(rows as u64) as usize;
+        if counts[i] > 0 {
+            counts[i] -= 1;
+            have -= 1;
+        }
+    }
+    counts
+}
+
+/// `k` distinct columns uniform over `[0, cols)`.
+fn sample_distinct(cols: usize, k: usize, rng: &mut SplitMix64, out: &mut Vec<u32>) {
+    debug_assert!(k <= cols);
+    if k * 4 >= cols {
+        // Dense-ish row: reservoir-select k of cols.
+        let mut chosen = 0usize;
+        for c in 0..cols {
+            let remaining = cols - c;
+            let needed = k - chosen;
+            if rng.below(remaining as u64) < needed as u64 {
+                out.push(c as u32);
+                chosen += 1;
+                if chosen == k {
+                    break;
+                }
+            }
+        }
+    } else {
+        while out.len() < k {
+            let c = rng.below(cols as u64) as u32;
+            if !out.contains(&c) {
+                out.push(c);
+            }
+        }
+    }
+}
+
+/// The diagonal band `[lo, hi]` for row `i` under a banded profile.
+fn band_range(i: usize, rows: usize, cols: usize, rel_bandwidth: f64, cluster: usize) -> (u32, u32) {
+    let center = (i as f64 / rows as f64 * cols as f64) as i64;
+    let half = ((rel_bandwidth * cols as f64) as i64).max(cluster as i64 + 1);
+    let lo = (center - half).max(0) as u32;
+    let hi = ((center + half) as u32).min(cols as u32 - 1);
+    (lo, hi)
+}
+
+/// `k` columns clustered in runs of mean length `cluster` inside a diagonal
+/// band of half-width `rel_bandwidth * cols` around row `i`'s diagonal.
+#[allow(clippy::too_many_arguments)]
+fn sample_banded(
+    i: usize,
+    rows: usize,
+    cols: usize,
+    k: usize,
+    rel_bandwidth: f64,
+    cluster: usize,
+    rng: &mut SplitMix64,
+    out: &mut Vec<u32>,
+) {
+    let (lo, hi) = band_range(i, rows, cols, rel_bandwidth, cluster);
+    let span = (hi - lo + 1) as u64;
+    while out.len() < k {
+        let start = lo + rng.below(span) as u32;
+        let run = 1 + rng.below(2 * cluster as u64) as usize;
+        for d in 0..run {
+            if out.len() >= k {
+                break;
+            }
+            let c = start.saturating_add(d as u32).min(cols as u32 - 1);
+            out.push(c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::stats;
+
+    #[test]
+    fn uniform_hits_exact_nnz() {
+        let a = generate(100, 100, 500, Profile::Uniform, 1);
+        assert_eq!(a.nnz(), 500);
+        assert_eq!(a.rows(), 100);
+    }
+
+    #[test]
+    fn powerlaw_hits_exact_nnz_and_is_skewed() {
+        let a = generate(1000, 1000, 8000, Profile::PowerLaw { alpha: 1.8 }, 2);
+        assert_eq!(a.nnz(), 8000);
+        let s = stats::row_stats(&a);
+        // A Zipf profile must have max row length far above the mean.
+        assert!(s.max_row_nnz as f64 > 4.0 * s.mean_row_nnz, "max={} mean={}", s.max_row_nnz, s.mean_row_nnz);
+    }
+
+    #[test]
+    fn banded_stays_in_band_and_clusters() {
+        let a = generate(
+            200,
+            200,
+            2000,
+            Profile::Banded { rel_bandwidth: 0.05, cluster: 4 },
+            3,
+        );
+        assert_eq!(a.nnz(), 2000);
+        // Band check: every nonzero within ~band of the diagonal.
+        for i in 0..a.rows() {
+            for &c in a.row_cols(i) {
+                let d = (c as i64 - i as i64).abs();
+                assert!(d <= 25, "row {i} col {c} outside band");
+            }
+        }
+        // Clustered profile ⇒ high adjacency fraction.
+        let s = stats::row_stats(&a);
+        assert!(s.adjacency_fraction > 0.3, "adjacency {}", s.adjacency_fraction);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = generate(50, 60, 300, Profile::PowerLaw { alpha: 2.0 }, 42);
+        let b = generate(50, 60, 300, Profile::PowerLaw { alpha: 2.0 }, 42);
+        assert_eq!(a, b);
+        let c = generate(50, 60, 300, Profile::PowerLaw { alpha: 2.0 }, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn full_capacity_matrix() {
+        let a = generate(8, 8, 64, Profile::Uniform, 5);
+        assert_eq!(a.nnz(), 64);
+        assert_eq!(a.density(), 1.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! Matrix-Market I/O.
+//!
+//! The evaluation runs on synthetic Table-I workloads by default (no network
+//! in this environment), but any real SuiteSparse `.mtx` file dropped next to
+//! the binary loads through [`read_matrix_market`] and runs through the same
+//! pipeline.
+
+use super::{Coo, Csr};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Error type for Matrix-Market parsing.
+#[derive(Debug, thiserror::Error)]
+pub enum MmError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("not a MatrixMarket file (missing %%MatrixMarket header)")]
+    MissingHeader,
+    #[error("unsupported MatrixMarket variant: {0}")]
+    Unsupported(String),
+    #[error("parse error at line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+}
+
+/// Read a MatrixMarket `coordinate` file into CSR.
+///
+/// Supports `real` / `integer` / `pattern` fields and `general` / `symmetric`
+/// symmetries (symmetric entries are mirrored). `pattern` entries get value
+/// 1.0, matching common SpGEMM evaluation practice.
+pub fn read_matrix_market(path: &Path) -> Result<Csr, MmError> {
+    let f = std::fs::File::open(path)?;
+    read_matrix_market_from(BufReader::new(f))
+}
+
+/// Parse MatrixMarket from any buffered reader (unit-testable without files).
+pub fn read_matrix_market_from<R: BufRead>(r: R) -> Result<Csr, MmError> {
+    let mut lines = r.lines().enumerate();
+
+    // Header: %%MatrixMarket matrix coordinate <field> <symmetry>
+    let (_, header) = lines.next().ok_or(MmError::MissingHeader)?;
+    let header = header?;
+    if !header.starts_with("%%MatrixMarket") {
+        return Err(MmError::MissingHeader);
+    }
+    let toks: Vec<String> = header.split_whitespace().map(|t| t.to_ascii_lowercase()).collect();
+    if toks.len() < 5 || toks[1] != "matrix" || toks[2] != "coordinate" {
+        return Err(MmError::Unsupported(header));
+    }
+    let field = toks[3].clone();
+    let symmetry = toks[4].clone();
+    if !matches!(field.as_str(), "real" | "integer" | "pattern") {
+        return Err(MmError::Unsupported(format!("field {field}")));
+    }
+    if !matches!(symmetry.as_str(), "general" | "symmetric") {
+        return Err(MmError::Unsupported(format!("symmetry {symmetry}")));
+    }
+
+    // Skip comments, read size line.
+    let (rows, cols, nnz_decl, size_line_no) = loop {
+        let (no, line) = lines
+            .next()
+            .ok_or(MmError::Parse { line: 0, msg: "missing size line".into() })?;
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        if parts.len() != 3 {
+            return Err(MmError::Parse { line: no + 1, msg: format!("bad size line: {t}") });
+        }
+        let p = |s: &str| -> Result<usize, MmError> {
+            s.parse().map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad int {s}") })
+        };
+        break (p(parts[0])?, p(parts[1])?, p(parts[2])?, no + 1);
+    };
+
+    let mut coo = Coo::zero(rows, cols);
+    let mut seen = 0usize;
+    for (no, line) in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        let need = if field == "pattern" { 2 } else { 3 };
+        if parts.len() < need {
+            return Err(MmError::Parse { line: no + 1, msg: format!("bad entry: {t}") });
+        }
+        let r: usize = parts[0]
+            .parse()
+            .map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad row {}", parts[0]) })?;
+        let c: usize = parts[1]
+            .parse()
+            .map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad col {}", parts[1]) })?;
+        if r == 0 || c == 0 || r > rows || c > cols {
+            return Err(MmError::Parse { line: no + 1, msg: format!("coordinate ({r},{c}) out of bounds") });
+        }
+        let v: f32 = if field == "pattern" {
+            1.0
+        } else {
+            parts[2]
+                .parse()
+                .map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad value {}", parts[2]) })?
+        };
+        // MatrixMarket is 1-indexed.
+        coo.push((r - 1) as u32, (c - 1) as u32, v);
+        if symmetry == "symmetric" && r != c {
+            coo.push((c - 1) as u32, (r - 1) as u32, v);
+        }
+        seen += 1;
+    }
+    if seen != nnz_decl {
+        return Err(MmError::Parse {
+            line: size_line_no,
+            msg: format!("declared {nnz_decl} entries, found {seen}"),
+        });
+    }
+    Ok(coo.to_csr())
+}
+
+/// Write a CSR matrix as MatrixMarket `coordinate real general`.
+pub fn write_matrix_market(path: &Path, a: &Csr) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(f, "% written by maple (row-wise product accelerator framework)")?;
+    writeln!(f, "{} {} {}", a.rows(), a.cols(), a.nnz())?;
+    for i in 0..a.rows() {
+        for (c, v) in a.row_iter(i) {
+            writeln!(f, "{} {} {}", i + 1, c + 1, v)?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_general_real() {
+        let src = "%%MatrixMarket matrix coordinate real general\n\
+                   % comment\n\
+                   3 3 2\n\
+                   1 2 5.0\n\
+                   3 1 -1.5\n";
+        let a = read_matrix_market_from(Cursor::new(src)).unwrap();
+        assert_eq!(a.rows(), 3);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.get(0, 1), 5.0);
+        assert_eq!(a.get(2, 0), -1.5);
+    }
+
+    #[test]
+    fn parse_symmetric_mirrors() {
+        let src = "%%MatrixMarket matrix coordinate real symmetric\n\
+                   2 2 2\n\
+                   1 1 1.0\n\
+                   2 1 3.0\n";
+        let a = read_matrix_market_from(Cursor::new(src)).unwrap();
+        assert_eq!(a.nnz(), 3); // diagonal not mirrored
+        assert_eq!(a.get(0, 1), 3.0);
+        assert_eq!(a.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn parse_pattern_gets_unit_values() {
+        let src = "%%MatrixMarket matrix coordinate pattern general\n\
+                   2 3 2\n\
+                   1 3\n\
+                   2 1\n";
+        let a = read_matrix_market_from(Cursor::new(src)).unwrap();
+        assert_eq!(a.get(0, 2), 1.0);
+        assert_eq!(a.get(1, 0), 1.0);
+    }
+
+    #[test]
+    fn rejects_bad_header_and_counts() {
+        assert!(read_matrix_market_from(Cursor::new("garbage\n1 1 0\n")).is_err());
+        let wrong_count = "%%MatrixMarket matrix coordinate real general\n2 2 2\n1 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(wrong_count)).is_err());
+        let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
+        assert!(read_matrix_market_from(Cursor::new(oob)).is_err());
+    }
+
+    #[test]
+    fn round_trip_through_file() {
+        let a = crate::sparse::gen::generate(
+            20,
+            30,
+            100,
+            crate::sparse::gen::Profile::Uniform,
+            11,
+        );
+        let p = std::env::temp_dir().join(format!("maple-io-test-{}.mtx", std::process::id()));
+        write_matrix_market(&p, &a).unwrap();
+        let b = read_matrix_market(&p).unwrap();
+        let _ = std::fs::remove_file(&p);
+        assert_eq!(a.rows(), b.rows());
+        assert_eq!(a.nnz(), b.nnz());
+        for i in 0..a.rows() {
+            assert_eq!(a.row_cols(i), b.row_cols(i));
+        }
+    }
+}

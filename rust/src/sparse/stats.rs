@@ -1,0 +1,123 @@
+//! Row-structure statistics.
+//!
+//! These are the statistics the Maple PE is sensitive to: row-length
+//! distribution (how full the ARB gets), and column-adjacency (how often
+//! nonzeros form the "local clusters" that keep all of a Maple PE's MAC
+//! units busy, paper §I).
+
+use super::Csr;
+
+/// Summary statistics over the rows of a CSR matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowStats {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    pub density: f64,
+    pub mean_row_nnz: f64,
+    pub max_row_nnz: usize,
+    pub min_row_nnz: usize,
+    pub empty_rows: usize,
+    /// Standard deviation of row nnz (row-balance; drives PE load skew).
+    pub row_nnz_stddev: f64,
+    /// Fraction of nonzeros whose right neighbour is in the adjacent column
+    /// (col_id difference of exactly 1) — the cluster locality metric.
+    pub adjacency_fraction: f64,
+    /// Mean length of maximal runs of consecutive column ids.
+    pub mean_run_length: f64,
+}
+
+/// Compute [`RowStats`] in one pass over the matrix.
+pub fn row_stats(a: &Csr) -> RowStats {
+    let rows = a.rows();
+    let mut max_r = 0usize;
+    let mut min_r = usize::MAX;
+    let mut empty = 0usize;
+    let mut sum = 0usize;
+    let mut sum_sq = 0f64;
+    let mut adjacent = 0usize;
+    let mut pairs = 0usize;
+    let mut runs = 0usize;
+
+    for i in 0..rows {
+        let k = a.row_nnz(i);
+        sum += k;
+        sum_sq += (k * k) as f64;
+        max_r = max_r.max(k);
+        min_r = min_r.min(k);
+        if k == 0 {
+            empty += 1;
+        }
+        let cols = a.row_cols(i);
+        if !cols.is_empty() {
+            runs += 1; // first element starts a run
+        }
+        for w in cols.windows(2) {
+            pairs += 1;
+            if w[1] == w[0] + 1 {
+                adjacent += 1;
+            } else {
+                runs += 1;
+            }
+        }
+    }
+
+    let mean = sum as f64 / rows.max(1) as f64;
+    let var = (sum_sq / rows.max(1) as f64 - mean * mean).max(0.0);
+    RowStats {
+        rows,
+        cols: a.cols(),
+        nnz: a.nnz(),
+        density: a.density(),
+        mean_row_nnz: mean,
+        max_row_nnz: max_r,
+        min_row_nnz: if min_r == usize::MAX { 0 } else { min_r },
+        empty_rows: empty,
+        row_nnz_stddev: var.sqrt(),
+        adjacency_fraction: if pairs == 0 { 0.0 } else { adjacent as f64 / pairs as f64 },
+        mean_run_length: if runs == 0 { 0.0 } else { a.nnz() as f64 / runs as f64 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_hand_matrix() {
+        // rows: [0,1,2,3] -> run of 4 (3 adjacent pairs); [] ; [0, 5]
+        let a = Csr::from_triplets(
+            3,
+            8,
+            vec![(0, 0, 1.0), (0, 1, 1.0), (0, 2, 1.0), (0, 3, 1.0), (2, 0, 1.0), (2, 5, 1.0)],
+        );
+        let s = row_stats(&a);
+        assert_eq!(s.nnz, 6);
+        assert_eq!(s.max_row_nnz, 4);
+        assert_eq!(s.min_row_nnz, 0);
+        assert_eq!(s.empty_rows, 1);
+        // pairs = 3 + 1 = 4, adjacent = 3
+        assert!((s.adjacency_fraction - 0.75).abs() < 1e-12);
+        // runs: row0 one run, row2 two runs -> 6 nnz / 3 runs
+        assert!((s.mean_run_length - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_on_empty_matrix() {
+        let a = Csr::zero(4, 4);
+        let s = row_stats(&a);
+        assert_eq!(s.nnz, 0);
+        assert_eq!(s.empty_rows, 4);
+        assert_eq!(s.adjacency_fraction, 0.0);
+        assert_eq!(s.mean_run_length, 0.0);
+    }
+
+    #[test]
+    fn identity_has_no_adjacency() {
+        let s = row_stats(&Csr::identity(10));
+        assert_eq!(s.mean_row_nnz, 1.0);
+        assert_eq!(s.adjacency_fraction, 0.0);
+        assert_eq!(s.mean_run_length, 1.0);
+        assert_eq!(s.row_nnz_stddev, 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! The paper's Table-I dataset registry.
+//!
+//! Each entry mirrors one SuiteSparse matrix used in the evaluation
+//! (§IV.A, Table I): name, abbreviation, dimensions, nnz and density, plus
+//! the structural family used to synthesise it (see [`gen`] and DESIGN.md §2
+//! for the substitution rationale). `C = A × A` is the workload, exactly as
+//! Matraptor and Extensor evaluate (§IV.A).
+
+use super::gen::{self, Profile};
+use super::Csr;
+
+/// One Table-I dataset: the statistics of a SuiteSparse matrix plus a
+/// synthesis profile reproducing its structure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSpec {
+    /// SuiteSparse name, e.g. `web-Google`.
+    pub name: &'static str,
+    /// Paper abbreviation, e.g. `wg`.
+    pub abbrev: &'static str,
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Structural family for synthesis.
+    pub profile: Profile,
+}
+
+impl DatasetSpec {
+    /// Density `nnz / (rows*cols)` — the paper's Table-I `Density` column.
+    pub fn density(&self) -> f64 {
+        self.nnz as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Synthesise the full-scale matrix. Deterministic in `seed`.
+    pub fn generate(&self, seed: u64) -> Csr {
+        gen::generate(self.rows, self.cols, self.nnz, self.profile, seed ^ hash_name(self.name))
+    }
+
+    /// Synthesise a down-scaled instance: dims and nnz both divided by
+    /// `factor`, which **preserves the mean row length** (the quantity the
+    /// Gustavson work profile depends on — products/row ≈ row-nnz × mean
+    /// B-row-nnz) at the cost of a `factor×` higher density. Used by fast
+    /// tests, CI and the scaled benches; full-scale runs use
+    /// [`DatasetSpec::generate`].
+    pub fn generate_scaled(&self, seed: u64, factor: usize) -> Csr {
+        // Clamp the factor so scaled instances keep at least ~8K rows: the
+        // evaluated machines have up to 128 PEs, and a workload with only a
+        // handful of rows per PE measures scheduling noise, not dataflow.
+        let factor = factor.clamp(1, (self.rows / 8192).max(1));
+        let rows = (self.rows / factor).max(8);
+        let cols = (self.cols / factor).max(8);
+        let nnz = (self.nnz / factor).clamp(1, rows * cols);
+        gen::generate(rows, cols, nnz, self.profile, seed ^ hash_name(self.name))
+    }
+}
+
+/// FNV-1a so each dataset gets a distinct stream for the same user seed.
+fn hash_name(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// The paper's Table I, in its row order (sorted by increasing density).
+pub const TABLE_I: &[DatasetSpec] = &[
+    DatasetSpec { name: "web-Google",     abbrev: "wg", rows: 916_000, cols: 916_000, nnz: 5_100_000, profile: Profile::PowerLaw { alpha: 0.8 } },
+    DatasetSpec { name: "mario002",       abbrev: "m2", rows: 390_000, cols: 390_000, nnz: 2_100_000, profile: Profile::Banded { rel_bandwidth: 0.002, cluster: 3 } },
+    DatasetSpec { name: "amazon0312",     abbrev: "az", rows: 401_000, cols: 401_000, nnz: 3_200_000, profile: Profile::PowerLaw { alpha: 0.7 } },
+    DatasetSpec { name: "m133-b3",        abbrev: "mb", rows: 200_000, cols: 200_000, nnz: 801_000,   profile: Profile::Uniform },
+    DatasetSpec { name: "scircuit",       abbrev: "sc", rows: 171_000, cols: 171_000, nnz: 959_000,   profile: Profile::Uniform },
+    DatasetSpec { name: "p2pGnutella31",  abbrev: "pg", rows: 63_000,  cols: 63_000,  nnz: 148_000,   profile: Profile::PowerLaw { alpha: 0.7 } },
+    DatasetSpec { name: "offshore",       abbrev: "of", rows: 260_000, cols: 260_000, nnz: 4_200_000, profile: Profile::Banded { rel_bandwidth: 0.003, cluster: 5 } },
+    DatasetSpec { name: "cage12",         abbrev: "cg", rows: 130_000, cols: 130_000, nnz: 2_000_000, profile: Profile::Banded { rel_bandwidth: 0.01, cluster: 4 } },
+    DatasetSpec { name: "2cubes-sphere",  abbrev: "cs", rows: 101_000, cols: 101_000, nnz: 1_600_000, profile: Profile::Banded { rel_bandwidth: 0.005, cluster: 5 } },
+    DatasetSpec { name: "filter3D",       abbrev: "f3", rows: 106_000, cols: 106_000, nnz: 2_700_000, profile: Profile::Banded { rel_bandwidth: 0.005, cluster: 6 } },
+    DatasetSpec { name: "ca-CondMat",     abbrev: "cc", rows: 23_000,  cols: 23_000,  nnz: 187_000,   profile: Profile::PowerLaw { alpha: 0.6 } },
+    DatasetSpec { name: "wikiVote",       abbrev: "wv", rows: 8_300,   cols: 8_300,   nnz: 104_000,   profile: Profile::PowerLaw { alpha: 0.6 } },
+    DatasetSpec { name: "poisson3Da",     abbrev: "p3", rows: 14_000,  cols: 14_000,  nnz: 353_000,   profile: Profile::Banded { rel_bandwidth: 0.02, cluster: 5 } },
+    DatasetSpec { name: "facebook",       abbrev: "fb", rows: 4_000,   cols: 4_000,   nnz: 176_000,   profile: Profile::PowerLaw { alpha: 0.5 } },
+];
+
+/// Look a dataset up by SuiteSparse name or paper abbreviation.
+pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+    TABLE_I.iter().find(|d| d.name.eq_ignore_ascii_case(name) || d.abbrev.eq_ignore_ascii_case(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_has_fourteen_entries() {
+        assert_eq!(TABLE_I.len(), 14);
+    }
+
+    #[test]
+    fn densities_match_paper_column() {
+        // Paper Table I reports densities to 2 significant figures.
+        let expect = [
+            ("wg", 6.1e-6),
+            ("m2", 1.3e-5),
+            ("az", 1.9e-5),
+            ("mb", 2.0e-5),
+            ("sc", 3.2e-5),
+            ("pg", 3.7e-5),
+            ("of", 6.2e-5),
+            ("cg", 1.1e-4),
+            ("cs", 1.5e-4),
+            ("f3", 2.4e-4),
+            ("cc", 3.5e-4),
+            ("wv", 1.5e-3),
+            ("p3", 1.8e-3),
+            ("fb", 1.1e-2),
+        ];
+        for (ab, d) in expect {
+            let spec = by_name(ab).unwrap();
+            let rel = (spec.density() - d).abs() / d;
+            assert!(rel < 0.25, "{ab}: density {} vs paper {d}", spec.density());
+        }
+    }
+
+    #[test]
+    fn lookup_by_both_names() {
+        assert_eq!(by_name("web-Google").unwrap().abbrev, "wg");
+        assert_eq!(by_name("WG").unwrap().name, "web-Google");
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn scaled_generation_preserves_row_profile() {
+        for spec in TABLE_I {
+            let factor = 64;
+            let a = spec.generate_scaled(1, factor);
+            assert!(a.rows() >= 8);
+            assert!(a.nnz() > 0, "{} generated empty", spec.name);
+            // Mean row nnz (the Gustavson work driver) is preserved.
+            let full_mean = spec.nnz as f64 / spec.rows as f64;
+            let scaled_mean = a.nnz() as f64 / a.rows() as f64;
+            assert!(
+                (scaled_mean / full_mean - 1.0).abs() < 0.35,
+                "{}: mean row nnz {scaled_mean:.2} vs full {full_mean:.2}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn wikivote_full_scale_matches_table() {
+        let spec = by_name("wv").unwrap();
+        let a = spec.generate(7);
+        assert_eq!(a.rows(), 8_300);
+        assert_eq!(a.nnz(), 104_000);
+    }
+}

@@ -1,0 +1,153 @@
+//! Action tracing: every architectural event the simulator produces.
+//!
+//! This is the Sparseloop/Accelergy substitution's backbone (DESIGN.md §2):
+//! Accelergy computes `energy = Σ_component count(action) × pJ(action)`;
+//! our simulator produces the same per-component action counts from a real
+//! functional execution, and [`crate::energy`] supplies the pJ table.
+//! Counters are plain `u64` fields so the hot loop pays one increment per
+//! event — no hashing, no allocation.
+
+/// Per-component action counts for one simulation run.
+///
+/// Component naming follows the paper (Fig. 2 and §IV.B):
+/// * `arb/brb/psb` — the Maple PE register buffers (L0),
+/// * `queue` — Matraptor's per-PE sorting queues (L0, SRAM),
+/// * `peb` — Extensor's per-PE buffer (L0, SRAM),
+/// * `l1` — SpAL/SpBL (Matraptor) or LLB (Extensor),
+/// * `pob` — Extensor's partial-output buffer (L1),
+/// * `dram` — L2. All read/write counts are in 32-bit words.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Counters {
+    // -- compute --
+    /// Scalar multiplications (Eq. 3 events).
+    pub mac_mul: u64,
+    /// Scalar additions into partial/final sums (Eq. 7 events).
+    pub mac_add: u64,
+    /// Index comparisons inside intersection units.
+    pub intersect_cmp: u64,
+    /// Elements passed through CSR compress/decompress units.
+    pub cd_elems: u64,
+
+    // -- L0: register buffers (Maple) --
+    pub arb_read: u64,
+    pub arb_write: u64,
+    pub brb_read: u64,
+    pub brb_write: u64,
+    pub psb_read: u64,
+    pub psb_write: u64,
+
+    // -- L0: SRAM PE buffers (baselines) --
+    /// Matraptor sorting-queue accesses.
+    pub queue_read: u64,
+    pub queue_write: u64,
+    /// Extensor PEB accesses.
+    pub peb_read: u64,
+    pub peb_write: u64,
+
+    // -- L1 --
+    pub l1_read: u64,
+    pub l1_write: u64,
+    /// Extensor partial-output-buffer traffic (absent in Maple-based config).
+    pub pob_read: u64,
+    pub pob_write: u64,
+
+    // -- L2 --
+    pub dram_read: u64,
+    pub dram_write: u64,
+
+    // -- interconnect --
+    /// 32-bit flit-hops through the NoC / crossbar.
+    pub noc_flit_hops: u64,
+}
+
+impl Counters {
+    /// Element-wise sum (merging per-PE counters into a run total).
+    pub fn merge(&mut self, o: &Counters) {
+        self.mac_mul += o.mac_mul;
+        self.mac_add += o.mac_add;
+        self.intersect_cmp += o.intersect_cmp;
+        self.cd_elems += o.cd_elems;
+        self.arb_read += o.arb_read;
+        self.arb_write += o.arb_write;
+        self.brb_read += o.brb_read;
+        self.brb_write += o.brb_write;
+        self.psb_read += o.psb_read;
+        self.psb_write += o.psb_write;
+        self.queue_read += o.queue_read;
+        self.queue_write += o.queue_write;
+        self.peb_read += o.peb_read;
+        self.peb_write += o.peb_write;
+        self.l1_read += o.l1_read;
+        self.l1_write += o.l1_write;
+        self.pob_read += o.pob_read;
+        self.pob_write += o.pob_write;
+        self.dram_read += o.dram_read;
+        self.dram_write += o.dram_write;
+        self.noc_flit_hops += o.noc_flit_hops;
+    }
+
+    /// Total multiply-accumulate operations.
+    pub fn mac_ops(&self) -> u64 {
+        self.mac_mul
+    }
+
+    /// Total L0 accesses (registers + PE SRAM), the paper's `L0 ↔ MAC` lane.
+    pub fn l0_accesses(&self) -> u64 {
+        self.arb_read
+            + self.arb_write
+            + self.brb_read
+            + self.brb_write
+            + self.psb_read
+            + self.psb_write
+    }
+
+    /// PE-buffer (SRAM) accesses, the paper's `PE ↔ MAC` lane.
+    pub fn pe_buffer_accesses(&self) -> u64 {
+        self.queue_read + self.queue_write + self.peb_read + self.peb_write
+    }
+
+    /// L1 accesses including POB.
+    pub fn l1_accesses(&self) -> u64 {
+        self.l1_read + self.l1_write + self.pob_read + self.pob_write
+    }
+
+    /// DRAM word accesses.
+    pub fn dram_accesses(&self) -> u64 {
+        self.dram_read + self.dram_write
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_fieldwise() {
+        let mut a = Counters { mac_mul: 3, dram_read: 5, ..Default::default() };
+        let b = Counters { mac_mul: 2, psb_write: 7, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.mac_mul, 5);
+        assert_eq!(a.psb_write, 7);
+        assert_eq!(a.dram_read, 5);
+    }
+
+    #[test]
+    fn lane_rollups() {
+        let c = Counters {
+            arb_read: 1,
+            brb_write: 2,
+            psb_read: 3,
+            queue_read: 10,
+            peb_write: 20,
+            l1_read: 5,
+            pob_write: 6,
+            dram_read: 7,
+            dram_write: 8,
+            ..Default::default()
+        };
+        assert_eq!(c.l0_accesses(), 6);
+        assert_eq!(c.pe_buffer_accesses(), 30);
+        assert_eq!(c.l1_accesses(), 11);
+        assert_eq!(c.dram_accesses(), 15);
+    }
+}

@@ -1,0 +1,137 @@
+//! Cross-module integration: end-to-end simulations over Table-I workloads,
+//! checking the paper's qualitative claims hold across the whole matrix of
+//! (dataset family × configuration × policy).
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::gustavson::{dense_matmul, max_abs_diff, spgemm_rowwise};
+use maple::sim::{profile_workload, simulate_workload};
+use maple::sparse::suite;
+
+/// One scaled dataset per structural family.
+fn family_samples() -> Vec<&'static str> {
+    vec!["wg", "of", "sc", "wv"]
+}
+
+#[test]
+fn maple_wins_energy_on_every_family() {
+    for name in family_samples() {
+        let a = suite::by_name(name).unwrap().generate_scaled(7, 48);
+        let w = profile_workload(&a, &a);
+        for (base, maple) in [
+            (AcceleratorConfig::matraptor_baseline(), AcceleratorConfig::matraptor_maple()),
+            (AcceleratorConfig::extensor_baseline(), AcceleratorConfig::extensor_maple()),
+        ] {
+            let rb = simulate_workload(&base, &w, Policy::RoundRobin);
+            let rm = simulate_workload(&maple, &w, Policy::RoundRobin);
+            let benefit = rm.energy_benefit_pct(&rb);
+            assert!(
+                benefit > 15.0,
+                "{name}/{}: energy benefit only {benefit:.1}%",
+                base.name
+            );
+        }
+    }
+}
+
+#[test]
+fn maple_speedup_positive_on_every_family() {
+    for name in family_samples() {
+        let a = suite::by_name(name).unwrap().generate_scaled(7, 48);
+        let w = profile_workload(&a, &a);
+        for (base, maple) in [
+            (AcceleratorConfig::matraptor_baseline(), AcceleratorConfig::matraptor_maple()),
+            (AcceleratorConfig::extensor_baseline(), AcceleratorConfig::extensor_maple()),
+        ] {
+            let rb = simulate_workload(&base, &w, Policy::RoundRobin);
+            let rm = simulate_workload(&maple, &w, Policy::RoundRobin);
+            let speedup = rm.speedup_pct(&rb);
+            assert!(speedup > -5.0, "{name}/{}: speedup {speedup:.1}%", base.name);
+        }
+    }
+}
+
+#[test]
+fn paper_headline_bands_at_bench_scale() {
+    // Means over the four family samples must land in the paper's
+    // neighbourhood: Matraptor ≈ 50% energy / 15% speedup, Extensor ≈ 60% /
+    // 22% (shape: who wins, by roughly what factor).
+    let mut mat_e = Vec::new();
+    let mut ext_e = Vec::new();
+    for name in family_samples() {
+        let a = suite::by_name(name).unwrap().generate_scaled(7, 48);
+        let w = profile_workload(&a, &a);
+        let mb = simulate_workload(&AcceleratorConfig::matraptor_baseline(), &w, Policy::RoundRobin);
+        let mm = simulate_workload(&AcceleratorConfig::matraptor_maple(), &w, Policy::RoundRobin);
+        let eb = simulate_workload(&AcceleratorConfig::extensor_baseline(), &w, Policy::RoundRobin);
+        let em = simulate_workload(&AcceleratorConfig::extensor_maple(), &w, Policy::RoundRobin);
+        mat_e.push(mm.energy_benefit_pct(&mb));
+        ext_e.push(em.energy_benefit_pct(&eb));
+    }
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (m, e) = (mean(&mat_e), mean(&ext_e));
+    assert!((30.0..70.0).contains(&m), "matraptor mean energy benefit {m:.1}% (paper ~50%)");
+    assert!((40.0..75.0).contains(&e), "extensor mean energy benefit {e:.1}% (paper ~60%)");
+}
+
+#[test]
+fn checksum_invariant_across_configs_and_policies() {
+    let a = suite::by_name("p3").unwrap().generate_scaled(3, 4);
+    let w = profile_workload(&a, &a);
+    let mut checksums = Vec::new();
+    for cfg in AcceleratorConfig::paper_configs() {
+        for policy in [Policy::RoundRobin, Policy::Chunked, Policy::GreedyBalance] {
+            checksums.push(simulate_workload(&cfg, &w, policy).checksum);
+        }
+    }
+    assert!(checksums.windows(2).all(|p| p[0] == p[1]));
+}
+
+#[test]
+fn profile_checksum_equals_reference_spgemm() {
+    let a = suite::by_name("fb").unwrap().generate_scaled(11, 8);
+    let w = profile_workload(&a, &a);
+    let c = spgemm_rowwise(&a, &a);
+    let direct: f64 = c.value.iter().map(|&v| v as f64).sum();
+    assert_eq!(w.out_nnz, c.nnz() as u64);
+    assert!((w.checksum - direct).abs() < 1e-6 * direct.abs().max(1.0));
+}
+
+#[test]
+fn small_end_to_end_against_dense_oracle() {
+    // The full numeric path on a matrix small enough to densify.
+    let a = suite::by_name("wv").unwrap().generate_scaled(5, 256);
+    let c = spgemm_rowwise(&a, &a);
+    assert!(max_abs_diff(&c, &dense_matmul(&a, &a)) < 1e-3);
+}
+
+#[test]
+fn config_round_trips_through_cli_format() {
+    for cfg in AcceleratorConfig::paper_configs() {
+        let toml = cfg.to_toml();
+        let parsed = AcceleratorConfig::from_toml(&toml).unwrap();
+        assert_eq!(parsed, cfg);
+        // And the parsed config simulates identically.
+        let a = suite::by_name("wv").unwrap().generate_scaled(1, 64);
+        let w = profile_workload(&a, &a);
+        let r1 = simulate_workload(&cfg, &w, Policy::RoundRobin);
+        let r2 = simulate_workload(&parsed, &w, Policy::RoundRobin);
+        assert_eq!(r1.cycles_compute, r2.cycles_compute);
+        assert_eq!(r1.energy.total_pj(), r2.energy.total_pj());
+    }
+}
+
+#[test]
+fn dram_bound_scales_with_bandwidth() {
+    let a = suite::by_name("cc").unwrap().generate_scaled(2, 4);
+    let w = profile_workload(&a, &a);
+    let mut slow = AcceleratorConfig::extensor_maple();
+    slow.dram.words_per_cycle = 4.0;
+    let mut fast = AcceleratorConfig::extensor_maple();
+    fast.dram.words_per_cycle = 64.0;
+    let rs = simulate_workload(&slow, &w, Policy::RoundRobin);
+    let rf = simulate_workload(&fast, &w, Policy::RoundRobin);
+    let ratio = rs.cycles_dram_bound as f64 / rf.cycles_dram_bound as f64;
+    assert!((ratio - 16.0).abs() < 0.2, "16x bandwidth must give ~16x bound, got {ratio}");
+    assert_eq!(rs.cycles_compute, rf.cycles_compute, "compute model is bandwidth-independent");
+}

@@ -1,0 +1,227 @@
+//! Property-based invariants over randomly generated workloads.
+//!
+//! The offline build has no proptest crate; properties are checked over
+//! deterministic SplitMix64-driven case sweeps (DESIGN.md §Dependencies) —
+//! same discipline: each test states an invariant and hammers it with many
+//! random instances; failures print the offending seed.
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::{batch_rows_by_reuse, partition, split_wide_rows, Policy};
+use maple::gustavson::{
+    dense_matmul, max_abs_diff, multiply_count, spgemm_inner, spgemm_outer, spgemm_rowwise,
+};
+use maple::pe::{MaplePe, PeModel, RowProfile};
+use maple::sim::profile_workload;
+use maple::sparse::gen::{generate, Profile};
+use maple::sparse::{Csr, SplitMix64};
+use maple::trace::Counters;
+
+/// Random CSR matrix drawn from a seed-indexed family.
+fn arb_matrix(seed: u64) -> Csr {
+    let mut r = SplitMix64::new(seed);
+    let rows = 4 + r.below(60) as usize;
+    let cols = 4 + r.below(60) as usize;
+    let cap = rows * cols;
+    let nnz = 1 + r.below((cap / 2) as u64) as usize;
+    let profile = match r.below(3) {
+        0 => Profile::Uniform,
+        1 => Profile::PowerLaw { alpha: 0.5 + r.unit_f64() },
+        _ => Profile::Banded { rel_bandwidth: 0.05 + 0.1 * r.unit_f64(), cluster: 1 + r.below(5) as usize },
+    };
+    generate(rows, cols, nnz, profile, seed.wrapping_mul(0x9E37_79B9))
+}
+
+#[test]
+fn prop_generated_csr_is_always_valid() {
+    for seed in 0..200 {
+        let a = arb_matrix(seed);
+        // try_new re-validates every invariant.
+        let b = Csr::try_new(
+            a.rows(),
+            a.cols(),
+            a.row_ptr.clone(),
+            a.col_id.clone(),
+            a.value.clone(),
+        );
+        assert!(b.is_ok(), "seed {seed}: {:?}", b.err());
+    }
+}
+
+#[test]
+fn prop_transpose_is_involutive() {
+    for seed in 0..100 {
+        let a = arb_matrix(seed);
+        assert_eq!(a.transpose().transpose(), a, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_all_dataflows_agree() {
+    for seed in 0..60 {
+        let a = arb_matrix(seed);
+        let b = arb_matrix(seed + 1000);
+        if a.cols() != b.rows() {
+            continue;
+        }
+        let oracle = dense_matmul(&a, &b);
+        for (name, c) in [
+            ("rowwise", spgemm_rowwise(&a, &b)),
+            ("inner", spgemm_inner(&a, &b)),
+            ("outer", spgemm_outer(&a, &b)),
+        ] {
+            assert!(max_abs_diff(&c, &oracle) < 1e-3, "seed {seed}: {name} diverges");
+        }
+    }
+}
+
+#[test]
+fn prop_profile_matches_reference() {
+    for seed in 0..80 {
+        let a = arb_matrix(seed);
+        if a.rows() != a.cols() {
+            continue;
+        }
+        let w = profile_workload(&a, &a);
+        let c = spgemm_rowwise(&a, &a);
+        assert_eq!(w.out_nnz, c.nnz() as u64, "seed {seed}");
+        assert_eq!(w.total_products, multiply_count(&a, &a), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_maple_functional_pe_equals_reference() {
+    for seed in 0..40 {
+        let a = arb_matrix(seed);
+        if a.rows() != a.cols() {
+            continue;
+        }
+        let c_ref = spgemm_rowwise(&a, &a);
+        let pe = MaplePe::from_config(&AcceleratorConfig::matraptor_maple());
+        let mut counters = Counters::default();
+        for i in 0..a.rows() {
+            let (cols, vals, _) = pe.simulate_row(&a, &a, i, &mut counters);
+            assert_eq!(cols.as_slice(), c_ref.row_cols(i), "seed {seed} row {i}");
+            for (v, r) in vals.iter().zip(c_ref.row_values(i)) {
+                assert!((v - r).abs() < 1e-3, "seed {seed} row {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_partition_is_a_bijection() {
+    let mut rng = SplitMix64::new(42);
+    for _ in 0..100 {
+        let rows = 1 + rng.below(500) as usize;
+        let pes = 1 + rng.below(32) as usize;
+        let profiles: Vec<RowProfile> = (0..rows)
+            .map(|_| RowProfile {
+                a_nnz: rng.below(16) as u32,
+                products: rng.below(1000),
+                out_nnz: rng.below(100) as u32,
+            })
+            .collect();
+        for policy in [Policy::RoundRobin, Policy::Chunked, Policy::GreedyBalance] {
+            let part = partition(policy, pes, &profiles);
+            let mut seen = vec![0u8; rows];
+            for a in &part.assignments {
+                for &r in a {
+                    seen[r as usize] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&s| s == 1), "{policy:?}: not a bijection");
+        }
+    }
+}
+
+#[test]
+fn prop_split_preserves_totals() {
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..200 {
+        let profiles: Vec<RowProfile> = (0..1 + rng.below(50) as usize)
+            .map(|_| RowProfile {
+                a_nnz: 1 + rng.below(40) as u32,
+                products: rng.below(100_000),
+                out_nnz: rng.below(10_000) as u32,
+            })
+            .collect();
+        let max_products = 1 + rng.below(5000);
+        let split = split_wide_rows(&profiles, max_products);
+        let tp: u64 = profiles.iter().map(|p| p.products).sum();
+        let ts: u64 = split.iter().map(|p| p.products).sum();
+        let op: u64 = profiles.iter().map(|p| p.out_nnz as u64).sum();
+        let os: u64 = split.iter().map(|p| p.out_nnz as u64).sum();
+        assert_eq!(tp, ts, "products conserved");
+        assert_eq!(op, os, "out_nnz conserved");
+        assert!(split.iter().all(|p| p.products <= max_products));
+    }
+}
+
+#[test]
+fn prop_batches_cover_exactly_once() {
+    let mut rng = SplitMix64::new(11);
+    for _ in 0..100 {
+        let n = 1 + rng.below(300) as usize;
+        let rows: Vec<u32> = (0..n as u32).collect();
+        let profiles: Vec<RowProfile> = (0..n)
+            .map(|_| RowProfile { a_nnz: 1, products: rng.below(4000), out_nnz: 10 })
+            .collect();
+        let max_batch = 1 + rng.below(16) as usize;
+        let batches = batch_rows_by_reuse(&rows, &profiles, max_batch);
+        let mut covered = 0usize;
+        let mut last_end = 0usize;
+        for b in &batches {
+            assert_eq!(b.start, last_end, "batches must be contiguous");
+            assert!(b.len() <= max_batch);
+            covered += b.len();
+            last_end = b.end;
+        }
+        assert_eq!(covered, n);
+    }
+}
+
+#[test]
+fn prop_counters_scale_linearly_with_repeated_rows() {
+    // Cost-model action counts must be a pure function of the profile:
+    // counting a row twice doubles every counter.
+    let pe = MaplePe::from_config(&AcceleratorConfig::extensor_maple());
+    let mut rng = SplitMix64::new(23);
+    for _ in 0..100 {
+        let p = RowProfile {
+            a_nnz: 1 + rng.below(30) as u32,
+            products: 1 + rng.below(5000),
+            out_nnz: 1 + rng.below(2000) as u32,
+        };
+        let mut c1 = Counters::default();
+        pe.row_cost(&p, &mut c1);
+        let mut c2 = Counters::default();
+        pe.row_cost(&p, &mut c2);
+        pe.row_cost(&p, &mut c2);
+        let mut doubled = c1.clone();
+        doubled.merge(&c1);
+        assert_eq!(c2, doubled);
+    }
+}
+
+#[test]
+fn prop_energy_monotone_in_counters() {
+    use maple::energy::{BufferSizes, EnergyBreakdown, TechModel};
+    let t = TechModel::tech45();
+    let sizes = BufferSizes { pe_buffer_bytes: 48 << 10, l1_bytes: 256 << 10, pob_bytes: 1 << 20, reg_bytes: 2048 };
+    let mut rng = SplitMix64::new(31);
+    for _ in 0..100 {
+        let c1 = Counters {
+            mac_mul: rng.below(1000),
+            dram_read: rng.below(1000),
+            l1_read: rng.below(1000),
+            queue_write: rng.below(1000),
+            ..Default::default()
+        };
+        let mut c2 = c1.clone();
+        c2.mac_mul += 1 + rng.below(100);
+        c2.dram_read += 1;
+        let e1 = EnergyBreakdown::from_counters(&c1, &t, &sizes);
+        let e2 = EnergyBreakdown::from_counters(&c2, &t, &sizes);
+        assert!(e2.total_pj() > e1.total_pj());
+    }
+}

@@ -1,0 +1,77 @@
+//! Integration: the AOT artifacts (Pallas kernel → HLO text, built by
+//! `make artifacts`) load and execute correctly through the PJRT runtime.
+//!
+//! These tests require `artifacts/`; they fail with a clear message when it
+//! is missing (the Makefile's `test` target builds it first).
+
+use maple::runtime::{artifacts_dir, LoadedModule, MapleDatapath};
+use std::path::PathBuf;
+
+fn artifacts() -> PathBuf {
+    // Tests run from the crate root; fall back to $MAPLE_ARTIFACTS.
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("meta.json").exists(),
+        "artifacts/ missing — run `make artifacts` before `cargo test`"
+    );
+    dir
+}
+
+#[test]
+fn datapath_loads_and_matches_cpu_math() {
+    let client = xla::PjRtClient::cpu().expect("CPU PJRT client");
+    let dp = MapleDatapath::load(&client, &artifacts()).expect("artifacts load");
+    let meta = dp.meta();
+    assert_eq!(meta.kt, 16);
+    assert_eq!(meta.nt, 128);
+
+    // Deterministic pseudo-random tile.
+    let mut rng = maple::sparse::SplitMix64::new(99);
+    let a: Vec<f32> = (0..meta.kt).map(|_| rng.value()).collect();
+    let b: Vec<f32> = (0..meta.kt * meta.nt).map(|_| rng.value()).collect();
+
+    let psb = dp.run_tile(&a, &b).expect("tile executes");
+    assert_eq!(psb.len(), meta.nt);
+    for n in 0..meta.nt {
+        let want: f32 = (0..meta.kt).map(|k| a[k] * b[k * meta.nt + n]).sum();
+        assert!((psb[n] - want).abs() < 1e-4, "psb[{n}] = {} vs {want}", psb[n]);
+    }
+}
+
+#[test]
+fn datapath_zero_inputs_give_zero_psb() {
+    let client = xla::PjRtClient::cpu().expect("CPU PJRT client");
+    let dp = MapleDatapath::load(&client, &artifacts()).expect("artifacts load");
+    let meta = dp.meta();
+    let psb = dp.run_tile(&vec![0.0; meta.kt], &vec![0.0; meta.kt * meta.nt]).unwrap();
+    assert!(psb.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn datapath_rejects_wrong_shapes() {
+    let client = xla::PjRtClient::cpu().expect("CPU PJRT client");
+    let dp = MapleDatapath::load(&client, &artifacts()).expect("artifacts load");
+    let meta = dp.meta();
+    assert!(dp.run_tile(&vec![0.0; meta.kt + 1], &vec![0.0; meta.kt * meta.nt]).is_err());
+    assert!(dp.run_tile(&vec![0.0; meta.kt], &vec![0.0; 3]).is_err());
+}
+
+#[test]
+fn model_artifact_loads_too() {
+    let client = xla::PjRtClient::cpu().expect("CPU PJRT client");
+    let m = LoadedModule::load(&client, &artifacts().join("model.hlo.txt")).expect("model loads");
+    assert_eq!(m.name(), "model.hlo");
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let client = xla::PjRtClient::cpu().expect("CPU PJRT client");
+    let dp = MapleDatapath::load(&client, &artifacts()).expect("artifacts load");
+    let meta = dp.meta();
+    let mut rng = maple::sparse::SplitMix64::new(5);
+    let a: Vec<f32> = (0..meta.kt).map(|_| rng.value()).collect();
+    let b: Vec<f32> = (0..meta.kt * meta.nt).map(|_| rng.value()).collect();
+    let p1 = dp.run_tile(&a, &b).unwrap();
+    let p2 = dp.run_tile(&a, &b).unwrap();
+    assert_eq!(p1, p2);
+}
