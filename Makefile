@@ -1,0 +1,36 @@
+# Maple — build / verify entry points.
+#
+#   make verify     fmt + clippy + tests on the rust crate (tier-1 + lint)
+#   make test       tier-1 verify exactly: build --release && test -q
+#   make bench      all harness-less benches, release mode
+#   make artifacts  AOT-lower the Pallas kernel to HLO text (needs jax)
+
+CARGO ?= cargo
+RUST_DIR := rust
+
+.PHONY: verify fmt clippy test bench artifacts
+
+verify: fmt clippy test
+
+# Advisory until the crate is bulk-formatted: the seed predates rustfmt
+# enforcement, so a drift report must not mask clippy/test failures.
+fmt:
+	-cd $(RUST_DIR) && $(CARGO) fmt --check
+
+clippy:
+	cd $(RUST_DIR) && $(CARGO) clippy --all-targets -- -D warnings
+
+test:
+	cd $(RUST_DIR) && $(CARGO) build --release && $(CARGO) test -q
+
+bench:
+	cd $(RUST_DIR) && for b in fig3_energy_ops fig8_area fig9_energy fig9_speedup \
+	        table1_datasets ablation_macs des_validation hotpath; do \
+	    $(CARGO) bench --bench $$b; \
+	done
+
+# Skips the rebuild when the artifacts are newer than the Python sources.
+artifacts: artifacts/maple_pe.hlo.txt
+
+artifacts/maple_pe.hlo.txt: $(wildcard python/compile/*.py python/compile/kernels/*.py)
+	cd python && python3 -m compile.aot --out-dir ../artifacts

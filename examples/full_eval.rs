@@ -2,11 +2,13 @@
 //! binary (EXPERIMENTS.md records its output):
 //!
 //! 1. synthesise all fourteen Table-I workloads,
-//! 2. run `C = A × A` through all four accelerator configurations on the
-//!    real simulator (functional profile + PE cost models + energy),
+//! 2. run `C = A × A` through all four accelerator configurations via one
+//!    [`SimEngine`] sweep (each dataset profiled exactly once, all
+//!    56 cells concurrent),
 //! 3. cross-check numerics against the software Gustavson reference, and
-//!    — when `artifacts/` exist — against the AOT-compiled Pallas datapath
-//!    executed via PJRT (no Python at runtime),
+//!    — when built `--features runtime` and `artifacts/` exist — against
+//!    the AOT-compiled Pallas datapath executed via PJRT (no Python at
+//!    runtime),
 //! 4. print Fig. 9(a)+(b) rows and the paper-style means, plus the Fig. 8
 //!    area ratios and the headline abstract numbers.
 //!
@@ -15,51 +17,18 @@
 //! ```
 //!
 //! `scale` down-scales the Table-I matrices (default 16; `--full` = 1,
-//! several minutes). Workloads run on worker threads, one per dataset.
+//! several minutes).
 
 use maple::config::AcceleratorConfig;
-use maple::coordinator::Policy;
-use maple::report::{fig9_report, Fig9Row};
-use maple::sim::{profile_workload, simulate_workload, SimResult};
+use maple::report::{fig9_report, fig9_rows_from_sweep, Fig9Row};
+use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
 use maple::sparse::suite;
-
-struct DatasetEval {
-    #[allow(dead_code)]
-    abbrev: &'static str,
-    matraptor: Fig9Row,
-    extensor: Fig9Row,
-    results: Vec<SimResult>,
-}
-
-fn eval_dataset(abbrev: &'static str, scale: usize, seed: u64) -> DatasetEval {
-    let spec = suite::by_name(abbrev).unwrap();
-    let a = if scale <= 1 { spec.generate(seed) } else { spec.generate_scaled(seed, scale) };
-    let w = profile_workload(&a, &a);
-
-    let results: Vec<SimResult> = AcceleratorConfig::paper_configs()
-        .iter()
-        .map(|cfg| simulate_workload(cfg, &w, Policy::RoundRobin))
-        .collect();
-
-    // Numeric cross-check 1: every config reports the same checksum/out_nnz
-    // as the functional profile (they all execute the same Gustavson math).
-    for r in &results {
-        assert_eq!(r.out_nnz, w.out_nnz, "{abbrev}/{}: out_nnz mismatch", r.config);
-        assert_eq!(r.checksum, w.checksum, "{abbrev}/{}: checksum mismatch", r.config);
-    }
-
-    DatasetEval {
-        abbrev,
-        matraptor: Fig9Row::from_results(abbrev, &results[0], &results[1]),
-        extensor: Fig9Row::from_results(abbrev, &results[2], &results[3]),
-        results,
-    }
-}
 
 /// Cross-check 2: replay a few rows of a small workload through the
 /// AOT-compiled Maple datapath (Pallas kernel → HLO → PJRT) and compare
 /// against the software reference. Skipped with a notice if `make artifacts`
 /// has not run.
+#[cfg(feature = "runtime")]
 fn pjrt_crosscheck() {
     let dir = maple::runtime::artifacts_dir();
     let client = match xla::PjRtClient::cpu() {
@@ -120,10 +89,16 @@ fn pjrt_crosscheck() {
         rows_checked += 1;
     }
     println!(
-        "PJRT cross-check: {rows_checked} rows through the compiled Pallas datapath, max |err| = {max_err:.2e}"
+        "PJRT cross-check: {rows_checked} rows through the compiled Pallas datapath, \
+         max |err| = {max_err:.2e}"
     );
     assert!(rows_checked > 0, "cross-check exercised no rows");
     assert!(max_err < 1e-3, "AOT datapath diverges from reference");
+}
+
+#[cfg(not(feature = "runtime"))]
+fn pjrt_crosscheck() {
+    println!("PJRT cross-check skipped: built without the `runtime` feature");
 }
 
 fn main() {
@@ -137,18 +112,28 @@ fn main() {
     let seed = 7u64;
     println!("=== Maple full evaluation (Table-I scale 1/{scale}) ===\n");
 
+    let engine = SimEngine::new();
+    let keys: Vec<WorkloadKey> =
+        suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, seed, scale)).collect();
+
     let t0 = std::time::Instant::now();
-    let evals: Vec<DatasetEval> = std::thread::scope(|scope| {
-        let handles: Vec<_> = suite::TABLE_I
-            .iter()
-            .map(|d| scope.spawn(move || eval_dataset(d.abbrev, scale, seed)))
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
+    let grid = engine.sweep(&SweepSpec::paper(keys.clone())).expect("Table-I sweep");
     let elapsed = t0.elapsed();
 
-    let matraptor: Vec<Fig9Row> = evals.iter().map(|e| e.matraptor.clone()).collect();
-    let extensor: Vec<Fig9Row> = evals.iter().map(|e| e.extensor.clone()).collect();
+    // Numeric cross-check 1: every config reports the same checksum/out_nnz
+    // as the functional profile (they all execute the same Gustavson math).
+    for (d, key) in keys.iter().enumerate() {
+        let w = engine.workload(key).expect("cached workload");
+        for c in 0..grid.configs.len() {
+            let r = grid.get(d, c, 0);
+            assert_eq!(r.out_nnz, w.out_nnz, "{}/{}: out_nnz mismatch", key.dataset, r.config);
+            assert_eq!(r.checksum, w.checksum, "{}/{}: checksum mismatch", key.dataset, r.config);
+        }
+    }
+    assert_eq!(engine.profiles_run() as usize, keys.len(), "one profile per dataset");
+
+    let matraptor: Vec<Fig9Row> = fig9_rows_from_sweep(&grid, 0, 1, 0);
+    let extensor: Vec<Fig9Row> = fig9_rows_from_sweep(&grid, 2, 3, 0);
     println!("{}", fig9_report("Fig. 9 — Matraptor (Maple vs baseline)", &matraptor, true));
     println!("{}", fig9_report("Fig. 9 — Extensor (Maple vs baseline)", &extensor, true));
 
@@ -161,7 +146,9 @@ fn main() {
         &AcceleratorConfig::extensor_baseline(),
         &AcceleratorConfig::extensor_maple(),
     );
-    println!("Fig. 8 — area ratios: Matraptor {rm:.1}x (paper 5.9x), Extensor {re:.1}x (paper 15.5x)\n");
+    println!(
+        "Fig. 8 — area ratios: Matraptor {rm:.1}x (paper 5.9x), Extensor {re:.1}x (paper 15.5x)\n"
+    );
 
     // Abstract headline summary.
     let mean = |rows: &[Fig9Row], f: fn(&Fig9Row) -> f64| {
@@ -180,9 +167,12 @@ fn main() {
     );
 
     // Verification summary across all runs.
-    let runs: usize = evals.iter().map(|e| e.results.len()).sum();
-    println!("\nverification: {runs} simulations, all checksums consistent");
-    println!("wall time: {:.1}s ({} datasets in parallel)", elapsed.as_secs_f64(), evals.len());
+    println!("\nverification: {} simulations, all checksums consistent", grid.cell_count());
+    println!(
+        "wall time: {:.1}s ({} datasets profiled once, cells in parallel)",
+        elapsed.as_secs_f64(),
+        keys.len()
+    );
 
     pjrt_crosscheck();
 }

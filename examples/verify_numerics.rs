@@ -6,20 +6,41 @@
 //!   (`artifacts/maple_pe.hlo.txt`, built by `make artifacts`).
 //!
 //! ```text
-//! make artifacts && cargo run --release --example verify_numerics
+//! make artifacts && cargo run --release --features runtime --example verify_numerics
 //! ```
+//!
+//! The PJRT layer needs the `runtime` cargo feature; without it this prints
+//! a skip notice.
 
+#[cfg(not(feature = "runtime"))]
+fn main() {
+    eprintln!("SKIP: verify_numerics needs the PJRT runtime; rebuild with --features runtime");
+}
+
+#[cfg(feature = "runtime")]
 use maple::config::AcceleratorConfig;
+#[cfg(feature = "runtime")]
 use maple::gustavson::spgemm_rowwise;
+#[cfg(feature = "runtime")]
 use maple::pe::MaplePe;
+#[cfg(feature = "runtime")]
 use maple::runtime::{artifacts_dir, MapleDatapath};
+#[cfg(feature = "runtime")]
 use maple::sparse::gen::{generate, Profile};
+#[cfg(feature = "runtime")]
 use maple::trace::Counters;
 
+#[cfg(feature = "runtime")]
 fn main() {
     let a = generate(96, 96, 900, Profile::PowerLaw { alpha: 0.6 }, 42);
     let reference = spgemm_rowwise(&a, &a);
-    println!("workload: {}x{} matrix, {} nnz, C=A*A has {} nnz", a.rows(), a.cols(), a.nnz(), reference.nnz());
+    println!(
+        "workload: {}x{} matrix, {} nnz, C=A*A has {} nnz",
+        a.rows(),
+        a.cols(),
+        a.nnz(),
+        reference.nnz()
+    );
 
     // --- L3 functional PE vs reference ---
     let pe = MaplePe::from_config(&AcceleratorConfig::extensor_maple());

@@ -2,6 +2,10 @@
 //! MACs-per-PE (the paper's central design knob, §III), PSB depth (the
 //! segmentation trade-off), Matraptor merge passes, and partition policy.
 //!
+//! All four sections run through one [`SimEngine`]: the dataset is profiled
+//! once and every ablation sweep reuses the cached workload, with cells
+//! running concurrently.
+//!
 //! ```text
 //! cargo bench --bench ablation_macs
 //! ```
@@ -10,13 +14,14 @@ include!("harness.rs");
 
 use maple::config::AcceleratorConfig;
 use maple::coordinator::Policy;
-use maple::sim::{profile_workload, simulate_workload};
+use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
 
 fn main() {
     let scale = bench_scale();
     let spec = maple::sparse::suite::by_name("p3").unwrap();
-    let a = spec.generate_scaled(7, scale.min(4));
-    let w = profile_workload(&a, &a);
+    let engine = SimEngine::new();
+    let key = WorkloadKey::suite(spec.abbrev, 7, scale.min(4));
+    let w = engine.workload(&key).expect("p3 profiles");
     println!(
         "dataset {} (1/{} scale): {} products, {} out nnz\n",
         spec.abbrev,
@@ -24,44 +29,76 @@ fn main() {
         w.total_products,
         w.out_nnz
     );
+    let sweep = |configs: Vec<AcceleratorConfig>, policies: Vec<Policy>| {
+        engine
+            .sweep(&SweepSpec { configs, datasets: vec![key.clone()], policies })
+            .expect("ablation sweep")
+    };
 
     println!("--- MACs/PE at a fixed 128-MAC budget (who wins where?) ---");
     println!("{:>8} {:>6} {:>12} {:>12} {:>9}", "macs/pe", "pes", "cycles", "energy uJ", "util %");
-    for k in [1, 2, 4, 8, 16, 32] {
-        let mut cfg = AcceleratorConfig::extensor_maple();
-        cfg.pe.macs_per_pe = k;
-        cfg.num_pes = 128 / k;
-        cfg.pe.brb_entries = 16 * k;
-        cfg.pe.psb_entries = 16 * k;
-        let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+    let ks = [1usize, 2, 4, 8, 16, 32];
+    let configs: Vec<AcceleratorConfig> = ks
+        .iter()
+        .map(|&k| {
+            let mut cfg = AcceleratorConfig::extensor_maple();
+            cfg.pe.macs_per_pe = k;
+            cfg.num_pes = 128 / k;
+            cfg.pe.brb_entries = 16 * k;
+            cfg.pe.psb_entries = 16 * k;
+            cfg.name = format!("extensor-maple-k{k}");
+            cfg
+        })
+        .collect();
+    let grid = sweep(configs.clone(), vec![Policy::RoundRobin]);
+    for (i, (&k, cfg)) in ks.iter().zip(&configs).enumerate() {
+        let r = grid.get(0, i, 0);
         println!(
             "{:>8} {:>6} {:>12} {:>12.2} {:>9.1}",
             k,
             cfg.num_pes,
             r.cycles_compute,
             r.energy.total_pj() / 1e6,
-            100.0 * r.mac_utilisation(&cfg)
+            100.0 * r.mac_utilisation(cfg)
         );
     }
 
     println!("\n--- PSB depth (segmentation cost) ---");
     println!("{:>8} {:>12} {:>12}", "psb", "cycles", "arb re-reads");
-    for psb in [16, 32, 64, 128, 256, 512] {
-        let mut cfg = AcceleratorConfig::extensor_maple();
-        cfg.pe.psb_entries = psb;
-        let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+    let depths = [16usize, 32, 64, 128, 256, 512];
+    let configs: Vec<AcceleratorConfig> = depths
+        .iter()
+        .map(|&psb| {
+            let mut cfg = AcceleratorConfig::extensor_maple();
+            cfg.pe.psb_entries = psb;
+            cfg.name = format!("extensor-maple-psb{psb}");
+            cfg
+        })
+        .collect();
+    let grid = sweep(configs, vec![Policy::RoundRobin]);
+    for (i, &psb) in depths.iter().enumerate() {
+        let r = grid.get(0, i, 0);
         println!("{:>8} {:>12} {:>12}", psb, r.cycles_compute, r.counters.arb_read);
     }
 
     println!("\n--- Matraptor baseline merge passes (round-robin accumulate depth) ---");
     println!("{:>8} {:>12} {:>14}", "passes", "queue words", "energy uJ");
-    for passes in [1, 2, 4, 6, 8] {
-        let mut cfg = AcceleratorConfig::matraptor_baseline();
-        cfg.merge_passes = passes;
-        let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+    let passes = [1u32, 2, 4, 6, 8];
+    let configs: Vec<AcceleratorConfig> = passes
+        .iter()
+        .map(|&p| {
+            let mut cfg = AcceleratorConfig::matraptor_baseline();
+            cfg.merge_passes = p;
+            cfg.name = format!("matraptor-baseline-m{p}");
+            cfg
+        })
+        .collect();
+    let grid = sweep(configs, vec![Policy::RoundRobin]);
+    for (i, &p) in passes.iter().enumerate() {
+        let r = grid.get(0, i, 0);
         println!(
             "{:>8} {:>12} {:>14.2}",
-            passes,
+            p,
             r.counters.queue_read + r.counters.queue_write,
             r.energy.total_pj() / 1e6
         );
@@ -69,8 +106,13 @@ fn main() {
 
     println!("\n--- Partition policy (coordinator ablation) ---");
     println!("{:>14} {:>12} {:>9}", "policy", "cycles", "balance");
-    for policy in [Policy::RoundRobin, Policy::Chunked, Policy::GreedyBalance] {
-        let r = simulate_workload(&AcceleratorConfig::extensor_maple(), &w, policy);
+    let policies = [Policy::RoundRobin, Policy::Chunked, Policy::GreedyBalance];
+    let grid = sweep(vec![AcceleratorConfig::extensor_maple()], policies.to_vec());
+    for (i, policy) in policies.iter().enumerate() {
+        let r = grid.get(0, 0, i);
         println!("{:>14} {:>12} {:>9.3}", format!("{policy:?}"), r.cycles_compute, r.balance);
     }
+
+    // The whole ablation ran on a single profile pass.
+    assert_eq!(engine.profiles_run(), 1, "workload must be profiled exactly once");
 }

@@ -2,6 +2,9 @@
 //! Maple-based configurations over the baselines, plus the paper-style mean
 //! (paper: ~50% Matraptor, ~60% Extensor).
 //!
+//! One [`SimEngine`] sweep: each dataset is profiled once, all
+//! (config × dataset) cells run concurrently.
+//!
 //! ```text
 //! cargo bench --bench fig9_energy
 //! MAPLE_BENCH_SCALE=1 cargo bench --bench fig9_energy    # full Table-I scale
@@ -9,10 +12,8 @@
 
 include!("harness.rs");
 
-use maple::config::AcceleratorConfig;
-use maple::coordinator::Policy;
-use maple::report::Fig9Row;
-use maple::sim::{profile_workload, simulate_workload};
+use maple::report::fig9_rows_from_sweep;
+use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
 use maple::sparse::suite;
 
 fn main() {
@@ -23,33 +24,13 @@ fn main() {
         "dataset", "matraptor %", "extensor %", "base uJ (mat)", "maple uJ (mat)"
     );
 
-    let rows: Vec<(Fig9Row, Fig9Row)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = suite::TABLE_I
-            .iter()
-            .map(|spec| {
-                scope.spawn(move || {
-                    let a = if scale <= 1 {
-                        spec.generate(7)
-                    } else {
-                        spec.generate_scaled(7, scale)
-                    };
-                    let w = profile_workload(&a, &a);
-                    let run = |c: &AcceleratorConfig| simulate_workload(c, &w, Policy::RoundRobin);
-                    let mb = run(&AcceleratorConfig::matraptor_baseline());
-                    let mm = run(&AcceleratorConfig::matraptor_maple());
-                    let eb = run(&AcceleratorConfig::extensor_baseline());
-                    let em = run(&AcceleratorConfig::extensor_maple());
-                    (
-                        Fig9Row::from_results(spec.abbrev, &mb, &mm),
-                        Fig9Row::from_results(spec.abbrev, &eb, &em),
-                    )
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
+    let engine = SimEngine::new();
+    let keys = suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, 7, scale)).collect();
+    let grid = engine.sweep(&SweepSpec::paper(keys)).expect("Table-I sweep");
+    let m_rows = fig9_rows_from_sweep(&grid, 0, 1, 0);
+    let e_rows = fig9_rows_from_sweep(&grid, 2, 3, 0);
 
-    for (m, e) in &rows {
+    for (m, e) in m_rows.iter().zip(&e_rows) {
         println!(
             "{:<8} {:>14.1} {:>14.1} | {:>14.1} {:>14.1}",
             m.dataset,
@@ -60,8 +41,9 @@ fn main() {
         );
     }
     let mean_m =
-        rows.iter().map(|(m, _)| m.energy_benefit_pct).sum::<f64>() / rows.len() as f64;
+        m_rows.iter().map(|m| m.energy_benefit_pct).sum::<f64>() / m_rows.len() as f64;
     let mean_e =
-        rows.iter().map(|(_, e)| e.energy_benefit_pct).sum::<f64>() / rows.len() as f64;
-    println!("\nmean energy benefit: Matraptor {mean_m:.1}% (paper ~50%), Extensor {mean_e:.1}% (paper ~60%)");
+        e_rows.iter().map(|e| e.energy_benefit_pct).sum::<f64>() / e_rows.len() as f64;
+    print!("\nmean energy benefit: Matraptor {mean_m:.1}% (paper ~50%), ");
+    println!("Extensor {mean_e:.1}% (paper ~60%)");
 }

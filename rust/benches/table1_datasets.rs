@@ -1,5 +1,6 @@
 //! Bench: regenerate **Table I** — synthesise every dataset, validate its
-//! statistics against the paper's columns, and measure generator throughput.
+//! statistics against the paper's columns, measure generator throughput,
+//! and profile the whole suite once through the [`SimEngine`] cache.
 //!
 //! ```text
 //! cargo bench --bench table1_datasets
@@ -9,6 +10,7 @@
 include!("harness.rs");
 
 use maple::report;
+use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
 use maple::sparse::{stats, suite};
 
 fn main() {
@@ -34,6 +36,41 @@ fn main() {
             ms
         );
     }
+
+    // Profile the whole suite once through the engine: fourteen cached
+    // workloads, profiled concurrently, then a Maple-vs-baseline cell per
+    // dataset from the same cache.
+    let engine = SimEngine::new();
+    let keys: Vec<WorkloadKey> =
+        suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, 7, scale)).collect();
+    let t0 = std::time::Instant::now();
+    let grid = engine
+        .sweep(&SweepSpec::paper(keys.clone()))
+        .expect("Table-I sweep");
+    let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("\n=== profiled workloads (SimEngine, scale 1/{scale}) ===");
+    println!(
+        "{:<20} {:>12} {:>10} {:>8} {:>14}",
+        "dataset", "products", "out nnz", "acc", "ext speedup %"
+    );
+    for (i, key) in keys.iter().enumerate() {
+        let w = engine.workload(key).expect("cached");
+        let (eb, em) = (grid.get(i, 2, 0), grid.get(i, 3, 0));
+        println!(
+            "{:<20} {:>12} {:>10} {:>8.2} {:>14.1}",
+            key.dataset,
+            w.total_products,
+            w.out_nnz,
+            w.accumulation_factor(),
+            em.speedup_pct(eb)
+        );
+    }
+    assert_eq!(engine.profiles_run() as usize, keys.len(), "one profile per dataset");
+    println!(
+        "{} cells over {} workloads in {sweep_ms:.0} ms (each dataset profiled once)",
+        grid.cell_count(),
+        keys.len()
+    );
 
     // Generator throughput micro-bench on the densest dataset.
     let spec = suite::by_name("fb").unwrap();

@@ -32,7 +32,7 @@ fn mean_hops(topology: Topology) -> f64 {
 /// Account all run-level flows for `cfg` into `c`.
 pub fn account_run_flows(cfg: &AcceleratorConfig, w: &Workload, c: &mut Counters) {
     let a_words = 2 * w.nnz_a + w.rows as u64 + 1;
-    let b_words = 2 * w.nnz_b + w.rows as u64 + 1;
+    let b_words = 2 * w.nnz_b + w.rows_b as u64 + 1;
     let c_words = 2 * w.out_nnz + w.rows as u64 + 1;
     let operand_delivery = 2 * w.total_products + 2 * w.nnz_a; // B + A streams to PEs
 

@@ -7,10 +7,11 @@ mod flows;
 
 pub use area::{accelerator_pe_area, fig8, pe_area, Fig8Row};
 
-use crate::config::{AcceleratorConfig, PeKind};
+use crate::config::AcceleratorConfig;
 use crate::coordinator::{partition, Policy};
 use crate::energy::EnergyBreakdown;
-use crate::pe::{ExtensorPe, MaplePe, MatraptorPe, PeModel, RowCost};
+use crate::pe::{registry, PeModel};
+use crate::sim::timeline::TwoStageTimeline;
 use crate::sim::{SimResult, Workload};
 use crate::trace::Counters;
 
@@ -30,17 +31,19 @@ impl Accelerator {
         &self.cfg
     }
 
-    /// Instantiate the configured PE cost model.
+    /// Instantiate the configured PE cost model via the open registry
+    /// ([`crate::pe::registry`]): new PEs plug in with one `register` call
+    /// plus a `cfg.pe.model` name, no change to this layer.
+    ///
+    /// Panics if the configuration names an unregistered model; use
+    /// [`Accelerator::try_pe_model`] to handle that as an error.
     pub fn pe_model(&self) -> Box<dyn PeModel> {
-        match (self.cfg.kind, self.cfg.pe.kind) {
-            (_, PeKind::Maple) => Box::new(MaplePe::from_config(&self.cfg)),
-            (crate::config::AcceleratorKind::Matraptor, PeKind::Baseline) => {
-                Box::new(MatraptorPe::from_config(&self.cfg))
-            }
-            (crate::config::AcceleratorKind::Extensor, PeKind::Baseline) => {
-                Box::new(ExtensorPe::from_config(&self.cfg))
-            }
-        }
+        self.try_pe_model().expect("configured PE model is registered")
+    }
+
+    /// Fallible counterpart of [`Accelerator::pe_model`].
+    pub fn try_pe_model(&self) -> Result<Box<dyn PeModel>, registry::RegistryError> {
+        registry::build(&self.cfg)
     }
 
     /// Execute a profiled workload: PE timelines + run-level flows + energy.
@@ -56,33 +59,15 @@ impl Accelerator {
         let mut counters = Counters::default();
         let mut max_pe_cycles = 0u64;
 
-        // Per-PE two-stage pipeline with queue-decoupled overlap: the
-        // front (multiply) and back (merge / POB / drain) stages run
-        // concurrently, buffered by the PE's queues, so the PE's makespan is
-        // the slower *aggregate* stage plus the first-row fill and last-row
-        // drain that cannot overlap anything.
+        // Per-PE two-stage pipeline with queue-decoupled overlap; the
+        // composition (fill + slower aggregate stage + drain) lives in
+        // [`crate::sim::timeline`].
         for rows in &part.assignments {
-            let mut sum_front = 0u64;
-            let mut sum_back = 0u64;
-            let mut first_front = 0u64;
-            let mut last_back = 0u64;
+            let mut tl = TwoStageTimeline::new();
             for &r in rows {
-                let RowCost { front, back } = pe.row_cost(&profiles[r as usize], &mut counters);
-                if sum_front == 0 {
-                    first_front = front;
-                }
-                sum_front += front;
-                sum_back += back;
-                last_back = back;
+                tl.push(pe.row_cost(&profiles[r as usize], &mut counters));
             }
-            let t = if sum_back >= sum_front {
-                // Back-stage (merge) bound: pipeline fills with the first
-                // front, then merge throughput dominates.
-                first_front + sum_back
-            } else {
-                sum_front + last_back
-            };
-            max_pe_cycles = max_pe_cycles.max(t);
+            max_pe_cycles = max_pe_cycles.max(tl.makespan());
         }
 
         // Run-level memory-hierarchy and interconnect flows.

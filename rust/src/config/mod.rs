@@ -31,6 +31,10 @@ pub enum PeKind {
 #[derive(Debug, Clone, PartialEq)]
 pub struct PeConfig {
     pub kind: PeKind,
+    /// Explicit PE cost-model name in [`crate::pe::registry`]. `None`
+    /// (the default, and all paper presets) selects by `(kind, pe.kind)`;
+    /// a registered plug-in PE is picked by setting its name here.
+    pub model: Option<String>,
     /// MAC units per PE (1 for baselines; "determined during the design
     /// phase" for Maple, paper §III).
     pub macs_per_pe: usize,
@@ -104,6 +108,7 @@ impl AcceleratorConfig {
             kind: AcceleratorKind::Matraptor,
             pe: PeConfig {
                 kind: PeKind::Baseline,
+                model: None,
                 macs_per_pe: 1,
                 arb_entries: 0,
                 brb_entries: 0,
@@ -130,6 +135,7 @@ impl AcceleratorConfig {
             kind: AcceleratorKind::Matraptor,
             pe: PeConfig {
                 kind: PeKind::Maple,
+                model: None,
                 macs_per_pe: 2,
                 arb_entries: 16,
                 brb_entries: 64,
@@ -156,6 +162,7 @@ impl AcceleratorConfig {
             kind: AcceleratorKind::Extensor,
             pe: PeConfig {
                 kind: PeKind::Baseline,
+                model: None,
                 macs_per_pe: 1,
                 arb_entries: 0,
                 brb_entries: 0,
@@ -183,6 +190,7 @@ impl AcceleratorConfig {
             kind: AcceleratorKind::Extensor,
             pe: PeConfig {
                 kind: PeKind::Maple,
+                model: None,
                 macs_per_pe: 16,
                 arb_entries: 32,
                 brb_entries: 256,

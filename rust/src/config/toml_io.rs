@@ -70,6 +70,19 @@ fn get_str(m: &BTreeMap<String, Value>, k: &'static str) -> Result<String, Confi
     }
 }
 
+/// Optional string key: absent → `Ok(None)`; present with a non-string
+/// value → a type error like every mandatory key.
+fn get_opt_str(
+    m: &BTreeMap<String, Value>,
+    k: &'static str,
+) -> Result<Option<String>, ConfigError> {
+    match m.get(k) {
+        Some(Value::Str(s)) => Ok(Some(s.clone())),
+        Some(v) => Err(ConfigError::BadValue(k, format!("{v:?}"))),
+        None => Ok(None),
+    }
+}
+
 fn get_usize(m: &BTreeMap<String, Value>, k: &'static str) -> Result<usize, ConfigError> {
     match m.get(k) {
         Some(Value::Int(i)) if *i >= 0 => Ok(*i as usize),
@@ -110,6 +123,9 @@ pub fn to_toml(c: &AcceleratorConfig) -> String {
     ));
     s.push_str("\n[pe]\n");
     s.push_str(&format!("kind = \"{pe_kind}\"\n"));
+    if let Some(model) = &c.pe.model {
+        s.push_str(&format!("model = \"{model}\"\n"));
+    }
     s.push_str(&format!("macs_per_pe = {}\n", c.pe.macs_per_pe));
     s.push_str(&format!("arb_entries = {}\n", c.pe.arb_entries));
     s.push_str(&format!("brb_entries = {}\n", c.pe.brb_entries));
@@ -161,6 +177,7 @@ pub fn from_toml(s: &str) -> Result<AcceleratorConfig, ConfigError> {
         kind,
         pe: PeConfig {
             kind: pe_kind,
+            model: get_opt_str(&m, "pe.model")?,
             macs_per_pe: get_usize(&m, "pe.macs_per_pe")?,
             arb_entries: get_usize(&m, "pe.arb_entries")?,
             brb_entries: get_usize(&m, "pe.brb_entries")?,
@@ -199,6 +216,22 @@ mod tests {
         assert_eq!(m["a"], Value::Int(1));
         assert_eq!(m["s.b"], Value::Str("x".into()));
         assert_eq!(m["s.c"], Value::Float(2.5));
+    }
+
+    #[test]
+    fn mistyped_pe_model_is_rejected() {
+        let mut s = to_toml(&AcceleratorConfig::extensor_maple());
+        s = s.replace("[pe]\n", "[pe]\nmodel = 123\n");
+        assert!(matches!(from_toml(&s), Err(ConfigError::BadValue("pe.model", _))));
+    }
+
+    #[test]
+    fn pe_model_override_round_trips() {
+        let mut c = AcceleratorConfig::extensor_maple();
+        c.pe.model = Some("custom-pe".into());
+        let s = to_toml(&c);
+        assert!(s.contains("model = \"custom-pe\""));
+        assert_eq!(from_toml(&s).unwrap(), c);
     }
 
     #[test]

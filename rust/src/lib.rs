@@ -15,23 +15,37 @@
 //! * **Layer 1 (python/compile/kernels/maple_pe.py)** — the Maple PE datapath
 //!   as a Pallas kernel, validated against a pure-jnp oracle.
 //!
-//! The [`runtime`] module loads the AOT artifacts via PJRT so the Rust hot
-//! path can execute the compiled datapath with **no Python at runtime**.
+//! The `runtime` module (behind the `runtime` cargo feature) loads the AOT
+//! artifacts via PJRT so the Rust hot path can execute the compiled datapath
+//! with **no Python at runtime**.
 //!
 //! ## Quickstart
+//!
+//! Everything runs through [`sim::SimEngine`]: it profiles each workload
+//! exactly once (cached by dataset/seed/scale) and fans sweep cells out
+//! across worker threads, returning a deterministic result grid.
 //!
 //! ```no_run
 //! use maple::prelude::*;
 //!
-//! // A Table-I-like synthetic workload.
-//! let a = maple::sparse::suite::by_name("wikiVote").unwrap().generate(7);
-//! // The paper's headline comparison: Maple-based vs baseline Extensor.
-//! let base = AcceleratorConfig::extensor_baseline();
-//! let mpl  = AcceleratorConfig::extensor_maple();
-//! let rb = maple::sim::simulate_spmspm(&base, &a, &a);
-//! let rm = maple::sim::simulate_spmspm(&mpl, &a, &a);
-//! println!("energy benefit: {:.1}%", 100.0 * (1.0 - rm.energy.total_pj() / rb.energy.total_pj()));
+//! let engine = SimEngine::new();
+//! // The paper's Fig.-9 sweep on one Table-I dataset: all four
+//! // configurations × wikiVote × round-robin routing.
+//! let grid = engine
+//!     .sweep(&SweepSpec::paper(vec![WorkloadKey::suite("wikiVote", 7, 16)]))
+//!     .unwrap();
+//! // Configs are in `paper_configs()` order; the headline comparison is
+//! // baseline Extensor (2) vs Maple-based Extensor (3).
+//! let (base, mpl) = (grid.get(0, 2, 0), grid.get(0, 3, 0));
+//! println!("energy benefit: {:.1}%", mpl.energy_benefit_pct(base));
+//! println!("speedup: {:.1}%", mpl.speedup_pct(base));
 //! ```
+//!
+//! One-off runs skip the spec: [`sim::SimEngine::simulate`] gives a single
+//! (config, dataset, policy) cell against the same cache, and the low-level
+//! [`sim::simulate_spmspm`] drives caller-built matrices directly. New PE
+//! micro-architectures plug in through [`pe::registry`] (see the [`pe`]
+//! module docs) — no accelerator-layer changes required.
 
 pub mod accel;
 pub mod area;
@@ -44,6 +58,7 @@ pub mod mem;
 pub mod noc;
 pub mod pe;
 pub mod report;
+#[cfg(feature = "runtime")]
 pub mod runtime;
 pub mod sim;
 pub mod sparse;
@@ -53,8 +68,11 @@ pub mod trace;
 pub mod prelude {
     pub use crate::accel::Accelerator;
     pub use crate::config::{AcceleratorConfig, AcceleratorKind, PeKind};
+    pub use crate::coordinator::Policy;
     pub use crate::energy::{EnergyBreakdown, TechModel};
     pub use crate::gustavson::spgemm_rowwise;
-    pub use crate::sim::{simulate_spmspm, SimResult};
+    pub use crate::sim::{
+        simulate_spmspm, SimEngine, SimResult, SweepResult, SweepSpec, WorkloadKey,
+    };
     pub use crate::sparse::{Coo, Csc, Csr};
 }

@@ -6,21 +6,27 @@
 //! maple datasets                     # Table I
 //! maple fig3                         # Fig. 3  (energy of ops at 45nm)
 //! maple fig8 --accel matraptor       # Fig. 8a (PE area comparison)
-//! maple fig8 --accel extensor        # Fig. 8b
+//! maple fig8 --accel extensor       # Fig. 8b
 //! maple fig9 --scale 16              # Fig. 9a+9b over all 14 datasets
 //! maple simulate --config matraptor-maple --dataset wv
 //! maple sweep --dataset wv --macs 1,2,4,8,16,32
 //! maple config --preset extensor-maple > my.toml
 //! ```
 //!
-//! Argument parsing is in-tree (the offline build has no CLI dependency;
-//! DESIGN.md §Dependencies).
+//! All simulation commands sit on [`maple::sim::SimEngine`]: each dataset
+//! is profiled once (cached by dataset/seed/scale) and sweep cells run
+//! concurrently on worker threads. Argument parsing is in-tree (the offline
+//! build has no CLI dependency; DESIGN.md §Dependencies).
 
 use maple::config::AcceleratorConfig;
 use maple::coordinator::Policy;
 use maple::report;
-use maple::sim::{profile_workload, simulate_workload};
+use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
 use maple::sparse::suite;
+
+/// Dependency-free CLI error type.
+type CliError = Box<dyn std::error::Error>;
+type CliResult<T = ()> = Result<T, CliError>;
 
 /// Minimal `--key value` / flag argument scanner.
 struct Args {
@@ -52,10 +58,10 @@ impl Args {
     }
 
     /// Parsed value of `--key` or a default.
-    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T> {
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> CliResult<T> {
         match self.opt(key) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("bad value for {key}: {v}")),
+            Some(v) => v.parse().map_err(|_| format!("bad value for {key}: {v}").into()),
         }
     }
 }
@@ -79,88 +85,97 @@ COMMANDS:
   validate [--artifacts DIR]
                            Load the AOT Pallas datapath via PJRT and verify
                            it against the software reference (needs
-                           `make artifacts`)
+                           `make artifacts` and `--features runtime`)
 ";
 
-fn parse_config(name: &str) -> anyhow::Result<AcceleratorConfig> {
+fn parse_config(name: &str) -> CliResult<AcceleratorConfig> {
     match name {
         "matraptor-baseline" => Ok(AcceleratorConfig::matraptor_baseline()),
         "matraptor-maple" => Ok(AcceleratorConfig::matraptor_maple()),
         "extensor-baseline" => Ok(AcceleratorConfig::extensor_baseline()),
         "extensor-maple" => Ok(AcceleratorConfig::extensor_maple()),
         path => {
-            let s = std::fs::read_to_string(path).map_err(|e| {
-                anyhow::anyhow!("config {path} is not a preset and not readable: {e}")
-            })?;
+            let s = std::fs::read_to_string(path)
+                .map_err(|e| format!("config {path} is not a preset and not readable: {e}"))?;
             Ok(AcceleratorConfig::from_toml(&s)?)
         }
     }
 }
 
-fn parse_policy(name: &str) -> anyhow::Result<Policy> {
+fn parse_policy(name: &str) -> CliResult<Policy> {
     match name {
         "round-robin" => Ok(Policy::RoundRobin),
         "chunked" => Ok(Policy::Chunked),
         "greedy" => Ok(Policy::GreedyBalance),
-        other => anyhow::bail!("unknown policy {other}"),
+        other => Err(format!("unknown policy {other}").into()),
     }
 }
 
-fn gen_dataset(name: &str, scale: usize, seed: u64) -> anyhow::Result<maple::sparse::Csr> {
-    let spec = suite::by_name(name).ok_or_else(|| anyhow::anyhow!("unknown dataset {name}"))?;
-    Ok(if scale <= 1 { spec.generate(seed) } else { spec.generate_scaled(seed, scale) })
-}
-
-/// Fig. 9 across datasets, one worker thread per dataset (leader/worker).
-fn fig9(scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> anyhow::Result<()> {
+/// Fig. 9 across datasets: one engine sweep — each dataset profiled once,
+/// all (config × dataset) cells in parallel.
+fn fig9(scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> CliResult {
     let names: Vec<&'static str> = match datasets {
         Some(list) => list
             .split(',')
             .map(|s| {
                 suite::by_name(s.trim())
                     .map(|d| d.abbrev)
-                    .ok_or_else(|| anyhow::anyhow!("unknown dataset {s}"))
+                    .ok_or_else(|| CliError::from(format!("unknown dataset {s}")))
             })
             .collect::<Result<_, _>>()?,
         None => suite::TABLE_I.iter().map(|d| d.abbrev).collect(),
     };
 
-    let results: Vec<(report::Fig9Row, report::Fig9Row)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = names
-            .iter()
-            .map(|&abbrev| {
-                scope.spawn(move || {
-                    let spec = suite::by_name(abbrev).unwrap();
-                    let a = if scale <= 1 {
-                        spec.generate(seed)
-                    } else {
-                        spec.generate_scaled(seed, scale)
-                    };
-                    let w = profile_workload(&a, &a);
-                    let run =
-                        |cfg: &AcceleratorConfig| simulate_workload(cfg, &w, Policy::RoundRobin);
-                    let mb = run(&AcceleratorConfig::matraptor_baseline());
-                    let mm = run(&AcceleratorConfig::matraptor_maple());
-                    let eb = run(&AcceleratorConfig::extensor_baseline());
-                    let em = run(&AcceleratorConfig::extensor_maple());
-                    (
-                        report::Fig9Row::from_results(abbrev, &mb, &mm),
-                        report::Fig9Row::from_results(abbrev, &eb, &em),
-                    )
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
+    let engine = SimEngine::new();
+    let keys = names.iter().map(|&n| WorkloadKey::suite(n, seed, scale)).collect();
+    let grid = engine.sweep(&SweepSpec::paper(keys))?;
 
-    let matraptor: Vec<_> = results.iter().map(|(m, _)| m.clone()).collect();
-    let extensor: Vec<_> = results.iter().map(|(_, e)| e.clone()).collect();
+    // `paper_configs()` order: matraptor base (0) / maple (1), extensor
+    // base (2) / maple (3).
+    let matraptor = report::fig9_rows_from_sweep(&grid, 0, 1, 0);
+    let extensor = report::fig9_rows_from_sweep(&grid, 2, 3, 0);
     println!("{}", report::fig9_report("Fig. 9 — Matraptor (Maple vs baseline)", &matraptor, !csv));
     println!("{}", report::fig9_report("Fig. 9 — Extensor (Maple vs baseline)", &extensor, !csv));
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+#[cfg(feature = "runtime")]
+fn validate(args: &Args) -> CliResult {
+    let dir = args
+        .opt("--artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(maple::runtime::artifacts_dir);
+    let client = xla::PjRtClient::cpu()?;
+    let dp = maple::runtime::MapleDatapath::load(&client, &dir)?;
+    let meta = dp.meta();
+    println!("loaded {} (kt={} nt={})", dir.join("maple_pe.hlo.txt").display(), meta.kt, meta.nt);
+    // Drive random tiles through the compiled kernel vs scalar math.
+    let mut rng = maple::sparse::SplitMix64::new(1234);
+    let mut max_err = 0f32;
+    const TILES: usize = 32;
+    for _ in 0..TILES {
+        let a: Vec<f32> = (0..meta.kt).map(|_| rng.value()).collect();
+        let b: Vec<f32> = (0..meta.kt * meta.nt).map(|_| rng.value()).collect();
+        let psb = dp.run_tile(&a, &b)?;
+        for n in 0..meta.nt {
+            let want: f32 = (0..meta.kt).map(|k| a[k] * b[k * meta.nt + n]).sum();
+            max_err = max_err.max((psb[n] - want).abs());
+        }
+    }
+    println!("{TILES} tiles executed via PJRT, max |err| vs reference = {max_err:.2e}");
+    if max_err >= 1e-4 {
+        return Err("compiled datapath diverges from reference".into());
+    }
+    println!("validate OK — artifacts are healthy");
+    Ok(())
+}
+
+#[cfg(not(feature = "runtime"))]
+fn validate(_args: &Args) -> CliResult {
+    Err("validate needs the PJRT runtime: rebuild with `cargo build --features runtime`".into())
+}
+
+fn main() -> CliResult {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first().cloned() else {
         eprint!("{USAGE}");
@@ -182,7 +197,7 @@ fn main() -> anyhow::Result<()> {
                 "extensor" => {
                     (AcceleratorConfig::extensor_baseline(), AcceleratorConfig::extensor_maple())
                 }
-                other => anyhow::bail!("unknown accelerator {other}"),
+                other => return Err(format!("unknown accelerator {other}").into()),
             };
             print!("{}", report::fig8_report(&b, &m, md));
         }
@@ -196,13 +211,15 @@ fn main() -> anyhow::Result<()> {
             let dataset = args.opt_or("--dataset", "wikiVote");
             let scale = args.parse_or("--scale", 1usize)?;
             let seed = args.parse_or("--seed", 7u64)?;
-            let a = gen_dataset(dataset, scale, seed)?;
-            let w = profile_workload(&a, &a);
-            let r = simulate_workload(&cfg, &w, parse_policy(args.opt_or("--policy", "round-robin"))?);
+            let engine = SimEngine::new();
+            let key = WorkloadKey::suite(dataset, seed, scale);
+            let w = engine.workload(&key)?;
+            let policy = parse_policy(args.opt_or("--policy", "round-robin"))?;
+            let r = engine.simulate(&cfg, &key, policy)?;
             println!("config            : {}", r.config);
             println!("dataset           : {dataset} (scale 1/{scale})");
-            println!("rows x cols       : {} x {}", a.rows(), a.cols());
-            println!("nnz(A)            : {}", a.nnz());
+            println!("rows x cols       : {} x {}", w.rows, w.cols);
+            println!("nnz(A)            : {}", w.nnz_a);
             println!("nnz(C)            : {}", r.out_nnz);
             println!("products          : {}", r.total_products);
             println!("cycles (compute)  : {}", r.cycles_compute);
@@ -222,17 +239,31 @@ fn main() -> anyhow::Result<()> {
             let dataset = args.opt_or("--dataset", "wikiVote");
             let scale = args.parse_or("--scale", 4usize)?;
             let seed = args.parse_or("--seed", 7u64)?;
-            let a = gen_dataset(dataset, scale, seed)?;
-            let w = profile_workload(&a, &a);
+            let macs: Vec<usize> = args
+                .opt_or("--macs", "1,2,4,8,16,32")
+                .split(',')
+                .map(|k| k.trim().parse().map_err(|_| format!("bad MAC count: {k}").into()))
+                .collect::<CliResult<_>>()?;
+            let configs: Vec<AcceleratorConfig> = macs
+                .iter()
+                .map(|&k| {
+                    let mut cfg = AcceleratorConfig::extensor_maple();
+                    cfg.pe.macs_per_pe = k;
+                    cfg.name = format!("extensor-maple-k{k}");
+                    cfg
+                })
+                .collect();
+            let engine = SimEngine::new();
+            let grid = engine.sweep(&SweepSpec {
+                configs: configs.clone(),
+                datasets: vec![WorkloadKey::suite(dataset, seed, scale)],
+                policies: vec![Policy::RoundRobin],
+            })?;
             let header = ["MACs/PE", "cycles", "speedup vs k=1", "energy uJ", "util %"];
             let mut rows = Vec::new();
             let mut base_cycles = 0u64;
-            for k in args.opt_or("--macs", "1,2,4,8,16,32").split(',') {
-                let k: usize = k.trim().parse()?;
-                let mut cfg = AcceleratorConfig::extensor_maple();
-                cfg.pe.macs_per_pe = k;
-                cfg.name = format!("extensor-maple-k{k}");
-                let r = simulate_workload(&cfg, &w, Policy::RoundRobin);
+            for (i, (&k, cfg)) in macs.iter().zip(&configs).enumerate() {
+                let r = grid.get(0, i, 0);
                 if base_cycles == 0 {
                     base_cycles = r.cycles_compute;
                 }
@@ -241,40 +272,20 @@ fn main() -> anyhow::Result<()> {
                     r.cycles_compute.to_string(),
                     format!("{:.2}x", base_cycles as f64 / r.cycles_compute as f64),
                     format!("{:.3}", r.energy.total_pj() / 1e6),
-                    format!("{:.1}", 100.0 * r.mac_utilisation(&cfg)),
+                    format!("{:.1}", 100.0 * r.mac_utilisation(cfg)),
                 ]);
             }
-            let out =
-                if md { report::markdown_table(&header, &rows) } else { report::csv(&header, &rows) };
+            let out = if md {
+                report::markdown_table(&header, &rows)
+            } else {
+                report::csv(&header, &rows)
+            };
             print!("{out}");
         }
-        "config" => print!("{}", parse_config(args.opt_or("--preset", "extensor-maple"))?.to_toml()),
-        "validate" => {
-            let dir = args
-                .opt("--artifacts")
-                .map(std::path::PathBuf::from)
-                .unwrap_or_else(maple::runtime::artifacts_dir);
-            let client = xla::PjRtClient::cpu()?;
-            let dp = maple::runtime::MapleDatapath::load(&client, &dir)?;
-            let meta = dp.meta();
-            println!("loaded {} (kt={} nt={})", dir.join("maple_pe.hlo.txt").display(), meta.kt, meta.nt);
-            // Drive random tiles through the compiled kernel vs scalar math.
-            let mut rng = maple::sparse::SplitMix64::new(1234);
-            let mut max_err = 0f32;
-            const TILES: usize = 32;
-            for _ in 0..TILES {
-                let a: Vec<f32> = (0..meta.kt).map(|_| rng.value()).collect();
-                let b: Vec<f32> = (0..meta.kt * meta.nt).map(|_| rng.value()).collect();
-                let psb = dp.run_tile(&a, &b)?;
-                for n in 0..meta.nt {
-                    let want: f32 = (0..meta.kt).map(|k| a[k] * b[k * meta.nt + n]).sum();
-                    max_err = max_err.max((psb[n] - want).abs());
-                }
-            }
-            println!("{TILES} tiles executed via PJRT, max |err| vs reference = {max_err:.2e}");
-            anyhow::ensure!(max_err < 1e-4, "compiled datapath diverges from reference");
-            println!("validate OK — artifacts are healthy");
+        "config" => {
+            print!("{}", parse_config(args.opt_or("--preset", "extensor-maple"))?.to_toml())
         }
+        "validate" => validate(&args)?,
         "--help" | "-h" | "help" => print!("{USAGE}"),
         other => {
             eprintln!("unknown command: {other}\n");

@@ -282,6 +282,7 @@ mod tests {
         // Force segmentation: tiny PSB, wide output row.
         let pe = MaplePe::new(&crate::config::PeConfig {
             kind: crate::config::PeKind::Maple,
+            model: None,
             macs_per_pe: 2,
             arb_entries: 8,
             brb_entries: 8,

@@ -16,10 +16,28 @@
 //! 2. a **row-cost model** (`row_cost`) that produces the identical action
 //!    counts plus a two-stage cycle cost from a row's work profile; the
 //!    full-scale simulator runs on this (O(rows), not O(products)).
+//!
+//! # Adding a fourth PE
+//!
+//! The accelerator layer dispatches through [`registry`], so a new PE never
+//! touches `accel/`:
+//!
+//! 1. add a `pe/<name>.rs` module with a type implementing [`PeModel`]
+//!    (account actions into [`crate::trace::Counters`], return a two-stage
+//!    [`RowCost`] per row);
+//! 2. register its constructor once at startup:
+//!    `pe::registry::register("my-pe", |cfg| Box::new(MyPe::from_config(cfg)))`;
+//! 3. select it from any configuration (preset or TOML) with
+//!    `cfg.pe.model = Some("my-pe".into())` / `model = "my-pe"` under
+//!    `[pe]` — every sweep, bench and CLI path picks it up from there.
+//!
+//! `tests/engine.rs` (`dummy_pe_registers_without_touching_accel`) is a
+//! working end-to-end example of exactly this recipe.
 
 mod extensor;
 mod maple;
 mod matraptor;
+pub mod registry;
 
 pub use extensor::ExtensorPe;
 pub use maple::MaplePe;

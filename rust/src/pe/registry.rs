@@ -1,0 +1,133 @@
+//! Open registry of processing-element cost models.
+//!
+//! The accelerator layer does not know the concrete PE types: it asks the
+//! registry to build whatever model the configuration names. The three
+//! in-tree PEs self-register at first use; an external PE plugs in with one
+//! [`register`] call and is then selectable from any [`AcceleratorConfig`]
+//! via `cfg.pe.model = Some("its-name".into())` — no change to `accel/`
+//! (see the module docs in [`crate::pe`] for the full recipe).
+
+use std::collections::BTreeMap;
+use std::sync::{OnceLock, RwLock};
+
+use super::{ExtensorPe, MaplePe, MatraptorPe, PeModel};
+use crate::config::{AcceleratorConfig, AcceleratorKind, PeKind};
+
+/// Builds one configured PE cost model. A plain `fn` pointer so entries are
+/// `Send + Sync` and registration needs no allocation tricks.
+pub type Constructor = fn(&AcceleratorConfig) -> Box<dyn PeModel>;
+
+/// Registry lookup / registration errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RegistryError {
+    #[error("unknown PE model {0:?} (registered: {1})")]
+    Unknown(String, String),
+    #[error("PE model {0:?} is already registered")]
+    Duplicate(String),
+}
+
+/// The registered built-in names, in `AcceleratorConfig::paper_configs`
+/// comparison order.
+pub const BUILTIN_MODELS: &[&str] = &["matraptor-baseline", "maple", "extensor-baseline"];
+
+fn registry() -> &'static RwLock<BTreeMap<String, Constructor>> {
+    static REG: OnceLock<RwLock<BTreeMap<String, Constructor>>> = OnceLock::new();
+    REG.get_or_init(|| {
+        let mut m: BTreeMap<String, Constructor> = BTreeMap::new();
+        m.insert("maple".into(), |cfg| Box::new(MaplePe::from_config(cfg)));
+        m.insert("matraptor-baseline".into(), |cfg| Box::new(MatraptorPe::from_config(cfg)));
+        m.insert("extensor-baseline".into(), |cfg| Box::new(ExtensorPe::from_config(cfg)));
+        RwLock::new(m)
+    })
+}
+
+/// Register a PE model constructor under `name`. Fails on a duplicate name
+/// so two plugins cannot silently shadow each other (or a built-in).
+pub fn register(name: &str, ctor: Constructor) -> Result<(), RegistryError> {
+    let mut reg = registry().write().expect("PE registry poisoned");
+    if reg.contains_key(name) {
+        return Err(RegistryError::Duplicate(name.to_string()));
+    }
+    reg.insert(name.to_string(), ctor);
+    Ok(())
+}
+
+/// Is `name` registered?
+pub fn contains(name: &str) -> bool {
+    registry().read().expect("PE registry poisoned").contains_key(name)
+}
+
+/// All registered model names, sorted.
+pub fn names() -> Vec<String> {
+    registry().read().expect("PE registry poisoned").keys().cloned().collect()
+}
+
+/// The registry key a configuration resolves to: the explicit
+/// `cfg.pe.model` override when present, else the built-in mapping from
+/// `(accelerator kind, PE kind)` the paper's four machines use.
+pub fn resolve_key(cfg: &AcceleratorConfig) -> String {
+    if let Some(name) = &cfg.pe.model {
+        return name.clone();
+    }
+    match (cfg.kind, cfg.pe.kind) {
+        (_, PeKind::Maple) => "maple",
+        (AcceleratorKind::Matraptor, PeKind::Baseline) => "matraptor-baseline",
+        (AcceleratorKind::Extensor, PeKind::Baseline) => "extensor-baseline",
+    }
+    .to_string()
+}
+
+/// Build the PE cost model `cfg` names.
+pub fn build(cfg: &AcceleratorConfig) -> Result<Box<dyn PeModel>, RegistryError> {
+    let key = resolve_key(cfg);
+    let reg = registry().read().expect("PE registry poisoned");
+    match reg.get(&key) {
+        Some(ctor) => Ok(ctor(cfg)),
+        None => {
+            let known = reg.keys().cloned().collect::<Vec<_>>().join(", ");
+            Err(RegistryError::Unknown(key, known))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_registered() {
+        for name in BUILTIN_MODELS {
+            assert!(contains(name), "{name} missing");
+        }
+    }
+
+    #[test]
+    fn paper_configs_resolve_to_expected_models() {
+        let expect = ["matraptor-baseline", "maple", "extensor-baseline", "maple"];
+        for (cfg, want) in AcceleratorConfig::paper_configs().iter().zip(expect) {
+            assert_eq!(resolve_key(cfg), want, "{}", cfg.name);
+            assert_eq!(build(cfg).unwrap().name(), want, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_a_clean_error() {
+        let mut cfg = AcceleratorConfig::extensor_maple();
+        cfg.pe.model = Some("no-such-pe".into());
+        match build(&cfg) {
+            Err(RegistryError::Unknown(name, known)) => {
+                assert_eq!(name, "no-such-pe");
+                assert!(known.contains("maple"));
+            }
+            other => panic!("expected Unknown, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        assert!(matches!(
+            register("maple", |cfg| Box::new(MaplePe::from_config(cfg))),
+            Err(RegistryError::Duplicate(_))
+        ));
+    }
+}

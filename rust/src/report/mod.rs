@@ -4,7 +4,7 @@
 use crate::accel::fig8;
 use crate::config::AcceleratorConfig;
 use crate::energy::TechModel;
-use crate::sim::SimResult;
+use crate::sim::{SimResult, SweepResult};
 use crate::sparse::suite::TABLE_I;
 
 /// Render a markdown table.
@@ -113,6 +113,26 @@ impl Fig9Row {
             maple_cycles: maple.cycles_compute,
         }
     }
+}
+
+/// Fig. 9 rows for one (baseline, maple) config pair out of a sweep grid:
+/// one row per dataset, labelled with the dataset key's name, all at the
+/// given policy index.
+pub fn fig9_rows_from_sweep(
+    sweep: &SweepResult,
+    baseline: usize,
+    maple: usize,
+    policy: usize,
+) -> Vec<Fig9Row> {
+    (0..sweep.datasets.len())
+        .map(|d| {
+            Fig9Row::from_results(
+                &sweep.datasets[d].dataset,
+                sweep.get(d, baseline, policy),
+                sweep.get(d, maple, policy),
+            )
+        })
+        .collect()
 }
 
 /// Fig. 9 report over a set of dataset rows, with the paper-style mean.

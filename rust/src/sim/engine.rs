@@ -1,0 +1,482 @@
+//! The simulation engine: cached profiling + parallel sweep fan-out.
+//!
+//! The paper's evaluation is a *sweep* — datasets × configurations ×
+//! policies — and the profile pass is the expensive part (an exact
+//! functional execution of `C = A × B`). [`SimEngine`] profiles each
+//! workload **exactly once**, caches it keyed by (dataset, seed, scale),
+//! and fans the sweep cells out across scoped worker threads; every caller
+//! (CLI, benches, examples) sits on the same engine instead of hand-rolling
+//! its own thread scope.
+//!
+//! Determinism: a [`SweepResult`] is a pure function of the [`SweepSpec`] —
+//! cell results land in a fixed (dataset, config, policy)-major grid no
+//! matter how many worker threads ran, and the profile pass uses a
+//! dedicated `profile_threads` knob (default 1, i.e. bit-exact with the
+//! serial pass) that is independent of the fan-out width.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::AcceleratorConfig;
+use crate::coordinator::Policy;
+use crate::sim::{profile_workload_parallel, simulate_workload, SimResult, Workload};
+use crate::sparse::{suite, Csr};
+
+/// Engine errors.
+#[derive(Debug, thiserror::Error)]
+pub enum EngineError {
+    #[error("unknown dataset {0:?} (use a Table-I name or abbreviation)")]
+    UnknownDataset(String),
+    #[error("empty sweep dimension: {0}")]
+    EmptySweep(&'static str),
+    #[error(transparent)]
+    Pe(#[from] crate::pe::registry::RegistryError),
+}
+
+/// Cache key for one profiled workload: a Table-I dataset (by name or
+/// abbreviation) at a given seed and down-scale factor.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct WorkloadKey {
+    pub dataset: String,
+    pub seed: u64,
+    /// Down-scale divisor; `1` = full Table-I size.
+    pub scale: usize,
+}
+
+impl WorkloadKey {
+    /// Key for a Table-I dataset (scale is clamped to ≥ 1).
+    pub fn suite(dataset: impl Into<String>, seed: u64, scale: usize) -> Self {
+        Self { dataset: dataset.into(), seed, scale: scale.max(1) }
+    }
+}
+
+/// One sweep: the full cross product `datasets × configs × policies`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepSpec {
+    pub configs: Vec<AcceleratorConfig>,
+    pub datasets: Vec<WorkloadKey>,
+    pub policies: Vec<Policy>,
+}
+
+impl SweepSpec {
+    /// The paper's Fig.-9 sweep: all four configurations, round-robin
+    /// routing, over the given datasets.
+    pub fn paper(datasets: Vec<WorkloadKey>) -> Self {
+        Self {
+            configs: AcceleratorConfig::paper_configs(),
+            datasets,
+            policies: vec![Policy::RoundRobin],
+        }
+    }
+}
+
+/// The deterministic result grid of one sweep, dataset-major:
+/// `cells[(d × |configs| + c) × |policies| + p]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepResult {
+    pub datasets: Vec<WorkloadKey>,
+    /// Configuration names, in spec order.
+    pub configs: Vec<String>,
+    pub policies: Vec<Policy>,
+    cells: Vec<SimResult>,
+}
+
+impl SweepResult {
+    /// The cell for (dataset, config, policy) spec indices.
+    pub fn get(&self, dataset: usize, config: usize, policy: usize) -> &SimResult {
+        assert!(dataset < self.datasets.len(), "dataset index {dataset} out of range");
+        assert!(config < self.configs.len(), "config index {config} out of range");
+        assert!(policy < self.policies.len(), "policy index {policy} out of range");
+        &self.cells[(dataset * self.configs.len() + config) * self.policies.len() + policy]
+    }
+
+    /// Total number of cells.
+    pub fn cell_count(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// All cells with their (dataset, config, policy) indices, grid order.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize, &SimResult)> {
+        let (nc, np) = (self.configs.len(), self.policies.len());
+        self.cells.iter().enumerate().map(move |(i, r)| {
+            let (d, rem) = (i / (nc * np), i % (nc * np));
+            (d, rem / np, rem % np, r)
+        })
+    }
+}
+
+/// One cache slot: the per-key mutex serialises profiling of *that* key
+/// only, so concurrent misses on the same workload profile it once while
+/// different workloads still profile in parallel.
+type WorkloadSlot = Arc<Mutex<Option<Arc<Workload>>>>;
+
+/// The reusable simulation engine. Cheap to create; share one per process
+/// (or per evaluation) so the workload cache amortises across sweeps.
+pub struct SimEngine {
+    /// Sweep-cell fan-out width.
+    threads: usize,
+    /// Chunk count inside the profile pass. Kept separate from `threads`
+    /// so results are bit-identical across fan-out widths; the default of 1
+    /// reproduces the serial profile pass exactly (checksum included).
+    profile_threads: usize,
+    cache: Mutex<HashMap<WorkloadKey, WorkloadSlot>>,
+    profiles_run: AtomicU64,
+}
+
+impl Default for SimEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SimEngine {
+    /// Engine with one worker per available core and serial profiling.
+    pub fn new() -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+        Self {
+            threads,
+            profile_threads: 1,
+            cache: Mutex::new(HashMap::new()),
+            profiles_run: AtomicU64::new(0),
+        }
+    }
+
+    /// Override the sweep fan-out width (clamped to ≥ 1). Results are
+    /// identical for any width — only wall-clock changes.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Override the profile-pass chunk count. Any fixed value is
+    /// deterministic run-to-run; values > 1 reassociate the f64 checksum
+    /// across chunk boundaries (cycle/energy results are unaffected —
+    /// the per-row profiles are exact integers).
+    pub fn with_profile_threads(mut self, profile_threads: usize) -> Self {
+        self.profile_threads = profile_threads.max(1);
+        self
+    }
+
+    /// How many profile passes this engine has actually executed (cache
+    /// misses); hits do not increment.
+    pub fn profiles_run(&self) -> u64 {
+        self.profiles_run.load(Ordering::Relaxed)
+    }
+
+    /// Number of cache slots (profiled or currently being profiled).
+    pub fn cached_workloads(&self) -> usize {
+        self.cache.lock().expect("engine cache poisoned").len()
+    }
+
+    /// The slot for `key`, reserving it on first sight.
+    fn slot(&self, key: &WorkloadKey) -> WorkloadSlot {
+        let mut cache = self.cache.lock().expect("engine cache poisoned");
+        Arc::clone(cache.entry(key.clone()).or_default())
+    }
+
+    /// A completed cache entry under exactly `key`, waiting out an
+    /// in-flight profile of the same key if there is one.
+    fn get_cached(&self, key: &WorkloadKey) -> Option<Arc<Workload>> {
+        let slot = {
+            let cache = self.cache.lock().expect("engine cache poisoned");
+            Arc::clone(cache.get(key)?)
+        };
+        let filled = slot.lock().expect("workload slot poisoned");
+        filled.as_ref().map(Arc::clone)
+    }
+
+    /// The profiled workload for `key`, from cache or freshly profiled.
+    ///
+    /// Suite keys are canonicalised (name/abbreviation/case aliases and
+    /// `scale ∈ {0, 1}` collapse to one entry), and concurrent misses on
+    /// the same key block on its slot instead of profiling twice — the
+    /// profile-once guarantee holds for a shared engine.
+    pub fn workload(&self, key: &WorkloadKey) -> Result<Arc<Workload>, EngineError> {
+        // Fast path, also covering the caller-named keys registered via
+        // [`SimEngine::workload_from_matrices`].
+        if let Some(w) = self.get_cached(key) {
+            return Ok(w);
+        }
+        let spec = suite::by_name(&key.dataset)
+            .ok_or_else(|| EngineError::UnknownDataset(key.dataset.clone()))?;
+        let canonical = WorkloadKey {
+            dataset: spec.abbrev.to_string(),
+            seed: key.seed,
+            scale: key.scale.max(1),
+        };
+        let slot = self.slot(&canonical);
+        let mut filled = slot.lock().expect("workload slot poisoned");
+        if let Some(w) = &*filled {
+            return Ok(Arc::clone(w));
+        }
+        let a = if canonical.scale <= 1 {
+            spec.generate(canonical.seed)
+        } else {
+            spec.generate_scaled(canonical.seed, canonical.scale)
+        };
+        let w = Arc::new(profile_workload_parallel(&a, &a, self.profile_threads));
+        self.profiles_run.fetch_add(1, Ordering::Relaxed);
+        *filled = Some(Arc::clone(&w));
+        Ok(w)
+    }
+
+    /// Profile a caller-supplied `C = A × B` (rectangular allowed) and
+    /// cache it under `key` for subsequent [`SimEngine::simulate`] /
+    /// [`SimEngine::workload`] calls with the same key.
+    pub fn workload_from_matrices(&self, key: WorkloadKey, a: &Csr, b: &Csr) -> Arc<Workload> {
+        let slot = self.slot(&key);
+        let mut filled = slot.lock().expect("workload slot poisoned");
+        if let Some(w) = &*filled {
+            return Arc::clone(w);
+        }
+        let w = Arc::new(profile_workload_parallel(a, b, self.profile_threads));
+        self.profiles_run.fetch_add(1, Ordering::Relaxed);
+        *filled = Some(Arc::clone(&w));
+        w
+    }
+
+    /// One sweep cell without building a [`SweepSpec`] — profile-cached.
+    pub fn simulate(
+        &self,
+        cfg: &AcceleratorConfig,
+        key: &WorkloadKey,
+        policy: Policy,
+    ) -> Result<SimResult, EngineError> {
+        crate::pe::registry::build(cfg)?; // clean error before any profiling
+        Ok(simulate_workload(cfg, &self.workload(key)?, policy))
+    }
+
+    /// Run the full `datasets × configs × policies` grid. Each distinct
+    /// dataset is profiled exactly once (cache-wide, not just per sweep);
+    /// cells then run concurrently on `threads` scoped workers.
+    pub fn sweep(&self, spec: &SweepSpec) -> Result<SweepResult, EngineError> {
+        if spec.configs.is_empty() {
+            return Err(EngineError::EmptySweep("configs"));
+        }
+        if spec.datasets.is_empty() {
+            return Err(EngineError::EmptySweep("datasets"));
+        }
+        if spec.policies.is_empty() {
+            return Err(EngineError::EmptySweep("policies"));
+        }
+        // Validate every config's PE model up front: a typo'd `pe.model`
+        // must be a clean error here, not a panic inside a worker thread.
+        for cfg in &spec.configs {
+            crate::pe::registry::build(cfg)?;
+        }
+
+        // Phase 1 — profile distinct datasets, one worker each (bounded by
+        // the fan-out width). Dedup keeps the first occurrence's order.
+        let mut unique: Vec<&WorkloadKey> = Vec::new();
+        for k in &spec.datasets {
+            if !unique.contains(&k) {
+                unique.push(k);
+            }
+        }
+        let profile_workers = self.threads.clamp(1, unique.len());
+        let next = AtomicUsize::new(0);
+        let profile_errors: Vec<EngineError> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..profile_workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut errs = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= unique.len() {
+                                break;
+                            }
+                            if let Err(e) = self.workload(unique[i]) {
+                                errs.push(e);
+                            }
+                        }
+                        errs
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("profile worker panicked"))
+                .collect()
+        });
+        if let Some(e) = profile_errors.into_iter().next() {
+            return Err(e);
+        }
+
+        // Phase 2 — every cell, work-stealing over a shared index counter.
+        // All workloads are cache hits now.
+        let workloads: Vec<Arc<Workload>> =
+            spec.datasets.iter().map(|k| self.workload(k)).collect::<Result<_, _>>()?;
+        let (nc, np) = (spec.configs.len(), spec.policies.len());
+        let total = spec.datasets.len() * nc * np;
+        let next = AtomicUsize::new(0);
+        let cell_workers = self.threads.clamp(1, total);
+        let parts: Vec<Vec<(usize, SimResult)>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cell_workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut out = Vec::new();
+                        loop {
+                            let idx = next.fetch_add(1, Ordering::Relaxed);
+                            if idx >= total {
+                                break;
+                            }
+                            let (d, rem) = (idx / (nc * np), idx % (nc * np));
+                            let (c, p) = (rem / np, rem % np);
+                            out.push((
+                                idx,
+                                simulate_workload(
+                                    &spec.configs[c],
+                                    &workloads[d],
+                                    spec.policies[p],
+                                ),
+                            ));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
+        });
+
+        let mut cells: Vec<Option<SimResult>> = vec![None; total];
+        for (idx, r) in parts.into_iter().flatten() {
+            cells[idx] = Some(r);
+        }
+        Ok(SweepResult {
+            datasets: spec.datasets.clone(),
+            configs: spec.configs.iter().map(|c| c.name.clone()).collect(),
+            policies: spec.policies.clone(),
+            cells: cells.into_iter().map(|c| c.expect("sweep cell computed")).collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_key() -> WorkloadKey {
+        WorkloadKey::suite("wv", 7, 64)
+    }
+
+    #[test]
+    fn workload_is_profiled_once_and_cached() {
+        let engine = SimEngine::new();
+        let w1 = engine.workload(&small_key()).unwrap();
+        let w2 = engine.workload(&small_key()).unwrap();
+        assert!(Arc::ptr_eq(&w1, &w2));
+        assert_eq!(engine.profiles_run(), 1);
+        assert_eq!(engine.cached_workloads(), 1);
+    }
+
+    #[test]
+    fn dataset_aliases_share_one_profile() {
+        // Suite name, abbreviation, and case variants canonicalise to the
+        // same cache entry; scale 0 and 1 both mean "full size".
+        let engine = SimEngine::new();
+        let w1 = engine.workload(&WorkloadKey::suite("wikiVote", 7, 64)).unwrap();
+        let w2 = engine.workload(&WorkloadKey::suite("wv", 7, 64)).unwrap();
+        let w3 = engine.workload(&WorkloadKey::suite("WV", 7, 64)).unwrap();
+        assert!(Arc::ptr_eq(&w1, &w2) && Arc::ptr_eq(&w2, &w3));
+        let f0 = engine.workload(&WorkloadKey { dataset: "fb".into(), seed: 7, scale: 0 }).unwrap();
+        let f1 = engine.workload(&WorkloadKey::suite("facebook", 7, 1)).unwrap();
+        assert!(Arc::ptr_eq(&f0, &f1));
+        assert_eq!(engine.profiles_run(), 2);
+    }
+
+    #[test]
+    fn concurrent_misses_profile_once() {
+        let engine = SimEngine::new();
+        let key = small_key();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    engine.workload(&key).unwrap();
+                });
+            }
+        });
+        assert_eq!(engine.profiles_run(), 1);
+        assert_eq!(engine.cached_workloads(), 1);
+    }
+
+    #[test]
+    fn unknown_dataset_is_an_error() {
+        let engine = SimEngine::new();
+        assert!(matches!(
+            engine.workload(&WorkloadKey::suite("nope", 7, 1)),
+            Err(EngineError::UnknownDataset(_))
+        ));
+    }
+
+    #[test]
+    fn sweep_grid_shape_and_profile_reuse() {
+        let engine = SimEngine::new();
+        let spec = SweepSpec {
+            configs: AcceleratorConfig::paper_configs(),
+            datasets: vec![small_key(), WorkloadKey::suite("fb", 7, 64)],
+            policies: vec![Policy::RoundRobin, Policy::GreedyBalance],
+        };
+        let grid = engine.sweep(&spec).unwrap();
+        assert_eq!(grid.cell_count(), 2 * 4 * 2);
+        // One profile per distinct dataset, not per cell.
+        assert_eq!(engine.profiles_run(), 2);
+        // Grid indexing round-trips through iter().
+        for (d, c, p, r) in grid.iter() {
+            assert_eq!(grid.get(d, c, p), r);
+        }
+        // Cells match direct simulation of the cached workload.
+        let w = engine.workload(&small_key()).unwrap();
+        let direct = simulate_workload(&spec.configs[2], &w, Policy::GreedyBalance);
+        assert_eq!(grid.get(0, 2, 1), &direct);
+    }
+
+    #[test]
+    fn sweep_matches_serial_reference_path() {
+        // The engine must reproduce the pre-engine serial path exactly:
+        // profile_workload + simulate_workload per cell.
+        let engine = SimEngine::new();
+        let key = small_key();
+        let grid = engine.sweep(&SweepSpec::paper(vec![key.clone()])).unwrap();
+        let spec = suite::by_name("wv").unwrap();
+        let a = spec.generate_scaled(7, 64);
+        let w = crate::sim::profile_workload(&a, &a);
+        for (ci, cfg) in AcceleratorConfig::paper_configs().iter().enumerate() {
+            let reference = simulate_workload(cfg, &w, Policy::RoundRobin);
+            assert_eq!(grid.get(0, ci, 0), &reference, "{}", cfg.name);
+        }
+    }
+
+    #[test]
+    fn unregistered_pe_model_fails_before_any_work() {
+        let engine = SimEngine::new();
+        let mut cfg = AcceleratorConfig::extensor_maple();
+        cfg.pe.model = Some("no-such-pe".into());
+        let r = engine.simulate(&cfg, &small_key(), Policy::RoundRobin);
+        assert!(matches!(r, Err(EngineError::Pe(_))), "{r:?}");
+        let spec = SweepSpec {
+            configs: vec![cfg],
+            datasets: vec![small_key()],
+            policies: vec![Policy::RoundRobin],
+        };
+        assert!(matches!(engine.sweep(&spec), Err(EngineError::Pe(_))));
+        // The error fired before any profiling happened.
+        assert_eq!(engine.profiles_run(), 0);
+    }
+
+    #[test]
+    fn empty_sweep_dimensions_are_rejected() {
+        let engine = SimEngine::new();
+        let ok = SweepSpec::paper(vec![small_key()]);
+        for (spec, dim) in [
+            (SweepSpec { configs: vec![], ..ok.clone() }, "configs"),
+            (SweepSpec { datasets: vec![], ..ok.clone() }, "datasets"),
+            (SweepSpec { policies: vec![], ..ok }, "policies"),
+        ] {
+            match engine.sweep(&spec) {
+                Err(EngineError::EmptySweep(d)) => assert_eq!(d, dim),
+                other => panic!("expected EmptySweep({dim}), got {other:?}"),
+            }
+        }
+    }
+}

@@ -4,14 +4,21 @@
 //! Pipeline: [`profile_workload`] performs the exact functional execution
 //! (once per workload — it is shared across the four configurations being
 //! compared), then [`crate::accel::Accelerator::run`] replays the per-row
-//! work profiles through the configured PE cost models, the coordinator's
-//! partition, the run-level memory/NoC flows, and the energy aggregation.
+//! work profiles through the configured PE cost models ([`crate::pe::registry`]),
+//! the coordinator's partition, the [`timeline`] composition, the run-level
+//! memory/NoC flows, and the energy aggregation. Sweeps — many (config,
+//! dataset, policy) cells — run through [`engine::SimEngine`], which caches
+//! profiles and fans cells out across worker threads.
 
 pub mod des;
+pub mod engine;
 mod profile;
+pub mod timeline;
 
 pub use des::{simulate_des, DesResult};
+pub use engine::{EngineError, SimEngine, SweepResult, SweepSpec, WorkloadKey};
 pub use profile::{profile_workload, profile_workload_parallel, Workload};
+pub use timeline::TwoStageTimeline;
 
 use crate::accel::Accelerator;
 use crate::config::AcceleratorConfig;
@@ -21,7 +28,9 @@ use crate::sparse::Csr;
 use crate::trace::Counters;
 
 /// The result of simulating one workload on one accelerator configuration.
-#[derive(Debug, Clone)]
+/// `PartialEq` compares every field bit-for-bit — the determinism contract
+/// [`engine::SimEngine`] tests lean on.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimResult {
     /// Configuration name (e.g. `matraptor-maple`).
     pub config: String,
@@ -143,7 +152,8 @@ mod tests {
     #[test]
     fn dram_bound_is_config_independent() {
         let w = workload();
-        let r1 = simulate_workload(&AcceleratorConfig::matraptor_baseline(), &w, Policy::RoundRobin);
+        let r1 =
+            simulate_workload(&AcceleratorConfig::matraptor_baseline(), &w, Policy::RoundRobin);
         let r2 = simulate_workload(&AcceleratorConfig::matraptor_maple(), &w, Policy::RoundRobin);
         assert_eq!(r1.cycles_dram_bound, r2.cycles_dram_bound);
     }

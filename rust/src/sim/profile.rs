@@ -18,6 +18,9 @@ pub struct Workload {
     pub rows: usize,
     /// Output columns (= cols of B).
     pub cols: usize,
+    /// Rows of B (= cols of A, the contraction dimension). Needed to size
+    /// B's `row_ptr` stream for rectangular `A(m×k) × B(k×n)`.
+    pub rows_b: usize,
     pub nnz_a: u64,
     pub nnz_b: u64,
     /// nnz of the result C.
@@ -47,7 +50,7 @@ impl Workload {
     /// (see DESIGN.md §Modeling).
     pub fn compulsory_dram_words(&self) -> u64 {
         let a = 2 * self.nnz_a + self.rows as u64 + 1;
-        let b = 2 * self.nnz_b + self.rows as u64 + 1;
+        let b = 2 * self.nnz_b + self.rows_b as u64 + 1;
         let c = 2 * self.out_nnz + self.rows as u64 + 1;
         a + b + c
     }
@@ -85,6 +88,7 @@ pub fn profile_workload_parallel(a: &Csr, b: &Csr, threads: usize) -> Workload {
     Workload {
         rows: a.rows(),
         cols: b.cols(),
+        rows_b: b.rows(),
         nnz_a: a.nnz() as u64,
         nnz_b: b.nnz() as u64,
         out_nnz,
@@ -101,6 +105,7 @@ pub fn profile_workload(a: &Csr, b: &Csr) -> Workload {
     Workload {
         rows: a.rows(),
         cols: b.cols(),
+        rows_b: b.rows(),
         nnz_a: a.nnz() as u64,
         nnz_b: b.nnz() as u64,
         out_nnz,
@@ -222,6 +227,23 @@ mod tests {
                 "threads={threads}"
             );
         }
+    }
+
+    #[test]
+    fn rectangular_workload_dimensions_and_dram_words() {
+        // A(30×50) × B(50×20): B's row_ptr stream is 51 words, not 31.
+        let a = generate(30, 50, 200, Profile::Uniform, 5);
+        let b = generate(50, 20, 180, Profile::Uniform, 9);
+        let w = profile_workload(&a, &b);
+        assert_eq!(w.rows, 30);
+        assert_eq!(w.cols, 20);
+        assert_eq!(w.rows_b, 50);
+        let expect = (2 * w.nnz_a + 31) + (2 * w.nnz_b + 51) + (2 * w.out_nnz + 31);
+        assert_eq!(w.compulsory_dram_words(), expect);
+        // And the functional numbers agree with the reference SpGEMM.
+        let c = spgemm_rowwise(&a, &b);
+        assert_eq!(w.out_nnz, c.nnz() as u64);
+        assert_eq!(w.total_products, multiply_count(&a, &b));
     }
 
     #[test]

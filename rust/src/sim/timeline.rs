@@ -1,0 +1,186 @@
+//! Two-stage PE timeline composition.
+//!
+//! Every PE in the analytic model is a queue-decoupled two-stage pipeline:
+//! the *front* (multiply) stage and the *back* (merge / POB round-trip /
+//! PSB drain) stage of consecutive rows overlap, bounded by the fill of the
+//! first front and the drain of the last back — nothing can hide those.
+//! The makespan of a row sequence is therefore
+//!
+//! ```text
+//! t = first_front + Σ back     when the back stage aggregates slower
+//! t = Σ front + last_back      when the front stage dominates
+//! ```
+//!
+//! This module owns that composition (it used to live inline in
+//! [`crate::accel::Accelerator::run`]); the analytic model and any future
+//! engine mode share it, and [`crate::sim::des`] cross-checks it: the
+//! event-driven pipeline with explicit buffering must land at or above this
+//! bound (`des_brackets_analytic_model`). The unit tests here additionally
+//! pin it against an exact infinite-buffer pipeline recurrence.
+
+use crate::pe::RowCost;
+
+/// Accumulates one PE's row costs and reports the pipelined makespan.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TwoStageTimeline {
+    sum_front: u64,
+    sum_back: u64,
+    first_front: u64,
+    last_back: u64,
+    rows: u64,
+}
+
+impl TwoStageTimeline {
+    /// An empty timeline (makespan 0).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account one row. The first pushed row pins `first_front` — decided
+    /// by an explicit row counter, not by `sum_front == 0`, so a leading
+    /// row with a zero-cycle front (an empty output row) is still the one
+    /// that fills the pipeline.
+    pub fn push(&mut self, cost: RowCost) {
+        if self.rows == 0 {
+            self.first_front = cost.front;
+        }
+        self.rows += 1;
+        self.sum_front += cost.front;
+        self.sum_back += cost.back;
+        self.last_back = cost.back;
+    }
+
+    /// Compose a whole row-cost sequence.
+    pub fn from_costs<I: IntoIterator<Item = RowCost>>(costs: I) -> Self {
+        let mut tl = Self::new();
+        for c in costs {
+            tl.push(c);
+        }
+        tl
+    }
+
+    /// Rows accounted so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// The pipelined makespan of the rows pushed so far.
+    pub fn makespan(&self) -> u64 {
+        if self.sum_back >= self.sum_front {
+            // Back-stage (merge) bound: pipeline fills with the first
+            // front, then merge throughput dominates.
+            self.first_front + self.sum_back
+        } else {
+            self.sum_front + self.last_back
+        }
+    }
+
+    /// Fully-serialised upper bound (no overlap between stages).
+    pub fn serial_cycles(&self) -> u64 {
+        self.sum_front + self.sum_back
+    }
+
+    /// Single-stage lower bound: the slower aggregate stage alone.
+    pub fn stage_bound(&self) -> u64 {
+        self.sum_front.max(self.sum_back)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn costs(pairs: &[(u64, u64)]) -> Vec<RowCost> {
+        pairs.iter().map(|&(front, back)| RowCost { front, back }).collect()
+    }
+
+    /// Exact makespan of an infinite-buffer two-stage pipeline — the same
+    /// machine `sim::des` simulates event-by-event, as a direct recurrence:
+    /// a back stage starts when both its own front and the previous back
+    /// have finished.
+    fn exact_pipeline(seq: &[RowCost]) -> u64 {
+        let (mut front_done, mut back_done) = (0u64, 0u64);
+        for c in seq {
+            front_done += c.front;
+            back_done = back_done.max(front_done) + c.back;
+        }
+        back_done
+    }
+
+    #[test]
+    fn empty_timeline_is_zero() {
+        assert_eq!(TwoStageTimeline::new().makespan(), 0);
+    }
+
+    #[test]
+    fn single_row_is_serial() {
+        let tl = TwoStageTimeline::from_costs(costs(&[(5, 3)]));
+        assert_eq!(tl.makespan(), 8);
+        assert_eq!(tl.serial_cycles(), 8);
+    }
+
+    #[test]
+    fn back_bound_fills_once_then_streams() {
+        // Uniform back-heavy rows: t = first_front + Σ back, exactly the
+        // infinite-buffer pipeline.
+        let seq = costs(&[(2, 10), (2, 10), (2, 10), (2, 10)]);
+        let tl = TwoStageTimeline::from_costs(seq.clone());
+        assert_eq!(tl.makespan(), 2 + 40);
+        assert_eq!(tl.makespan(), exact_pipeline(&seq));
+    }
+
+    #[test]
+    fn front_bound_drains_once() {
+        let seq = costs(&[(10, 2), (10, 2), (10, 2)]);
+        let tl = TwoStageTimeline::from_costs(seq.clone());
+        assert_eq!(tl.makespan(), 30 + 2);
+        assert_eq!(tl.makespan(), exact_pipeline(&seq));
+    }
+
+    /// The regression the extraction fixes: a leading row whose front costs
+    /// zero cycles must still be the pipeline-fill row. The old inline
+    /// guard (`sum_front == 0`) let the *second* row overwrite
+    /// `first_front`, inflating the back-bound makespan.
+    #[test]
+    fn zero_front_first_row_does_not_inflate_fill() {
+        let seq = costs(&[(0, 1), (7, 20), (7, 20)]);
+        let tl = TwoStageTimeline::from_costs(seq.clone());
+        // Back-bound branch: fill = front of row 0 (= 0), not row 1's 7,
+        // so the makespan is exactly Σ back = 41.
+        assert_eq!(tl.makespan(), 41);
+        // And the exact pipeline agrees the fill row is row 0.
+        assert!(tl.makespan() <= exact_pipeline(&seq));
+    }
+
+    /// The analytic composition brackets between the aggregate-stage lower
+    /// bound and the exact pipeline (which itself is below fully-serial),
+    /// across a spread of shapes including zeros and heavy skew.
+    #[test]
+    fn bracketed_by_stage_bound_and_exact_pipeline() {
+        let cases: Vec<Vec<RowCost>> = vec![
+            costs(&[(0, 0), (0, 0)]),
+            costs(&[(1, 1)]),
+            costs(&[(3, 9), (4, 1), (0, 7), (12, 2)]),
+            costs(&[(100, 1), (1, 100), (50, 50)]),
+            (0..32).map(|i| RowCost { front: (i * 7) % 13, back: (i * 5) % 11 }).collect(),
+        ];
+        for seq in cases {
+            let tl = TwoStageTimeline::from_costs(seq.clone());
+            let exact = exact_pipeline(&seq);
+            assert!(tl.makespan() >= tl.stage_bound(), "{seq:?}");
+            assert!(tl.makespan() <= exact, "{seq:?}: {} > exact {exact}", tl.makespan());
+            assert!(exact <= tl.serial_cycles(), "{seq:?}");
+        }
+    }
+
+    #[test]
+    fn push_matches_from_costs() {
+        let seq = costs(&[(3, 9), (4, 1), (0, 7)]);
+        let mut tl = TwoStageTimeline::new();
+        for &c in &seq {
+            tl.push(c);
+        }
+        assert_eq!(tl, TwoStageTimeline::from_costs(seq));
+        assert_eq!(tl.rows(), 3);
+    }
+}

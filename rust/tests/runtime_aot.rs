@@ -1,8 +1,11 @@
 //! Integration: the AOT artifacts (Pallas kernel → HLO text, built by
 //! `make artifacts`) load and execute correctly through the PJRT runtime.
 //!
-//! These tests require `artifacts/`; they fail with a clear message when it
-//! is missing (the Makefile's `test` target builds it first).
+//! These tests require `artifacts/` (build with `make artifacts`) and the
+//! `runtime` cargo feature (`cargo test --features runtime`); without the
+//! feature the whole file is compiled out, and without the artifacts they
+//! fail with a clear message.
+#![cfg(feature = "runtime")]
 
 use maple::runtime::{artifacts_dir, LoadedModule, MapleDatapath};
 use std::path::PathBuf;
