@@ -17,7 +17,10 @@
 //! ```
 //!
 //! `scale` down-scales the Table-I matrices (default 16; `--full` = 1,
-//! several minutes).
+//! several minutes — though a re-run warm-starts from the on-disk workload
+//! cache and skips the synthesis + profile stage entirely; set
+//! `MAPLE_NO_CACHE=1` to force a cold evaluation, `MAPLE_CACHE_DIR` to
+//! relocate the cache).
 
 use maple::config::AcceleratorConfig;
 use maple::report::{fig9_report, fig9_rows_from_sweep, Fig9Row};
@@ -112,7 +115,8 @@ fn main() {
     let seed = 7u64;
     println!("=== Maple full evaluation (Table-I scale 1/{scale}) ===\n");
 
-    let engine = SimEngine::new();
+    // Shared env contract: MAPLE_CACHE_DIR / MAPLE_NO_CACHE.
+    let engine = SimEngine::from_env();
     let keys: Vec<WorkloadKey> =
         suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, seed, scale)).collect();
 
@@ -130,7 +134,11 @@ fn main() {
             assert_eq!(r.checksum, w.checksum, "{}/{}: checksum mismatch", key.dataset, r.config);
         }
     }
-    assert_eq!(engine.profiles_run() as usize, keys.len(), "one profile per dataset");
+    assert_eq!(
+        (engine.profiles_run() + engine.disk_hits()) as usize,
+        keys.len(),
+        "one profile or disk hit per dataset"
+    );
 
     let matraptor: Vec<Fig9Row> = fig9_rows_from_sweep(&grid, 0, 1, 0);
     let extensor: Vec<Fig9Row> = fig9_rows_from_sweep(&grid, 2, 3, 0);
@@ -169,9 +177,11 @@ fn main() {
     // Verification summary across all runs.
     println!("\nverification: {} simulations, all checksums consistent", grid.cell_count());
     println!(
-        "wall time: {:.1}s ({} datasets profiled once, cells in parallel)",
+        "wall time: {:.1}s ({} datasets profiled once, cells in parallel; \
+         {} warm-loaded from the workload cache)",
         elapsed.as_secs_f64(),
-        keys.len()
+        keys.len(),
+        engine.disk_hits()
     );
 
     pjrt_crosscheck();

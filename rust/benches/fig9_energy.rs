@@ -13,7 +13,7 @@
 include!("harness.rs");
 
 use maple::report::fig9_rows_from_sweep;
-use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
+use maple::sim::{SweepSpec, WorkloadKey};
 use maple::sparse::suite;
 
 fn main() {
@@ -24,7 +24,7 @@ fn main() {
         "dataset", "matraptor %", "extensor %", "base uJ (mat)", "maple uJ (mat)"
     );
 
-    let engine = SimEngine::new();
+    let engine = bench_engine();
     let keys = suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, 7, scale)).collect();
     let grid = engine.sweep(&SweepSpec::paper(keys)).expect("Table-I sweep");
     let m_rows = fig9_rows_from_sweep(&grid, 0, 1, 0);
@@ -46,4 +46,5 @@ fn main() {
         e_rows.iter().map(|e| e.energy_benefit_pct).sum::<f64>() / e_rows.len() as f64;
     print!("\nmean energy benefit: Matraptor {mean_m:.1}% (paper ~50%), ");
     println!("Extensor {mean_e:.1}% (paper ~60%)");
+    report_cache_line(&engine);
 }

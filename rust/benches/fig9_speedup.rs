@@ -13,7 +13,7 @@
 include!("harness.rs");
 
 use maple::report::fig9_rows_from_sweep;
-use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
+use maple::sim::{SweepSpec, WorkloadKey};
 use maple::sparse::suite;
 
 fn main() {
@@ -24,7 +24,7 @@ fn main() {
         "dataset", "matraptor %", "extensor %", "base cyc (ext)", "maple cyc (ext)"
     );
 
-    let engine = SimEngine::new();
+    let engine = bench_engine();
     let keys = suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, 7, scale)).collect();
     let grid = engine.sweep(&SweepSpec::paper(keys)).expect("Table-I sweep");
     let m_rows = fig9_rows_from_sweep(&grid, 0, 1, 0);
@@ -41,4 +41,5 @@ fn main() {
     println!(
         "\nmean speedup: Matraptor {mean_m:.1}% (paper ~15%), Extensor {mean_e:.1}% (paper ~22%)"
     );
+    report_cache_line(&engine);
 }

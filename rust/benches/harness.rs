@@ -13,6 +13,31 @@ fn bench_scale() -> usize {
     std::env::var("MAPLE_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(24)
 }
 
+/// Engine for benches: disk-cache-backed via the shared env contract
+/// (`SimEngine::from_env`), so a re-run skips the synthesis + profile stage
+/// entirely — `MAPLE_CACHE_DIR` relocates the cache, `MAPLE_NO_CACHE=1`
+/// opts out for cold measurements.
+#[allow(dead_code)]
+fn bench_engine() -> maple::sim::SimEngine {
+    maple::sim::SimEngine::from_env()
+}
+
+/// One grep-able summary line of an engine's cache traffic (CI asserts on
+/// the warm pass's disk-hit count).
+#[allow(dead_code)]
+fn report_cache_line(engine: &maple::sim::SimEngine) {
+    println!(
+        "cache: {} disk hits, {} profiled, {} stored ({})",
+        engine.disk_hits(),
+        engine.profiles_run(),
+        engine.disk_stores(),
+        engine
+            .disk_cache()
+            .map(|d| d.dir().display().to_string())
+            .unwrap_or_else(|| "disabled".into()),
+    );
+}
+
 /// Run `f` repeatedly for at least `min_time`, returning (iters, total).
 #[allow(dead_code)]
 fn measure<F: FnMut()>(min_time: Duration, mut f: F) -> (u32, Duration) {

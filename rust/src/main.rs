@@ -15,13 +15,17 @@
 //!
 //! All simulation commands sit on [`maple::sim::SimEngine`]: each dataset
 //! is profiled once (cached by dataset/seed/scale) and sweep cells run
-//! concurrently on worker threads. Argument parsing is in-tree (the offline
-//! build has no CLI dependency; DESIGN.md §Dependencies).
+//! concurrently on worker threads. Profiled workloads additionally persist
+//! to an on-disk cache ([`maple::sim::cache`]) so repeated runs start warm —
+//! `--no-cache` (or `MAPLE_NO_CACHE=1`) opts out, `MAPLE_CACHE_DIR`
+//! relocates it, and `maple cache stats|clear` inspects it. Argument parsing
+//! is in-tree (the offline build has no CLI dependency; DESIGN.md
+//! §Dependencies).
 
 use maple::config::AcceleratorConfig;
 use maple::coordinator::Policy;
 use maple::report;
-use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
+use maple::sim::{DiskCache, SimEngine, SweepSpec, WorkloadKey};
 use maple::sparse::suite;
 
 /// Dependency-free CLI error type.
@@ -81,11 +85,16 @@ COMMANDS:
   simulate --config <preset|file.toml> --dataset <name>
            [--scale N] [--seed S] [--policy round-robin|chunked|greedy]
   sweep  --dataset <name> [--macs 1,2,4,...] [--scale N] [--seed S]
+  cache  [stats|clear]     Inspect or empty the on-disk workload cache
   config --preset <name>   Dump a preset configuration as TOML
   validate [--artifacts DIR]
                            Load the AOT Pallas datapath via PJRT and verify
                            it against the software reference (needs
                            `make artifacts` and `--features runtime`)
+
+Simulation commands warm-start from the on-disk workload cache
+(default target/maple-cache; override with MAPLE_CACHE_DIR). Pass
+--no-cache (or set MAPLE_NO_CACHE=1) to recompute from scratch.
 ";
 
 fn parse_config(name: &str) -> CliResult<AcceleratorConfig> {
@@ -102,6 +111,16 @@ fn parse_config(name: &str) -> CliResult<AcceleratorConfig> {
     }
 }
 
+/// Engine for one CLI invocation: disk-cache-backed (warm-start) per the
+/// shared env contract ([`SimEngine::from_env`]: `MAPLE_CACHE_DIR`,
+/// `MAPLE_NO_CACHE`) unless the user passed `--no-cache`.
+fn make_engine(args: &Args) -> SimEngine {
+    if args.flag("--no-cache") {
+        return SimEngine::new();
+    }
+    SimEngine::from_env()
+}
+
 fn parse_policy(name: &str) -> CliResult<Policy> {
     match name {
         "round-robin" => Ok(Policy::RoundRobin),
@@ -113,7 +132,7 @@ fn parse_policy(name: &str) -> CliResult<Policy> {
 
 /// Fig. 9 across datasets: one engine sweep — each dataset profiled once,
 /// all (config × dataset) cells in parallel.
-fn fig9(scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> CliResult {
+fn fig9(engine: &SimEngine, scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> CliResult {
     let names: Vec<&'static str> = match datasets {
         Some(list) => list
             .split(',')
@@ -126,7 +145,6 @@ fn fig9(scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> CliResult
         None => suite::TABLE_I.iter().map(|d| d.abbrev).collect(),
     };
 
-    let engine = SimEngine::new();
     let keys = names.iter().map(|&n| WorkloadKey::suite(n, seed, scale)).collect();
     let grid = engine.sweep(&SweepSpec::paper(keys))?;
 
@@ -204,14 +222,14 @@ fn main() -> CliResult {
         "fig9" => {
             let scale = args.parse_or("--scale", 16usize)?;
             let seed = args.parse_or("--seed", 7u64)?;
-            fig9(scale, args.opt("--datasets"), seed, csv)?;
+            fig9(&make_engine(&args), scale, args.opt("--datasets"), seed, csv)?;
         }
         "simulate" => {
             let cfg = parse_config(args.opt_or("--config", "extensor-maple"))?;
             let dataset = args.opt_or("--dataset", "wikiVote");
             let scale = args.parse_or("--scale", 1usize)?;
             let seed = args.parse_or("--seed", 7u64)?;
-            let engine = SimEngine::new();
+            let engine = make_engine(&args);
             let key = WorkloadKey::suite(dataset, seed, scale);
             let w = engine.workload(&key)?;
             let policy = parse_policy(args.opt_or("--policy", "round-robin"))?;
@@ -253,7 +271,7 @@ fn main() -> CliResult {
                     cfg
                 })
                 .collect();
-            let engine = SimEngine::new();
+            let engine = make_engine(&args);
             let grid = engine.sweep(&SweepSpec {
                 configs: configs.clone(),
                 datasets: vec![WorkloadKey::suite(dataset, seed, scale)],
@@ -281,6 +299,20 @@ fn main() -> CliResult {
                 report::csv(&header, &rows)
             };
             print!("{out}");
+        }
+        "cache" => {
+            let cache = DiskCache::from_env()
+                .map_err(|e| format!("cannot open workload cache dir: {e}"))?;
+            let action =
+                args.argv.iter().find(|s| !s.starts_with("--")).map(|s| s.as_str());
+            match action.unwrap_or("stats") {
+                "stats" => print!("{}", report::cache_stats_report(&cache.stats(), md)),
+                "clear" => {
+                    let removed = cache.clear()?;
+                    println!("removed {removed} cached artifacts from {}", cache.dir().display());
+                }
+                other => return Err(format!("unknown cache action {other} (stats|clear)").into()),
+            }
         }
         "config" => {
             print!("{}", parse_config(args.opt_or("--preset", "extensor-maple"))?.to_toml())

@@ -4,7 +4,7 @@
 use crate::accel::fig8;
 use crate::config::AcceleratorConfig;
 use crate::energy::TechModel;
-use crate::sim::{SimResult, SweepResult};
+use crate::sim::{CacheStats, SimResult, SweepResult};
 use crate::sparse::suite::TABLE_I;
 
 /// Render a markdown table.
@@ -84,6 +84,24 @@ pub fn fig8_report(base: &AcceleratorConfig, maple: &AcceleratorConfig, markdown
     let mut s = if markdown { markdown_table(&header, &rows) } else { csv(&header, &rows) };
     s.push_str(&format!("\narea ratio (baseline / maple): {ratio:.2}x\n"));
     s
+}
+
+/// The `maple cache stats` report: one row per metric of the on-disk
+/// workload cache (see [`crate::sim::cache`] for the layout).
+pub fn cache_stats_report(stats: &CacheStats, markdown: bool) -> String {
+    let header = ["Metric", "Value"];
+    let rows = vec![
+        vec!["cache dir".into(), stats.dir.display().to_string()],
+        vec!["workload artifacts (current codec)".into(), stats.workloads.to_string()],
+        vec!["matrix artifacts (current codec)".into(), stats.matrices.to_string()],
+        vec!["stale / foreign files".into(), stats.stale.to_string()],
+        vec!["total bytes".into(), stats.bytes.to_string()],
+    ];
+    if markdown {
+        markdown_table(&header, &rows)
+    } else {
+        csv(&header, &rows)
+    }
 }
 
 /// One dataset's row in the Fig. 9 comparison.
@@ -185,6 +203,23 @@ mod tests {
         );
         assert!(s.contains("area ratio"));
         assert!(s.contains("matraptor-baseline"));
+    }
+
+    #[test]
+    fn cache_stats_report_lists_every_metric() {
+        let stats = CacheStats {
+            dir: std::path::PathBuf::from("/tmp/maple-cache"),
+            workloads: 14,
+            matrices: 2,
+            stale: 1,
+            bytes: 4096,
+        };
+        let md = cache_stats_report(&stats, true);
+        for needle in ["/tmp/maple-cache", "workload artifacts", "14", "4096"] {
+            assert!(md.contains(needle), "missing {needle} in:\n{md}");
+        }
+        let c = cache_stats_report(&stats, false);
+        assert!(c.lines().count() == 6 && c.starts_with("Metric,Value"));
     }
 
     #[test]

@@ -1,0 +1,406 @@
+//! Versioned, checksummed binary codec for cache artifacts.
+//!
+//! Two artifact kinds share one envelope: a CSR matrix and a profiled
+//! [`Workload`]. Everything is hand-rolled on `std` like the rest of the
+//! crate (DESIGN.md §Dependencies) and byte-stable across platforms: all
+//! integers are little-endian, floats are stored as their IEEE-754 bit
+//! patterns, so an artifact decodes to *bit-identical* values everywhere.
+//!
+//! Envelope layout:
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic            (b"MAPLECSR" | b"MAPLEWL\0")
+//! 8       4     codec version    (u32, == CODEC_VERSION)
+//! 12      8     payload length   (u64, byte count of the payload section)
+//! 20      8     FNV-1a-64        (u64, over the payload bytes)
+//! 28      n     payload sections
+//! ```
+//!
+//! Decoding is strictly defensive — a bad magic, foreign version, length
+//! mismatch, checksum mismatch, or internally inconsistent section is an
+//! error, never a partial result. The store layer treats *any* decode error
+//! as an eviction: the artifact is deleted and the workload recomputed.
+//!
+//! Workload payload sections, in order: `rows`, `cols`, `rows_b`, `nnz_a`,
+//! `nnz_b`, `out_nnz`, `total_products` (u64 each), `checksum` (f64 bits),
+//! `profile count` (u64, must equal `rows`), then one 16-byte record per
+//! row profile (`a_nnz` u32, `products` u64, `out_nnz` u32). The summed
+//! per-row `out_nnz`/`products` must reproduce the header totals.
+//!
+//! CSR payload sections: `rows`, `cols`, `nnz` (u64 each), `row_ptr`
+//! ((rows+1) × u64), `col_id` (nnz × u32), `value` (nnz × f32 bits). The
+//! decoded parts are re-validated through [`Csr::try_new`], so a decoded
+//! matrix upholds every CSR invariant the rest of the crate assumes.
+
+use crate::pe::RowProfile;
+use crate::sim::Workload;
+use crate::sparse::Csr;
+
+/// Bump on any layout change: old artifacts are rejected (and evicted) on
+/// load, and the store's file names change so caches start cold. CI keys
+/// its `actions/cache` entry on this file's hash (plus the profile-pass
+/// and generator sources, whose changes alter artifact contents without a
+/// layout change) for the same reason.
+pub const CODEC_VERSION: u32 = 1;
+
+const MAGIC_CSR: [u8; 8] = *b"MAPLECSR";
+const MAGIC_WORKLOAD: [u8; 8] = *b"MAPLEWL\0";
+const HEADER_LEN: usize = 28;
+
+/// Codec errors. Every variant means "do not trust this artifact".
+#[derive(Debug, thiserror::Error)]
+pub enum CodecError {
+    #[error("bad magic: not a maple cache artifact")]
+    BadMagic,
+    #[error("codec version {found} != supported {expected}")]
+    VersionMismatch { found: u32, expected: u32 },
+    #[error("artifact truncated: need {needed} bytes, have {have}")]
+    Truncated { needed: usize, have: usize },
+    #[error("payload checksum mismatch: stored {stored:#018x}, computed {computed:#018x}")]
+    ChecksumMismatch { stored: u64, computed: u64 },
+    #[error("inconsistent artifact: {0}")]
+    Inconsistent(String),
+}
+
+/// FNV-1a 64 — the crate's standard dependency-free hash (same constants as
+/// the dataset-seed hash in `sparse::suite`). Also used by the store for
+/// collision-proofing file names.
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------- encoding
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Wrap a payload in the versioned, checksummed envelope.
+fn seal(magic: [u8; 8], payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&magic);
+    put_u32(&mut out, CODEC_VERSION);
+    put_u64(&mut out, payload.len() as u64);
+    put_u64(&mut out, fnv1a(payload));
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Encode a CSR matrix.
+pub fn encode_csr(a: &Csr) -> Vec<u8> {
+    let mut p = Vec::with_capacity(24 + (a.rows() + 1) * 8 + a.nnz() * 8);
+    put_u64(&mut p, a.rows() as u64);
+    put_u64(&mut p, a.cols() as u64);
+    put_u64(&mut p, a.nnz() as u64);
+    for &r in &a.row_ptr {
+        put_u64(&mut p, r as u64);
+    }
+    for &c in &a.col_id {
+        put_u32(&mut p, c);
+    }
+    for &v in &a.value {
+        put_u32(&mut p, v.to_bits());
+    }
+    seal(MAGIC_CSR, &p)
+}
+
+/// Encode a profiled workload.
+pub fn encode_workload(w: &Workload) -> Vec<u8> {
+    let mut p = Vec::with_capacity(72 + w.profiles.len() * 16);
+    put_u64(&mut p, w.rows as u64);
+    put_u64(&mut p, w.cols as u64);
+    put_u64(&mut p, w.rows_b as u64);
+    put_u64(&mut p, w.nnz_a);
+    put_u64(&mut p, w.nnz_b);
+    put_u64(&mut p, w.out_nnz);
+    put_u64(&mut p, w.total_products);
+    put_u64(&mut p, w.checksum.to_bits());
+    put_u64(&mut p, w.profiles.len() as u64);
+    for r in &w.profiles {
+        put_u32(&mut p, r.a_nnz);
+        put_u64(&mut p, r.products);
+        put_u32(&mut p, r.out_nnz);
+    }
+    seal(MAGIC_WORKLOAD, &p)
+}
+
+// ---------------------------------------------------------------- decoding
+
+/// Bounds-checked little-endian reader over the payload section.
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| CodecError::Truncated {
+                needed: self.pos.saturating_add(n),
+                have: self.bytes.len(),
+            })?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
+    }
+
+    fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
+    }
+
+    fn index(&mut self) -> Result<usize, CodecError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| CodecError::Inconsistent(format!("index {v} overflows usize")))
+    }
+
+    /// Guard for count-prefixed sections: the claimed item count must fit
+    /// in the remaining payload bytes. The envelope checksum only proves
+    /// the payload matches its own stored hash — not that the counts are
+    /// honest — so a crafted or foreign file must be a decode error here,
+    /// never an over-allocation.
+    fn expect_items(&self, items: usize, bytes_per: usize) -> Result<(), CodecError> {
+        let needed = items
+            .checked_mul(bytes_per)
+            .and_then(|n| n.checked_add(self.pos))
+            .ok_or_else(|| {
+                CodecError::Inconsistent(format!("section of {items} items overflows usize"))
+            })?;
+        if needed > self.bytes.len() {
+            return Err(CodecError::Truncated { needed, have: self.bytes.len() });
+        }
+        Ok(())
+    }
+
+    fn done(&self) -> Result<(), CodecError> {
+        if self.pos == self.bytes.len() {
+            Ok(())
+        } else {
+            Err(CodecError::Inconsistent(format!(
+                "{} trailing payload bytes",
+                self.bytes.len() - self.pos
+            )))
+        }
+    }
+}
+
+/// Validate the envelope and return a reader positioned at the payload.
+fn open(magic: [u8; 8], bytes: &[u8]) -> Result<Reader<'_>, CodecError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(CodecError::Truncated { needed: HEADER_LEN, have: bytes.len() });
+    }
+    if bytes[..8] != magic {
+        return Err(CodecError::BadMagic);
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4-byte slice"));
+    if version != CODEC_VERSION {
+        return Err(CodecError::VersionMismatch { found: version, expected: CODEC_VERSION });
+    }
+    let len = u64::from_le_bytes(bytes[12..20].try_into().expect("8-byte slice"));
+    let len = usize::try_from(len)
+        .map_err(|_| CodecError::Inconsistent(format!("payload length {len} overflows usize")))?;
+    let total = HEADER_LEN
+        .checked_add(len)
+        .ok_or_else(|| CodecError::Inconsistent(format!("payload length {len} overflows usize")))?;
+    if bytes.len() < total {
+        return Err(CodecError::Truncated { needed: total, have: bytes.len() });
+    }
+    if bytes.len() > total {
+        return Err(CodecError::Inconsistent(format!(
+            "{} trailing bytes after payload",
+            bytes.len() - total
+        )));
+    }
+    let stored = u64::from_le_bytes(bytes[20..28].try_into().expect("8-byte slice"));
+    let computed = fnv1a(&bytes[HEADER_LEN..]);
+    if stored != computed {
+        return Err(CodecError::ChecksumMismatch { stored, computed });
+    }
+    Ok(Reader { bytes: &bytes[HEADER_LEN..], pos: 0 })
+}
+
+/// Decode a CSR matrix, re-validating every CSR invariant.
+pub fn decode_csr(bytes: &[u8]) -> Result<Csr, CodecError> {
+    let mut r = open(MAGIC_CSR, bytes)?;
+    let rows = r.index()?;
+    let cols = r.index()?;
+    let nnz = r.index()?;
+    let ptr_len = rows
+        .checked_add(1)
+        .ok_or_else(|| CodecError::Inconsistent("row count overflows usize".into()))?;
+    r.expect_items(ptr_len, 8)?;
+    let mut row_ptr = Vec::with_capacity(ptr_len);
+    for _ in 0..ptr_len {
+        row_ptr.push(r.index()?);
+    }
+    r.expect_items(nnz, 4)?;
+    let mut col_id = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        col_id.push(r.u32()?);
+    }
+    r.expect_items(nnz, 4)?;
+    let mut value = Vec::with_capacity(nnz);
+    for _ in 0..nnz {
+        value.push(f32::from_bits(r.u32()?));
+    }
+    r.done()?;
+    Csr::try_new(rows, cols, row_ptr, col_id, value).map_err(CodecError::Inconsistent)
+}
+
+/// Decode a profiled workload, cross-checking the per-row profiles against
+/// the stored totals.
+pub fn decode_workload(bytes: &[u8]) -> Result<Workload, CodecError> {
+    let mut r = open(MAGIC_WORKLOAD, bytes)?;
+    let rows = r.index()?;
+    let cols = r.index()?;
+    let rows_b = r.index()?;
+    let nnz_a = r.u64()?;
+    let nnz_b = r.u64()?;
+    let out_nnz = r.u64()?;
+    let total_products = r.u64()?;
+    let checksum = f64::from_bits(r.u64()?);
+    let n_profiles = r.index()?;
+    if n_profiles != rows {
+        return Err(CodecError::Inconsistent(format!(
+            "profile count {n_profiles} != rows {rows}"
+        )));
+    }
+    r.expect_items(n_profiles, 16)?;
+    let mut profiles = Vec::with_capacity(n_profiles);
+    let (mut sum_out, mut sum_products) = (0u64, 0u64);
+    for _ in 0..n_profiles {
+        let p = RowProfile { a_nnz: r.u32()?, products: r.u64()?, out_nnz: r.u32()? };
+        sum_out += p.out_nnz as u64;
+        sum_products += p.products;
+        profiles.push(p);
+    }
+    r.done()?;
+    if sum_out != out_nnz {
+        return Err(CodecError::Inconsistent(format!(
+            "profile out_nnz sum {sum_out} != stored total {out_nnz}"
+        )));
+    }
+    if sum_products != total_products {
+        return Err(CodecError::Inconsistent(format!(
+            "profile product sum {sum_products} != stored total {total_products}"
+        )));
+    }
+    Ok(Workload { rows, cols, rows_b, nnz_a, nnz_b, out_nnz, total_products, profiles, checksum })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profile_workload;
+    use crate::sparse::gen::{generate, Profile};
+
+    fn sample_workload() -> Workload {
+        let a = generate(40, 60, 300, Profile::PowerLaw { alpha: 0.7 }, 11);
+        let b = generate(60, 25, 200, Profile::Uniform, 13);
+        profile_workload(&a, &b)
+    }
+
+    #[test]
+    fn csr_round_trips_bit_exact() {
+        let a = generate(50, 30, 400, Profile::PowerLaw { alpha: 0.8 }, 3);
+        assert_eq!(decode_csr(&encode_csr(&a)).unwrap(), a);
+        let z = Csr::zero(7, 3);
+        assert_eq!(decode_csr(&encode_csr(&z)).unwrap(), z);
+    }
+
+    #[test]
+    fn workload_round_trips_bit_exact() {
+        let w = sample_workload();
+        let d = decode_workload(&encode_workload(&w)).unwrap();
+        assert_eq!(d, w);
+        assert_eq!(d.checksum.to_bits(), w.checksum.to_bits());
+    }
+
+    #[test]
+    fn magic_and_kind_are_enforced() {
+        let w = sample_workload();
+        // A workload artifact is not a CSR artifact and vice versa.
+        assert!(matches!(decode_csr(&encode_workload(&w)), Err(CodecError::BadMagic)));
+        let a = generate(10, 10, 30, Profile::Uniform, 1);
+        assert!(matches!(decode_workload(&encode_csr(&a)), Err(CodecError::BadMagic)));
+        assert!(matches!(decode_workload(b"junk"), Err(CodecError::Truncated { .. })));
+    }
+
+    #[test]
+    fn version_bump_is_rejected() {
+        let mut bytes = encode_workload(&sample_workload());
+        bytes[8..12].copy_from_slice(&(CODEC_VERSION + 1).to_le_bytes());
+        assert!(matches!(
+            decode_workload(&bytes),
+            Err(CodecError::VersionMismatch { found, expected })
+                if found == CODEC_VERSION + 1 && expected == CODEC_VERSION
+        ));
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = encode_workload(&sample_workload());
+        for cut in [0, 7, 12, 27, 28, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_workload(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Trailing junk is just as untrustworthy as missing bytes.
+        let mut extended = bytes;
+        extended.push(0);
+        assert!(decode_workload(&extended).is_err());
+    }
+
+    #[test]
+    fn huge_declared_counts_are_rejected_without_allocating() {
+        // A checksum-consistent artifact whose counts lie about the payload
+        // (crafted / foreign file in a shared cache dir) must be a decode
+        // error, never an over-allocation.
+        let mut p = Vec::new();
+        put_u64(&mut p, 1u64 << 40); // rows — would be an 8 TB row_ptr
+        put_u64(&mut p, 4);
+        put_u64(&mut p, 0);
+        assert!(matches!(
+            decode_csr(&seal(MAGIC_CSR, &p)),
+            Err(CodecError::Truncated { .. } | CodecError::Inconsistent(_))
+        ));
+
+        let mut p = Vec::new();
+        for v in [3u64, 3, 3, 0, 0, 0, 0] {
+            put_u64(&mut p, v); // rows..total_products
+        }
+        put_u64(&mut p, 0f64.to_bits());
+        put_u64(&mut p, 3); // profile count == rows, but no records follow
+        assert!(matches!(
+            decode_workload(&seal(MAGIC_WORKLOAD, &p)),
+            Err(CodecError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn single_byte_corruption_is_always_detected() {
+        // FNV-1a steps are injective in the running state, so two
+        // equal-length payloads differing in one byte can never collide;
+        // header fields are compared directly. Flip every 5th byte.
+        let clean = encode_workload(&sample_workload());
+        for pos in (0..clean.len()).step_by(5) {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x40;
+            assert!(decode_workload(&bad).is_err(), "flip at byte {pos} went undetected");
+        }
+    }
+}

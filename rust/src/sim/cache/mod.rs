@@ -1,0 +1,29 @@
+//! The persistent workload cache: the engine's second tier.
+//!
+//! The profile pass — an exact functional execution of `C = A × B` — is the
+//! wall-clock-dominant stage of every sweep (EXPERIMENTS.md §Perf), and it
+//! is a pure function of the workload key. [`SimEngine`] therefore layers
+//! two caches:
+//!
+//! 1. **In-memory slots** (per engine): each key profiled at most once per
+//!    process, shared via `Arc`.
+//! 2. **This module** (per machine): profiled workloads serialised through
+//!    a versioned, checksummed binary [`codec`] into an on-disk [`store`],
+//!    keyed by the canonical `(dataset, seed, scale)` [`WorkloadKey`] plus
+//!    the profile chunk count. A disk hit skips *both* synthesis and
+//!    profiling; a miss computes and then atomically publishes.
+//!
+//! The separation mirrors Sparseloop's thesis (analytical sparse-accelerator
+//! models win by making evaluation cheap enough to sweep) and the
+//! sparsity-aware-blocking practice of persisting one-time structure
+//! analysis: repeated CLI runs, benches, CI jobs, and future sharded
+//! multi-process sweeps all start warm.
+//!
+//! [`SimEngine`]: crate::sim::SimEngine
+//! [`WorkloadKey`]: crate::sim::WorkloadKey
+
+pub mod codec;
+pub mod store;
+
+pub use codec::{decode_csr, decode_workload, encode_csr, encode_workload, CodecError, CODEC_VERSION};
+pub use store::{CacheStats, DiskCache, CACHE_DIR_ENV};

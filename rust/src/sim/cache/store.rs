@@ -1,0 +1,323 @@
+//! The on-disk artifact store: [`WorkloadKey`] → cache file.
+//!
+//! A [`DiskCache`] owns one flat directory of codec-sealed artifacts
+//! (workloads `.mwl`, matrices `.mcsr`). File names encode the full cache
+//! key — sanitized dataset name, seed, scale divisor, profile chunk count,
+//! an FNV-1a of the raw dataset name (collision-proofing the sanitization),
+//! and the codec version:
+//!
+//! ```text
+//! wv-s7-d64-pt1-af63bd4c8601b7be.v1.mwl
+//! ```
+//!
+//! Invalidation rules:
+//! * **codec version bump** — the `.vN.` component changes, so new runs
+//!   start cold without touching old files; a hand-renamed stale file is
+//!   still rejected (and evicted) by the envelope's version field.
+//! * **decode failure** — any truncated, corrupted, or inconsistent
+//!   artifact is deleted on load and the workload recomputed; a bad cache
+//!   file is never trusted.
+//! * **key change** — seed, scale, and profile chunk count are part of the
+//!   file name, so a different sweep parameterisation never aliases.
+//!
+//! Publication is atomic: artifacts are written to a unique temp file in
+//! the same directory and `rename`d into place, so concurrent engines
+//! (scoped sweep threads or separate processes sharing the directory) see
+//! either nothing or a complete artifact — the loser of a racing publish
+//! simply overwrites the winner with identical bytes.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::codec::{self, CODEC_VERSION};
+use crate::sim::engine::WorkloadKey;
+use crate::sim::Workload;
+use crate::sparse::Csr;
+
+/// Environment override for the cache directory (CLI and benches honour it).
+pub const CACHE_DIR_ENV: &str = "MAPLE_CACHE_DIR";
+
+const WORKLOAD_EXT: &str = "mwl";
+const MATRIX_EXT: &str = "mcsr";
+
+/// Distinguishes racing writers within one process; the pid handles racing
+/// processes.
+static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// One on-disk artifact directory (see the module docs for the layout).
+#[derive(Debug, Clone)]
+pub struct DiskCache {
+    dir: PathBuf,
+}
+
+/// What `maple cache stats` reports.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub dir: PathBuf,
+    /// Workload artifacts at the current codec version.
+    pub workloads: usize,
+    /// Matrix artifacts at the current codec version.
+    pub matrices: usize,
+    /// Old-version artifacts, orphaned temp files, foreign files.
+    pub stale: usize,
+    /// Total bytes across all files in the directory.
+    pub bytes: u64,
+}
+
+impl DiskCache {
+    /// Open (creating if needed) a cache at `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> io::Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        Ok(Self { dir })
+    }
+
+    /// Open the cache at `$MAPLE_CACHE_DIR`, or [`DiskCache::default_dir`].
+    pub fn from_env() -> io::Result<Self> {
+        match std::env::var_os(CACHE_DIR_ENV) {
+            Some(dir) => Self::new(PathBuf::from(dir)),
+            None => Self::new(Self::default_dir()),
+        }
+    }
+
+    /// The default location: a `target/`-style throwaway directory relative
+    /// to the working directory, safe to delete at any time.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("target").join("maple-cache")
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The artifact file for one profiled workload. `profile_chunks` is the
+    /// engine's profile-pass chunk count: it is part of the key because the
+    /// f64 checksum's addition order — and therefore its exact bits — depends
+    /// on the chunking, and a warm load must be byte-identical to what the
+    /// same engine would have computed cold.
+    pub fn workload_path(&self, key: &WorkloadKey, profile_chunks: usize) -> PathBuf {
+        self.dir.join(format!(
+            "{}-s{}-d{}-pt{}-{:016x}.v{}.{}",
+            sanitize(&key.dataset),
+            key.seed,
+            key.scale,
+            profile_chunks,
+            codec::fnv1a(key.dataset.as_bytes()),
+            CODEC_VERSION,
+            WORKLOAD_EXT,
+        ))
+    }
+
+    /// The artifact file for a named matrix.
+    pub fn matrix_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!(
+            "{}-{:016x}.v{}.{}",
+            sanitize(name),
+            codec::fnv1a(name.as_bytes()),
+            CODEC_VERSION,
+            MATRIX_EXT,
+        ))
+    }
+
+    /// Load a cached workload. A missing file is a plain miss; an artifact
+    /// that fails to decode is **evicted** (deleted) and reported as a miss,
+    /// so the caller recomputes instead of trusting bad bytes.
+    pub fn load_workload(&self, key: &WorkloadKey, profile_chunks: usize) -> Option<Workload> {
+        let path = self.workload_path(key, profile_chunks);
+        let bytes = fs::read(&path).ok()?;
+        match codec::decode_workload(&bytes) {
+            Ok(w) => Some(w),
+            Err(_) => {
+                let _ = fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    /// Persist a profiled workload (atomic temp-file + rename publish).
+    pub fn store_workload(
+        &self,
+        key: &WorkloadKey,
+        profile_chunks: usize,
+        w: &Workload,
+    ) -> io::Result<()> {
+        self.persist(&self.workload_path(key, profile_chunks), &codec::encode_workload(w))
+    }
+
+    /// Load a cached matrix (same miss/eviction contract as workloads).
+    pub fn load_matrix(&self, name: &str) -> Option<Csr> {
+        let path = self.matrix_path(name);
+        let bytes = fs::read(&path).ok()?;
+        match codec::decode_csr(&bytes) {
+            Ok(a) => Some(a),
+            Err(_) => {
+                let _ = fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    /// Persist a matrix under `name` (atomic publish).
+    pub fn store_matrix(&self, name: &str, a: &Csr) -> io::Result<()> {
+        self.persist(&self.matrix_path(name), &codec::encode_csr(a))
+    }
+
+    /// Write `bytes` to a unique sibling temp file, then `rename` over the
+    /// final path — atomic on POSIX, so readers never observe a torn file.
+    fn persist(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
+        let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let tmp = path.with_extension(format!("tmp-{}-{n}", std::process::id()));
+        fs::write(&tmp, bytes)?;
+        match fs::rename(&tmp, path) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    /// Scan the directory. Infallible: an unreadable directory reports as
+    /// empty, unreadable entries are skipped.
+    pub fn stats(&self) -> CacheStats {
+        let mut s = CacheStats { dir: self.dir.clone(), ..CacheStats::default() };
+        let Ok(entries) = fs::read_dir(&self.dir) else {
+            return s;
+        };
+        let current = format!(".v{CODEC_VERSION}.");
+        let workload_suffix = format!(".{WORKLOAD_EXT}");
+        let matrix_suffix = format!(".{MATRIX_EXT}");
+        for e in entries.flatten() {
+            let path = e.path();
+            if !path.is_file() {
+                continue;
+            }
+            s.bytes += e.metadata().map(|m| m.len()).unwrap_or(0);
+            let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+                s.stale += 1;
+                continue;
+            };
+            if name.ends_with(&workload_suffix) && name.contains(&current) {
+                s.workloads += 1;
+            } else if name.ends_with(&matrix_suffix) && name.contains(&current) {
+                s.matrices += 1;
+            } else {
+                s.stale += 1;
+            }
+        }
+        s
+    }
+
+    /// Delete every file in the cache directory (all versions, leftover temp
+    /// files included). Returns how many files were removed.
+    pub fn clear(&self) -> io::Result<usize> {
+        let mut removed = 0;
+        for e in fs::read_dir(&self.dir)?.flatten() {
+            let path = e.path();
+            if path.is_file() {
+                fs::remove_file(&path)?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+/// Keep file names portable: anything outside `[A-Za-z0-9._-]` becomes `_`
+/// (the FNV component in the name disambiguates collapsed names).
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '_' })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::profile_workload;
+    use crate::sparse::gen::{generate, Profile};
+
+    fn tmp_cache(tag: &str) -> DiskCache {
+        let dir = std::env::temp_dir()
+            .join(format!("maple-store-test-{}-{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        DiskCache::new(dir).expect("temp cache dir")
+    }
+
+    fn sample() -> (WorkloadKey, Workload) {
+        let a = generate(30, 30, 150, Profile::PowerLaw { alpha: 0.7 }, 5);
+        (WorkloadKey::suite("wv", 5, 8), profile_workload(&a, &a))
+    }
+
+    #[test]
+    fn workload_store_load_round_trip() {
+        let cache = tmp_cache("roundtrip");
+        let (key, w) = sample();
+        assert!(cache.load_workload(&key, 1).is_none(), "fresh dir must miss");
+        cache.store_workload(&key, 1, &w).unwrap();
+        let loaded = cache.load_workload(&key, 1).expect("hit after store");
+        assert_eq!(loaded, w);
+        assert_eq!(loaded.checksum.to_bits(), w.checksum.to_bits());
+        // A different profile chunk count is a different artifact.
+        assert!(cache.load_workload(&key, 4).is_none());
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn matrix_store_load_round_trip() {
+        let cache = tmp_cache("matrix");
+        let a = generate(20, 35, 120, Profile::Uniform, 9);
+        assert!(cache.load_matrix("external").is_none());
+        cache.store_matrix("external", &a).unwrap();
+        assert_eq!(cache.load_matrix("external").unwrap(), a);
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn corrupt_artifact_is_evicted_not_trusted() {
+        let cache = tmp_cache("evict");
+        let (key, w) = sample();
+        cache.store_workload(&key, 1, &w).unwrap();
+        let path = cache.workload_path(&key, 1);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        assert!(cache.load_workload(&key, 1).is_none(), "corrupt artifact must miss");
+        assert!(!path.exists(), "corrupt artifact must be evicted");
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn stats_and_clear_see_every_file() {
+        let cache = tmp_cache("stats");
+        let (key, w) = sample();
+        cache.store_workload(&key, 1, &w).unwrap();
+        cache.store_matrix("m", &generate(10, 10, 20, Profile::Uniform, 1)).unwrap();
+        fs::write(cache.dir().join("foreign.bin"), b"junk").unwrap();
+        let s = cache.stats();
+        assert_eq!((s.workloads, s.matrices, s.stale), (1, 1, 1));
+        assert!(s.bytes > 0);
+        assert_eq!(cache.clear().unwrap(), 3);
+        let s = cache.stats();
+        assert_eq!((s.workloads, s.matrices, s.stale, s.bytes), (0, 0, 0, 0));
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn concurrent_publishes_leave_a_valid_artifact() {
+        let cache = tmp_cache("race");
+        let (key, w) = sample();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| cache.store_workload(&key, 1, &w).unwrap());
+            }
+        });
+        assert_eq!(cache.load_workload(&key, 1).unwrap(), w);
+        // No orphaned temp files left behind.
+        assert_eq!(cache.stats().stale, 0);
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+}

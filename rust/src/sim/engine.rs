@@ -8,6 +8,13 @@
 //! (CLI, benches, examples) sits on the same engine instead of hand-rolling
 //! its own thread scope.
 //!
+//! Below the in-memory slots sits an optional **on-disk tier**
+//! ([`crate::sim::cache`], opted in via [`SimEngine::with_disk_cache`]): a
+//! disk hit loads the serialised profile and skips both synthesis and
+//! profiling, a miss computes and then atomically publishes the artifact,
+//! so repeated CLI/bench/CI runs — and concurrent processes sharing the
+//! directory — start warm.
+//!
 //! Determinism: a [`SweepResult`] is a pure function of the [`SweepSpec`] —
 //! cell results land in a fixed (dataset, config, policy)-major grid no
 //! matter how many worker threads ran, and the profile pass uses a
@@ -20,6 +27,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::AcceleratorConfig;
 use crate::coordinator::Policy;
+use crate::sim::cache::DiskCache;
 use crate::sim::{profile_workload_parallel, simulate_workload, SimResult, Workload};
 use crate::sparse::{suite, Csr};
 
@@ -121,7 +129,11 @@ pub struct SimEngine {
     /// reproduces the serial profile pass exactly (checksum included).
     profile_threads: usize,
     cache: Mutex<HashMap<WorkloadKey, WorkloadSlot>>,
+    /// Second cache tier: persisted profiles shared across processes.
+    disk: Option<DiskCache>,
     profiles_run: AtomicU64,
+    disk_hits: AtomicU64,
+    disk_stores: AtomicU64,
 }
 
 impl Default for SimEngine {
@@ -138,7 +150,29 @@ impl SimEngine {
             threads,
             profile_threads: 1,
             cache: Mutex::new(HashMap::new()),
+            disk: None,
             profiles_run: AtomicU64::new(0),
+            disk_hits: AtomicU64::new(0),
+            disk_stores: AtomicU64::new(0),
+        }
+    }
+
+    /// Engine with the standard environment contract shared by the CLI,
+    /// benches, and examples: the on-disk tier at `$MAPLE_CACHE_DIR` (or
+    /// [`DiskCache::default_dir`]) unless `MAPLE_NO_CACHE` is set,
+    /// degrading to a cold engine with a warning when the directory cannot
+    /// be opened — caching must never fail a run.
+    pub fn from_env() -> Self {
+        let engine = Self::new();
+        if std::env::var_os("MAPLE_NO_CACHE").is_some() {
+            return engine;
+        }
+        match DiskCache::from_env() {
+            Ok(disk) => engine.with_disk_cache(disk),
+            Err(e) => {
+                eprintln!("warning: workload cache disabled: {e}");
+                engine
+            }
         }
     }
 
@@ -158,10 +192,36 @@ impl SimEngine {
         self
     }
 
+    /// Attach the on-disk cache tier: suite workloads load from `disk` when
+    /// a valid artifact exists (skipping synthesis *and* profiling) and are
+    /// persisted there after a cold profile. Caller-named workloads
+    /// ([`SimEngine::workload_from_matrices`]) stay memory-only — their keys
+    /// don't describe the matrices, so persisting them could alias.
+    pub fn with_disk_cache(mut self, disk: DiskCache) -> Self {
+        self.disk = Some(disk);
+        self
+    }
+
+    /// The attached on-disk cache tier, if any.
+    pub fn disk_cache(&self) -> Option<&DiskCache> {
+        self.disk.as_ref()
+    }
+
     /// How many profile passes this engine has actually executed (cache
-    /// misses); hits do not increment.
+    /// misses); in-memory and disk hits do not increment.
     pub fn profiles_run(&self) -> u64 {
         self.profiles_run.load(Ordering::Relaxed)
+    }
+
+    /// How many workloads were loaded from the disk tier instead of being
+    /// synthesised and profiled.
+    pub fn disk_hits(&self) -> u64 {
+        self.disk_hits.load(Ordering::Relaxed)
+    }
+
+    /// How many freshly profiled workloads were persisted to the disk tier.
+    pub fn disk_stores(&self) -> u64 {
+        self.disk_stores.load(Ordering::Relaxed)
     }
 
     /// Number of cache slots (profiled or currently being profiled).
@@ -210,6 +270,16 @@ impl SimEngine {
         if let Some(w) = &*filled {
             return Ok(Arc::clone(w));
         }
+        // Disk tier: a valid artifact replaces synthesis + profiling with a
+        // single sequential read (a bad one was evicted and reads as a miss).
+        if let Some(disk) = &self.disk {
+            if let Some(w) = disk.load_workload(&canonical, self.profile_threads) {
+                self.disk_hits.fetch_add(1, Ordering::Relaxed);
+                let w = Arc::new(w);
+                *filled = Some(Arc::clone(&w));
+                return Ok(w);
+            }
+        }
         let a = if canonical.scale <= 1 {
             spec.generate(canonical.seed)
         } else {
@@ -217,6 +287,12 @@ impl SimEngine {
         };
         let w = Arc::new(profile_workload_parallel(&a, &a, self.profile_threads));
         self.profiles_run.fetch_add(1, Ordering::Relaxed);
+        // Publish best-effort: a full disk must not fail the sweep.
+        if let Some(disk) = &self.disk {
+            if disk.store_workload(&canonical, self.profile_threads, &w).is_ok() {
+                self.disk_stores.fetch_add(1, Ordering::Relaxed);
+            }
+        }
         *filled = Some(Arc::clone(&w));
         Ok(w)
     }
@@ -398,6 +474,21 @@ mod tests {
         });
         assert_eq!(engine.profiles_run(), 1);
         assert_eq!(engine.cached_workloads(), 1);
+    }
+
+    #[test]
+    fn disk_tier_hits_skip_synthesis_and_profiling() {
+        let dir = std::env::temp_dir().join(format!("maple-engine-disk-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cold = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+        let w1 = cold.workload(&small_key()).unwrap();
+        assert_eq!((cold.profiles_run(), cold.disk_hits(), cold.disk_stores()), (1, 0, 1));
+        let warm = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+        let w2 = warm.workload(&small_key()).unwrap();
+        assert_eq!((warm.profiles_run(), warm.disk_hits()), (0, 1));
+        assert_eq!(*w1, *w2);
+        assert_eq!(w1.checksum.to_bits(), w2.checksum.to_bits());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

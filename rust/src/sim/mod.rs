@@ -10,11 +10,13 @@
 //! dataset, policy) cells — run through [`engine::SimEngine`], which caches
 //! profiles and fans cells out across worker threads.
 
+pub mod cache;
 pub mod des;
 pub mod engine;
 mod profile;
 pub mod timeline;
 
+pub use cache::{CacheStats, DiskCache};
 pub use des::{simulate_des, DesResult};
 pub use engine::{EngineError, SimEngine, SweepResult, SweepSpec, WorkloadKey};
 pub use profile::{profile_workload, profile_workload_parallel, Workload};

@@ -12,7 +12,10 @@ use crate::pe::RowProfile;
 use crate::sparse::Csr;
 
 /// Everything a simulation needs to know about one `C = A × B` workload.
-#[derive(Debug, Clone)]
+/// `PartialEq` compares every field bit-for-bit (profiles and the f64
+/// checksum included) — the warm-equals-cold contract the disk cache
+/// ([`crate::sim::cache`]) tests lean on.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Workload {
     /// Output rows (= rows of A).
     pub rows: usize,
@@ -58,20 +61,25 @@ impl Workload {
 
 /// Parallel profile pass: row ranges are independent, so each worker runs
 /// the serial pass over a chunk with its own SPA and the results
-/// concatenate. Deterministic for a fixed `threads` (checksum addition is
-/// reassociated across — but not within — chunk boundaries).
+/// concatenate. Chunk boundaries are split on the **nnz prefix of A**
+/// (see [`nnz_balanced_bounds`]), not the row count: Gustavson work per row
+/// is proportional to its nnz, so row-count splitting degrades badly on
+/// power-law workloads where a few heavy rows pile into one chunk.
+/// Deterministic for a fixed `threads` (the bounds are a pure function of
+/// `(row_ptr, threads)`; checksum addition is reassociated across — but not
+/// within — chunk boundaries).
 pub fn profile_workload_parallel(a: &Csr, b: &Csr, threads: usize) -> Workload {
     assert_eq!(a.cols(), b.rows(), "dimension mismatch");
     let threads = threads.clamp(1, a.rows().max(1));
     if threads == 1 {
         return profile_workload(a, b);
     }
-    let chunk = a.rows().div_ceil(threads);
+    let bounds = nnz_balanced_bounds(a, threads);
     let parts: Vec<(Vec<RowProfile>, u64, u64, f64)> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..threads)
-            .map(|t| {
-                let lo = t * chunk;
-                let hi = ((t + 1) * chunk).min(a.rows());
+        let handles: Vec<_> = bounds
+            .windows(2)
+            .map(|w| {
+                let (lo, hi) = (w[0], w[1]);
                 scope.spawn(move || profile_rows(a, b, lo, hi))
             })
             .collect();
@@ -96,6 +104,27 @@ pub fn profile_workload_parallel(a: &Csr, b: &Csr, threads: usize) -> Workload {
         profiles,
         checksum,
     }
+}
+
+/// Chunk boundaries for the parallel profile pass, balanced on A's nnz
+/// prefix — which is exactly `row_ptr`, so no extra pass is needed: chunk
+/// `t` starts at the first row whose offset reaches `t·nnz/threads`. Every
+/// chunk therefore carries at most `⌈nnz/threads⌉ + max_row_nnz` nonzeros,
+/// no matter how skewed the row-length distribution is. Monotone, starts at
+/// 0, ends at `rows` (chunks over trailing empty rows may be empty).
+fn nnz_balanced_bounds(a: &Csr, threads: usize) -> Vec<usize> {
+    let rows = a.rows();
+    let nnz = a.nnz();
+    let mut bounds = Vec::with_capacity(threads + 1);
+    bounds.push(0usize);
+    for t in 1..threads {
+        let target = nnz as u128 * t as u128 / threads as u128;
+        let cut = a.row_ptr.partition_point(|&p| (p as u128) < target).min(rows);
+        let prev = *bounds.last().expect("bounds non-empty");
+        bounds.push(cut.max(prev));
+    }
+    bounds.push(rows);
+    bounds
 }
 
 /// Run the profile pass for `C = A × B`.
@@ -149,17 +178,21 @@ fn profile_rows(a: &Csr, b: &Csr, lo: usize, hi: usize) -> (Vec<RowProfile>, u64
             for p in 0..bc.len() {
                 // SAFETY: p < bc.len() == bv.len(); col ids validated < cols.
                 let (j, v) = unsafe { (*bc.get_unchecked(p), *bv.get_unchecked(p)) };
+                let prod = av * v;
                 let cell = unsafe { spa.get_unchecked_mut(j as usize) };
                 if cell.0 == generation {
-                    cell.1 += av * v;
+                    cell.1 += prod;
                 } else {
-                    *cell = (generation, av * v);
+                    *cell = (generation, prod);
                     touched.push(j);
                 }
             }
         }
         for &j in &touched {
-            checksum += spa[j as usize].1 as f64;
+            // SAFETY: every j in `touched` was bounds-validated (< cols)
+            // when the lane loop pushed it, so the drain can skip the
+            // bounds check too.
+            checksum += unsafe { spa.get_unchecked(j as usize) }.1 as f64;
         }
         out_nnz += touched.len() as u64;
         total_products += products;
@@ -224,6 +257,51 @@ mod tests {
             // Checksum reassociates across chunks: equal within fp noise.
             assert!(
                 (par.checksum - serial.checksum).abs() < 1e-6 * serial.checksum.abs().max(1.0),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_are_nnz_balanced_and_deterministic() {
+        let a = generate(2000, 2000, 40_000, Profile::PowerLaw { alpha: 0.9 }, 5);
+        let threads = 8;
+        let bounds = nnz_balanced_bounds(&a, threads);
+        assert_eq!(bounds, nnz_balanced_bounds(&a, threads), "bounds must be deterministic");
+        assert_eq!(bounds.len(), threads + 1);
+        assert_eq!(bounds[0], 0);
+        assert_eq!(*bounds.last().unwrap(), a.rows());
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds monotone: {bounds:?}");
+        // The balance guarantee: no chunk exceeds its fair nnz share by more
+        // than one (indivisible) row.
+        let max_row = (0..a.rows()).map(|i| a.row_nnz(i)).max().unwrap();
+        let fair = a.nnz().div_ceil(threads);
+        for w in bounds.windows(2) {
+            let chunk_nnz = a.row_ptr[w[1]] - a.row_ptr[w[0]];
+            assert!(
+                chunk_nnz <= fair + max_row,
+                "chunk {w:?} holds {chunk_nnz} nnz (fair {fair}, max row {max_row})"
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_and_empty_rows_profile_identically_in_parallel() {
+        // One very heavy row up front, a sea of empty rows, one trailing
+        // nonzero: the worst case for row-count chunking and an edge case
+        // for nnz-prefix cuts (all cuts land on the same boundary).
+        let mut t: Vec<(u32, u32, f32)> = (0..400u32).map(|j| (0, j, 1.0 + j as f32)).collect();
+        t.push((499, 3, 2.0));
+        let a = Csr::from_triplets(500, 500, t);
+        let serial = profile_workload(&a, &a);
+        for threads in [2, 3, 8, 500] {
+            let par = profile_workload_parallel(&a, &a, threads);
+            assert_eq!(par.profiles, serial.profiles, "threads={threads}");
+            assert_eq!(par.out_nnz, serial.out_nnz);
+            assert_eq!(par.total_products, serial.total_products);
+            assert!(
+                (par.checksum - serial.checksum).abs()
+                    < 1e-6 * serial.checksum.abs().max(1.0),
                 "threads={threads}"
             );
         }

@@ -1,0 +1,227 @@
+//! Integration coverage for the persistent workload cache: codec property
+//! round-trips over generated matrices/workloads (empty and rectangular
+//! included), corruption / truncation / version-bump rejection with
+//! store-level eviction-and-recompute, warm-vs-cold byte identity of a full
+//! engine sweep, and the warm-start speedup acceptance gate (a warm
+//! `workload()` must eliminate the synthesis + profile stage, ≥5×).
+//!
+//! Same property-test discipline as `proptest_invariants.rs`: no proptest
+//! crate, deterministic SplitMix64-driven case sweeps, failures print the
+//! offending seed.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use maple::sim::cache::{
+    decode_csr, decode_workload, encode_csr, encode_workload, CodecError, DiskCache,
+    CODEC_VERSION,
+};
+use maple::sim::{profile_workload, SimEngine, SweepSpec, WorkloadKey};
+use maple::sparse::gen::{generate, Profile};
+use maple::sparse::{Csr, SplitMix64};
+
+/// A fresh per-test scratch cache directory (tests run concurrently in one
+/// process, so the tag keeps them disjoint).
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("maple-cache-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Random CSR (possibly rectangular, possibly near-empty) from a seed.
+fn arb_matrix(seed: u64) -> Csr {
+    let mut r = SplitMix64::new(seed);
+    let rows = 1 + r.below(80) as usize;
+    let cols = 1 + r.below(80) as usize;
+    let nnz = r.below((rows * cols / 2).max(1) as u64) as usize;
+    let profile = match r.below(3) {
+        0 => Profile::Uniform,
+        1 => Profile::PowerLaw { alpha: 0.5 + r.unit_f64() },
+        _ => Profile::Banded { rel_bandwidth: 0.1, cluster: 1 + r.below(4) as usize },
+    };
+    generate(rows, cols, nnz.max(1), profile, seed.wrapping_mul(0x9E37_79B9))
+}
+
+#[test]
+fn prop_csr_codec_round_trips_bit_exact() {
+    for seed in 0..60 {
+        let a = arb_matrix(seed);
+        let decoded = decode_csr(&encode_csr(&a)).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(decoded, a, "seed {seed}");
+        // Value bits survive exactly (no float round-trip through text).
+        for (dv, av) in decoded.value.iter().zip(&a.value) {
+            assert_eq!(dv.to_bits(), av.to_bits(), "seed {seed}");
+        }
+    }
+    // Degenerate shapes the generator never emits.
+    for m in [Csr::zero(5, 3), Csr::zero(1, 1), Csr::identity(17)] {
+        assert_eq!(decode_csr(&encode_csr(&m)).unwrap(), m);
+    }
+}
+
+#[test]
+fn prop_workload_codec_round_trips_bit_exact() {
+    for seed in 0..40 {
+        let mut r = SplitMix64::new(seed ^ 0xABCD);
+        let m = 1 + r.below(50) as usize;
+        let k = 1 + r.below(50) as usize;
+        let n = 1 + r.below(50) as usize;
+        let a = generate(m, k, (m * k / 4).max(1), Profile::PowerLaw { alpha: 0.7 }, seed);
+        let b = generate(k, n, (k * n / 4).max(1), Profile::Uniform, seed + 1);
+        let w = profile_workload(&a, &b);
+        let decoded =
+            decode_workload(&encode_workload(&w)).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(decoded, w, "seed {seed}");
+        assert_eq!(decoded.checksum.to_bits(), w.checksum.to_bits(), "seed {seed}");
+    }
+    // Empty workload: 5 rows of nothing.
+    let z = Csr::zero(5, 5);
+    let w = profile_workload(&z, &z);
+    assert_eq!(decode_workload(&encode_workload(&w)).unwrap(), w);
+}
+
+#[test]
+fn corruption_truncation_and_version_bump_are_rejected() {
+    let a = generate(40, 40, 200, Profile::PowerLaw { alpha: 0.6 }, 2);
+    let clean = encode_workload(&profile_workload(&a, &a));
+
+    // Truncation at every prefix length must fail, never mis-decode.
+    for cut in 0..clean.len() {
+        assert!(decode_workload(&clean[..cut]).is_err(), "prefix of {cut} bytes accepted");
+    }
+    // Single-byte corruption anywhere must fail.
+    for pos in 0..clean.len() {
+        let mut bad = clean.clone();
+        bad[pos] ^= 0x01;
+        assert!(decode_workload(&bad).is_err(), "flip at byte {pos} accepted");
+    }
+    // A future codec version is rejected up front.
+    let mut future = clean.clone();
+    future[8..12].copy_from_slice(&(CODEC_VERSION + 7).to_le_bytes());
+    assert!(matches!(
+        decode_workload(&future),
+        Err(CodecError::VersionMismatch { found, .. }) if found == CODEC_VERSION + 7
+    ));
+}
+
+#[test]
+fn bad_cache_file_is_evicted_and_recomputed() {
+    let dir = scratch_dir("evict-recompute");
+    let key = WorkloadKey::suite("wv", 7, 64);
+
+    let cold = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let w_cold = cold.workload(&key).unwrap();
+    assert_eq!((cold.profiles_run(), cold.disk_stores()), (1, 1));
+    let path = cold.disk_cache().unwrap().workload_path(&key, 1);
+    assert!(path.exists());
+
+    // Corrupt the stored artifact in place.
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+
+    // A fresh engine must not trust it: evict, recompute, re-publish.
+    let warm = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let w2 = warm.workload(&key).unwrap();
+    assert_eq!(warm.disk_hits(), 0, "corrupt artifact must read as a miss");
+    assert_eq!(warm.profiles_run(), 1, "must recompute after eviction");
+    assert_eq!(warm.disk_stores(), 1, "must re-publish the good artifact");
+    assert_eq!(*w2, *w_cold);
+
+    // And the re-published artifact is trusted again.
+    let third = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let w3 = third.workload(&key).unwrap();
+    assert_eq!((third.profiles_run(), third.disk_hits()), (0, 1));
+    assert_eq!(*w3, *w_cold);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_sweep_cell_is_byte_identical_to_cold() {
+    let dir = scratch_dir("warm-vs-cold");
+    let spec = SweepSpec::paper(vec![
+        WorkloadKey::suite("wv", 7, 64),
+        WorkloadKey::suite("fb", 7, 64),
+    ]);
+
+    let cold_engine = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let cold = cold_engine.sweep(&spec).unwrap();
+    assert_eq!(cold_engine.profiles_run(), 2);
+    assert_eq!(cold_engine.disk_hits(), 0);
+
+    let warm_engine = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let warm = warm_engine.sweep(&spec).unwrap();
+    assert_eq!(warm_engine.profiles_run(), 0, "warm sweep must not profile");
+    assert_eq!(warm_engine.disk_hits(), 2, "both datasets must load from disk");
+
+    // `SweepResult: PartialEq` compares every SimResult field bit-for-bit.
+    assert_eq!(cold, warm);
+    for (d, c, p, r) in cold.iter() {
+        assert_eq!(r.checksum.to_bits(), warm.get(d, c, p).checksum.to_bits());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn warm_start_eliminates_synthesis_and_profiling() {
+    // The acceptance gate: on a warm run the synthesis + profile stage is
+    // replaced by one artifact read, which must be at least 5× faster (in
+    // practice it is orders of magnitude). wikiVote at full Table-I size:
+    // ~8.3K rows, ~104K nnz, ~1.3M products cold vs a ~130 KB read warm.
+    let dir = scratch_dir("speedup-gate");
+    let key = WorkloadKey::suite("wv", 7, 1);
+
+    let cold_engine = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let t0 = Instant::now();
+    let w_cold = cold_engine.workload(&key).unwrap();
+    let cold = t0.elapsed();
+    assert_eq!((cold_engine.profiles_run(), cold_engine.disk_stores()), (1, 1));
+
+    let warm_engine = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let t1 = Instant::now();
+    let w_warm = warm_engine.workload(&key).unwrap();
+    let warm = t1.elapsed();
+    assert_eq!((warm_engine.profiles_run(), warm_engine.disk_hits()), (0, 1));
+
+    // Byte-identical results...
+    assert_eq!(*w_warm, *w_cold);
+    assert_eq!(w_warm.checksum.to_bits(), w_cold.checksum.to_bits());
+    // ...and the stage itself is gone.
+    assert!(
+        warm <= cold / 5,
+        "warm start must be ≥5× faster: cold {cold:?} vs warm {warm:?}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn nnz_balanced_parallel_profiling_matches_serial_through_the_engine() {
+    // The profile-chunk count is part of the determinism contract *and* the
+    // disk key: engines at different chunk counts keep separate artifacts,
+    // and each warm load reproduces its own cold bytes exactly.
+    let dir = scratch_dir("chunked-profiles");
+    let key = WorkloadKey::suite("wv", 11, 64);
+    let serial = SimEngine::new().workload(&key).unwrap();
+    for chunks in [2usize, 4, 7] {
+        let cold = SimEngine::new()
+            .with_profile_threads(chunks)
+            .with_disk_cache(DiskCache::new(&dir).unwrap());
+        let w = cold.workload(&key).unwrap();
+        assert_eq!(w.profiles, serial.profiles, "chunks={chunks}");
+        assert_eq!(w.out_nnz, serial.out_nnz);
+        assert_eq!(w.total_products, serial.total_products);
+        assert!(
+            (w.checksum - serial.checksum).abs() < 1e-6 * serial.checksum.abs().max(1.0),
+            "chunks={chunks}"
+        );
+        let warm = SimEngine::new()
+            .with_profile_threads(chunks)
+            .with_disk_cache(DiskCache::new(&dir).unwrap());
+        let w2 = warm.workload(&key).unwrap();
+        assert_eq!((warm.profiles_run(), warm.disk_hits()), (0, 1), "chunks={chunks}");
+        assert_eq!(w2.checksum.to_bits(), w.checksum.to_bits(), "chunks={chunks}");
+        assert_eq!(*w2, *w);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
