@@ -5,8 +5,10 @@
 //! 2. run `C = A × A` through all four accelerator configurations via one
 //!    [`SimEngine`] sweep (each dataset profiled exactly once, all
 //!    56 cells concurrent),
-//! 3. cross-check numerics against the software Gustavson reference, and
-//!    — when built `--features runtime` and `artifacts/` exist — against
+//! 3. cross-check numerics against the software Gustavson reference; the
+//!    analytic cycle model against the transaction-level DES (a
+//!    `CellModel::Both` sweep, asserting the documented agreement band);
+//!    and — when built `--features runtime` and `artifacts/` exist —
 //!    the AOT-compiled Pallas datapath executed via PJRT (no Python at
 //!    runtime),
 //! 4. print Fig. 9(a)+(b) rows and the paper-style means, plus the Fig. 8
@@ -24,7 +26,7 @@
 
 use maple::config::AcceleratorConfig;
 use maple::report::{fig9_report, fig9_rows_from_sweep, Fig9Row};
-use maple::sim::{SimEngine, SweepSpec, WorkloadKey};
+use maple::sim::{CellModel, SimEngine, SweepSpec, WorkloadKey};
 use maple::sparse::suite;
 
 /// Cross-check 2: replay a few rows of a small workload through the
@@ -129,7 +131,7 @@ fn main() {
     for (d, key) in keys.iter().enumerate() {
         let w = engine.workload(key).expect("cached workload");
         for c in 0..grid.configs.len() {
-            let r = grid.get(d, c, 0);
+            let r = &grid.get(d, c, 0).analytic;
             assert_eq!(r.out_nnz, w.out_nnz, "{}/{}: out_nnz mismatch", key.dataset, r.config);
             assert_eq!(r.checksum, w.checksum, "{}/{}: checksum mismatch", key.dataset, r.config);
         }
@@ -172,6 +174,20 @@ fn main() {
         "Extensor+Maple : {:.0}% energy benefit, {:.0}% speedup",
         mean(&extensor, |r| r.energy_benefit_pct),
         mean(&extensor, |r| r.speedup_pct)
+    );
+
+    // Cross-check 3: the transaction-level DES against the analytic model
+    // on the first four datasets (a `CellModel::Both` sweep — the datasets
+    // are already profile-cached, so only the event simulations run).
+    let crossval_keys: Vec<WorkloadKey> = keys.iter().take(4).cloned().collect();
+    let xval = engine
+        .sweep(&SweepSpec::paper(crossval_keys).with_cell_model(CellModel::Both))
+        .expect("DES cross-validation sweep");
+    println!("{}", maple::report::des_validation_report(&xval, true));
+    assert!(
+        xval.des_out_of_band().is_empty(),
+        "DES left the documented agreement band: {:?}",
+        xval.des_out_of_band()
     );
 
     // Verification summary across all runs.

@@ -31,7 +31,7 @@ fn main() {
     );
     let sweep = |configs: Vec<AcceleratorConfig>, policies: Vec<Policy>| {
         engine
-            .sweep(&SweepSpec { configs, datasets: vec![key.clone()], policies })
+            .sweep(&SweepSpec::new(configs, vec![key.clone()], policies))
             .expect("ablation sweep")
     };
 
@@ -52,7 +52,7 @@ fn main() {
         .collect();
     let grid = sweep(configs.clone(), vec![Policy::RoundRobin]);
     for (i, (&k, cfg)) in ks.iter().zip(&configs).enumerate() {
-        let r = grid.get(0, i, 0);
+        let r = &grid.get(0, i, 0).analytic;
         println!(
             "{:>8} {:>6} {:>12} {:>12.2} {:>9.1}",
             k,
@@ -77,7 +77,7 @@ fn main() {
         .collect();
     let grid = sweep(configs, vec![Policy::RoundRobin]);
     for (i, &psb) in depths.iter().enumerate() {
-        let r = grid.get(0, i, 0);
+        let r = &grid.get(0, i, 0).analytic;
         println!("{:>8} {:>12} {:>12}", psb, r.cycles_compute, r.counters.arb_read);
     }
 
@@ -95,7 +95,7 @@ fn main() {
         .collect();
     let grid = sweep(configs, vec![Policy::RoundRobin]);
     for (i, &p) in passes.iter().enumerate() {
-        let r = grid.get(0, i, 0);
+        let r = &grid.get(0, i, 0).analytic;
         println!(
             "{:>8} {:>12} {:>14.2}",
             p,
@@ -109,7 +109,7 @@ fn main() {
     let policies = [Policy::RoundRobin, Policy::Chunked, Policy::GreedyBalance];
     let grid = sweep(vec![AcceleratorConfig::extensor_maple()], policies.to_vec());
     for (i, policy) in policies.iter().enumerate() {
-        let r = grid.get(0, 0, i);
+        let r = &grid.get(0, 0, i).analytic;
         println!("{:>14} {:>12} {:>9.3}", format!("{policy:?}"), r.cycles_compute, r.balance);
     }
 

@@ -1,9 +1,11 @@
 //! Bench: transaction-level DES vs the analytic pipeline model — the
-//! methodology check behind every Fig.-9(b) number (DESIGN.md §4 `sim/`).
-//! Prints, per dataset family and configuration, both cycle counts and
-//! their ratio; the DES includes DRAM/NoC fetch latency the analytic model
-//! idealises, so ratios sit modestly above 1.0 and both models must agree
-//! on the Maple-vs-baseline winner.
+//! methodology check behind every Fig.-9(b) number (DESIGN.md §4 `sim/`),
+//! now running through the engine's `CellModel::Both` sweep path: one
+//! cross-validation sweep over four dataset families × the four paper
+//! configurations, warm-started from the on-disk workload cache like every
+//! other engine bench. Prints, per cell, both cycle counts, their
+//! agreement ratio, DES utilisation/skew, and the in-band verdict; the
+//! fixed DES semantics guarantee DES ≥ analytic in every cell.
 //!
 //! ```text
 //! cargo bench --bench des_validation
@@ -13,68 +15,53 @@ include!("harness.rs");
 
 use maple::config::AcceleratorConfig;
 use maple::coordinator::Policy;
-use maple::sim::{profile_workload, simulate_des, simulate_workload};
+use maple::report::des_validation_report;
+use maple::sim::{simulate_des, CellModel, SweepSpec, WorkloadKey};
 
 fn main() {
     let scale = bench_scale();
-    println!("=== DES vs analytic cycle model (scale 1/{scale}) ===\n");
+    println!("=== DES vs analytic cycle model (scale 1/{scale}, engine sweep) ===\n");
+
+    let engine = bench_engine();
+    let keys: Vec<WorkloadKey> = ["wg", "of", "sc", "wv"]
+        .iter()
+        .map(|&n| WorkloadKey::suite(n, 7, scale.max(32)))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let grid = engine
+        .sweep(&SweepSpec::paper(keys).with_cell_model(CellModel::Both))
+        .expect("cross-validation sweep");
+    let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
+    print!("{}", des_validation_report(&grid, true));
     println!(
-        "{:<8} {:<22} {:>12} {:>12} {:>12} {:>7} {:>7} {:>12}",
-        "dataset", "config", "analytic", "fetch-bnd", "DES", "ratio", "util%", "regime"
+        "\n{} Both-model cells in {sweep_ms:.0} ms; {} out of band",
+        grid.cell_count(),
+        grid.des_out_of_band().len()
     );
+
+    // Winner agreement within each (baseline, maple) pair under the DES.
     let mut agreements = 0;
     let mut comparisons = 0;
-    for name in ["wg", "of", "sc", "wv"] {
-        let spec = maple::sparse::suite::by_name(name).unwrap();
-        let a = spec.generate_scaled(7, scale.max(32));
-        let w = profile_workload(&a, &a);
-        // The DES models the *un-idealised* fetch path: every row pulls its
-        // own operands (2·a_nnz + 2·products words) from DRAM, so its lower
-        // bound is that volume over the port bandwidth — not the compulsory
-        // bound the analytic energy model idealises (DESIGN.md §6b.1).
-        let fetch_words: u64 =
-            w.profiles.iter().map(|p| 2 * p.a_nnz as u64 + 2 * p.products).sum();
-        let mut rows = Vec::new();
-        for cfg in AcceleratorConfig::paper_configs() {
-            let analytic = simulate_workload(&cfg, &w, Policy::RoundRobin);
-            let fetch_bound = (fetch_words as f64 / cfg.dram.words_per_cycle).ceil() as u64;
-            let expected = analytic.cycles_compute.max(fetch_bound);
-            let des = simulate_des(&cfg, &w, Policy::RoundRobin);
-            let regime = if fetch_bound > analytic.cycles_compute { "fetch" } else { "datapath" };
-            println!(
-                "{:<8} {:<22} {:>12} {:>12} {:>12} {:>7.2} {:>7.1} {:>12}",
-                name,
-                cfg.name,
-                analytic.cycles_compute,
-                fetch_bound,
-                des.cycles,
-                des.cycles as f64 / expected as f64,
-                100.0 * des.pe_utilisation,
-                regime
-            );
-            rows.push((expected, des.cycles, regime));
-        }
-        // Winner agreement within each pair, on the bound-aware expectation.
-        for pair in [(0usize, 1usize), (2, 3)] {
+    for d in 0..grid.datasets.len() {
+        for (base_ix, maple_ix) in [(0usize, 1usize), (2, 3)] {
             comparisons += 1;
-            let expect_maple_wins_or_ties = rows[pair.1].0 <= rows[pair.0].0;
+            let (b, m) = (grid.get(d, base_ix, 0), grid.get(d, maple_ix, 0));
+            let analytic_maple_wins =
+                m.analytic.cycles_compute <= b.analytic.cycles_compute;
             // Allow 2% slack for event-ordering noise when DRAM-saturated.
-            let des_maple_wins_or_ties =
-                rows[pair.1].1 as f64 <= rows[pair.0].1 as f64 * 1.02;
-            if expect_maple_wins_or_ties == des_maple_wins_or_ties {
+            let des_maple_wins = m.des.as_ref().unwrap().cycles as f64
+                <= b.des.as_ref().unwrap().cycles as f64 * 1.02;
+            if analytic_maple_wins == des_maple_wins {
                 agreements += 1;
             }
         }
     }
-    println!(
-        "\nbound-aware winner agreement: {agreements}/{comparisons} comparisons \
-         (DES ratio ≈ 1 in the fetch regime, 1–2 in the datapath regime)"
-    );
+    println!("winner agreement: {agreements}/{comparisons} (baseline, maple) pairs");
+    report_cache_line(&engine);
 
-    // DES throughput.
-    let spec = maple::sparse::suite::by_name("wv").unwrap();
-    let a = spec.generate_scaled(7, 4);
-    let w = profile_workload(&a, &a);
+    // DES throughput on a profile-cached workload.
+    let key = WorkloadKey::suite("wv", 7, 4);
+    let w = engine.workload(&key).expect("wv workload");
     let cfg = AcceleratorConfig::extensor_maple();
     let (iters, total) = measure(std::time::Duration::from_millis(700), || {
         std::hint::black_box(simulate_des(&cfg, &w, Policy::RoundRobin).cycles);

@@ -56,7 +56,7 @@ fn main() {
     );
     for (i, key) in keys.iter().enumerate() {
         let w = engine.workload(key).expect("cached");
-        let (eb, em) = (grid.get(i, 2, 0), grid.get(i, 3, 0));
+        let (eb, em) = (&grid.get(i, 2, 0).analytic, &grid.get(i, 3, 0).analytic);
         println!(
             "{:<20} {:>12} {:>10} {:>8.2} {:>14.1}",
             key.dataset,

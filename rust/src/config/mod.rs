@@ -27,6 +27,10 @@ pub enum PeKind {
     Maple,
 }
 
+/// Loader FIFO depth all paper presets use, and the fallback for configs
+/// serialised before the knob existed (`[pe] prefetch_depth` in TOML).
+pub const DEFAULT_PREFETCH_DEPTH: usize = 6;
+
 /// Processing-element micro-architecture parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PeConfig {
@@ -50,6 +54,12 @@ pub struct PeConfig {
     pub queue_bytes: usize,
     /// PEB bytes per PE (Extensor baseline only).
     pub peb_bytes: usize,
+    /// Operand-loader FIFO depth in rows: how many rows the stream
+    /// prefetcher (SpAL/SpBL/LLB, or Maple's ARB/BRB fill path) may have
+    /// fetched-but-not-yet-computing per PE. The DES enforces this as a
+    /// hard buffer credit (fetched-and-waiting + in-flight fetches never
+    /// exceed it); the analytic model idealises fetch away and ignores it.
+    pub prefetch_depth: usize,
 }
 
 impl PeConfig {
@@ -116,6 +126,7 @@ impl AcceleratorConfig {
                 num_queues,
                 queue_bytes: 48 << 10, // 12 × 4 KiB
                 peb_bytes: 0,
+                prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             },
             num_pes: 8,
             l1_bytes: 256 << 10, // SpAL + SpBL, 128 KiB each
@@ -143,6 +154,7 @@ impl AcceleratorConfig {
                 num_queues: 0,
                 queue_bytes: 0,
                 peb_bytes: 0,
+                prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             },
             num_pes: 4,
             l1_bytes: 0, // "consists of one memory level" (§IV.B.1)
@@ -170,6 +182,7 @@ impl AcceleratorConfig {
                 num_queues: 0,
                 queue_bytes: 0,
                 peb_bytes: 80 << 10,
+                prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             },
             num_pes: 128,
             l1_bytes: 2 << 20,  // LLB
@@ -198,6 +211,7 @@ impl AcceleratorConfig {
                 num_queues: 0,
                 queue_bytes: 0,
                 peb_bytes: 0,
+                prefetch_depth: DEFAULT_PREFETCH_DEPTH,
             },
             num_pes: 8,
             l1_bytes: 2 << 20, // LLB retained

@@ -2,7 +2,7 @@
 //! integers, floats) — the offline build has no external TOML dependency
 //! (DESIGN.md §Dependencies). Only what [`AcceleratorConfig`] needs.
 
-use super::{AcceleratorConfig, AcceleratorKind, PeConfig, PeKind};
+use super::{AcceleratorConfig, AcceleratorKind, PeConfig, PeKind, DEFAULT_PREFETCH_DEPTH};
 use crate::mem::DramParams;
 use crate::noc::Topology;
 use std::collections::BTreeMap;
@@ -91,6 +91,19 @@ fn get_usize(m: &BTreeMap<String, Value>, k: &'static str) -> Result<usize, Conf
     }
 }
 
+/// Optional integer key with a default — for fields added after configs
+/// were already written to disk (absent → `default`, wrong type → error).
+fn get_usize_or(
+    m: &BTreeMap<String, Value>,
+    k: &'static str,
+    default: usize,
+) -> Result<usize, ConfigError> {
+    match m.get(k) {
+        None => Ok(default),
+        Some(_) => get_usize(m, k),
+    }
+}
+
 fn get_f64(m: &BTreeMap<String, Value>, k: &'static str) -> Result<f64, ConfigError> {
     match m.get(k) {
         Some(Value::Float(f)) => Ok(*f),
@@ -133,6 +146,7 @@ pub fn to_toml(c: &AcceleratorConfig) -> String {
     s.push_str(&format!("num_queues = {}\n", c.pe.num_queues));
     s.push_str(&format!("queue_bytes = {}\n", c.pe.queue_bytes));
     s.push_str(&format!("peb_bytes = {}\n", c.pe.peb_bytes));
+    s.push_str(&format!("prefetch_depth = {}\n", c.pe.prefetch_depth));
     s.push_str("\n[noc]\n");
     match c.noc {
         Topology::Crossbar { ports } => {
@@ -185,6 +199,7 @@ pub fn from_toml(s: &str) -> Result<AcceleratorConfig, ConfigError> {
             num_queues: get_usize(&m, "pe.num_queues")?,
             queue_bytes: get_usize(&m, "pe.queue_bytes")?,
             peb_bytes: get_usize(&m, "pe.peb_bytes")?,
+            prefetch_depth: get_usize_or(&m, "pe.prefetch_depth", DEFAULT_PREFETCH_DEPTH)?,
         },
         num_pes: get_usize(&m, "num_pes")?,
         l1_bytes: get_usize(&m, "l1_bytes")?,
@@ -232,6 +247,19 @@ mod tests {
         let s = to_toml(&c);
         assert!(s.contains("model = \"custom-pe\""));
         assert_eq!(from_toml(&s).unwrap(), c);
+    }
+
+    #[test]
+    fn prefetch_depth_defaults_when_absent() {
+        // Configs serialised before the knob existed still parse (loader
+        // FIFO depth defaults to the preset value of 6).
+        let mut s = to_toml(&AcceleratorConfig::extensor_maple());
+        s = s.lines().filter(|l| !l.starts_with("prefetch_depth")).collect::<Vec<_>>().join("\n");
+        assert_eq!(from_toml(&s).unwrap().pe.prefetch_depth, 6);
+        // And an explicit value round-trips.
+        let mut c = AcceleratorConfig::matraptor_maple();
+        c.pe.prefetch_depth = 2;
+        assert_eq!(from_toml(&to_toml(&c)).unwrap(), c);
     }
 
     #[test]

@@ -72,7 +72,8 @@ pub mod prelude {
     pub use crate::energy::{EnergyBreakdown, TechModel};
     pub use crate::gustavson::spgemm_rowwise;
     pub use crate::sim::{
-        simulate_spmspm, DiskCache, SimEngine, SimResult, SweepResult, SweepSpec, WorkloadKey,
+        simulate_spmspm, CellModel, CellResult, DesResult, DiskCache, SimEngine, SimResult,
+        SweepResult, SweepSpec, WorkloadKey,
     };
     pub use crate::sparse::{Coo, Csc, Csr};
 }

@@ -25,7 +25,7 @@
 use maple::config::AcceleratorConfig;
 use maple::coordinator::Policy;
 use maple::report;
-use maple::sim::{DiskCache, SimEngine, SweepSpec, WorkloadKey};
+use maple::sim::{CellModel, DiskCache, SimEngine, SweepSpec, WorkloadKey};
 use maple::sparse::suite;
 
 /// Dependency-free CLI error type.
@@ -84,7 +84,12 @@ COMMANDS:
                            Fig. 9 (energy benefit + speedup per dataset)
   simulate --config <preset|file.toml> --dataset <name>
            [--scale N] [--seed S] [--policy round-robin|chunked|greedy]
+           [--cell-model analytic|des|both]
   sweep  --dataset <name> [--macs 1,2,4,...] [--scale N] [--seed S]
+           [--cell-model analytic|des|both]
+  crossval [--scale N] [--datasets wv,fb,...] [--seed S] [--policy P]
+           DES vs analytic cross-validation over the four paper configs;
+           exits non-zero if any cell leaves the documented agreement band
   cache  [stats|clear]     Inspect or empty the on-disk workload cache
   config --preset <name>   Dump a preset configuration as TOML
   validate [--artifacts DIR]
@@ -130,10 +135,14 @@ fn parse_policy(name: &str) -> CliResult<Policy> {
     }
 }
 
-/// Fig. 9 across datasets: one engine sweep — each dataset profiled once,
-/// all (config × dataset) cells in parallel.
-fn fig9(engine: &SimEngine, scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> CliResult {
-    let names: Vec<&'static str> = match datasets {
+fn parse_cell_model(args: &Args) -> CliResult<CellModel> {
+    args.opt_or("--cell-model", "analytic").parse::<CellModel>().map_err(CliError::from)
+}
+
+/// Canonical Table-I abbreviations for a `--datasets` list (comma-separated
+/// names or abbreviations); the whole suite when the flag is absent.
+fn dataset_names(datasets: Option<&str>) -> CliResult<Vec<&'static str>> {
+    match datasets {
         Some(list) => list
             .split(',')
             .map(|s| {
@@ -141,10 +150,46 @@ fn fig9(engine: &SimEngine, scale: usize, datasets: Option<&str>, seed: u64, csv
                     .map(|d| d.abbrev)
                     .ok_or_else(|| CliError::from(format!("unknown dataset {s}")))
             })
-            .collect::<Result<_, _>>()?,
-        None => suite::TABLE_I.iter().map(|d| d.abbrev).collect(),
-    };
+            .collect(),
+        None => Ok(suite::TABLE_I.iter().map(|d| d.abbrev).collect()),
+    }
+}
 
+/// DES vs analytic cross-validation: one `CellModel::Both` sweep over the
+/// four paper configurations, rendered as the agreement table; any cell
+/// outside the documented band is a hard error (the CI gate).
+fn crossval(
+    engine: &SimEngine,
+    scale: usize,
+    datasets: Option<&str>,
+    seed: u64,
+    policy: Policy,
+    csv: bool,
+) -> CliResult {
+    let names = dataset_names(datasets)?;
+    let keys = names.iter().map(|&n| WorkloadKey::suite(n, seed, scale)).collect();
+    let spec = SweepSpec::new(AcceleratorConfig::paper_configs(), keys, vec![policy])
+        .with_cell_model(CellModel::Both);
+    let grid = engine.sweep(&spec)?;
+    print!("{}", report::des_validation_report(&grid, !csv));
+    let violations = grid.des_out_of_band();
+    if !violations.is_empty() {
+        let mut msg = String::from("DES/analytic agreement violated in:");
+        for (d, c, p) in violations {
+            msg.push_str(&format!(
+                "\n  {} / {} / {:?}",
+                grid.datasets[d].dataset, grid.configs[c], grid.policies[p]
+            ));
+        }
+        return Err(msg.into());
+    }
+    Ok(())
+}
+
+/// Fig. 9 across datasets: one engine sweep — each dataset profiled once,
+/// all (config × dataset) cells in parallel.
+fn fig9(engine: &SimEngine, scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> CliResult {
+    let names = dataset_names(datasets)?;
     let keys = names.iter().map(|&n| WorkloadKey::suite(n, seed, scale)).collect();
     let grid = engine.sweep(&SweepSpec::paper(keys))?;
 
@@ -233,7 +278,9 @@ fn main() -> CliResult {
             let key = WorkloadKey::suite(dataset, seed, scale);
             let w = engine.workload(&key)?;
             let policy = parse_policy(args.opt_or("--policy", "round-robin"))?;
-            let r = engine.simulate(&cfg, &key, policy)?;
+            let model = parse_cell_model(&args)?;
+            let cell = engine.simulate_cell(&cfg, &key, policy, model)?;
+            let r = &cell.analytic;
             println!("config            : {}", r.config);
             println!("dataset           : {dataset} (scale 1/{scale})");
             println!("rows x cols       : {} x {}", w.rows, w.cols);
@@ -252,6 +299,17 @@ fn main() -> CliResult {
             println!("  dram            : {:.3} uJ", r.energy.dram_pj / 1e6);
             println!("  noc             : {:.3} uJ", r.energy.noc_pj / 1e6);
             println!("checksum          : {:.6e}", r.checksum);
+            if let Some(des) = &cell.des {
+                println!("--- DES cross-check ({model:?} cell model) ---");
+                println!("cycles (DES)      : {}", des.cycles);
+                println!("DES/analytic      : {:.3}", cell.agreement_ratio().unwrap_or(0.0));
+                println!("DES PE util       : {:.1}%", 100.0 * des.pe_utilisation);
+                println!("DES finish skew   : {:.2}", des.finish_skew());
+                println!(
+                    "agreement band    : {}",
+                    if cell.des_in_band() == Some(true) { "in band" } else { "OUT OF BAND" }
+                );
+            }
         }
         "sweep" => {
             let dataset = args.opt_or("--dataset", "wikiVote");
@@ -272,25 +330,39 @@ fn main() -> CliResult {
                 })
                 .collect();
             let engine = make_engine(&args);
-            let grid = engine.sweep(&SweepSpec {
-                configs: configs.clone(),
-                datasets: vec![WorkloadKey::suite(dataset, seed, scale)],
-                policies: vec![Policy::RoundRobin],
-            })?;
+            let model = parse_cell_model(&args)?;
+            let grid = engine.sweep(
+                &SweepSpec::new(
+                    configs.clone(),
+                    vec![WorkloadKey::suite(dataset, seed, scale)],
+                    vec![Policy::RoundRobin],
+                )
+                .with_cell_model(model),
+            )?;
             let header = ["MACs/PE", "cycles", "speedup vs k=1", "energy uJ", "util %"];
             let mut rows = Vec::new();
             let mut base_cycles = 0u64;
             for (i, (&k, cfg)) in macs.iter().zip(&configs).enumerate() {
-                let r = grid.get(0, i, 0);
+                // `--cell-model des` makes the event-driven counts the
+                // ones in the table (cycles, speedup, and the DES's own
+                // front-stage occupancy as util); energy always comes from
+                // the analytic model (the DES resolves timing only).
+                let cell = grid.get(0, i, 0);
+                let cycles = grid.cell_cycles(0, i, 0);
+                let r = &cell.analytic;
+                let util = match (model, &cell.des) {
+                    (CellModel::Des, Some(des)) => des.pe_utilisation,
+                    _ => r.mac_utilisation(cfg),
+                };
                 if base_cycles == 0 {
-                    base_cycles = r.cycles_compute;
+                    base_cycles = cycles;
                 }
                 rows.push(vec![
                     k.to_string(),
-                    r.cycles_compute.to_string(),
-                    format!("{:.2}x", base_cycles as f64 / r.cycles_compute as f64),
+                    cycles.to_string(),
+                    format!("{:.2}x", base_cycles as f64 / cycles as f64),
                     format!("{:.3}", r.energy.total_pj() / 1e6),
-                    format!("{:.1}", 100.0 * r.mac_utilisation(cfg)),
+                    format!("{:.1}", 100.0 * util),
                 ]);
             }
             let out = if md {
@@ -299,6 +371,16 @@ fn main() -> CliResult {
                 report::csv(&header, &rows)
             };
             print!("{out}");
+            if model.runs_des() {
+                println!();
+                print!("{}", report::des_validation_report(&grid, md));
+            }
+        }
+        "crossval" => {
+            let scale = args.parse_or("--scale", 16usize)?;
+            let seed = args.parse_or("--seed", 7u64)?;
+            let policy = parse_policy(args.opt_or("--policy", "round-robin"))?;
+            crossval(&make_engine(&args), scale, args.opt("--datasets"), seed, policy, csv)?;
         }
         "cache" => {
             let cache = DiskCache::from_env()

@@ -290,6 +290,7 @@ mod tests {
             num_queues: 0,
             queue_bytes: 0,
             peb_bytes: 0,
+            prefetch_depth: crate::config::DEFAULT_PREFETCH_DEPTH,
         });
         let a = generate(20, 20, 120, Profile::Uniform, 5);
         let c_ref = spgemm_rowwise(&a, &a);

@@ -146,11 +146,61 @@ pub fn fig9_rows_from_sweep(
         .map(|d| {
             Fig9Row::from_results(
                 &sweep.datasets[d].dataset,
-                sweep.get(d, baseline, policy),
-                sweep.get(d, maple, policy),
+                &sweep.get(d, baseline, policy).analytic,
+                &sweep.get(d, maple, policy).analytic,
             )
         })
         .collect()
+}
+
+/// DES cross-validation table over a sweep that ran with
+/// [`crate::sim::CellModel::Des`] or `Both`: per dataset × config (× policy
+/// when more than one), the analytic and DES cycle counts, their agreement
+/// ratio, the DES front-stage utilisation and finish skew (from the per-PE
+/// stats), and whether the cell sits inside the documented band
+/// ([`crate::sim::agreement_band`]). Cells without a DES result (analytic
+/// sweeps) render as a single explanatory line instead.
+pub fn des_validation_report(sweep: &SweepResult, markdown: bool) -> String {
+    if sweep.iter().all(|(_, _, _, cell)| cell.des.is_none()) {
+        return "no DES cells: run the sweep with cell model `des` or `both`\n".into();
+    }
+    let multi_policy = sweep.policies.len() > 1;
+    let mut header = vec!["Dataset", "Config"];
+    if multi_policy {
+        header.push("Policy");
+    }
+    header.extend(["Analytic", "DES", "Ratio", "Util %", "Skew", "In band"]);
+    let mut in_band_cells = 0usize;
+    let mut des_cells = 0usize;
+    let rows: Vec<Vec<String>> = sweep
+        .iter()
+        .filter_map(|(d, c, p, cell)| {
+            let des = cell.des.as_ref()?;
+            des_cells += 1;
+            let in_band = cell.des_in_band() == Some(true);
+            in_band_cells += in_band as usize;
+            let mut row = vec![sweep.datasets[d].dataset.clone(), sweep.configs[c].clone()];
+            if multi_policy {
+                row.push(format!("{:?}", sweep.policies[p]));
+            }
+            row.extend([
+                cell.analytic.cycles_compute.to_string(),
+                des.cycles.to_string(),
+                format!("{:.3}", cell.agreement_ratio().unwrap_or(0.0)),
+                format!("{:.1}", 100.0 * des.pe_utilisation),
+                format!("{:.2}", des.finish_skew()),
+                if in_band { "yes" } else { "NO" }.to_string(),
+            ]);
+            Some(row)
+        })
+        .collect();
+    let mut s =
+        if markdown { markdown_table(&header, &rows) } else { csv(&header, &rows) };
+    s.push_str(&format!(
+        "\nDES/analytic agreement: {in_band_cells}/{des_cells} cells in band \
+         (DES ≥ analytic; ratio ≈ 1 when datapath-bound)\n"
+    ));
+    s
 }
 
 /// Fig. 9 report over a set of dataset rows, with the paper-style mean.
@@ -220,6 +270,26 @@ mod tests {
         }
         let c = cache_stats_report(&stats, false);
         assert!(c.lines().count() == 6 && c.starts_with("Metric,Value"));
+    }
+
+    #[test]
+    fn des_validation_report_covers_every_cell() {
+        use crate::sim::{CellModel, SimEngine, SweepSpec, WorkloadKey};
+        let engine = SimEngine::new();
+        let key = WorkloadKey::suite("wv", 7, 64);
+        let both = engine
+            .sweep(&SweepSpec::paper(vec![key.clone()]).with_cell_model(CellModel::Both))
+            .unwrap();
+        let md = des_validation_report(&both, true);
+        for cfg in &both.configs {
+            assert!(md.contains(cfg.as_str()), "missing {cfg} in:\n{md}");
+        }
+        assert!(md.contains("4/4 cells in band"), "{md}");
+        let c = des_validation_report(&both, false);
+        assert!(c.starts_with("Dataset,Config,Analytic,DES,Ratio"));
+        // An analytic sweep has nothing to cross-validate.
+        let analytic = engine.sweep(&SweepSpec::paper(vec![key])).unwrap();
+        assert!(des_validation_report(&analytic, true).starts_with("no DES cells"));
     }
 
     #[test]

@@ -5,21 +5,44 @@
 //! validation harness: a classic event-queue simulation where every row's
 //! operand fetch is a DRAM transaction with latency and port contention,
 //! every delivery crosses the NoC, and each PE is an explicit
-//! fetch → compute → drain state machine with double buffering. On small
-//! workloads the two models must agree on the datapath-bound cycle count
-//! within a documented band (`tests::des_brackets_analytic_model`) — the
-//! same methodological check Sparseloop runs against Timeloop/Accelergy
-//! cycle simulations.
+//! fetch → compute → drain state machine with a bounded loader FIFO. On
+//! small workloads the two models must agree on the datapath-bound cycle
+//! count within a documented band ([`agreement_band`],
+//! `tests::des_brackets_analytic_model`) — the same methodological check
+//! Sparseloop runs against Timeloop/Accelergy cycle simulations.
+//!
+//! # Pipeline semantics (corrected)
+//!
+//! The per-PE machine implements exactly the infinite-buffer two-stage
+//! recurrence of [`crate::sim::timeline::exact_pipeline`], plus fetch
+//! latency and a finite prefetch credit:
+//!
+//! * a row's **back** stage (merge/POB/drain) may start only once that
+//!   row's **front** (multiply) stage has finished *and* the previous back
+//!   has drained — the back cost is enqueued at `FrontDone`, never at front
+//!   start (an earlier revision enqueued it at front start, letting an idle
+//!   back stage begin a row's merge before its multiply had finished and
+//!   under-counting cycles; `tests::back_stage_waits_for_its_own_front`
+//!   pins the fix);
+//! * front-stage busy cycles are accounted at `FrontDone` — completion,
+//!   not issue — so utilisation never counts cycles that have not elapsed;
+//! * the loader FIFO holds at most `cfg.pe.prefetch_depth` rows per PE
+//!   (fetched-and-waiting **plus** in-flight fetches); a new fetch is
+//!   issued only when a credit frees up.
+//!
+//! With fetch latency zeroed and one PE the machine reproduces
+//! `exact_pipeline` cycle-for-cycle
+//! (`tests::zero_latency_single_pe_matches_exact_pipeline`).
 
 use crate::config::AcceleratorConfig;
 use crate::coordinator::{partition, split_wide_rows, Policy};
-use crate::mem::{DramModel, DramParams};
+use crate::mem::DramModel;
 use crate::noc::{Cast, Noc};
 use crate::pe::RowCost;
-use crate::sim::Workload;
+use crate::sim::{SimResult, Workload};
 use crate::trace::Counters;
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// What happens when an event fires. (`Ord` is required by the event
 /// queue's tuple key; the unique sequence number decides ties first.)
@@ -33,28 +56,130 @@ enum EventKind {
     BackDone { pe: usize },
 }
 
+/// Time-ordered event queue with a deterministic FIFO tie-break.
+struct EventQueue {
+    heap: BinaryHeap<Reverse<(u64, usize, EventKind)>>,
+    seq: usize,
+}
+
+impl EventQueue {
+    fn new() -> Self {
+        Self { heap: BinaryHeap::new(), seq: 0 }
+    }
+
+    fn push(&mut self, t: u64, e: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse((t, self.seq, e)));
+    }
+
+    fn pop(&mut self) -> Option<(u64, EventKind)> {
+        self.heap.pop().map(|Reverse((t, _, e))| (t, e))
+    }
+}
+
+/// Per-PE statistics of one DES run, reusable by [`crate::report`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DesPeStats {
+    /// Rows fully retired (back stage drained).
+    pub rows: u64,
+    /// Cycles the front (multiply) stage was busy — accounted at
+    /// completion, so a drained queue never counts unelapsed cycles.
+    pub front_busy_cycles: u64,
+    /// Cycles the back (merge/drain) stage was busy.
+    pub back_busy_cycles: u64,
+    /// Cycle at which this PE retired its last row (0 when it had none).
+    pub finish: u64,
+}
+
 /// Per-PE state machine.
-#[derive(Debug)]
 struct PeState {
-    /// Rows assigned to this PE, next index to fetch and to compute.
-    rows: Vec<u32>,
+    /// Row costs in fetch/arrival order (arrival order = fetch order; the
+    /// DRAM/NoC path is FIFO per PE).
+    costs: Vec<RowCost>,
+    /// Operand words each row pulls from DRAM.
+    fetch_words: Vec<u64>,
     next_fetch: usize,
-    /// Next row index whose operands will arrive (arrival order = fetch
-    /// order; the DRAM/NoC path is FIFO per PE).
     next_arrival: usize,
-    next_compute: usize,
-    /// Fetched-and-waiting row costs (double buffer: at most 2 in flight).
-    ready: std::collections::VecDeque<RowCost>,
-    /// Busy flags for the two pipeline stages.
-    front_busy: bool,
-    back_busy: bool,
-    /// Pending back-stage work (from completed fronts).
-    back_queue: std::collections::VecDeque<u64>,
-    done_front_cycles: u64,
+    /// Loader FIFO: fetched-and-waiting rows. Together with in-flight
+    /// fetches (`next_fetch - next_arrival`) it never exceeds the
+    /// configured prefetch depth — a hard buffer credit.
+    ready: VecDeque<RowCost>,
+    /// The row occupying the front stage, if any.
+    front: Option<RowCost>,
+    /// The back cost occupying the back stage, if any.
+    back: Option<u64>,
+    /// Back work from *completed* fronts, waiting for the back stage.
+    back_queue: VecDeque<u64>,
+    /// Latest scheduled arrival — later fetches clamp to it, making the
+    /// per-PE delivery genuinely FIFO (a narrow row fetched after a wide
+    /// one cannot overtake it on the NoC).
+    last_arrival: u64,
+    stats: DesPeStats,
+}
+
+impl PeState {
+    fn new(costs: Vec<RowCost>, fetch_words: Vec<u64>) -> Self {
+        Self {
+            costs,
+            fetch_words,
+            next_fetch: 0,
+            next_arrival: 0,
+            ready: VecDeque::new(),
+            front: None,
+            back: None,
+            back_queue: VecDeque::new(),
+            last_arrival: 0,
+            stats: DesPeStats::default(),
+        }
+    }
+
+    /// Issue fetches while buffer credits remain: the loader may run ahead
+    /// only as far as `depth` rows that are fetched-and-waiting or still in
+    /// flight.
+    fn refill(
+        &mut self,
+        pe: usize,
+        now: u64,
+        depth: usize,
+        q: &mut EventQueue,
+        fetch: &mut impl FnMut(usize, u64, u64) -> u64,
+    ) {
+        while self.next_fetch < self.costs.len()
+            && self.ready.len() + (self.next_fetch - self.next_arrival) < depth
+        {
+            let words = self.fetch_words[self.next_fetch];
+            self.next_fetch += 1;
+            // FIFO delivery: an arrival never lands before an earlier
+            // fetch of the same PE, so `next_arrival` indexing binds each
+            // arrival event to the row that actually caused it.
+            self.last_arrival = fetch(pe, words, now).max(self.last_arrival);
+            q.push(self.last_arrival, EventKind::OperandsArrived { pe });
+        }
+    }
+
+    /// Move the next ready row into the idle front stage.
+    fn try_start_front(&mut self, pe: usize, now: u64, q: &mut EventQueue) {
+        if self.front.is_none() {
+            if let Some(c) = self.ready.pop_front() {
+                q.push(now + c.front, EventKind::FrontDone { pe });
+                self.front = Some(c);
+            }
+        }
+    }
+
+    /// Move the next queued back cost into the idle back stage.
+    fn try_start_back(&mut self, pe: usize, now: u64, q: &mut EventQueue) {
+        if self.back.is_none() {
+            if let Some(b) = self.back_queue.pop_front() {
+                q.push(now + b, EventKind::BackDone { pe });
+                self.back = Some(b);
+            }
+        }
+    }
 }
 
 /// Result of a DES run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct DesResult {
     /// Completion time of the last event (cycles).
     pub cycles: u64,
@@ -62,13 +187,104 @@ pub struct DesResult {
     pub dram_transactions: u64,
     /// Mean PE front-stage occupancy (busy front cycles / total).
     pub pe_utilisation: f64,
+    /// Per-PE pipeline statistics (fetch-order indexed, one per PE).
+    pub per_pe: Vec<DesPeStats>,
+}
+
+impl DesResult {
+    /// Finish-time skew across the PEs that retired at least one row:
+    /// latest finish / mean finish (1.0 = perfectly balanced; 0.0 when no
+    /// PE retired a row). Idle PEs are excluded so a small workload on a
+    /// wide machine doesn't read as imbalance.
+    pub fn finish_skew(&self) -> f64 {
+        let finishes: Vec<u64> =
+            self.per_pe.iter().filter(|p| p.rows > 0).map(|p| p.finish).collect();
+        let max = finishes.iter().copied().max().unwrap_or(0);
+        let sum: u64 = finishes.iter().sum();
+        if sum == 0 {
+            return 0.0;
+        }
+        max as f64 / (sum as f64 / finishes.len() as f64)
+    }
+}
+
+/// The documented DES/analytic agreement band, in DES cycles.
+///
+/// Lower bound: the analytic datapath cycles themselves — each PE's DES
+/// completion is the exact two-stage recurrence plus fetch stalls, and
+/// [`crate::sim::timeline::TwoStageTimeline::makespan`] is a proven lower
+/// bound of that recurrence, so the DES can never undercut it. Upper
+/// bound: compute plus fully-serialised DRAM streaming with 50% headroom
+/// for burst padding and NoC serialisation (plus a small-workload floor).
+pub fn agreement_band(analytic: &SimResult) -> (u64, u64) {
+    let lower = analytic.cycles_compute;
+    let upper = ((analytic.cycles_compute + 2 * analytic.cycles_dram_bound) as f64 * 1.5) as u64
+        + 10_000;
+    (lower, upper)
+}
+
+/// Core event machine over per-PE row-cost sequences.
+///
+/// `fetch(pe, words, now)` schedules one row's operand fetch and returns
+/// its arrival cycle — the production path routes this through the DRAM
+/// port and NoC models; tests zero it to pin the pipeline semantics
+/// against [`crate::sim::timeline::exact_pipeline`].
+fn run_pipeline(
+    per_pe: Vec<(Vec<RowCost>, Vec<u64>)>,
+    depth: usize,
+    mut fetch: impl FnMut(usize, u64, u64) -> u64,
+) -> (u64, Vec<DesPeStats>) {
+    let depth = depth.max(1);
+    let mut pes: Vec<PeState> =
+        per_pe.into_iter().map(|(costs, words)| PeState::new(costs, words)).collect();
+    let mut q = EventQueue::new();
+    for (pe, st) in pes.iter_mut().enumerate() {
+        st.refill(pe, 0, depth, &mut q, &mut fetch);
+    }
+
+    let mut now = 0u64;
+    while let Some((t, ev)) = q.pop() {
+        now = t;
+        match ev {
+            EventKind::OperandsArrived { pe } => {
+                let st = &mut pes[pe];
+                let cost = st.costs[st.next_arrival];
+                st.next_arrival += 1;
+                st.ready.push_back(cost);
+                st.try_start_front(pe, now, &mut q);
+                // A front start frees one loader credit.
+                st.refill(pe, now, depth, &mut q, &mut fetch);
+            }
+            EventKind::FrontDone { pe } => {
+                let st = &mut pes[pe];
+                let done = st.front.take().expect("front stage was busy");
+                st.stats.front_busy_cycles += done.front;
+                // Only now — with the multiply finished — may this row's
+                // back work become eligible.
+                st.back_queue.push_back(done.back);
+                st.try_start_back(pe, now, &mut q);
+                st.try_start_front(pe, now, &mut q);
+                st.refill(pe, now, depth, &mut q, &mut fetch);
+            }
+            EventKind::BackDone { pe } => {
+                let st = &mut pes[pe];
+                let b = st.back.take().expect("back stage was busy");
+                st.stats.back_busy_cycles += b;
+                st.stats.rows += 1;
+                st.stats.finish = now;
+                st.try_start_back(pe, now, &mut q);
+            }
+        }
+    }
+    (now, pes.into_iter().map(|st| st.stats).collect())
 }
 
 /// Run the transaction-level simulation of one workload on one config.
 ///
 /// Functional results are not recomputed (the profile pass is exact); the
 /// DES resolves *timing* only: DRAM port contention, NoC serialisation and
-/// the two-stage PE pipeline with explicit double buffering.
+/// the two-stage PE pipeline with a bounded loader FIFO
+/// (`cfg.pe.prefetch_depth` rows of buffer credit per PE).
 pub fn simulate_des(cfg: &AcceleratorConfig, w: &Workload, policy: Policy) -> DesResult {
     let accel = crate::accel::Accelerator::new(cfg.clone());
     let pe_model = accel.pe_model();
@@ -76,123 +292,40 @@ pub fn simulate_des(cfg: &AcceleratorConfig, w: &Workload, policy: Policy) -> De
     let profiles = split_wide_rows(&w.profiles, split_at);
     let part = partition(policy, cfg.num_pes, &profiles);
 
-    let mut dram = DramModel::new(DramParams { ..cfg.dram });
-    let mut noc = Noc::new(cfg.noc);
     let mut scratch = Counters::default(); // DES reuses cost models; counters discarded
-
-    let mut pes: Vec<PeState> = part
-        .assignments
-        .iter()
-        .map(|rows| PeState {
-            rows: rows.clone(),
-            next_fetch: 0,
-            next_arrival: 0,
-            next_compute: 0,
-            ready: Default::default(),
-            front_busy: false,
-            back_busy: false,
-            back_queue: Default::default(),
-            done_front_cycles: 0,
-        })
-        .collect();
-
-    let mut queue: BinaryHeap<Reverse<(u64, usize, EventKind)>> = BinaryHeap::new();
-    let mut seq = 0usize;
-    let mut push = |q: &mut BinaryHeap<Reverse<(u64, usize, EventKind)>>, t: u64, e: EventKind| {
-        seq += 1;
-        q.push(Reverse((t, seq, e)));
-    };
-
-    // Issue the initial fetches for every PE. The loaders (SpAL/SpBL/LLB,
-    // or Maple's ARB/BRB FIFOs) are stream prefetchers running several rows
-    // ahead; PREFETCH_DEPTH bounds the rows in flight per PE.
-    const PREFETCH_DEPTH: usize = 6;
-    for (pe_id, st) in pes.iter_mut().enumerate() {
-        for _ in 0..PREFETCH_DEPTH {
-            if st.next_fetch < st.rows.len() {
-                let r = st.rows[st.next_fetch] as usize;
-                st.next_fetch += 1;
-                let p = &profiles[r];
-                // Operand volume: A elements + B rows (value + col_id).
-                let words = 2 * p.a_nnz as u64 + 2 * p.products;
-                let t_dram = dram.read(&mut scratch, 0, words.max(1));
-                let lat = noc.transfer(&mut scratch, Cast::Unicast { src: 0, dst: pe_id % noc.endpoints() }, words.max(1));
-                push(&mut queue, t_dram + lat, EventKind::OperandsArrived { pe: pe_id });
-            }
+    let mut per_pe: Vec<(Vec<RowCost>, Vec<u64>)> = Vec::with_capacity(part.assignments.len());
+    for rows in &part.assignments {
+        let mut costs = Vec::with_capacity(rows.len());
+        let mut words = Vec::with_capacity(rows.len());
+        for &r in rows {
+            let p = &profiles[r as usize];
+            costs.push(pe_model.row_cost(p, &mut scratch));
+            // Operand volume: A elements + B rows (value + col_id).
+            words.push((2 * p.a_nnz as u64 + 2 * p.products).max(1));
         }
+        per_pe.push((costs, words));
     }
 
-    let mut now = 0u64;
-    while let Some(Reverse((t, _, ev))) = queue.pop() {
-        now = t;
-        match ev {
-            EventKind::OperandsArrived { pe } => {
-                let r = pes[pe].rows[pes[pe].next_arrival] as usize;
-                pes[pe].next_arrival += 1;
-                let cost = pe_model.row_cost(&profiles[r], &mut scratch);
-                pes[pe].ready.push_back(cost);
-                if !pes[pe].front_busy {
-                    if let Some(c) = pes[pe].ready.pop_front() {
-                        pes[pe].front_busy = true;
-                        pes[pe].done_front_cycles += c.front;
-                        pes[pe].back_queue.push_back(c.back);
-                        push(&mut queue, now + c.front.max(1), EventKind::FrontDone { pe });
-                    }
-                }
-            }
-            EventKind::FrontDone { pe } => {
-                pes[pe].front_busy = false;
-                pes[pe].next_compute += 1;
-                // Kick the back stage if idle.
-                if !pes[pe].back_busy {
-                    if let Some(b) = pes[pe].back_queue.pop_front() {
-                        pes[pe].back_busy = true;
-                        push(&mut queue, now + b.max(1), EventKind::BackDone { pe });
-                    }
-                }
-                // Refill the fetch pipeline.
-                if pes[pe].next_fetch < pes[pe].rows.len() {
-                    let r = pes[pe].rows[pes[pe].next_fetch] as usize;
-                    pes[pe].next_fetch += 1;
-                    let p = &profiles[r];
-                    let words = 2 * p.a_nnz as u64 + 2 * p.products;
-                    let t_dram = dram.read(&mut scratch, now, words.max(1));
-                    let lat = noc.transfer(
-                        &mut scratch,
-                        Cast::Unicast { src: 0, dst: pe % noc.endpoints() },
-                        words.max(1),
-                    );
-                    push(&mut queue, t_dram + lat, EventKind::OperandsArrived { pe });
-                }
-                // Start the next ready row if any.
-                if !pes[pe].front_busy {
-                    if let Some(c) = pes[pe].ready.pop_front() {
-                        pes[pe].front_busy = true;
-                        pes[pe].done_front_cycles += c.front;
-                        pes[pe].back_queue.push_back(c.back);
-                        push(&mut queue, now + c.front.max(1), EventKind::FrontDone { pe });
-                    }
-                }
-            }
-            EventKind::BackDone { pe } => {
-                pes[pe].back_busy = false;
-                if let Some(b) = pes[pe].back_queue.pop_front() {
-                    pes[pe].back_busy = true;
-                    push(&mut queue, now + b.max(1), EventKind::BackDone { pe });
-                }
-            }
-        }
-    }
+    let mut dram = DramModel::new(cfg.dram);
+    let mut noc = Noc::new(cfg.noc);
+    let endpoints = noc.endpoints();
+    let (cycles, per_pe_stats) = run_pipeline(per_pe, cfg.pe.prefetch_depth, |pe, words, now| {
+        let t_dram = dram.read(&mut scratch, now, words);
+        let lat = noc.transfer(&mut scratch, Cast::Unicast { src: 0, dst: pe % endpoints }, words);
+        t_dram + lat
+    });
 
-    let busy: u64 = pes.iter().map(|p| p.done_front_cycles).sum();
+    let busy: u64 = per_pe_stats.iter().map(|p| p.front_busy_cycles).sum();
+    let n_pes = per_pe_stats.len().max(1);
     DesResult {
-        cycles: now,
+        cycles,
         dram_transactions: dram.transactions(),
-        pe_utilisation: if now == 0 {
+        pe_utilisation: if cycles == 0 {
             0.0
         } else {
-            busy as f64 / (now as f64 * pes.len() as f64)
+            busy as f64 / (cycles as f64 * n_pes as f64)
         },
+        per_pe: per_pe_stats,
     }
 }
 
@@ -200,11 +333,17 @@ pub fn simulate_des(cfg: &AcceleratorConfig, w: &Workload, policy: Policy) -> De
 mod tests {
     use super::*;
     use crate::sim::profile_workload;
+    use crate::sim::timeline::exact_pipeline;
     use crate::sparse::gen::{generate, Profile};
 
     fn workload() -> Workload {
         let a = generate(300, 300, 3000, Profile::Uniform, 77);
         profile_workload(&a, &a)
+    }
+
+    /// Zero-latency fetch: operands for every issued row arrive instantly.
+    fn no_fetch(_pe: usize, _words: u64, now: u64) -> u64 {
+        now
     }
 
     #[test]
@@ -215,35 +354,122 @@ mod tests {
             assert!(r.cycles > 0, "{}", cfg.name);
             assert!(r.dram_transactions > 0);
             assert!(r.pe_utilisation > 0.0 && r.pe_utilisation <= 1.0);
+            assert_eq!(r.per_pe.len(), cfg.num_pes, "{}", cfg.name);
+            let retired: u64 = r.per_pe.iter().map(|p| p.rows).sum();
+            assert!(retired > 0, "{}", cfg.name);
+            for p in &r.per_pe {
+                assert!(p.finish <= r.cycles);
+                assert!(p.front_busy_cycles <= p.finish);
+            }
         }
     }
 
+    /// The regression the back-queue fix pins: a row's back stage must wait
+    /// for that row's *own front* to finish, not merely for the back stage
+    /// to go idle. Rows (front 1, back 50) then (front 100, back 50): the
+    /// pre-fix machine enqueued row 1's back cost when its front *started*,
+    /// so the idle back stage ran it over cycles 51–101 while the multiply
+    /// was still in flight, finishing at cycle 101 — a 50-cycle under-count
+    /// of the true pipeline (151).
+    #[test]
+    fn back_stage_waits_for_its_own_front() {
+        let costs = vec![RowCost { front: 1, back: 50 }, RowCost { front: 100, back: 50 }];
+        let (cycles, stats) = run_pipeline(vec![(costs.clone(), vec![1, 1])], 2, no_fetch);
+        assert_eq!(cycles, exact_pipeline(&costs));
+        assert_eq!(cycles, 151, "pre-fix jump-start under-counted this to 101");
+        assert_eq!(stats[0].rows, 2);
+        assert_eq!(stats[0].front_busy_cycles, 101);
+        assert_eq!(stats[0].back_busy_cycles, 100);
+    }
+
+    /// With DRAM/NoC latency zeroed and one PE, the event machine must
+    /// reproduce the exact infinite-buffer pipeline recurrence
+    /// cycle-for-cycle, for any prefetch depth ≥ 1 and for every PE cost
+    /// model's real row costs.
+    #[test]
+    fn zero_latency_single_pe_matches_exact_pipeline() {
+        let w = workload();
+        for cfg in AcceleratorConfig::paper_configs() {
+            let pe = crate::accel::Accelerator::new(cfg.clone()).pe_model();
+            let mut scratch = Counters::default();
+            let costs: Vec<RowCost> =
+                w.profiles.iter().map(|p| pe.row_cost(p, &mut scratch)).collect();
+            let words = vec![1u64; costs.len()];
+            let expect = exact_pipeline(&costs);
+            for depth in [1, 2, 6] {
+                let (cycles, stats) =
+                    run_pipeline(vec![(costs.clone(), words.clone())], depth, no_fetch);
+                assert_eq!(cycles, expect, "{} depth={depth}", cfg.name);
+                assert_eq!(stats[0].rows, costs.len() as u64);
+            }
+        }
+    }
+
+    /// The loader FIFO is a hard credit: at most `depth` rows are in
+    /// flight or waiting, so exactly `min(depth, rows)` fetches are issued
+    /// before any operands arrive (the pre-credit code always issued six).
+    #[test]
+    fn prefetch_depth_bounds_initial_fetch_burst() {
+        let costs = vec![RowCost { front: 5, back: 3 }; 10];
+        let words = vec![1u64; 10];
+        for depth in [1usize, 2, 4, 8, 16] {
+            let mut initial = 0u64;
+            let (_, stats) = run_pipeline(
+                vec![(costs.clone(), words.clone())],
+                depth,
+                |_, _, now| {
+                    if now == 0 {
+                        initial += 1;
+                    }
+                    now + 1000 // arrivals land long after the initial burst
+                },
+            );
+            assert_eq!(initial, depth.min(10) as u64, "depth={depth}");
+            assert_eq!(stats[0].rows, 10);
+        }
+    }
+
+    /// Deeper prefetch hides more fetch latency, never less.
+    #[test]
+    fn deeper_prefetch_is_monotonically_not_slower() {
+        let costs: Vec<RowCost> =
+            (0..64).map(|i| RowCost { front: 3 + i % 5, back: 2 + i % 3 }).collect();
+        let words = vec![4u64; costs.len()];
+        let run = |depth| {
+            run_pipeline(vec![(costs.clone(), words.clone())], depth, |_, _, now| now + 40).0
+        };
+        let (d1, d2, d6) = (run(1), run(2), run(6));
+        assert!(d1 >= d2 && d2 >= d6, "depths 1/2/6 gave {d1}/{d2}/{d6}");
+        // And every run still bounds below by the pure pipeline.
+        assert!(d6 >= exact_pipeline(&costs));
+    }
+
     /// The methodological check: the transaction-level simulation must
-    /// bracket the analytic pipeline model. The DES adds DRAM/NoC fetch
-    /// latency the analytic model idealises away, so DES ≥ analytic; it
-    /// must not blow up beyond the fetch-overhead bound either.
+    /// bracket the analytic pipeline model within the documented band —
+    /// the DES adds DRAM/NoC fetch latency the analytic model idealises
+    /// away, so DES ≥ analytic exactly (no slack); it must not blow up
+    /// beyond the fetch-overhead bound either.
     #[test]
     fn des_brackets_analytic_model() {
         let w = workload();
         for cfg in AcceleratorConfig::paper_configs() {
             let analytic = crate::sim::simulate_workload(&cfg, &w, Policy::RoundRobin);
             let des = simulate_des(&cfg, &w, Policy::RoundRobin);
-            let lower = analytic.cycles_compute as f64 * 0.9;
-            // Upper bound: compute + fully-serialised DRAM streaming.
-            let upper = (analytic.cycles_compute + 2 * analytic.cycles_dram_bound) as f64 * 1.5
-                + 10_000.0;
-            let c = des.cycles as f64;
+            let (lower, upper) = agreement_band(&analytic);
             assert!(
-                c >= lower && c <= upper,
-                "{}: DES {c} outside [{lower}, {upper}] (analytic {})",
+                des.cycles >= lower && des.cycles <= upper,
+                "{}: DES {} outside [{lower}, {upper}] (analytic {})",
                 cfg.name,
+                des.cycles,
                 analytic.cycles_compute
             );
         }
     }
 
     /// Relative ordering must be preserved: if the analytic model says the
-    /// Maple config is faster, the DES must agree (same direction).
+    /// Maple config is faster, the DES must agree within a 2% tie margin
+    /// (in the fetch-bound regime both configs saturate the same DRAM port
+    /// and the "winner" is event-ordering noise).
     #[test]
     fn des_agrees_on_the_winner() {
         let w = workload();
@@ -255,13 +481,15 @@ mod tests {
             let am = crate::sim::simulate_workload(&maple, &w, Policy::RoundRobin);
             let db = simulate_des(&base, &w, Policy::RoundRobin);
             let dm = simulate_des(&maple, &w, Policy::RoundRobin);
-            let analytic_says_maple = am.cycles_compute < ab.cycles_compute;
-            let des_says_maple = dm.cycles < db.cycles;
-            assert_eq!(
-                analytic_says_maple, des_says_maple,
+            let msg = format!(
                 "{}: analytic {} vs {} — DES {} vs {}",
                 base.name, ab.cycles_compute, am.cycles_compute, db.cycles, dm.cycles
             );
+            if am.cycles_compute < ab.cycles_compute {
+                assert!(dm.cycles as f64 <= db.cycles as f64 * 1.02, "{msg}");
+            } else {
+                assert!(db.cycles as f64 <= dm.cycles as f64 * 1.02, "{msg}");
+            }
         }
     }
 
@@ -269,8 +497,18 @@ mod tests {
     fn des_empty_workload() {
         let a = crate::sparse::Csr::zero(16, 16);
         let w = profile_workload(&a, &a);
-        let r = simulate_des(&AcceleratorConfig::matraptor_maple(), &w, Policy::RoundRobin);
-        // Rows exist (empty ones); simulation terminates quickly.
-        assert!(r.cycles < 100_000);
+        let cfg = AcceleratorConfig::matraptor_maple();
+        let r = simulate_des(&cfg, &w, Policy::RoundRobin);
+        // Rows exist (empty ones), so every row still pays its minimum
+        // one-word fetch: the run can finish no earlier than the first
+        // DRAM access + one burst + one NoC hop…
+        let xfer = (cfg.dram.burst_words as f64 / cfg.dram.words_per_cycle).ceil() as u64;
+        let floor = cfg.dram.access_latency + xfer + 1;
+        assert!(r.cycles >= floor, "{} < fetch floor {floor}", r.cycles);
+        // …and no later than fully-serialised one-burst fetches of all 16
+        // rows plus a handful of zero-work pipeline events per row.
+        let ceiling = cfg.dram.access_latency + (w.rows as u64 + 1) * xfer + 4 * w.rows as u64 + 16;
+        assert!(r.cycles <= ceiling, "{} > serialised ceiling {ceiling}", r.cycles);
+        assert_eq!(r.dram_transactions, w.rows as u64);
     }
 }

@@ -28,6 +28,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::AcceleratorConfig;
 use crate::coordinator::Policy;
 use crate::sim::cache::DiskCache;
+use crate::sim::des::{agreement_band, simulate_des, DesResult};
 use crate::sim::{profile_workload_parallel, simulate_workload, SimResult, Workload};
 use crate::sparse::{suite, Csr};
 
@@ -59,22 +60,116 @@ impl WorkloadKey {
     }
 }
 
-/// One sweep: the full cross product `datasets × configs × policies`.
+/// Which cycle model runs in each sweep cell.
+///
+/// The analytic profile replay is always executed — it is the functional
+/// oracle (checksums, energy, action counts) and costs O(rows). The knob
+/// controls whether the transaction-level DES ([`crate::sim::des`]) runs
+/// *alongside* it, attaching a [`DesResult`] and a DES/analytic agreement
+/// ratio to every cell — the Sparseloop-style cross-validation at sweep
+/// scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CellModel {
+    /// Analytic pipeline only (the paper's headline numbers; default).
+    #[default]
+    Analytic,
+    /// DES timing per cell: the event-driven cycle count is the one to
+    /// report; the analytic result rides along as the functional oracle
+    /// and agreement denominator.
+    Des,
+    /// Both models side by side — analytic stays authoritative, the DES
+    /// attaches for cross-validation.
+    Both,
+}
+
+impl CellModel {
+    /// Does this model run the transaction-level DES per cell?
+    pub fn runs_des(self) -> bool {
+        !matches!(self, CellModel::Analytic)
+    }
+}
+
+impl std::str::FromStr for CellModel {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "analytic" => Ok(CellModel::Analytic),
+            "des" => Ok(CellModel::Des),
+            "both" => Ok(CellModel::Both),
+            other => Err(format!("unknown cell model {other} (analytic|des|both)")),
+        }
+    }
+}
+
+/// One sweep: the full cross product `datasets × configs × policies`,
+/// each cell run under `cell_model`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepSpec {
     pub configs: Vec<AcceleratorConfig>,
     pub datasets: Vec<WorkloadKey>,
     pub policies: Vec<Policy>,
+    pub cell_model: CellModel,
 }
 
 impl SweepSpec {
+    /// A sweep over the given grid with the default (analytic) cell model.
+    pub fn new(
+        configs: Vec<AcceleratorConfig>,
+        datasets: Vec<WorkloadKey>,
+        policies: Vec<Policy>,
+    ) -> Self {
+        Self { configs, datasets, policies, cell_model: CellModel::Analytic }
+    }
+
     /// The paper's Fig.-9 sweep: all four configurations, round-robin
     /// routing, over the given datasets.
     pub fn paper(datasets: Vec<WorkloadKey>) -> Self {
-        Self {
-            configs: AcceleratorConfig::paper_configs(),
-            datasets,
-            policies: vec![Policy::RoundRobin],
+        Self::new(AcceleratorConfig::paper_configs(), datasets, vec![Policy::RoundRobin])
+    }
+
+    /// The same sweep under a different cell model.
+    pub fn with_cell_model(mut self, cell_model: CellModel) -> Self {
+        self.cell_model = cell_model;
+        self
+    }
+}
+
+/// One sweep cell: the analytic result, plus the DES cross-check when the
+/// sweep's [`CellModel`] ran it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    /// The analytic pipeline result — functional oracle and energy model.
+    pub analytic: SimResult,
+    /// The transaction-level DES result ([`CellModel::Des`] / `Both` only).
+    pub des: Option<DesResult>,
+}
+
+impl CellResult {
+    /// DES / analytic compute-cycle ratio (`None` when the DES didn't run).
+    /// ≥ 1.0 by construction: the DES adds fetch latency to the exact
+    /// pipeline recurrence the analytic makespan lower-bounds.
+    pub fn agreement_ratio(&self) -> Option<f64> {
+        self.des.as_ref().map(|d| d.cycles as f64 / self.analytic.cycles_compute.max(1) as f64)
+    }
+
+    /// Whether the DES cycles sit inside the documented agreement band
+    /// ([`crate::sim::des::agreement_band`]); `None` when the DES didn't run.
+    pub fn des_in_band(&self) -> Option<bool> {
+        self.des.as_ref().map(|d| {
+            let (lower, upper) = agreement_band(&self.analytic);
+            d.cycles >= lower && d.cycles <= upper
+        })
+    }
+
+    /// The cell's authoritative cycle count under `model`: DES cycles for
+    /// [`CellModel::Des`], the analytic datapath cycles otherwise — or when
+    /// no DES result is attached (prefer [`SweepResult::cell_cycles`],
+    /// which supplies the model the grid actually ran under).
+    pub fn cycles(&self, model: CellModel) -> u64 {
+        match (&self.des, model) {
+            (Some(d), CellModel::Des) => d.cycles,
+            _ => self.analytic.cycles_compute,
         }
     }
 }
@@ -87,12 +182,14 @@ pub struct SweepResult {
     /// Configuration names, in spec order.
     pub configs: Vec<String>,
     pub policies: Vec<Policy>,
-    cells: Vec<SimResult>,
+    /// The cell model the sweep ran under.
+    pub cell_model: CellModel,
+    cells: Vec<CellResult>,
 }
 
 impl SweepResult {
     /// The cell for (dataset, config, policy) spec indices.
-    pub fn get(&self, dataset: usize, config: usize, policy: usize) -> &SimResult {
+    pub fn get(&self, dataset: usize, config: usize, policy: usize) -> &CellResult {
         assert!(dataset < self.datasets.len(), "dataset index {dataset} out of range");
         assert!(config < self.configs.len(), "config index {config} out of range");
         assert!(policy < self.policies.len(), "policy index {policy} out of range");
@@ -105,12 +202,29 @@ impl SweepResult {
     }
 
     /// All cells with their (dataset, config, policy) indices, grid order.
-    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize, &SimResult)> {
+    pub fn iter(&self) -> impl Iterator<Item = (usize, usize, usize, &CellResult)> {
         let (nc, np) = (self.configs.len(), self.policies.len());
         self.cells.iter().enumerate().map(move |(i, r)| {
             let (d, rem) = (i / (nc * np), i % (nc * np));
             (d, rem / np, rem % np, r)
         })
+    }
+
+    /// The authoritative cycle count of one cell under the model this grid
+    /// actually ran with: the event-driven DES count for a
+    /// [`CellModel::Des`] sweep, the analytic datapath cycles otherwise.
+    pub fn cell_cycles(&self, dataset: usize, config: usize, policy: usize) -> u64 {
+        self.get(dataset, config, policy).cycles(self.cell_model)
+    }
+
+    /// Grid indices of every cell whose DES cycles fall outside the
+    /// documented agreement band. Empty for analytic-only sweeps (no DES
+    /// ran) and for healthy cross-validation sweeps.
+    pub fn des_out_of_band(&self) -> Vec<(usize, usize, usize)> {
+        self.iter()
+            .filter(|(_, _, _, cell)| cell.des_in_band() == Some(false))
+            .map(|(d, c, p, _)| (d, c, p))
+            .collect()
     }
 }
 
@@ -323,6 +437,33 @@ impl SimEngine {
         Ok(simulate_workload(cfg, &self.workload(key)?, policy))
     }
 
+    /// One sweep cell under an explicit [`CellModel`] — profile-cached,
+    /// with the DES cross-check attached when the model runs it.
+    pub fn simulate_cell(
+        &self,
+        cfg: &AcceleratorConfig,
+        key: &WorkloadKey,
+        policy: Policy,
+        model: CellModel,
+    ) -> Result<CellResult, EngineError> {
+        crate::pe::registry::build(cfg)?; // clean error before any profiling
+        Ok(Self::run_cell(cfg, &self.workload(key)?, policy, model))
+    }
+
+    /// The per-cell dispatch shared by [`SimEngine::simulate_cell`] and the
+    /// sweep workers: the analytic replay always runs (functional oracle);
+    /// the DES runs alongside when the cell model asks for it.
+    fn run_cell(
+        cfg: &AcceleratorConfig,
+        w: &Workload,
+        policy: Policy,
+        model: CellModel,
+    ) -> CellResult {
+        let analytic = simulate_workload(cfg, w, policy);
+        let des = model.runs_des().then(|| simulate_des(cfg, w, policy));
+        CellResult { analytic, des }
+    }
+
     /// Run the full `datasets × configs × policies` grid. Each distinct
     /// dataset is profiled exactly once (cache-wide, not just per sweep);
     /// cells then run concurrently on `threads` scoped workers.
@@ -387,7 +528,7 @@ impl SimEngine {
         let total = spec.datasets.len() * nc * np;
         let next = AtomicUsize::new(0);
         let cell_workers = self.threads.clamp(1, total);
-        let parts: Vec<Vec<(usize, SimResult)>> = std::thread::scope(|scope| {
+        let parts: Vec<Vec<(usize, CellResult)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..cell_workers)
                 .map(|_| {
                     scope.spawn(|| {
@@ -401,10 +542,11 @@ impl SimEngine {
                             let (c, p) = (rem / np, rem % np);
                             out.push((
                                 idx,
-                                simulate_workload(
+                                Self::run_cell(
                                     &spec.configs[c],
                                     &workloads[d],
                                     spec.policies[p],
+                                    spec.cell_model,
                                 ),
                             ));
                         }
@@ -415,7 +557,7 @@ impl SimEngine {
             handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
         });
 
-        let mut cells: Vec<Option<SimResult>> = vec![None; total];
+        let mut cells: Vec<Option<CellResult>> = vec![None; total];
         for (idx, r) in parts.into_iter().flatten() {
             cells[idx] = Some(r);
         }
@@ -423,6 +565,7 @@ impl SimEngine {
             datasets: spec.datasets.clone(),
             configs: spec.configs.iter().map(|c| c.name.clone()).collect(),
             policies: spec.policies.clone(),
+            cell_model: spec.cell_model,
             cells: cells.into_iter().map(|c| c.expect("sweep cell computed")).collect(),
         })
     }
@@ -503,11 +646,11 @@ mod tests {
     #[test]
     fn sweep_grid_shape_and_profile_reuse() {
         let engine = SimEngine::new();
-        let spec = SweepSpec {
-            configs: AcceleratorConfig::paper_configs(),
-            datasets: vec![small_key(), WorkloadKey::suite("fb", 7, 64)],
-            policies: vec![Policy::RoundRobin, Policy::GreedyBalance],
-        };
+        let spec = SweepSpec::new(
+            AcceleratorConfig::paper_configs(),
+            vec![small_key(), WorkloadKey::suite("fb", 7, 64)],
+            vec![Policy::RoundRobin, Policy::GreedyBalance],
+        );
         let grid = engine.sweep(&spec).unwrap();
         assert_eq!(grid.cell_count(), 2 * 4 * 2);
         // One profile per distinct dataset, not per cell.
@@ -516,10 +659,57 @@ mod tests {
         for (d, c, p, r) in grid.iter() {
             assert_eq!(grid.get(d, c, p), r);
         }
-        // Cells match direct simulation of the cached workload.
+        // Cells match direct simulation of the cached workload, and an
+        // analytic sweep attaches no DES result.
         let w = engine.workload(&small_key()).unwrap();
         let direct = simulate_workload(&spec.configs[2], &w, Policy::GreedyBalance);
-        assert_eq!(grid.get(0, 2, 1), &direct);
+        assert_eq!(grid.get(0, 2, 1).analytic, direct);
+        assert_eq!(grid.cell_model, CellModel::Analytic);
+        assert!(grid.iter().all(|(_, _, _, cell)| cell.des.is_none()));
+        assert!(grid.des_out_of_band().is_empty());
+    }
+
+    #[test]
+    fn des_cell_model_attaches_cross_validation() {
+        let engine = SimEngine::new();
+        for model in [CellModel::Des, CellModel::Both] {
+            let spec = SweepSpec::paper(vec![small_key()]).with_cell_model(model);
+            let grid = engine.sweep(&spec).unwrap();
+            assert_eq!(grid.cell_model, model);
+            for (_, c, _, cell) in grid.iter() {
+                let des = cell.des.as_ref().unwrap_or_else(|| panic!("{model:?}: no DES"));
+                assert!(des.cycles > 0 && !des.per_pe.is_empty());
+                // DES ≥ analytic exactly, and inside the documented band.
+                assert!(
+                    cell.agreement_ratio().unwrap() >= 1.0,
+                    "{}: ratio {:?}",
+                    grid.configs[c],
+                    cell.agreement_ratio()
+                );
+                assert_eq!(cell.des_in_band(), Some(true), "{}", grid.configs[c]);
+                // `Des` makes the event-driven count authoritative.
+                assert_eq!(cell.cycles(CellModel::Des), des.cycles);
+                assert_eq!(cell.cycles(CellModel::Both), cell.analytic.cycles_compute);
+            }
+            assert!(grid.des_out_of_band().is_empty());
+        }
+    }
+
+    #[test]
+    fn simulate_cell_matches_sweep_cell() {
+        let engine = SimEngine::new();
+        let cfg = AcceleratorConfig::extensor_maple();
+        let cell = engine
+            .simulate_cell(&cfg, &small_key(), Policy::RoundRobin, CellModel::Both)
+            .unwrap();
+        let spec = SweepSpec::new(
+            vec![cfg],
+            vec![small_key()],
+            vec![Policy::RoundRobin],
+        )
+        .with_cell_model(CellModel::Both);
+        let grid = engine.sweep(&spec).unwrap();
+        assert_eq!(grid.get(0, 0, 0), &cell);
     }
 
     #[test]
@@ -534,7 +724,7 @@ mod tests {
         let w = crate::sim::profile_workload(&a, &a);
         for (ci, cfg) in AcceleratorConfig::paper_configs().iter().enumerate() {
             let reference = simulate_workload(cfg, &w, Policy::RoundRobin);
-            assert_eq!(grid.get(0, ci, 0), &reference, "{}", cfg.name);
+            assert_eq!(grid.get(0, ci, 0).analytic, reference, "{}", cfg.name);
         }
     }
 
@@ -545,11 +735,9 @@ mod tests {
         cfg.pe.model = Some("no-such-pe".into());
         let r = engine.simulate(&cfg, &small_key(), Policy::RoundRobin);
         assert!(matches!(r, Err(EngineError::Pe(_))), "{r:?}");
-        let spec = SweepSpec {
-            configs: vec![cfg],
-            datasets: vec![small_key()],
-            policies: vec![Policy::RoundRobin],
-        };
+        let r = engine.simulate_cell(&cfg, &small_key(), Policy::RoundRobin, CellModel::Both);
+        assert!(matches!(r, Err(EngineError::Pe(_))), "{r:?}");
+        let spec = SweepSpec::new(vec![cfg], vec![small_key()], vec![Policy::RoundRobin]);
         assert!(matches!(engine.sweep(&spec), Err(EngineError::Pe(_))));
         // The error fired before any profiling happened.
         assert_eq!(engine.profiles_run(), 0);

@@ -17,10 +17,12 @@ mod profile;
 pub mod timeline;
 
 pub use cache::{CacheStats, DiskCache};
-pub use des::{simulate_des, DesResult};
-pub use engine::{EngineError, SimEngine, SweepResult, SweepSpec, WorkloadKey};
+pub use des::{agreement_band, simulate_des, DesPeStats, DesResult};
+pub use engine::{
+    CellModel, CellResult, EngineError, SimEngine, SweepResult, SweepSpec, WorkloadKey,
+};
 pub use profile::{profile_workload, profile_workload_parallel, Workload};
-pub use timeline::TwoStageTimeline;
+pub use timeline::{exact_pipeline, TwoStageTimeline};
 
 use crate::accel::Accelerator;
 use crate::config::AcceleratorConfig;

@@ -86,25 +86,29 @@ impl TwoStageTimeline {
     }
 }
 
+/// Exact makespan of an infinite-buffer two-stage pipeline — the same
+/// machine [`crate::sim::des`] simulates event-by-event, as a direct
+/// recurrence: fronts run back-to-back, and a row's back stage starts when
+/// both its *own front* and the previous back have finished.
+///
+/// [`TwoStageTimeline::makespan`] is a closed-form lower bound of this;
+/// `sim::des` with fetch latency zeroed and one PE must match it
+/// cycle-for-cycle (`des::tests::zero_latency_single_pe_matches_exact_pipeline`).
+pub fn exact_pipeline(seq: &[RowCost]) -> u64 {
+    let (mut front_done, mut back_done) = (0u64, 0u64);
+    for c in seq {
+        front_done += c.front;
+        back_done = back_done.max(front_done) + c.back;
+    }
+    back_done
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn costs(pairs: &[(u64, u64)]) -> Vec<RowCost> {
         pairs.iter().map(|&(front, back)| RowCost { front, back }).collect()
-    }
-
-    /// Exact makespan of an infinite-buffer two-stage pipeline — the same
-    /// machine `sim::des` simulates event-by-event, as a direct recurrence:
-    /// a back stage starts when both its own front and the previous back
-    /// have finished.
-    fn exact_pipeline(seq: &[RowCost]) -> u64 {
-        let (mut front_done, mut back_done) = (0u64, 0u64);
-        for c in seq {
-            front_done += c.front;
-            back_done = back_done.max(front_done) + c.back;
-        }
-        back_done
     }
 
     #[test]

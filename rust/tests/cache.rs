@@ -155,10 +155,13 @@ fn warm_sweep_cell_is_byte_identical_to_cold() {
     assert_eq!(warm_engine.profiles_run(), 0, "warm sweep must not profile");
     assert_eq!(warm_engine.disk_hits(), 2, "both datasets must load from disk");
 
-    // `SweepResult: PartialEq` compares every SimResult field bit-for-bit.
+    // `SweepResult: PartialEq` compares every cell field bit-for-bit.
     assert_eq!(cold, warm);
     for (d, c, p, r) in cold.iter() {
-        assert_eq!(r.checksum.to_bits(), warm.get(d, c, p).checksum.to_bits());
+        assert_eq!(
+            r.analytic.checksum.to_bits(),
+            warm.get(d, c, p).analytic.checksum.to_bits()
+        );
     }
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -11,8 +11,8 @@ use maple::coordinator::Policy;
 use maple::gustavson::{multiply_count, spgemm_rowwise};
 use maple::pe::{registry, PeModel, RowCost, RowProfile};
 use maple::sim::{
-    profile_workload, profile_workload_parallel, simulate_spmspm, simulate_workload, SimEngine,
-    SweepSpec, WorkloadKey,
+    profile_workload, profile_workload_parallel, simulate_spmspm, simulate_workload, CellModel,
+    SimEngine, SweepSpec, WorkloadKey,
 };
 use maple::sparse::gen::{generate, Profile};
 use maple::trace::Counters;
@@ -81,6 +81,7 @@ fn small_sweep() -> SweepSpec {
         configs: AcceleratorConfig::paper_configs(),
         datasets: vec![WorkloadKey::suite("wv", 7, 64), WorkloadKey::suite("fb", 7, 64)],
         policies: vec![Policy::RoundRobin, Policy::GreedyBalance],
+        cell_model: CellModel::Analytic,
     }
 }
 
@@ -91,6 +92,33 @@ fn sweep_is_deterministic_across_thread_counts() {
     for threads in [2, 5, 16] {
         let grid = SimEngine::new().with_threads(threads).sweep(&spec).unwrap();
         assert_eq!(grid, reference, "threads={threads}");
+    }
+}
+
+#[test]
+fn des_backed_sweep_is_deterministic_and_in_band() {
+    // The acceptance sweep: ≥ 2 Table-I datasets × the four paper configs
+    // under `CellModel::Des` and `Both` — deterministic across fan-out
+    // widths, every cell carrying a DES result that sits at or above the
+    // analytic compute cycles inside the documented bracket.
+    for model in [CellModel::Des, CellModel::Both] {
+        let spec = small_sweep().with_cell_model(model);
+        let reference = SimEngine::new().with_threads(1).sweep(&spec).unwrap();
+        let wide = SimEngine::new().with_threads(8).sweep(&spec).unwrap();
+        assert_eq!(reference, wide, "{model:?} grid must not depend on fan-out width");
+        assert_eq!(reference.cell_count(), 2 * 4 * 2);
+        for (d, c, p, cell) in reference.iter() {
+            let des = cell.des.as_ref().expect("DES attached to every cell");
+            assert!(
+                des.cycles >= cell.analytic.cycles_compute,
+                "({d},{c},{p}): DES {} under-counts analytic {}",
+                des.cycles,
+                cell.analytic.cycles_compute
+            );
+            assert_eq!(cell.des_in_band(), Some(true), "({d},{c},{p})");
+            assert!(cell.agreement_ratio().unwrap() >= 1.0);
+        }
+        assert!(reference.des_out_of_band().is_empty());
     }
 }
 
@@ -122,8 +150,8 @@ fn engine_cells_match_direct_serial_simulation() {
     for (ci, cfg) in spec.configs.iter().enumerate() {
         for (pi, &policy) in spec.policies.iter().enumerate() {
             assert_eq!(
-                grid.get(0, ci, pi),
-                &simulate_workload(cfg, &w, policy),
+                grid.get(0, ci, pi).analytic,
+                simulate_workload(cfg, &w, policy),
                 "{}/{policy:?}",
                 cfg.name
             );
