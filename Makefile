@@ -3,12 +3,13 @@
 #   make verify     fmt + clippy + tests on the rust crate (tier-1 + lint)
 #   make test       tier-1 verify exactly: build --release && test -q
 #   make bench      all harness-less benches, release mode
+#   make sweep-noc  topology × MACs design-space sweep on the wv workload
 #   make artifacts  AOT-lower the Pallas kernel to HLO text (needs jax)
 
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify fmt clippy test bench artifacts
+.PHONY: verify fmt clippy test bench sweep-noc artifacts
 
 verify: fmt clippy test
 
@@ -28,6 +29,13 @@ bench:
 	        table1_datasets ablation_macs des_validation hotpath; do \
 	    $(CARGO) bench --bench $$b; \
 	done
+
+# NoC-aware design-space sweep: topology × MACs/PE over the cached wv
+# workload (warm-starts from the on-disk cache; CI runs the same grid at 1
+# and 4 worker threads and asserts byte-identical output).
+sweep-noc:
+	cd $(RUST_DIR) && $(CARGO) run --release -- sweep --dataset wv --scale 64 \
+	        --axis noc=crossbar:8,mesh:4x2 --axis macs=2,4,8,16
 
 # Skips the rebuild when the artifacts are newer than the Python sources.
 artifacts: artifacts/maple_pe.hlo.txt

@@ -26,7 +26,7 @@
 
 use maple::config::AcceleratorConfig;
 use maple::report::{fig9_report, fig9_rows_from_sweep, Fig9Row};
-use maple::sim::{CellModel, SimEngine, SweepSpec, WorkloadKey};
+use maple::sim::{CellModel, DesignSpace, SimEngine, WorkloadKey};
 use maple::sparse::suite;
 
 /// Cross-check 2: replay a few rows of a small workload through the
@@ -123,7 +123,7 @@ fn main() {
         suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, seed, scale)).collect();
 
     let t0 = std::time::Instant::now();
-    let grid = engine.sweep(&SweepSpec::paper(keys.clone())).expect("Table-I sweep");
+    let grid = engine.sweep(&DesignSpace::paper(keys.clone())).expect("Table-I sweep");
     let elapsed = t0.elapsed();
 
     // Numeric cross-check 1: every config reports the same checksum/out_nnz
@@ -181,7 +181,7 @@ fn main() {
     // are already profile-cached, so only the event simulations run).
     let crossval_keys: Vec<WorkloadKey> = keys.iter().take(4).cloned().collect();
     let xval = engine
-        .sweep(&SweepSpec::paper(crossval_keys).with_cell_model(CellModel::Both))
+        .sweep(&DesignSpace::paper(crossval_keys).with_cell_model(CellModel::Both))
         .expect("DES cross-validation sweep");
     println!("{}", maple::report::des_validation_report(&xval, true));
     assert!(

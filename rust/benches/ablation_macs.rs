@@ -14,7 +14,7 @@ include!("harness.rs");
 
 use maple::config::AcceleratorConfig;
 use maple::coordinator::Policy;
-use maple::sim::{SweepSpec, WorkloadKey};
+use maple::sim::{DesignSpace, WorkloadKey};
 
 fn main() {
     let scale = bench_scale();
@@ -31,7 +31,7 @@ fn main() {
     );
     let sweep = |configs: Vec<AcceleratorConfig>, policies: Vec<Policy>| {
         engine
-            .sweep(&SweepSpec::new(configs, vec![key.clone()], policies))
+            .sweep(&DesignSpace::new(configs, vec![key.clone()], policies))
             .expect("ablation sweep")
     };
 

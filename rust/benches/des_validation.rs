@@ -16,7 +16,7 @@ include!("harness.rs");
 use maple::config::AcceleratorConfig;
 use maple::coordinator::Policy;
 use maple::report::des_validation_report;
-use maple::sim::{simulate_des, CellModel, SweepSpec, WorkloadKey};
+use maple::sim::{simulate_des, CellModel, DesignSpace, WorkloadKey};
 
 fn main() {
     let scale = bench_scale();
@@ -29,7 +29,7 @@ fn main() {
         .collect();
     let t0 = std::time::Instant::now();
     let grid = engine
-        .sweep(&SweepSpec::paper(keys).with_cell_model(CellModel::Both))
+        .sweep(&DesignSpace::paper(keys).with_cell_model(CellModel::Both))
         .expect("cross-validation sweep");
     let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
     print!("{}", des_validation_report(&grid, true));

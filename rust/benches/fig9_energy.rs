@@ -13,7 +13,7 @@
 include!("harness.rs");
 
 use maple::report::fig9_rows_from_sweep;
-use maple::sim::{SweepSpec, WorkloadKey};
+use maple::sim::{DesignSpace, WorkloadKey};
 use maple::sparse::suite;
 
 fn main() {
@@ -26,7 +26,7 @@ fn main() {
 
     let engine = bench_engine();
     let keys = suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, 7, scale)).collect();
-    let grid = engine.sweep(&SweepSpec::paper(keys)).expect("Table-I sweep");
+    let grid = engine.sweep(&DesignSpace::paper(keys)).expect("Table-I sweep");
     let m_rows = fig9_rows_from_sweep(&grid, 0, 1, 0);
     let e_rows = fig9_rows_from_sweep(&grid, 2, 3, 0);
 

@@ -10,7 +10,7 @@
 include!("harness.rs");
 
 use maple::report;
-use maple::sim::{SweepSpec, WorkloadKey};
+use maple::sim::{DesignSpace, WorkloadKey};
 use maple::sparse::{stats, suite};
 
 fn main() {
@@ -46,7 +46,7 @@ fn main() {
         suite::TABLE_I.iter().map(|d| WorkloadKey::suite(d.abbrev, 7, scale)).collect();
     let t0 = std::time::Instant::now();
     let grid = engine
-        .sweep(&SweepSpec::paper(keys.clone()))
+        .sweep(&DesignSpace::paper(keys.clone()))
         .expect("Table-I sweep");
     let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
     println!("\n=== profiled workloads (SimEngine, scale 1/{scale}) ===");

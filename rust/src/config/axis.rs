@@ -1,0 +1,318 @@
+//! Typed configuration axes for design-space sweeps.
+//!
+//! A [`ConfigAxis`] is an ordered list of points on one named knob of the
+//! accelerator; applying point `i` to a base [`AcceleratorConfig`] is a
+//! *pure transform* — it sets that one knob and records the point in the
+//! configuration name (`extensor-maple+noc=mesh:4x2+macs=8`), so every
+//! expanded cell of a sweep grid is self-describing. The same axis syntax
+//! is shared by the CLI (`maple sweep --axis noc=crossbar:8,mesh:4x2`) and
+//! the TOML `[sweep]` block of a config file:
+//!
+//! ```toml
+//! [sweep]
+//! noc = "crossbar:8,mesh:4x2"
+//! macs = "2,4,8,16"
+//! ```
+//!
+//! Dataset and policy axes are *not* config transforms; they live in
+//! [`crate::sim::engine::Axis`], which wraps this type for the knobs that
+//! are.
+
+use super::AcceleratorConfig;
+use crate::noc::Topology;
+
+/// Axis parse/validation error.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum AxisError {
+    #[error("unknown sweep axis {0:?} (noc | macs | prefetch | pe-model)")]
+    UnknownAxis(String),
+    #[error("axis {axis}: bad point {value:?} ({reason})")]
+    BadPoint { axis: &'static str, value: String, reason: String },
+}
+
+/// One typed design-space axis over the accelerator configuration. Points
+/// are ordered; each is a pure transform of the base config.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigAxis {
+    /// NoC topology (`noc = crossbar:<ports> | mesh:<w>x<h>`).
+    Topology(Vec<Topology>),
+    /// MAC units per PE (`macs`), the paper's central design knob (§III).
+    MacsPerPe(Vec<usize>),
+    /// Operand-loader FIFO depth in rows (`prefetch`), the DES buffer credit.
+    PrefetchDepth(Vec<usize>),
+    /// Registered PE cost-model name (`pe-model`, see [`crate::pe::registry`]).
+    PeModel(Vec<String>),
+}
+
+impl ConfigAxis {
+    /// The axis name used by the CLI flag, TOML `[sweep]` keys, grid
+    /// dimensions, and report headers.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConfigAxis::Topology(_) => "noc",
+            ConfigAxis::MacsPerPe(_) => "macs",
+            ConfigAxis::PrefetchDepth(_) => "prefetch",
+            ConfigAxis::PeModel(_) => "pe-model",
+        }
+    }
+
+    /// Number of points on this axis.
+    pub fn len(&self) -> usize {
+        match self {
+            ConfigAxis::Topology(v) => v.len(),
+            ConfigAxis::MacsPerPe(v) => v.len(),
+            ConfigAxis::PrefetchDepth(v) => v.len(),
+            ConfigAxis::PeModel(v) => v.len(),
+        }
+    }
+
+    /// Whether the axis has no points (rejected at sweep expansion).
+    pub fn is_empty(&self) -> bool {
+        match self {
+            ConfigAxis::Topology(v) => v.is_empty(),
+            ConfigAxis::MacsPerPe(v) => v.is_empty(),
+            ConfigAxis::PrefetchDepth(v) => v.is_empty(),
+            ConfigAxis::PeModel(v) => v.is_empty(),
+        }
+    }
+
+    /// Display label of point `i` (the spec-syntax form for topologies).
+    pub fn label(&self, i: usize) -> String {
+        match self {
+            ConfigAxis::Topology(v) => v[i].to_string(),
+            ConfigAxis::MacsPerPe(v) => v[i].to_string(),
+            ConfigAxis::PrefetchDepth(v) => v[i].to_string(),
+            ConfigAxis::PeModel(v) => v[i].clone(),
+        }
+    }
+
+    /// All point labels, in axis order.
+    pub fn labels(&self) -> Vec<String> {
+        (0..self.len()).map(|i| self.label(i)).collect()
+    }
+
+    /// Apply point `i` to `cfg`: set the knob and suffix the configuration
+    /// name with `+<axis>=<label>` so expanded grid cells stay
+    /// self-describing.
+    pub fn apply(&self, i: usize, cfg: &mut AcceleratorConfig) {
+        match self {
+            ConfigAxis::Topology(v) => cfg.noc = v[i],
+            ConfigAxis::MacsPerPe(v) => cfg.pe.macs_per_pe = v[i],
+            ConfigAxis::PrefetchDepth(v) => cfg.pe.prefetch_depth = v[i],
+            ConfigAxis::PeModel(v) => cfg.pe.model = Some(v[i].clone()),
+        }
+        cfg.name.push_str(&format!("+{}={}", self.name(), self.label(i)));
+    }
+
+    /// Check every point is applicable: integer knobs must be ≥ 1 (a
+    /// zero-MAC PE cannot compute; a zero prefetch credit deadlocks the DES
+    /// loader), topology dimensions ≥ 1, PE-model names non-empty (their
+    /// registration is checked at sweep time). Returns the offending label.
+    pub fn validate(&self) -> Result<(), String> {
+        let bad = |label: String, reason: &str| Err(format!("{label} ({reason})"));
+        match self {
+            ConfigAxis::Topology(v) => {
+                if let Some(t) = v.iter().find(|t| t.is_degenerate()) {
+                    return bad(t.to_string(), "every dimension must be ≥ 1");
+                }
+            }
+            ConfigAxis::MacsPerPe(v) | ConfigAxis::PrefetchDepth(v) => {
+                if let Some(&k) = v.iter().find(|&&k| k == 0) {
+                    return bad(k.to_string(), "must be ≥ 1");
+                }
+            }
+            ConfigAxis::PeModel(v) => {
+                if v.iter().any(|m| m.trim().is_empty()) {
+                    return bad("\"\"".into(), "model name must be non-empty");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse one axis from its name and comma-separated point list — the
+    /// payload of a CLI `--axis name=v1,v2,...` flag or a TOML `[sweep]`
+    /// `name = "v1,v2,..."` entry.
+    pub fn parse(name: &str, values: &str) -> Result<Self, AxisError> {
+        fn ints(axis: &'static str, values: &str) -> Result<Vec<usize>, AxisError> {
+            values
+                .split(',')
+                .map(|v| {
+                    let v = v.trim();
+                    v.parse::<usize>().ok().filter(|&k| k >= 1).ok_or_else(|| {
+                        AxisError::BadPoint {
+                            axis,
+                            value: v.to_string(),
+                            reason: "expected an integer ≥ 1".into(),
+                        }
+                    })
+                })
+                .collect()
+        }
+        match name.trim() {
+            "noc" => values
+                .split(',')
+                .map(|v| {
+                    let v = v.trim();
+                    v.parse::<Topology>().map_err(|e| AxisError::BadPoint {
+                        axis: "noc",
+                        value: v.to_string(),
+                        reason: e.to_string(),
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(ConfigAxis::Topology),
+            "macs" => ints("macs", values).map(ConfigAxis::MacsPerPe),
+            "prefetch" => ints("prefetch", values).map(ConfigAxis::PrefetchDepth),
+            "pe-model" => values
+                .split(',')
+                .map(|v| {
+                    let v = v.trim();
+                    if v.is_empty() {
+                        Err(AxisError::BadPoint {
+                            axis: "pe-model",
+                            value: v.to_string(),
+                            reason: "model name must be non-empty".into(),
+                        })
+                    } else {
+                        Ok(v.to_string())
+                    }
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(ConfigAxis::PeModel),
+            other => Err(AxisError::UnknownAxis(other.to_string())),
+        }
+    }
+}
+
+/// Parse the `[sweep]` section of a config TOML into axes, in file order
+/// (axis order is grid order). Each entry is `name = "v1,v2,..."` using the
+/// same syntax as the CLI `--axis` flag; values must be quoted so the file
+/// still parses as an [`AcceleratorConfig`] (which ignores the `[sweep]`
+/// section). A file without the section yields no axes.
+pub fn sweep_axes_from_toml(s: &str) -> Result<Vec<ConfigAxis>, AxisError> {
+    let mut axes = Vec::new();
+    let mut in_sweep = false;
+    for raw in s.lines() {
+        let line = super::toml_io::strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+            in_sweep = name.trim() == "sweep";
+            continue;
+        }
+        if !in_sweep {
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            continue; // syntax is validated by the config parser proper
+        };
+        let v = v.trim();
+        let v = v.strip_prefix('"').and_then(|t| t.strip_suffix('"')).unwrap_or(v);
+        axes.push(ConfigAxis::parse(k.trim(), v)?);
+    }
+    Ok(axes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_each_axis_kind() {
+        assert_eq!(
+            ConfigAxis::parse("noc", "crossbar:8, mesh:4x2").unwrap(),
+            ConfigAxis::Topology(vec![
+                Topology::Crossbar { ports: 8 },
+                Topology::Mesh { width: 4, height: 2 },
+            ])
+        );
+        assert_eq!(
+            ConfigAxis::parse("macs", "2,4,8,16").unwrap(),
+            ConfigAxis::MacsPerPe(vec![2, 4, 8, 16])
+        );
+        assert_eq!(
+            ConfigAxis::parse("prefetch", " 2 , 6 ").unwrap(),
+            ConfigAxis::PrefetchDepth(vec![2, 6])
+        );
+        assert_eq!(
+            ConfigAxis::parse("pe-model", "maple,dummy-test-pe").unwrap(),
+            ConfigAxis::PeModel(vec!["maple".into(), "dummy-test-pe".into()])
+        );
+    }
+
+    #[test]
+    fn parse_rejects_bad_axes_and_points() {
+        assert!(matches!(
+            ConfigAxis::parse("warp-drive", "1,2"),
+            Err(AxisError::UnknownAxis(_))
+        ));
+        for (name, values) in [
+            ("macs", "2,0,8"),
+            ("macs", "2,,8"),
+            ("macs", ""),
+            ("prefetch", "-1"),
+            ("noc", "mesh:0x4"),
+            ("noc", "crossbar:"),
+            ("noc", "torus:4x4"),
+            ("pe-model", "maple,,gamma"),
+        ] {
+            assert!(
+                matches!(ConfigAxis::parse(name, values), Err(AxisError::BadPoint { .. })),
+                "{name}={values:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn apply_transforms_and_suffixes_the_name() {
+        let axis = ConfigAxis::parse("noc", "crossbar:8,mesh:4x2").unwrap();
+        let mut cfg = AcceleratorConfig::extensor_maple();
+        axis.apply(1, &mut cfg);
+        assert_eq!(cfg.noc, Topology::Mesh { width: 4, height: 2 });
+        assert_eq!(cfg.name, "extensor-maple+noc=mesh:4x2");
+        let macs = ConfigAxis::MacsPerPe(vec![2, 8]);
+        macs.apply(1, &mut cfg);
+        assert_eq!(cfg.pe.macs_per_pe, 8);
+        assert_eq!(cfg.name, "extensor-maple+noc=mesh:4x2+macs=8");
+        let pf = ConfigAxis::PrefetchDepth(vec![3]);
+        pf.apply(0, &mut cfg);
+        assert_eq!(cfg.pe.prefetch_depth, 3);
+        let pm = ConfigAxis::PeModel(vec!["maple".into()]);
+        pm.apply(0, &mut cfg);
+        assert_eq!(cfg.pe.model.as_deref(), Some("maple"));
+    }
+
+    #[test]
+    fn validate_catches_degenerate_points() {
+        assert!(ConfigAxis::MacsPerPe(vec![2, 0]).validate().is_err());
+        assert!(ConfigAxis::PrefetchDepth(vec![0]).validate().is_err());
+        assert!(ConfigAxis::Topology(vec![Topology::Mesh { width: 0, height: 4 }])
+            .validate()
+            .is_err());
+        assert!(ConfigAxis::PeModel(vec!["  ".into()]).validate().is_err());
+        assert!(ConfigAxis::parse("macs", "1,2").unwrap().validate().is_ok());
+    }
+
+    #[test]
+    fn sweep_block_parses_in_file_order_and_composes_with_config_io() {
+        let mut toml = AcceleratorConfig::extensor_maple().to_toml();
+        toml.push_str("\n[sweep]\nnoc = \"crossbar:8,mesh:4x2\"  # comment\nmacs = \"2,4\"\n");
+        let axes = sweep_axes_from_toml(&toml).unwrap();
+        assert_eq!(axes.len(), 2);
+        assert_eq!(axes[0].name(), "noc");
+        assert_eq!(axes[1].name(), "macs");
+        assert_eq!(axes[1], ConfigAxis::MacsPerPe(vec![2, 4]));
+        // The config parser ignores the [sweep] section entirely.
+        let cfg = AcceleratorConfig::from_toml(&toml).unwrap();
+        assert_eq!(cfg, AcceleratorConfig::extensor_maple());
+        // No [sweep] section → no axes.
+        assert!(sweep_axes_from_toml(&AcceleratorConfig::extensor_maple().to_toml())
+            .unwrap()
+            .is_empty());
+        // Bad points in the block surface as axis errors.
+        assert!(sweep_axes_from_toml("[sweep]\nmacs = \"0\"\n").is_err());
+        assert!(sweep_axes_from_toml("[sweep]\nwarp = \"1\"\n").is_err());
+    }
+}

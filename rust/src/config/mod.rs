@@ -3,8 +3,14 @@
 //! Every experiment is a pure function of an [`AcceleratorConfig`]; the four
 //! paper configurations (§IV.B) ship as presets and any variant can be
 //! loaded from TOML (see `configs/*.toml` and the `design_space` example).
+//! Design-space sweeps vary configs along typed [`axis::ConfigAxis`] values
+//! (NoC topology, MACs/PE, prefetch depth, PE model), each point a pure
+//! transform of a base config.
 
+pub mod axis;
 pub mod toml_io;
+
+pub use axis::{AxisError, ConfigAxis};
 
 use crate::mem::DramParams;
 use crate::noc::Topology;

@@ -26,12 +26,27 @@ enum Value {
     Float(f64),
 }
 
+/// Strip a `#` comment from one line, honouring quotes: a `#` inside a
+/// quoted string is content, not a comment delimiter. Shared with the
+/// `[sweep]` axis scanner ([`crate::config::axis`]).
+pub(crate) fn strip_comment(raw: &str) -> &str {
+    let mut in_str = false;
+    for (i, ch) in raw.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &raw[..i],
+            _ => {}
+        }
+    }
+    raw
+}
+
 /// Parse the TOML subset into `(section.key → value)`.
 fn parse_flat(s: &str) -> Result<BTreeMap<String, Value>, ConfigError> {
     let mut out = BTreeMap::new();
     let mut section = String::new();
     for (no, raw) in s.lines().enumerate() {
-        let line = raw.split('#').next().unwrap_or("").trim();
+        let line = strip_comment(raw).trim();
         if line.is_empty() {
             continue;
         }
@@ -148,16 +163,9 @@ pub fn to_toml(c: &AcceleratorConfig) -> String {
     s.push_str(&format!("peb_bytes = {}\n", c.pe.peb_bytes));
     s.push_str(&format!("prefetch_depth = {}\n", c.pe.prefetch_depth));
     s.push_str("\n[noc]\n");
-    match c.noc {
-        Topology::Crossbar { ports } => {
-            s.push_str("topology = \"crossbar\"\n");
-            s.push_str(&format!("ports = {ports}\n"));
-        }
-        Topology::Mesh { width, height } => {
-            s.push_str("topology = \"mesh\"\n");
-            s.push_str(&format!("width = {width}\nheight = {height}\n"));
-        }
-    }
+    // The canonical spec syntax (`Topology: Display`), shared with the CLI
+    // `--axis noc=...` flag and report labels.
+    s.push_str(&format!("topology = \"{}\"\n", c.noc));
     s.push_str("\n[dram]\n");
     s.push_str(&format!("words_per_cycle = {:?}\n", c.dram.words_per_cycle));
     s.push_str(&format!("access_latency = {}\n", c.dram.access_latency));
@@ -178,14 +186,24 @@ pub fn from_toml(s: &str) -> Result<AcceleratorConfig, ConfigError> {
         "maple" => PeKind::Maple,
         other => return Err(ConfigError::BadValue("pe.kind", other.to_string())),
     };
+    // `Topology: FromStr` owns the spec syntax; the dimensioned legacy form
+    // (`topology = "mesh"` + separate width/height/ports keys) still parses
+    // so configs serialised before the shared syntax keep loading. Both
+    // forms reject degenerate dimensions — a zero-width mesh cannot route
+    // (`Noc::hops` would divide by it).
     let noc = match get_str(&m, "noc.topology")?.as_str() {
         "crossbar" => Topology::Crossbar { ports: get_usize(&m, "noc.ports")? },
         "mesh" => Topology::Mesh {
             width: get_usize(&m, "noc.width")?,
             height: get_usize(&m, "noc.height")?,
         },
-        other => return Err(ConfigError::BadValue("noc.topology", other.to_string())),
+        spec => spec
+            .parse::<Topology>()
+            .map_err(|_| ConfigError::BadValue("noc.topology", spec.to_string()))?,
     };
+    if noc.is_degenerate() {
+        return Err(ConfigError::BadValue("noc.topology", noc.to_string()));
+    }
     Ok(AcceleratorConfig {
         name: get_str(&m, "name")?,
         kind,
@@ -234,6 +252,16 @@ mod tests {
     }
 
     #[test]
+    fn comment_stripping_honours_quotes() {
+        // A `#` inside a quoted value is content, not a comment.
+        let m = parse_flat("a = \"x#y\" # real comment\n").unwrap();
+        assert_eq!(m["a"], Value::Str("x#y".into()));
+        assert_eq!(strip_comment("plain # c"), "plain ");
+        assert_eq!(strip_comment("\"a#b\" # c"), "\"a#b\" ");
+        assert_eq!(strip_comment("no comment"), "no comment");
+    }
+
+    #[test]
     fn mistyped_pe_model_is_rejected() {
         let mut s = to_toml(&AcceleratorConfig::extensor_maple());
         s = s.replace("[pe]\n", "[pe]\nmodel = 123\n");
@@ -268,6 +296,58 @@ mod tests {
             let s = to_toml(&c);
             let back = from_toml(&s).unwrap();
             assert_eq!(back, c, "preset {} does not round-trip", c.name);
+        }
+    }
+
+    #[test]
+    fn topology_serialises_on_the_shared_spec_syntax() {
+        let s = to_toml(&AcceleratorConfig::extensor_baseline());
+        assert!(s.contains("topology = \"mesh:16x8\""), "{s}");
+        let s = to_toml(&AcceleratorConfig::matraptor_baseline());
+        assert!(s.contains("topology = \"crossbar:8\""), "{s}");
+        // No legacy per-dimension keys are emitted any more.
+        assert!(!s.contains("ports =") && !s.contains("width ="), "{s}");
+    }
+
+    #[test]
+    fn legacy_dimensioned_topology_form_still_parses() {
+        let mut c = AcceleratorConfig::extensor_maple();
+        let legacy = to_toml(&c).replace(
+            "topology = \"mesh:4x2\"",
+            "topology = \"mesh\"\nwidth = 4\nheight = 2",
+        );
+        assert_eq!(from_toml(&legacy).unwrap(), c);
+        c = AcceleratorConfig::matraptor_maple();
+        let legacy = to_toml(&c)
+            .replace("topology = \"crossbar:4\"", "topology = \"crossbar\"\nports = 4");
+        assert_eq!(from_toml(&legacy).unwrap(), c);
+    }
+
+    #[test]
+    fn bad_topology_specs_are_rejected() {
+        let good = to_toml(&AcceleratorConfig::extensor_maple());
+        for bad in ["mesh:0x4", "mesh:4x0", "crossbar:", "crossbar:0", "torus:4x4", "nonsense"] {
+            let s = good.replace("topology = \"mesh:4x2\"", &format!("topology = \"{bad}\""));
+            assert!(
+                matches!(from_toml(&s), Err(ConfigError::BadValue("noc.topology", _))),
+                "{bad:?} must be rejected"
+            );
+        }
+        // The legacy form with its dimension keys missing is also an error.
+        let s = good.replace("topology = \"mesh:4x2\"", "topology = \"mesh\"");
+        assert!(matches!(from_toml(&s), Err(ConfigError::Missing("noc.width"))));
+        // And legacy dimension keys carrying zeroes are rejected like the
+        // spec syntax, not deferred to a divide-by-zero in `Noc::hops`.
+        for legacy in [
+            "topology = \"mesh\"\nwidth = 0\nheight = 4",
+            "topology = \"mesh\"\nwidth = 4\nheight = 0",
+            "topology = \"crossbar\"\nports = 0",
+        ] {
+            let s = good.replace("topology = \"mesh:4x2\"", legacy);
+            assert!(
+                matches!(from_toml(&s), Err(ConfigError::BadValue("noc.topology", _))),
+                "{legacy:?} must be rejected"
+            );
         }
     }
 }

@@ -37,8 +37,33 @@
 //! // Configs are in `paper_configs()` order; the headline comparison is
 //! // baseline Extensor (2) vs Maple-based Extensor (3).
 //! let (base, mpl) = (grid.get(0, 2, 0), grid.get(0, 3, 0));
-//! println!("energy benefit: {:.1}%", mpl.energy_benefit_pct(base));
-//! println!("speedup: {:.1}%", mpl.speedup_pct(base));
+//! println!("energy benefit: {:.1}%", mpl.analytic.energy_benefit_pct(&base.analytic));
+//! println!("speedup: {:.1}%", mpl.analytic.speedup_pct(&base.analytic));
+//! ```
+//!
+//! Design-space exploration generalises the same sweep: a
+//! [`sim::DesignSpace`] is a base config set plus ordered typed
+//! [`sim::Axis`] values (dataset, NoC topology, MACs/PE, prefetch depth,
+//! PE model, policy), expanded into a deterministic index-addressed grid
+//! whose cells carry named-axis coordinates:
+//!
+//! ```no_run
+//! use maple::prelude::*;
+//!
+//! let grid = SimEngine::new()
+//!     .sweep(
+//!         &DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+//!             .with_axis(Axis::Dataset(vec![WorkloadKey::suite("wv", 7, 16)]))
+//!             .with_axis(Axis::topology(vec![
+//!                 Topology::Crossbar { ports: 8 },
+//!                 Topology::Mesh { width: 4, height: 2 },
+//!             ]))
+//!             .with_axis(Axis::macs_per_pe(vec![2, 4, 8, 16])),
+//!     )
+//!     .unwrap();
+//! assert_eq!(grid.shape(), vec![1, 1, 2, 4, 1]); // dataset·config·noc·macs·policy
+//! let cell = grid.at(&[0, 0, 1, 2, 0]); // mesh:4x2, 8 MACs/PE
+//! println!("{:?} -> {} cycles", cell.coords, cell.analytic.cycles_compute);
 //! ```
 //!
 //! One-off runs skip the spec: [`sim::SimEngine::simulate`] gives a single
@@ -71,9 +96,11 @@ pub mod prelude {
     pub use crate::coordinator::Policy;
     pub use crate::energy::{EnergyBreakdown, TechModel};
     pub use crate::gustavson::spgemm_rowwise;
+    pub use crate::config::ConfigAxis;
+    pub use crate::noc::Topology;
     pub use crate::sim::{
-        simulate_spmspm, CellModel, CellResult, DesResult, DiskCache, SimEngine, SimResult,
-        SweepResult, SweepSpec, WorkloadKey,
+        simulate_spmspm, Axis, CellModel, CellResult, DesResult, DesignSpace, DiskCache,
+        SimEngine, SimResult, SweepResult, SweepSpec, WorkloadKey,
     };
     pub use crate::sparse::{Coo, Csc, Csr};
 }

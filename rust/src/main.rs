@@ -9,7 +9,7 @@
 //! maple fig8 --accel extensor       # Fig. 8b
 //! maple fig9 --scale 16              # Fig. 9a+9b over all 14 datasets
 //! maple simulate --config matraptor-maple --dataset wv
-//! maple sweep --dataset wv --macs 1,2,4,8,16,32
+//! maple sweep --dataset wv --axis noc=crossbar:8,mesh:4x2 --axis macs=2,4,8,16
 //! maple config --preset extensor-maple > my.toml
 //! ```
 //!
@@ -22,10 +22,10 @@
 //! is in-tree (the offline build has no CLI dependency; DESIGN.md
 //! §Dependencies).
 
-use maple::config::AcceleratorConfig;
+use maple::config::{axis, AcceleratorConfig, ConfigAxis};
 use maple::coordinator::Policy;
 use maple::report;
-use maple::sim::{CellModel, DiskCache, SimEngine, SweepSpec, WorkloadKey};
+use maple::sim::{Axis, CellModel, DesignSpace, DiskCache, SimEngine, WorkloadKey};
 use maple::sparse::suite;
 
 /// Dependency-free CLI error type.
@@ -54,6 +54,24 @@ impl Args {
     /// Value of `--key` or a default.
     fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.opt(key).unwrap_or(default)
+    }
+
+    /// Every value of a repeatable `--key` flag, in argv order. A trailing
+    /// occurrence with no following value yields nothing — compare against
+    /// [`Args::count`] to reject it instead of silently dropping it.
+    fn opt_all(&self, key: &str) -> Vec<&str> {
+        self.argv
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.as_str() == key)
+            .filter_map(|(i, _)| self.argv.get(i + 1))
+            .map(|s| s.as_str())
+            .collect()
+    }
+
+    /// How many times `--key` appears.
+    fn count(&self, key: &str) -> usize {
+        self.argv.iter().filter(|a| a.as_str() == key).count()
     }
 
     /// Presence of a bare flag.
@@ -85,8 +103,16 @@ COMMANDS:
   simulate --config <preset|file.toml> --dataset <name>
            [--scale N] [--seed S] [--policy round-robin|chunked|greedy]
            [--cell-model analytic|des|both]
-  sweep  --dataset <name> [--macs 1,2,4,...] [--scale N] [--seed S]
+  sweep  [--config <preset|file.toml>] [--dataset wv[,fb,...]]
+           [--axis noc=crossbar:8,mesh:4x2] [--axis macs=2,4,8,16]
+           [--axis prefetch=2,4,8] [--axis pe-model=name,...]
+           [--policy round-robin[,chunked,greedy]] [--pivot <axis>]
+           [--macs 1,2,4,...] [--scale N] [--seed S] [--threads N]
            [--cell-model analytic|des|both]
+           Design-space sweep over the base config: each repeatable --axis
+           adds one typed grid dimension (axes also load from a [sweep]
+           block in the --config TOML); --pivot renders the cycle grid
+           pivoted on that axis. --macs is shorthand for --axis macs=...
   crossval [--scale N] [--datasets wv,fb,...] [--seed S] [--policy P]
            DES vs analytic cross-validation over the four paper configs;
            exits non-zero if any cell leaves the documented agreement band
@@ -102,17 +128,27 @@ Simulation commands warm-start from the on-disk workload cache
 --no-cache (or set MAPLE_NO_CACHE=1) to recompute from scratch.
 ";
 
-fn parse_config(name: &str) -> CliResult<AcceleratorConfig> {
+/// A built-in preset configuration, if `name` names one.
+fn parse_preset(name: &str) -> Option<AcceleratorConfig> {
     match name {
-        "matraptor-baseline" => Ok(AcceleratorConfig::matraptor_baseline()),
-        "matraptor-maple" => Ok(AcceleratorConfig::matraptor_maple()),
-        "extensor-baseline" => Ok(AcceleratorConfig::extensor_baseline()),
-        "extensor-maple" => Ok(AcceleratorConfig::extensor_maple()),
-        path => {
-            let s = std::fs::read_to_string(path)
-                .map_err(|e| format!("config {path} is not a preset and not readable: {e}"))?;
-            Ok(AcceleratorConfig::from_toml(&s)?)
-        }
+        "matraptor-baseline" => Some(AcceleratorConfig::matraptor_baseline()),
+        "matraptor-maple" => Some(AcceleratorConfig::matraptor_maple()),
+        "extensor-baseline" => Some(AcceleratorConfig::extensor_baseline()),
+        "extensor-maple" => Some(AcceleratorConfig::extensor_maple()),
+        _ => None,
+    }
+}
+
+/// The raw text of a `--config` file argument.
+fn read_config_file(path: &str) -> CliResult<String> {
+    std::fs::read_to_string(path)
+        .map_err(|e| format!("config {path} is not a preset and not readable: {e}").into())
+}
+
+fn parse_config(name: &str) -> CliResult<AcceleratorConfig> {
+    match parse_preset(name) {
+        Some(cfg) => Ok(cfg),
+        None => Ok(AcceleratorConfig::from_toml(&read_config_file(name)?)?),
     }
 }
 
@@ -168,7 +204,7 @@ fn crossval(
 ) -> CliResult {
     let names = dataset_names(datasets)?;
     let keys = names.iter().map(|&n| WorkloadKey::suite(n, seed, scale)).collect();
-    let spec = SweepSpec::new(AcceleratorConfig::paper_configs(), keys, vec![policy])
+    let spec = DesignSpace::new(AcceleratorConfig::paper_configs(), keys, vec![policy])
         .with_cell_model(CellModel::Both);
     let grid = engine.sweep(&spec)?;
     print!("{}", report::des_validation_report(&grid, !csv));
@@ -191,7 +227,7 @@ fn crossval(
 fn fig9(engine: &SimEngine, scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> CliResult {
     let names = dataset_names(datasets)?;
     let keys = names.iter().map(|&n| WorkloadKey::suite(n, seed, scale)).collect();
-    let grid = engine.sweep(&SweepSpec::paper(keys))?;
+    let grid = engine.sweep(&DesignSpace::paper(keys))?;
 
     // `paper_configs()` order: matraptor base (0) / maple (1), extensor
     // base (2) / maple (3).
@@ -312,65 +348,102 @@ fn main() -> CliResult {
             }
         }
         "sweep" => {
-            let dataset = args.opt_or("--dataset", "wikiVote");
+            // Config axes: the [sweep] block of a --config TOML file first,
+            // then every repeatable --axis flag, then the legacy --macs
+            // shorthand; with no axis at all, the historical default
+            // MACs/PE sweep. Presets resolve before the filesystem (same
+            // order as `parse_config`), so only a genuinely loaded file
+            // contributes a [sweep] block.
+            let config_arg = args.opt_or("--config", "extensor-maple");
+            let (base, mut axes): (AcceleratorConfig, Vec<ConfigAxis>) =
+                match parse_preset(config_arg) {
+                    Some(cfg) => (cfg, Vec::new()),
+                    None => {
+                        let s = read_config_file(config_arg)?;
+                        (AcceleratorConfig::from_toml(&s)?, axis::sweep_axes_from_toml(&s)?)
+                    }
+                };
             let scale = args.parse_or("--scale", 4usize)?;
             let seed = args.parse_or("--seed", 7u64)?;
-            let macs: Vec<usize> = args
-                .opt_or("--macs", "1,2,4,8,16,32")
-                .split(',')
-                .map(|k| k.trim().parse().map_err(|_| format!("bad MAC count: {k}").into()))
-                .collect::<CliResult<_>>()?;
-            let configs: Vec<AcceleratorConfig> = macs
+            let datasets = args.opt("--datasets").or_else(|| args.opt("--dataset"));
+            let keys: Vec<WorkloadKey> = dataset_names(Some(datasets.unwrap_or("wikiVote")))?
                 .iter()
-                .map(|&k| {
-                    let mut cfg = AcceleratorConfig::extensor_maple();
-                    cfg.pe.macs_per_pe = k;
-                    cfg.name = format!("extensor-maple-k{k}");
-                    cfg
-                })
+                .map(|&n| WorkloadKey::suite(n, seed, scale))
                 .collect();
-            let engine = make_engine(&args);
-            let model = parse_cell_model(&args)?;
-            let grid = engine.sweep(
-                &SweepSpec::new(
-                    configs.clone(),
-                    vec![WorkloadKey::suite(dataset, seed, scale)],
-                    vec![Policy::RoundRobin],
-                )
-                .with_cell_model(model),
-            )?;
-            let header = ["MACs/PE", "cycles", "speedup vs k=1", "energy uJ", "util %"];
-            let mut rows = Vec::new();
-            let mut base_cycles = 0u64;
-            for (i, (&k, cfg)) in macs.iter().zip(&configs).enumerate() {
-                // `--cell-model des` makes the event-driven counts the
-                // ones in the table (cycles, speedup, and the DES's own
-                // front-stage occupancy as util); energy always comes from
-                // the analytic model (the DES resolves timing only).
-                let cell = grid.get(0, i, 0);
-                let cycles = grid.cell_cycles(0, i, 0);
-                let r = &cell.analytic;
-                let util = match (model, &cell.des) {
-                    (CellModel::Des, Some(des)) => des.pe_utilisation,
-                    _ => r.mac_utilisation(cfg),
-                };
-                if base_cycles == 0 {
-                    base_cycles = cycles;
-                }
-                rows.push(vec![
-                    k.to_string(),
-                    cycles.to_string(),
-                    format!("{:.2}x", base_cycles as f64 / cycles as f64),
-                    format!("{:.3}", r.energy.total_pj() / 1e6),
-                    format!("{:.1}", 100.0 * util),
-                ]);
+
+            let axis_flags = args.opt_all("--axis");
+            if axis_flags.len() != args.count("--axis") {
+                return Err("--axis expects a following name=v1,v2,... value".into());
             }
-            let out = if md {
-                report::markdown_table(&header, &rows)
-            } else {
-                report::csv(&header, &rows)
-            };
-            print!("{out}");
+            for spec in axis_flags {
+                let (name, values) = spec.split_once('=').ok_or_else(|| {
+                    CliError::from(format!("--axis expects name=v1,v2,... (got {spec:?})"))
+                })?;
+                axes.push(ConfigAxis::parse(name, values)?);
+            }
+            if let Some(macs) = args.opt("--macs") {
+                axes.push(ConfigAxis::parse("macs", macs)?);
+            }
+            if axes.is_empty() {
+                axes.push(ConfigAxis::parse("macs", "1,2,4,8,16,32")?);
+            }
+            // Validate --pivot against the known dimension names *before*
+            // the sweep runs — a typo must fail in milliseconds, not after
+            // minutes of simulation.
+            let pivot = args.opt("--pivot");
+            if let Some(p) = pivot {
+                let mut known = vec!["dataset", "config"];
+                known.extend(axes.iter().map(|a| a.name()));
+                known.push("policy");
+                if !known.contains(&p) {
+                    return Err(format!(
+                        "--pivot {p}: not an axis of this sweep (expected one of: {})",
+                        known.join(", ")
+                    )
+                    .into());
+                }
+            }
+            let policies: Vec<Policy> = args
+                .opt_or("--policy", "round-robin")
+                .split(',')
+                .map(|p| parse_policy(p.trim()))
+                .collect::<CliResult<_>>()?;
+
+            let model = parse_cell_model(&args)?;
+            let mut space = DesignSpace::over(vec![base])
+                .with_cell_model(model)
+                .with_axis(Axis::Dataset(keys));
+            for a in axes {
+                space = space.with_axis(Axis::Config(a));
+            }
+            space = space.with_axis(Axis::Policy(policies));
+
+            let mut engine = make_engine(&args);
+            if let Some(threads) = args.opt("--threads") {
+                let threads: usize = threads
+                    .parse()
+                    .map_err(|_| format!("bad value for --threads: {threads}"))?;
+                engine = engine.with_threads(threads);
+            }
+            let grid = engine.sweep(&space)?;
+
+            // Grid-shape line (CI asserts shape and 1-vs-N-thread identity).
+            // On stderr so `--csv` stdout stays a pure machine-readable table.
+            let shape = grid
+                .dims
+                .iter()
+                .map(|d| format!("{}={}", d.name, d.len()))
+                .collect::<Vec<_>>()
+                .join(" x ");
+            eprintln!("grid: {shape} -> {} cells", grid.cell_count());
+            match pivot {
+                Some(pivot) => {
+                    let table = report::sweep_pivot_report(&grid, pivot, md)
+                        .ok_or_else(|| format!("--pivot {pivot}: not an axis of this sweep"))?;
+                    print!("{table}");
+                }
+                None => print!("{}", report::sweep_axis_report(&grid, md)),
+            }
             if model.runs_des() {
                 println!();
                 print!("{}", report::des_validation_report(&grid, md));

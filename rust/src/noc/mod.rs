@@ -6,12 +6,65 @@
 use crate::trace::Counters;
 
 /// NoC topology.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Topology {
     /// Single-stage crossbar with `ports` endpoints (Matraptor-style).
     Crossbar { ports: usize },
     /// 2-D mesh of `width × height` routers (Extensor-style), XY-routed.
     Mesh { width: usize, height: usize },
+}
+
+impl Topology {
+    /// Whether any dimension is zero — a degenerate instance that cannot
+    /// route ([`Noc::hops`] would divide by the zero width). The single
+    /// predicate behind the spec parser, the TOML loader, and axis
+    /// validation.
+    pub fn is_degenerate(self) -> bool {
+        match self {
+            Topology::Crossbar { ports } => ports == 0,
+            Topology::Mesh { width, height } => width == 0 || height == 0,
+        }
+    }
+}
+
+/// Error parsing a [`Topology`] spec string.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("bad topology {0:?} (expected crossbar:<ports> or mesh:<width>x<height>, dims ≥ 1)")]
+pub struct TopologyParseError(pub String);
+
+/// The canonical spec syntax, shared by TOML io, the CLI `--axis noc=...`
+/// flag, and report labels: `crossbar:<ports>` / `mesh:<width>x<height>`.
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Topology::Crossbar { ports } => write!(f, "crossbar:{ports}"),
+            Topology::Mesh { width, height } => write!(f, "mesh:{width}x{height}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Topology {
+    type Err = TopologyParseError;
+
+    /// Parse `crossbar:<ports>` / `mesh:<width>x<height>`. Every dimension
+    /// must be ≥ 1 — a zero-port crossbar or `mesh:0x4` cannot route.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let err = || TopologyParseError(s.to_string());
+        let (name, dims) = s.trim().split_once(':').ok_or_else(err)?;
+        let dim = |t: &str| t.trim().parse::<usize>().map_err(|_| err());
+        let t = match name.trim() {
+            "crossbar" => Topology::Crossbar { ports: dim(dims)? },
+            "mesh" => {
+                let (w, h) = dims.split_once('x').ok_or_else(err)?;
+                Topology::Mesh { width: dim(w)?, height: dim(h)? }
+            }
+            _ => return Err(err()),
+        };
+        if t.is_degenerate() {
+            return Err(err());
+        }
+        Ok(t)
+    }
 }
 
 /// Delivery pattern for one transfer.
@@ -75,22 +128,18 @@ impl Noc {
                 c.noc_flit_hops += flits * h;
                 h * self.cycles_per_hop + flits - 1
             }
+            // Tree-fanout approximation (multicast and broadcast): flits
+            // traverse shared prefix paths once, so the delivery tree is
+            // costed as one trunk — the longest source→destination path —
+            // plus one extra leaf hop per additional destination. Energy
+            // (flit-hops) is charged on that tree; latency is the trunk
+            // traversal plus the pipeline drain. Summing per-destination
+            // paths would double-charge the shared prefix (that sum is what
+            // repeated unicast costs, the upper bound the regression tests
+            // compare against).
             Cast::Multicast { src, dsts } => {
-                // Tree multicast: flits traverse shared prefix paths once; we
-                // approximate the tree as the union cost = max path + extra
-                // leaf hops, and count energy on every delivered copy's last
-                // hop plus one shared trunk.
-                let mut max_h = 0;
-                let mut total_h = 0;
-                for &d in dsts {
-                    let h = self.hops(src, d);
-                    max_h = max_h.max(h);
-                    total_h += h;
-                }
-                // Energy: trunk (max path) + one extra hop per additional
-                // destination (tree fan-out approximation).
+                let max_h = dsts.iter().map(|&d| self.hops(src, d)).max().unwrap_or(0);
                 let tree_hops = max_h + (dsts.len().saturating_sub(1)) as u64;
-                let _ = total_h;
                 c.noc_flit_hops += flits * tree_hops.max(1);
                 max_h.max(1) * self.cycles_per_hop + flits - 1
             }
@@ -163,5 +212,66 @@ mod tests {
     fn endpoints_match_topology() {
         assert_eq!(Noc::new(Topology::Crossbar { ports: 5 }).endpoints(), 5);
         assert_eq!(Noc::new(Topology::Mesh { width: 16, height: 8 }).endpoints(), 128);
+    }
+
+    #[test]
+    fn multicast_tree_fanout_mesh_vs_crossbar_is_pinned() {
+        // Regression for the tree-fanout approximation (the dead `total_h`
+        // sum is gone): same destination set, one flit stream of 8 words.
+        //
+        // Mesh 4×2, src 0, dsts {3, 5, 6, 7}: hops 3, 2, 3, 4 → trunk 4,
+        // tree = 4 + 3 extra leaves = 7 → 8 flits × 7 = 56 flit-hops,
+        // latency = 4 hops + 7 drain = 11.
+        let mut mesh = Noc::new(Topology::Mesh { width: 4, height: 2 });
+        let mut cm = Counters::default();
+        let dsts = [3, 5, 6, 7];
+        let lat_m = mesh.transfer(&mut cm, Cast::Multicast { src: 0, dsts: &dsts }, 8);
+        assert_eq!(cm.noc_flit_hops, 56);
+        assert_eq!(lat_m, 11);
+        // Crossbar 8: every path is 1 hop → tree = 1 + 3 = 4 → 32 flit-hops,
+        // latency = 1 + 7 = 8. Strictly cheaper than the mesh on both axes.
+        let mut xbar = Noc::new(Topology::Crossbar { ports: 8 });
+        let mut cx = Counters::default();
+        let lat_x = xbar.transfer(&mut cx, Cast::Multicast { src: 0, dsts: &dsts }, 8);
+        assert_eq!(cx.noc_flit_hops, 32);
+        assert_eq!(lat_x, 8);
+        assert!(cx.noc_flit_hops < cm.noc_flit_hops && lat_x < lat_m);
+        // And the tree stays below the repeated-unicast sum on the mesh
+        // (3+2+3+4 = 12 path-hops > 7 tree-hops).
+        let mut uni = Noc::new(Topology::Mesh { width: 4, height: 2 });
+        let mut cu = Counters::default();
+        for &d in &dsts {
+            uni.transfer(&mut cu, Cast::Unicast { src: 0, dst: d }, 8);
+        }
+        assert_eq!(cu.noc_flit_hops, 96);
+        assert!(cm.noc_flit_hops < cu.noc_flit_hops);
+    }
+
+    #[test]
+    fn topology_display_round_trips() {
+        for t in [
+            Topology::Crossbar { ports: 8 },
+            Topology::Crossbar { ports: 1 },
+            Topology::Mesh { width: 16, height: 8 },
+            Topology::Mesh { width: 1, height: 1 },
+        ] {
+            assert_eq!(t.to_string().parse::<Topology>(), Ok(t));
+        }
+        assert_eq!("crossbar:8".parse::<Topology>(), Ok(Topology::Crossbar { ports: 8 }));
+        assert_eq!(
+            " mesh:4x2 ".parse::<Topology>(),
+            Ok(Topology::Mesh { width: 4, height: 2 })
+        );
+    }
+
+    #[test]
+    fn topology_parse_rejects_bad_specs() {
+        for bad in [
+            "", "mesh", "crossbar", "crossbar:", "crossbar:0", "crossbar:x",
+            "mesh:0x4", "mesh:4x0", "mesh:4", "mesh:4x", "mesh:x4", "mesh:axb",
+            "torus:4x4", "mesh:4x4x4", "crossbar:-1", "mesh:-1x4",
+        ] {
+            assert!(bad.parse::<Topology>().is_err(), "{bad:?} must not parse");
+        }
     }
 }

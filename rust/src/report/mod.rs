@@ -203,6 +203,91 @@ pub fn des_validation_report(sweep: &SweepResult, markdown: bool) -> String {
     s
 }
 
+/// Axis-grouped sweep table — the generic renderer for [`SweepResult`]
+/// grids of any dimensionality (it replaces the dataset-major-only view):
+/// one row per cell in grid (row-major) order, one leading column per
+/// non-trivial axis (every axis when the grid is a single cell), then the
+/// authoritative cycle count, energy, and — when the sweep ran the DES —
+/// the DES cycles and agreement ratio.
+pub fn sweep_axis_report(sweep: &SweepResult, markdown: bool) -> String {
+    let has_des = (0..sweep.cell_count()).any(|i| sweep.cell(i).des.is_some());
+    let mut shown: Vec<usize> =
+        (0..sweep.dims.len()).filter(|&i| sweep.dims[i].len() > 1).collect();
+    if shown.is_empty() {
+        shown = (0..sweep.dims.len()).collect();
+    }
+    let mut header: Vec<&str> = shown.iter().map(|&i| sweep.dims[i].name).collect();
+    header.extend(["cycles", "energy uJ"]);
+    if has_des {
+        header.extend(["DES", "ratio"]);
+    }
+    let rows: Vec<Vec<String>> = (0..sweep.cell_count())
+        .map(|idx| {
+            let cell = sweep.cell(idx);
+            let mut row: Vec<String> =
+                shown.iter().map(|&i| cell.coords[i].label.clone()).collect();
+            row.push(cell.cycles(sweep.cell_model).to_string());
+            row.push(format!("{:.3}", cell.analytic.energy.total_pj() / 1e6));
+            if has_des {
+                match &cell.des {
+                    Some(d) => {
+                        row.push(d.cycles.to_string());
+                        row.push(format!("{:.3}", cell.agreement_ratio().unwrap_or(0.0)));
+                    }
+                    None => row.extend(["-".to_string(), "-".to_string()]),
+                }
+            }
+            row
+        })
+        .collect();
+    if markdown {
+        markdown_table(&header, &rows)
+    } else {
+        csv(&header, &rows)
+    }
+}
+
+/// Pivot the sweep grid on any named axis: one column of authoritative
+/// cycle counts per point of the pivot axis, one row per combination of
+/// the remaining axes (row-major grid order; trivial single-point axes are
+/// elided from the row labels). `None` when `pivot` is not a dimension of
+/// this grid.
+pub fn sweep_pivot_report(sweep: &SweepResult, pivot: &str, markdown: bool) -> Option<String> {
+    let p = sweep.dims.iter().position(|d| d.name == pivot)?;
+    let others: Vec<usize> = (0..sweep.dims.len()).filter(|&i| i != p).collect();
+    let shown: Vec<usize> =
+        others.iter().copied().filter(|&i| sweep.dims[i].len() > 1).collect();
+    let mut header: Vec<String> = shown.iter().map(|&i| sweep.dims[i].name.to_string()).collect();
+    if header.is_empty() {
+        header.push("cell".into());
+    }
+    for label in &sweep.dims[p].labels {
+        header.push(format!("{pivot}={label}"));
+    }
+    let row_count: usize = others.iter().map(|&i| sweep.dims[i].len()).product();
+    let mut rows = Vec::with_capacity(row_count);
+    for r in 0..row_count {
+        let mut coord = vec![0usize; sweep.dims.len()];
+        let mut rem = r;
+        for &i in others.iter().rev() {
+            coord[i] = rem % sweep.dims[i].len();
+            rem /= sweep.dims[i].len();
+        }
+        let mut row: Vec<String> =
+            shown.iter().map(|&i| sweep.dims[i].labels[coord[i]].clone()).collect();
+        if row.is_empty() {
+            row.push("-".into());
+        }
+        for pi in 0..sweep.dims[p].len() {
+            coord[p] = pi;
+            row.push(sweep.at(&coord).cycles(sweep.cell_model).to_string());
+        }
+        rows.push(row);
+    }
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    Some(if markdown { markdown_table(&header_refs, &rows) } else { csv(&header_refs, &rows) })
+}
+
 /// Fig. 9 report over a set of dataset rows, with the paper-style mean.
 pub fn fig9_report(title: &str, rows: &[Fig9Row], markdown: bool) -> String {
     let header = ["Dataset", "Energy benefit %", "Speedup %"];
@@ -290,6 +375,71 @@ mod tests {
         // An analytic sweep has nothing to cross-validate.
         let analytic = engine.sweep(&SweepSpec::paper(vec![key])).unwrap();
         assert!(des_validation_report(&analytic, true).starts_with("no DES cells"));
+    }
+
+    #[test]
+    fn axis_report_and_pivot_cover_the_grid() {
+        use crate::coordinator::Policy;
+        use crate::noc::Topology;
+        use crate::sim::{Axis, DesignSpace, SimEngine, WorkloadKey};
+        let engine = SimEngine::new();
+        let grid = engine
+            .sweep(
+                &DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+                    .with_axis(Axis::Dataset(vec![WorkloadKey::suite("wv", 7, 64)]))
+                    .with_axis(Axis::topology(vec![
+                        Topology::Crossbar { ports: 8 },
+                        Topology::Mesh { width: 4, height: 2 },
+                    ]))
+                    .with_axis(Axis::macs_per_pe(vec![2, 4])),
+            )
+            .unwrap();
+        let md = sweep_axis_report(&grid, true);
+        // Non-trivial axes appear as columns; each cell is one row.
+        assert!(md.starts_with("| noc | macs | cycles | energy uJ |"), "{md}");
+        assert_eq!(md.lines().count(), 2 + grid.cell_count(), "{md}");
+        for needle in ["crossbar:8", "mesh:4x2", "| 2 |", "| 4 |"] {
+            assert!(md.contains(needle), "missing {needle} in:\n{md}");
+        }
+        let c = sweep_axis_report(&grid, false);
+        assert!(c.starts_with("noc,macs,cycles,energy uJ"), "{c}");
+
+        // Pivot on the noc axis: one row per macs point, one cycles column
+        // per topology; values match direct grid addressing.
+        let pv = sweep_pivot_report(&grid, "noc", true).unwrap();
+        assert!(pv.starts_with("| macs | noc=crossbar:8 | noc=mesh:4x2 |"), "{pv}");
+        assert_eq!(pv.lines().count(), 2 + 2, "{pv}");
+        let pv = sweep_pivot_report(&grid, "macs", false).unwrap();
+        assert!(pv.starts_with("noc,macs=2,macs=4"), "{pv}");
+        for (ni, mi) in [(0usize, 0usize), (1, 1)] {
+            let cycles = grid
+                .at(&[0, 0, ni, mi, 0])
+                .cycles(grid.cell_model)
+                .to_string();
+            assert!(pv.contains(&cycles), "missing cycles {cycles} in:\n{pv}");
+        }
+        // Unknown axis → None.
+        assert!(sweep_pivot_report(&grid, "warp", true).is_none());
+
+        // A des-bearing sweep grows the DES columns.
+        let both = engine
+            .sweep(
+                &DesignSpace::paper(vec![WorkloadKey::suite("wv", 7, 64)])
+                    .with_cell_model(crate::sim::CellModel::Both),
+            )
+            .unwrap();
+        let md = sweep_axis_report(&both, true);
+        assert!(md.starts_with("| config | cycles | energy uJ | DES | ratio |"), "{md}");
+        // Single-cell grid: every axis is shown rather than none.
+        let single = engine
+            .sweep(&DesignSpace::new(
+                vec![AcceleratorConfig::extensor_maple()],
+                vec![WorkloadKey::suite("wv", 7, 64)],
+                vec![Policy::RoundRobin],
+            ))
+            .unwrap();
+        let md = sweep_axis_report(&single, true);
+        assert!(md.starts_with("| dataset | config | policy | cycles |"), "{md}");
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! The simulation engine: cached profiling + parallel sweep fan-out.
 //!
-//! The paper's evaluation is a *sweep* — datasets × configurations ×
-//! policies — and the profile pass is the expensive part (an exact
-//! functional execution of `C = A × B`). [`SimEngine`] profiles each
+//! The paper's evaluation is *design-space exploration*: a [`DesignSpace`]
+//! names a base configuration set plus an ordered list of typed [`Axis`]
+//! values (dataset, policy, NoC topology, MACs/PE, prefetch depth, PE
+//! model), and [`SimEngine::sweep`] expands it into a deterministic,
+//! index-addressed cell grid. The profile pass is the expensive part (an
+//! exact functional execution of `C = A × B`), so the engine profiles each
 //! workload **exactly once**, caches it keyed by (dataset, seed, scale),
 //! and fans the sweep cells out across scoped worker threads; every caller
 //! (CLI, benches, examples) sits on the same engine instead of hand-rolling
@@ -15,18 +18,22 @@
 //! so repeated CLI/bench/CI runs — and concurrent processes sharing the
 //! directory — start warm.
 //!
-//! Determinism: a [`SweepResult`] is a pure function of the [`SweepSpec`] —
-//! cell results land in a fixed (dataset, config, policy)-major grid no
-//! matter how many worker threads ran, and the profile pass uses a
-//! dedicated `profile_threads` knob (default 1, i.e. bit-exact with the
-//! serial pass) that is independent of the fan-out width.
+//! Determinism: a [`SweepResult`] is a pure function of the
+//! [`DesignSpace`] — cell results land in a fixed row-major grid over
+//! `dataset × config × <config axes in order> × policy` no matter how many
+//! worker threads ran (every cell carries its named-axis coordinates), and
+//! the profile pass uses a dedicated `profile_threads` knob (default 1,
+//! i.e. bit-exact with the serial pass) that is independent of the fan-out
+//! width.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::config::axis::ConfigAxis;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::Policy;
+use crate::noc::Topology;
 use crate::sim::cache::DiskCache;
 use crate::sim::des::{agreement_band, simulate_des, DesResult};
 use crate::sim::{profile_workload_parallel, simulate_workload, SimResult, Workload};
@@ -39,6 +46,10 @@ pub enum EngineError {
     UnknownDataset(String),
     #[error("empty sweep dimension: {0}")]
     EmptySweep(&'static str),
+    #[error("conflicting sweep axes: {0} appears more than once")]
+    ConflictingAxes(&'static str),
+    #[error("axis {0}: invalid point {1}")]
+    InvalidAxisPoint(&'static str, String),
     #[error(transparent)]
     Pe(#[from] crate::pe::registry::RegistryError),
 }
@@ -102,24 +113,144 @@ impl std::str::FromStr for CellModel {
     }
 }
 
-/// One sweep: the full cross product `datasets × configs × policies`,
-/// each cell run under `cell_model`.
+/// One typed design-space axis. `Dataset` varies the workload and `Policy`
+/// the row routing; every other axis is a pure transform of the base
+/// [`AcceleratorConfig`] (see [`ConfigAxis`]). Constructors exist for each
+/// kind so call sites read as the axis they vary.
 #[derive(Debug, Clone, PartialEq)]
-pub struct SweepSpec {
+pub enum Axis {
+    /// Workloads to sweep (grid-outermost dimension).
+    Dataset(Vec<WorkloadKey>),
+    /// Row-routing policies (grid-innermost dimension; defaults to
+    /// round-robin when the axis is absent).
+    Policy(Vec<Policy>),
+    /// A configuration transform axis (NoC topology, MACs/PE, prefetch
+    /// depth, PE model), expanding the config dimension in listed order.
+    Config(ConfigAxis),
+}
+
+impl Axis {
+    /// NoC topology axis (`noc`).
+    pub fn topology(points: Vec<Topology>) -> Self {
+        Axis::Config(ConfigAxis::Topology(points))
+    }
+
+    /// MACs-per-PE axis (`macs`).
+    pub fn macs_per_pe(points: Vec<usize>) -> Self {
+        Axis::Config(ConfigAxis::MacsPerPe(points))
+    }
+
+    /// Operand-loader FIFO depth axis (`prefetch`).
+    pub fn prefetch_depth(points: Vec<usize>) -> Self {
+        Axis::Config(ConfigAxis::PrefetchDepth(points))
+    }
+
+    /// Registered PE cost-model axis (`pe-model`).
+    pub fn pe_model(points: Vec<String>) -> Self {
+        Axis::Config(ConfigAxis::PeModel(points))
+    }
+
+    /// The axis name used for grid dimensions, coordinates, and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Axis::Dataset(_) => "dataset",
+            Axis::Policy(_) => "policy",
+            Axis::Config(a) => a.name(),
+        }
+    }
+
+    /// Number of points on this axis.
+    pub fn len(&self) -> usize {
+        match self {
+            Axis::Dataset(v) => v.len(),
+            Axis::Policy(v) => v.len(),
+            Axis::Config(a) => a.len(),
+        }
+    }
+
+    /// Whether the axis has no points.
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Axis::Dataset(v) => v.is_empty(),
+            Axis::Policy(v) => v.is_empty(),
+            Axis::Config(a) => a.is_empty(),
+        }
+    }
+}
+
+/// One named dimension of an expanded sweep grid: the axis name plus one
+/// label per point, in point order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AxisDim {
+    pub name: &'static str,
+    pub labels: Vec<String>,
+}
+
+impl AxisDim {
+    /// Number of points along this dimension.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// Whether the dimension is degenerate (never true in a valid grid).
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+}
+
+/// One named-axis coordinate of a sweep cell: which point of which axis the
+/// cell sits on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AxisCoord {
+    pub axis: &'static str,
+    pub index: usize,
+    pub label: String,
+}
+
+/// Named-axis coordinates of the cell at flat `idx` in a row-major grid
+/// over `dims` (innermost dimension last).
+fn coords_for(dims: &[AxisDim], idx: usize) -> Vec<AxisCoord> {
+    let mut out = Vec::with_capacity(dims.len());
+    let mut rem = idx;
+    for d in dims.iter().rev() {
+        let i = rem % d.len();
+        rem /= d.len();
+        out.push(AxisCoord { axis: d.name, index: i, label: d.labels[i].clone() });
+    }
+    out.reverse();
+    out
+}
+
+/// A design space: a base configuration set plus an ordered list of typed
+/// [`Axis`] values, each point a pure transform over the base. The cell
+/// grid is the full product, row-major over
+/// `dataset × config × <config axes in listed order> × policy` — dataset
+/// and policy have fixed outer/inner positions so the historical
+/// `(dataset, config, policy)` addressing (and every `paper()` caller) is
+/// unchanged when no config axes are present.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DesignSpace {
+    /// Base configurations (the `config` grid dimension).
     pub configs: Vec<AcceleratorConfig>,
-    pub datasets: Vec<WorkloadKey>,
-    pub policies: Vec<Policy>,
+    /// Ordered typed axes; at most one of each kind.
+    pub axes: Vec<Axis>,
     pub cell_model: CellModel,
 }
 
-impl SweepSpec {
-    /// A sweep over the given grid with the default (analytic) cell model.
+/// The historical name for a design space: `SweepSpec::new` / `paper` are
+/// thin constructors over [`DesignSpace`], so pre-axis callers compile and
+/// produce identical grids.
+pub type SweepSpec = DesignSpace;
+
+impl DesignSpace {
+    /// The classic grid: `configs × datasets × policies` under the default
+    /// (analytic) cell model.
     pub fn new(
         configs: Vec<AcceleratorConfig>,
         datasets: Vec<WorkloadKey>,
         policies: Vec<Policy>,
     ) -> Self {
-        Self { configs, datasets, policies, cell_model: CellModel::Analytic }
+        Self::over(configs).with_axis(Axis::Dataset(datasets)).with_axis(Axis::Policy(policies))
     }
 
     /// The paper's Fig.-9 sweep: all four configurations, round-robin
@@ -128,21 +259,140 @@ impl SweepSpec {
         Self::new(AcceleratorConfig::paper_configs(), datasets, vec![Policy::RoundRobin])
     }
 
-    /// The same sweep under a different cell model.
+    /// A bare design space over base configurations; add dimensions with
+    /// [`DesignSpace::with_axis`].
+    pub fn over(configs: Vec<AcceleratorConfig>) -> Self {
+        Self { configs, axes: Vec::new(), cell_model: CellModel::Analytic }
+    }
+
+    /// Append one axis (grid order for config axes is append order).
+    pub fn with_axis(mut self, axis: Axis) -> Self {
+        self.axes.push(axis);
+        self
+    }
+
+    /// The same space under a different cell model.
     pub fn with_cell_model(mut self, cell_model: CellModel) -> Self {
         self.cell_model = cell_model;
         self
     }
+
+    /// The dataset axis points (empty when the axis is absent).
+    pub fn datasets(&self) -> &[WorkloadKey] {
+        self.axes
+            .iter()
+            .find_map(|a| match a {
+                Axis::Dataset(keys) => Some(keys.as_slice()),
+                _ => None,
+            })
+            .unwrap_or(&[])
+    }
+
+    /// Expand into concrete grid dimensions: validate the axes (one of each
+    /// kind, no empty or degenerate ones), materialise the expanded config
+    /// list (base × config-axis product, transforms applied in axis order),
+    /// and name every dimension.
+    fn expand(&self) -> Result<Expanded, EngineError> {
+        if self.configs.is_empty() {
+            return Err(EngineError::EmptySweep("configs"));
+        }
+        let mut seen: Vec<&'static str> = Vec::new();
+        for axis in &self.axes {
+            if seen.contains(&axis.name()) {
+                return Err(EngineError::ConflictingAxes(axis.name()));
+            }
+            seen.push(axis.name());
+        }
+        let mut datasets: Vec<WorkloadKey> = Vec::new();
+        let mut policies: Vec<Policy> = Vec::new();
+        let mut config_axes: Vec<&ConfigAxis> = Vec::new();
+        for axis in &self.axes {
+            match axis {
+                Axis::Dataset(keys) => datasets = keys.clone(),
+                Axis::Policy(ps) => policies = ps.clone(),
+                Axis::Config(a) => {
+                    if a.is_empty() {
+                        return Err(EngineError::EmptySweep(a.name()));
+                    }
+                    a.validate()
+                        .map_err(|bad| EngineError::InvalidAxisPoint(a.name(), bad))?;
+                    config_axes.push(a);
+                }
+            }
+        }
+        if datasets.is_empty() {
+            return Err(EngineError::EmptySweep("datasets"));
+        }
+        if policies.is_empty() {
+            if self.axes.iter().any(|a| matches!(a, Axis::Policy(_))) {
+                return Err(EngineError::EmptySweep("policies"));
+            }
+            policies.push(Policy::RoundRobin);
+        }
+
+        // Expand the config dimension: base (outer) × config-axis product
+        // (row-major, first listed axis outermost), transforms applied in
+        // axis order so each expanded name reads base+axis1=..+axis2=..
+        let combos: usize = config_axes.iter().map(|a| a.len()).product();
+        let mut configs = Vec::with_capacity(self.configs.len() * combos);
+        for base in &self.configs {
+            for combo in 0..combos {
+                let mut cfg = base.clone();
+                let mut point = vec![0usize; config_axes.len()];
+                let mut rem = combo;
+                for (i, a) in config_axes.iter().enumerate().rev() {
+                    point[i] = rem % a.len();
+                    rem /= a.len();
+                }
+                for (a, &i) in config_axes.iter().zip(&point) {
+                    a.apply(i, &mut cfg);
+                }
+                configs.push(cfg);
+            }
+        }
+
+        let mut dims = vec![
+            AxisDim {
+                name: "dataset",
+                labels: datasets.iter().map(|k| k.dataset.clone()).collect(),
+            },
+            AxisDim {
+                name: "config",
+                labels: self.configs.iter().map(|c| c.name.clone()).collect(),
+            },
+        ];
+        for a in &config_axes {
+            dims.push(AxisDim { name: a.name(), labels: a.labels() });
+        }
+        dims.push(AxisDim {
+            name: "policy",
+            labels: policies.iter().map(|p| format!("{p:?}")).collect(),
+        });
+        Ok(Expanded { datasets, configs, policies, dims })
+    }
+}
+
+/// A [`DesignSpace`] expanded to concrete grid dimensions.
+struct Expanded {
+    datasets: Vec<WorkloadKey>,
+    /// Base × config-axis product, transforms applied, names suffixed.
+    configs: Vec<AcceleratorConfig>,
+    policies: Vec<Policy>,
+    /// Row-major dimension order: dataset, config, config axes…, policy.
+    dims: Vec<AxisDim>,
 }
 
 /// One sweep cell: the analytic result, plus the DES cross-check when the
-/// sweep's [`CellModel`] ran it.
+/// sweep's [`CellModel`] ran it, addressed by its named-axis coordinates.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CellResult {
     /// The analytic pipeline result — functional oracle and energy model.
     pub analytic: SimResult,
     /// The transaction-level DES result ([`CellModel::Des`] / `Both` only).
     pub des: Option<DesResult>,
+    /// Where this cell sits in the grid: one coordinate per dimension, in
+    /// row-major dimension order (dataset, config, config axes…, policy).
+    pub coords: Vec<AxisCoord>,
 }
 
 impl CellResult {
@@ -174,16 +424,22 @@ impl CellResult {
     }
 }
 
-/// The deterministic result grid of one sweep, dataset-major:
-/// `cells[(d × |configs| + c) × |policies| + p]`.
+/// The deterministic result grid of one sweep: row-major over the named
+/// [`AxisDim`]s (`dataset × config × <config axes> × policy`). The
+/// flattened legacy view — `cells[(d × |configs| + c) × |policies| + p]`
+/// with `configs` the *expanded* config list — addresses the same cells,
+/// because the config axes sit contiguously inside the config dimension.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepResult {
     pub datasets: Vec<WorkloadKey>,
-    /// Configuration names, in spec order.
+    /// Expanded configuration names (base × config axes), in grid order.
     pub configs: Vec<String>,
     pub policies: Vec<Policy>,
     /// The cell model the sweep ran under.
     pub cell_model: CellModel,
+    /// Named grid dimensions, row-major; their length product equals
+    /// [`SweepResult::cell_count`].
+    pub dims: Vec<AxisDim>,
     cells: Vec<CellResult>,
 }
 
@@ -199,6 +455,40 @@ impl SweepResult {
     /// Total number of cells.
     pub fn cell_count(&self) -> usize {
         self.cells.len()
+    }
+
+    /// The cell at a flat row-major grid index.
+    pub fn cell(&self, idx: usize) -> &CellResult {
+        &self.cells[idx]
+    }
+
+    /// Points per dimension, in row-major dimension order.
+    pub fn shape(&self) -> Vec<usize> {
+        self.dims.iter().map(|d| d.len()).collect()
+    }
+
+    /// The named dimension, if it is part of this grid.
+    pub fn dim(&self, name: &str) -> Option<&AxisDim> {
+        self.dims.iter().find(|d| d.name == name)
+    }
+
+    /// Flat index of the cell at per-dimension indices (row-major; one
+    /// index per [`AxisDim`], in order).
+    pub fn index_of(&self, coords: &[usize]) -> usize {
+        assert_eq!(
+            coords.len(),
+            self.dims.len(),
+            "expected one coordinate per grid dimension"
+        );
+        coords.iter().zip(&self.dims).fold(0, |acc, (&c, d)| {
+            assert!(c < d.len(), "{} index {c} out of range (< {})", d.name, d.len());
+            acc * d.len() + c
+        })
+    }
+
+    /// The cell at per-dimension indices (see [`SweepResult::index_of`]).
+    pub fn at(&self, coords: &[usize]) -> &CellResult {
+        &self.cells[self.index_of(coords)]
     }
 
     /// All cells with their (dataset, config, policy) indices, grid order.
@@ -438,7 +728,9 @@ impl SimEngine {
     }
 
     /// One sweep cell under an explicit [`CellModel`] — profile-cached,
-    /// with the DES cross-check attached when the model runs it.
+    /// with the DES cross-check attached when the model runs it. The cell
+    /// carries the coordinates of the equivalent 1×1×1 grid, so it compares
+    /// equal to the matching cell of a single-point sweep.
     pub fn simulate_cell(
         &self,
         cfg: &AcceleratorConfig,
@@ -447,7 +739,12 @@ impl SimEngine {
         model: CellModel,
     ) -> Result<CellResult, EngineError> {
         crate::pe::registry::build(cfg)?; // clean error before any profiling
-        Ok(Self::run_cell(cfg, &self.workload(key)?, policy, model))
+        let dims = [
+            AxisDim { name: "dataset", labels: vec![key.dataset.clone()] },
+            AxisDim { name: "config", labels: vec![cfg.name.clone()] },
+            AxisDim { name: "policy", labels: vec![format!("{policy:?}")] },
+        ];
+        Ok(Self::run_cell(cfg, &self.workload(key)?, policy, model, coords_for(&dims, 0)))
     }
 
     /// The per-cell dispatch shared by [`SimEngine::simulate_cell`] and the
@@ -458,35 +755,30 @@ impl SimEngine {
         w: &Workload,
         policy: Policy,
         model: CellModel,
+        coords: Vec<AxisCoord>,
     ) -> CellResult {
         let analytic = simulate_workload(cfg, w, policy);
         let des = model.runs_des().then(|| simulate_des(cfg, w, policy));
-        CellResult { analytic, des }
+        CellResult { analytic, des, coords }
     }
 
-    /// Run the full `datasets × configs × policies` grid. Each distinct
+    /// Run the full expanded grid of a [`DesignSpace`]. Each distinct
     /// dataset is profiled exactly once (cache-wide, not just per sweep);
-    /// cells then run concurrently on `threads` scoped workers.
-    pub fn sweep(&self, spec: &SweepSpec) -> Result<SweepResult, EngineError> {
-        if spec.configs.is_empty() {
-            return Err(EngineError::EmptySweep("configs"));
-        }
-        if spec.datasets.is_empty() {
-            return Err(EngineError::EmptySweep("datasets"));
-        }
-        if spec.policies.is_empty() {
-            return Err(EngineError::EmptySweep("policies"));
-        }
-        // Validate every config's PE model up front: a typo'd `pe.model`
-        // must be a clean error here, not a panic inside a worker thread.
-        for cfg in &spec.configs {
+    /// cells then run concurrently on `threads` scoped workers, landing in
+    /// the deterministic row-major grid regardless of fan-out width.
+    pub fn sweep(&self, spec: &DesignSpace) -> Result<SweepResult, EngineError> {
+        let ex = spec.expand()?;
+        // Validate every expanded config's PE model up front: a typo'd
+        // `pe.model` (or pe-model axis point) must be a clean error here,
+        // not a panic inside a worker thread.
+        for cfg in &ex.configs {
             crate::pe::registry::build(cfg)?;
         }
 
         // Phase 1 — profile distinct datasets, one worker each (bounded by
         // the fan-out width). Dedup keeps the first occurrence's order.
         let mut unique: Vec<&WorkloadKey> = Vec::new();
-        for k in &spec.datasets {
+        for k in &ex.datasets {
             if !unique.contains(&k) {
                 unique.push(k);
             }
@@ -521,11 +813,14 @@ impl SimEngine {
         }
 
         // Phase 2 — every cell, work-stealing over a shared index counter.
-        // All workloads are cache hits now.
+        // All workloads are cache hits now. The flat index decomposes over
+        // the legacy (dataset, config, policy) view; the named coordinates
+        // decompose the same index over the full dimension list — both are
+        // row-major, so they address the same cell.
         let workloads: Vec<Arc<Workload>> =
-            spec.datasets.iter().map(|k| self.workload(k)).collect::<Result<_, _>>()?;
-        let (nc, np) = (spec.configs.len(), spec.policies.len());
-        let total = spec.datasets.len() * nc * np;
+            ex.datasets.iter().map(|k| self.workload(k)).collect::<Result<_, _>>()?;
+        let (nc, np) = (ex.configs.len(), ex.policies.len());
+        let total = ex.datasets.len() * nc * np;
         let next = AtomicUsize::new(0);
         let cell_workers = self.threads.clamp(1, total);
         let parts: Vec<Vec<(usize, CellResult)>> = std::thread::scope(|scope| {
@@ -543,10 +838,11 @@ impl SimEngine {
                             out.push((
                                 idx,
                                 Self::run_cell(
-                                    &spec.configs[c],
+                                    &ex.configs[c],
                                     &workloads[d],
-                                    spec.policies[p],
+                                    ex.policies[p],
                                     spec.cell_model,
+                                    coords_for(&ex.dims, idx),
                                 ),
                             ));
                         }
@@ -562,10 +858,11 @@ impl SimEngine {
             cells[idx] = Some(r);
         }
         Ok(SweepResult {
-            datasets: spec.datasets.clone(),
-            configs: spec.configs.iter().map(|c| c.name.clone()).collect(),
-            policies: spec.policies.clone(),
+            datasets: ex.datasets,
+            configs: ex.configs.iter().map(|c| c.name.clone()).collect(),
+            policies: ex.policies,
             cell_model: spec.cell_model,
+            dims: ex.dims,
             cells: cells.into_iter().map(|c| c.expect("sweep cell computed")).collect(),
         })
     }
@@ -746,16 +1043,150 @@ mod tests {
     #[test]
     fn empty_sweep_dimensions_are_rejected() {
         let engine = SimEngine::new();
-        let ok = SweepSpec::paper(vec![small_key()]);
+        let configs = AcceleratorConfig::paper_configs();
+        let rr = vec![Policy::RoundRobin];
         for (spec, dim) in [
-            (SweepSpec { configs: vec![], ..ok.clone() }, "configs"),
-            (SweepSpec { datasets: vec![], ..ok.clone() }, "datasets"),
-            (SweepSpec { policies: vec![], ..ok }, "policies"),
+            (DesignSpace::new(vec![], vec![small_key()], rr.clone()), "configs"),
+            (DesignSpace::new(configs.clone(), vec![], rr.clone()), "datasets"),
+            (DesignSpace::new(configs.clone(), vec![small_key()], vec![]), "policies"),
+            (
+                DesignSpace::paper(vec![small_key()]).with_axis(Axis::macs_per_pe(vec![])),
+                "macs",
+            ),
+            (DesignSpace::over(configs).with_axis(Axis::Policy(rr)), "datasets"),
         ] {
             match engine.sweep(&spec) {
                 Err(EngineError::EmptySweep(d)) => assert_eq!(d, dim),
                 other => panic!("expected EmptySweep({dim}), got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn absent_policy_axis_defaults_to_round_robin() {
+        let engine = SimEngine::new();
+        let explicit = engine.sweep(&SweepSpec::paper(vec![small_key()])).unwrap();
+        let implicit = engine
+            .sweep(
+                &DesignSpace::over(AcceleratorConfig::paper_configs())
+                    .with_axis(Axis::Dataset(vec![small_key()])),
+            )
+            .unwrap();
+        assert_eq!(explicit, implicit);
+        assert_eq!(implicit.policies, vec![Policy::RoundRobin]);
+    }
+
+    #[test]
+    fn conflicting_and_invalid_axes_are_rejected() {
+        let engine = SimEngine::new();
+        let base = DesignSpace::paper(vec![small_key()]);
+        let dup = base.clone().with_axis(Axis::Dataset(vec![small_key()]));
+        assert!(matches!(engine.sweep(&dup), Err(EngineError::ConflictingAxes("dataset"))));
+        let dup = base
+            .clone()
+            .with_axis(Axis::macs_per_pe(vec![2]))
+            .with_axis(Axis::macs_per_pe(vec![4]));
+        assert!(matches!(engine.sweep(&dup), Err(EngineError::ConflictingAxes("macs"))));
+        let bad = base.clone().with_axis(Axis::macs_per_pe(vec![2, 0]));
+        assert!(matches!(
+            engine.sweep(&bad),
+            Err(EngineError::InvalidAxisPoint("macs", _))
+        ));
+        let bad = base.with_axis(Axis::topology(vec![crate::noc::Topology::Mesh {
+            width: 0,
+            height: 4,
+        }]));
+        assert!(matches!(engine.sweep(&bad), Err(EngineError::InvalidAxisPoint("noc", _))));
+        // Nothing was profiled for any rejected space.
+        assert_eq!(engine.profiles_run(), 0);
+    }
+
+    #[test]
+    fn axis_expansion_grid_shape_addressing_and_coords() {
+        // The acceptance grid: noc × macs over one base config.
+        let engine = SimEngine::new();
+        let spec = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+            .with_axis(Axis::Dataset(vec![small_key()]))
+            .with_axis(Axis::topology(vec![
+                Topology::Crossbar { ports: 8 },
+                Topology::Mesh { width: 4, height: 2 },
+            ]))
+            .with_axis(Axis::macs_per_pe(vec![2, 4, 8, 16]));
+        let grid = engine.sweep(&spec).unwrap();
+        assert_eq!(grid.shape(), vec![1, 1, 2, 4, 1]);
+        assert_eq!(grid.cell_count(), 8);
+        let names: Vec<&str> = grid.dims.iter().map(|d| d.name).collect();
+        assert_eq!(names, ["dataset", "config", "noc", "macs", "policy"]);
+        // Expanded config names are self-describing, in row-major order.
+        assert_eq!(grid.configs[0], "extensor-maple+noc=crossbar:8+macs=2");
+        assert_eq!(grid.configs[7], "extensor-maple+noc=mesh:4x2+macs=16");
+        // N-d addressing, flat addressing, and the legacy 3-d view agree.
+        let cell = grid.at(&[0, 0, 1, 2, 0]);
+        let flat = grid.index_of(&[0, 0, 1, 2, 0]);
+        assert_eq!(flat, 6);
+        assert_eq!(grid.cell(flat), cell);
+        assert_eq!(grid.get(0, 6, 0), cell);
+        // Every cell carries full named coordinates consistent with its index.
+        for idx in 0..grid.cell_count() {
+            let c = grid.cell(idx);
+            assert_eq!(c.coords.len(), grid.dims.len());
+            let ix: Vec<usize> = c.coords.iter().map(|k| k.index).collect();
+            assert_eq!(grid.index_of(&ix), idx);
+            for (k, d) in c.coords.iter().zip(&grid.dims) {
+                assert_eq!(k.axis, d.name);
+                assert_eq!(k.label, d.labels[k.index]);
+            }
+        }
+        assert_eq!(cell.coords[2].label, "mesh:4x2");
+        assert_eq!(cell.coords[3].label, "8");
+        // The transform really landed: cell results match a direct run of
+        // the transformed config.
+        let mut direct = AcceleratorConfig::extensor_maple();
+        direct.noc = Topology::Mesh { width: 4, height: 2 };
+        direct.pe.macs_per_pe = 8;
+        direct.name = "extensor-maple+noc=mesh:4x2+macs=8".into();
+        let w = engine.workload(&small_key()).unwrap();
+        assert_eq!(cell.analytic, simulate_workload(&direct, &w, Policy::RoundRobin));
+        // The one dataset was profiled exactly once for all eight cells.
+        assert_eq!(engine.profiles_run(), 1);
+    }
+
+    #[test]
+    fn axis_grid_is_deterministic_across_thread_counts() {
+        let spec = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+            .with_axis(Axis::Dataset(vec![small_key()]))
+            .with_axis(Axis::topology(vec![
+                Topology::Crossbar { ports: 8 },
+                Topology::Mesh { width: 4, height: 2 },
+            ]))
+            .with_axis(Axis::macs_per_pe(vec![2, 4, 8, 16]))
+            .with_cell_model(CellModel::Both);
+        let reference = SimEngine::new().with_threads(1).sweep(&spec).unwrap();
+        for threads in [2, 4, 16] {
+            let grid = SimEngine::new().with_threads(threads).sweep(&spec).unwrap();
+            assert_eq!(grid, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn topology_axis_changes_noc_accounting() {
+        // A mesh pays more flit-hops than a crossbar for the same traffic,
+        // so NoC energy must differ across the axis — the knob is live.
+        let engine = SimEngine::new();
+        let grid = engine
+            .sweep(
+                &DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+                    .with_axis(Axis::Dataset(vec![small_key()]))
+                    .with_axis(Axis::topology(vec![
+                        Topology::Crossbar { ports: 8 },
+                        Topology::Mesh { width: 4, height: 2 },
+                    ])),
+            )
+            .unwrap();
+        let (xbar, mesh) = (grid.cell(0), grid.cell(1));
+        assert!(
+            mesh.analytic.counters.noc_flit_hops > xbar.analytic.counters.noc_flit_hops
+        );
+        assert!(mesh.analytic.energy.noc_pj > xbar.analytic.energy.noc_pj);
     }
 }

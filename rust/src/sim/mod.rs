@@ -6,9 +6,10 @@
 //! compared), then [`crate::accel::Accelerator::run`] replays the per-row
 //! work profiles through the configured PE cost models ([`crate::pe::registry`]),
 //! the coordinator's partition, the [`timeline`] composition, the run-level
-//! memory/NoC flows, and the energy aggregation. Sweeps — many (config,
-//! dataset, policy) cells — run through [`engine::SimEngine`], which caches
-//! profiles and fans cells out across worker threads.
+//! memory/NoC flows, and the energy aggregation. Sweeps — a [`DesignSpace`]
+//! of typed axes (dataset, config, NoC topology, MACs/PE, prefetch depth,
+//! PE model, policy) — run through [`engine::SimEngine`], which caches
+//! profiles and fans the expanded cell grid out across worker threads.
 
 pub mod cache;
 pub mod des;
@@ -19,7 +20,8 @@ pub mod timeline;
 pub use cache::{CacheStats, DiskCache};
 pub use des::{agreement_band, simulate_des, DesPeStats, DesResult};
 pub use engine::{
-    CellModel, CellResult, EngineError, SimEngine, SweepResult, SweepSpec, WorkloadKey,
+    Axis, AxisCoord, AxisDim, CellModel, CellResult, DesignSpace, EngineError, SimEngine,
+    SweepResult, SweepSpec, WorkloadKey,
 };
 pub use profile::{profile_workload, profile_workload_parallel, Workload};
 pub use timeline::{exact_pipeline, TwoStageTimeline};

@@ -16,7 +16,7 @@ use maple::sim::cache::{
     decode_csr, decode_workload, encode_csr, encode_workload, CodecError, DiskCache,
     CODEC_VERSION,
 };
-use maple::sim::{profile_workload, SimEngine, SweepSpec, WorkloadKey};
+use maple::sim::{profile_workload, DesignSpace, SimEngine, WorkloadKey};
 use maple::sparse::gen::{generate, Profile};
 use maple::sparse::{Csr, SplitMix64};
 
@@ -140,7 +140,7 @@ fn bad_cache_file_is_evicted_and_recomputed() {
 #[test]
 fn warm_sweep_cell_is_byte_identical_to_cold() {
     let dir = scratch_dir("warm-vs-cold");
-    let spec = SweepSpec::paper(vec![
+    let spec = DesignSpace::paper(vec![
         WorkloadKey::suite("wv", 7, 64),
         WorkloadKey::suite("fb", 7, 64),
     ]);

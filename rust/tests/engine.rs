@@ -9,10 +9,11 @@ use maple::accel::Accelerator;
 use maple::config::AcceleratorConfig;
 use maple::coordinator::Policy;
 use maple::gustavson::{multiply_count, spgemm_rowwise};
+use maple::noc::Topology;
 use maple::pe::{registry, PeModel, RowCost, RowProfile};
 use maple::sim::{
-    profile_workload, profile_workload_parallel, simulate_spmspm, simulate_workload, CellModel,
-    SimEngine, SweepSpec, WorkloadKey,
+    profile_workload, profile_workload_parallel, simulate_spmspm, simulate_workload, Axis,
+    CellModel, DesignSpace, SimEngine, WorkloadKey,
 };
 use maple::sparse::gen::{generate, Profile};
 use maple::trace::Counters;
@@ -76,13 +77,12 @@ fn rectangular_b_row_ptr_counts_b_rows() {
 
 // --- Engine determinism and cache reuse ---------------------------------
 
-fn small_sweep() -> SweepSpec {
-    SweepSpec {
-        configs: AcceleratorConfig::paper_configs(),
-        datasets: vec![WorkloadKey::suite("wv", 7, 64), WorkloadKey::suite("fb", 7, 64)],
-        policies: vec![Policy::RoundRobin, Policy::GreedyBalance],
-        cell_model: CellModel::Analytic,
-    }
+fn small_sweep() -> DesignSpace {
+    DesignSpace::new(
+        AcceleratorConfig::paper_configs(),
+        vec![WorkloadKey::suite("wv", 7, 64), WorkloadKey::suite("fb", 7, 64)],
+        vec![Policy::RoundRobin, Policy::GreedyBalance],
+    )
 }
 
 #[test]
@@ -133,8 +133,13 @@ fn engine_profiles_each_dataset_once_across_sweeps() {
     assert_eq!(engine.profiles_run(), 2);
     assert_eq!(first, second);
     // … and duplicate dataset entries in one spec profile once too.
-    let mut dup = spec.clone();
-    dup.datasets.push(dup.datasets[0].clone());
+    let mut dup_keys = spec.datasets().to_vec();
+    dup_keys.push(dup_keys[0].clone());
+    let dup = DesignSpace::new(
+        AcceleratorConfig::paper_configs(),
+        dup_keys,
+        vec![Policy::RoundRobin, Policy::GreedyBalance],
+    );
     engine.sweep(&dup).unwrap();
     assert_eq!(engine.profiles_run(), 2);
 }
@@ -148,7 +153,7 @@ fn engine_cells_match_direct_serial_simulation() {
     let a = maple::sparse::suite::by_name("wv").unwrap().generate_scaled(7, 64);
     let w = profile_workload(&a, &a);
     for (ci, cfg) in spec.configs.iter().enumerate() {
-        for (pi, &policy) in spec.policies.iter().enumerate() {
+        for (pi, &policy) in [Policy::RoundRobin, Policy::GreedyBalance].iter().enumerate() {
             assert_eq!(
                 grid.get(0, ci, pi).analytic,
                 simulate_workload(cfg, &w, policy),
@@ -157,6 +162,77 @@ fn engine_cells_match_direct_serial_simulation() {
             );
         }
     }
+}
+
+// --- Typed design-space axes ---------------------------------------------
+
+#[test]
+fn noc_macs_axis_sweep_end_to_end() {
+    // The acceptance sweep: `--axis noc=crossbar:8,mesh:4x2 --axis
+    // macs=2,4,8,16` over one base config and one dataset — deterministic
+    // across fan-out widths, index-addressed, every cell carrying
+    // named-axis coordinates, and each cell equal to a direct simulation
+    // of the transformed config.
+    let spec = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+        .with_axis(Axis::Dataset(vec![WorkloadKey::suite("wv", 7, 64)]))
+        .with_axis(Axis::topology(vec![
+            Topology::Crossbar { ports: 8 },
+            Topology::Mesh { width: 4, height: 2 },
+        ]))
+        .with_axis(Axis::macs_per_pe(vec![2, 4, 8, 16]));
+    let reference = SimEngine::new().with_threads(1).sweep(&spec).unwrap();
+    let wide = SimEngine::new().with_threads(4).sweep(&spec).unwrap();
+    assert_eq!(reference, wide, "axis grid must not depend on fan-out width");
+    assert_eq!(reference.shape(), vec![1, 1, 2, 4, 1]);
+    assert_eq!(reference.cell_count(), 8);
+
+    let a = maple::sparse::suite::by_name("wv").unwrap().generate_scaled(7, 64);
+    let w = profile_workload(&a, &a);
+    let topologies =
+        [Topology::Crossbar { ports: 8 }, Topology::Mesh { width: 4, height: 2 }];
+    let macs = [2usize, 4, 8, 16];
+    for (ni, &noc) in topologies.iter().enumerate() {
+        for (mi, &k) in macs.iter().enumerate() {
+            let cell = reference.at(&[0, 0, ni, mi, 0]);
+            // Coordinates name the point.
+            assert_eq!(cell.coords[2].axis, "noc");
+            assert_eq!(cell.coords[2].label, noc.to_string());
+            assert_eq!(cell.coords[3].axis, "macs");
+            assert_eq!(cell.coords[3].label, k.to_string());
+            // The cell is exactly the transformed config's simulation.
+            let mut cfg = AcceleratorConfig::extensor_maple();
+            cfg.noc = noc;
+            cfg.pe.macs_per_pe = k;
+            cfg.name = format!("extensor-maple+noc={noc}+macs={k}");
+            assert_eq!(cell.analytic, simulate_workload(&cfg, &w, Policy::RoundRobin));
+        }
+    }
+}
+
+#[test]
+fn prefetch_axis_varies_the_des_and_composes_with_cell_model() {
+    // A prefetch-depth axis only matters to the DES (the analytic model
+    // idealises fetch away): under CellModel::Both the analytic numbers
+    // must be identical along the axis while a depth-1 loader can never
+    // beat a deep one.
+    let grid = SimEngine::new()
+        .sweep(
+            &DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+                .with_axis(Axis::Dataset(vec![WorkloadKey::suite("wv", 7, 64)]))
+                .with_axis(Axis::prefetch_depth(vec![1, 6]))
+                .with_cell_model(CellModel::Both),
+        )
+        .unwrap();
+    assert_eq!(grid.shape(), vec![1, 1, 2, 1]);
+    let (shallow, deep) = (grid.cell(0), grid.cell(1));
+    // Identical analytic numbers (the config *names* differ by design —
+    // they carry the axis coordinates).
+    assert_eq!(shallow.analytic.cycles_compute, deep.analytic.cycles_compute);
+    assert_eq!(shallow.analytic.counters, deep.analytic.counters);
+    assert_eq!(shallow.analytic.energy, deep.analytic.energy);
+    assert_eq!(shallow.analytic.checksum.to_bits(), deep.analytic.checksum.to_bits());
+    let (s_des, d_des) = (shallow.des.as_ref().unwrap(), deep.des.as_ref().unwrap());
+    assert!(s_des.cycles >= d_des.cycles, "depth 1 ({}) < depth 6 ({})", s_des.cycles, d_des.cycles);
 }
 
 // --- Open PE registry: add a PE without touching accel/ ------------------

@@ -10,6 +10,7 @@ use maple::coordinator::{batch_rows_by_reuse, partition, split_wide_rows, Policy
 use maple::gustavson::{
     dense_matmul, max_abs_diff, multiply_count, spgemm_inner, spgemm_outer, spgemm_rowwise,
 };
+use maple::noc::{Noc, Topology};
 use maple::pe::{MaplePe, PeModel, RowProfile};
 use maple::sim::profile_workload;
 use maple::sparse::gen::{generate, Profile};
@@ -201,6 +202,38 @@ fn prop_counters_scale_linearly_with_repeated_rows() {
         doubled.merge(&c1);
         assert_eq!(c2, doubled);
     }
+}
+
+#[test]
+fn prop_mesh_hops_geometry_invariants() {
+    // `Noc::hops` on a 2-D XY mesh must behave like a metric with a
+    // one-cycle NIC floor: symmetric, triangle inequality, bounded by the
+    // mesh diameter `width + height − 2`, and self-delivery still costs
+    // one hop (the NIC traversal).
+    let mut rng = SplitMix64::new(97);
+    for case in 0..300 {
+        let width = 1 + rng.below(16) as usize;
+        let height = 1 + rng.below(16) as usize;
+        let noc = Noc::new(Topology::Mesh { width, height });
+        let n = noc.endpoints();
+        let pick = |r: &mut SplitMix64| r.below(n as u64) as usize;
+        let (s, d, m) = (pick(&mut rng), pick(&mut rng), pick(&mut rng));
+        let tag = format!("case {case}: {width}x{height} s={s} d={d} m={m}");
+        // Self-delivery floor.
+        assert_eq!(noc.hops(s, s), 1, "{tag}");
+        // Symmetry.
+        assert_eq!(noc.hops(s, d), noc.hops(d, s), "{tag}");
+        // Triangle inequality (holds with the floor: each leg ≥ its
+        // Manhattan part and ≥ 1).
+        assert!(noc.hops(s, d) <= noc.hops(s, m) + noc.hops(m, d), "{tag}");
+        // Diameter bound, with the floor for the degenerate 1×1 mesh.
+        let diameter = (width + height - 2).max(1) as u64;
+        assert!(noc.hops(s, d) <= diameter, "{tag}");
+        assert!(noc.hops(s, d) >= 1, "{tag}");
+    }
+    // The diameter bound is tight: opposite corners meet it exactly.
+    let noc = Noc::new(Topology::Mesh { width: 7, height: 5 });
+    assert_eq!(noc.hops(0, 7 * 5 - 1), (7 + 5 - 2) as u64);
 }
 
 #[test]
