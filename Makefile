@@ -1,22 +1,22 @@
 # Maple — build / verify entry points.
 #
-#   make verify     fmt + clippy + tests on the rust crate (tier-1 + lint)
-#   make test       tier-1 verify exactly: build --release && test -q
-#   make bench      all harness-less benches, release mode
-#   make sweep-noc  topology × MACs design-space sweep on the wv workload
-#   make artifacts  AOT-lower the Pallas kernel to HLO text (needs jax)
+#   make verify         fmt + clippy + tests on the rust crate (tier-1 + lint)
+#   make test           tier-1 verify exactly: build --release && test -q
+#   make bench          all harness-less benches, release mode
+#   make sweep-noc      topology × MACs design-space sweep on the wv workload
+#   make sweep-sharded  2-way sharded sweep + merge, diffed vs the unsharded run
+#   make artifacts      AOT-lower the Pallas kernel to HLO text (needs jax)
 
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify fmt clippy test bench sweep-noc artifacts
+.PHONY: verify fmt clippy test bench sweep-noc sweep-sharded artifacts
 
 verify: fmt clippy test
 
-# Advisory until the crate is bulk-formatted: the seed predates rustfmt
-# enforcement, so a drift report must not mask clippy/test failures.
+# Blocking since the crate was bulk-formatted (PR 5); CI gates on it too.
 fmt:
-	-cd $(RUST_DIR) && $(CARGO) fmt --check
+	cd $(RUST_DIR) && $(CARGO) fmt --check
 
 clippy:
 	cd $(RUST_DIR) && $(CARGO) clippy --all-targets -- -D warnings
@@ -36,6 +36,22 @@ bench:
 sweep-noc:
 	cd $(RUST_DIR) && $(CARGO) run --release -- sweep --dataset wv --scale 64 \
 	        --axis noc=crossbar:8,mesh:4x2 --axis macs=2,4,8,16
+
+# The CI shard-matrix logic, reproducible on a laptop: run a small grid
+# 2-way sharded, merge the artifacts, and diff the merged CSV against the
+# unsharded sweep — byte-identical or the target fails.
+sweep-sharded:
+	cd $(RUST_DIR) && rm -rf target/sweep-shards && \
+	$(CARGO) run --release -- sweep --dataset wv,fb --scale 64 \
+	        --axis macs=2,4 --shard 0/2 --out target/sweep-shards && \
+	$(CARGO) run --release -- sweep --dataset wv,fb --scale 64 \
+	        --axis macs=2,4 --shard 1/2 --out target/sweep-shards && \
+	$(CARGO) run --release -- merge target/sweep-shards --csv \
+	        > target/sweep-merged.csv && \
+	$(CARGO) run --release -- sweep --dataset wv,fb --scale 64 \
+	        --axis macs=2,4 --csv > target/sweep-unsharded.csv && \
+	diff target/sweep-merged.csv target/sweep-unsharded.csv && \
+	echo "sharded run == unsharded run"
 
 # Skips the rebuild when the artifacts are newer than the Python sources.
 artifacts: artifacts/maple_pe.hlo.txt

@@ -46,7 +46,8 @@ fn main() {
                 maple::sim::simulate_workload(&cfg, &w, Policy::RoundRobin).cycles_compute,
             );
         });
-        report_line(&format!("simulate[{}]", cfg.name), iters, total, Some((w.rows as u64, "rows")));
+        let label = format!("simulate[{}]", cfg.name);
+        report_line(&label, iters, total, Some((w.rows as u64, "rows")));
     }
 
     // 4. Functional Maple PE datapath (element-exact simulation).

@@ -98,7 +98,8 @@ mod tests {
     fn baseline_buffers_dominate_baseline_pe() {
         // §IV.B.3: "the PEB in Extensor and the PE's sorting queues in
         // Matraptor consume a significant amount of area".
-        for cfg in [AcceleratorConfig::matraptor_baseline(), AcceleratorConfig::extensor_baseline()] {
+        for cfg in [AcceleratorConfig::matraptor_baseline(), AcceleratorConfig::extensor_baseline()]
+        {
             let a = pe_area(&cfg);
             assert!(a.buffers_mm2 > a.mac_mm2 + a.logic_mm2, "{}", cfg.name);
         }

@@ -106,12 +106,18 @@ mod tests {
     use super::*;
 
     fn sizes() -> BufferSizes {
-        BufferSizes { pe_buffer_bytes: 24 << 10, l1_bytes: 512 << 10, pob_bytes: 128 << 10, reg_bytes: 2048 }
+        BufferSizes {
+            pe_buffer_bytes: 24 << 10,
+            l1_bytes: 512 << 10,
+            pob_bytes: 128 << 10,
+            reg_bytes: 2048,
+        }
     }
 
     #[test]
     fn zero_counters_zero_energy() {
-        let e = EnergyBreakdown::from_counters(&Counters::default(), &TechModel::tech45(), &sizes());
+        let e =
+            EnergyBreakdown::from_counters(&Counters::default(), &TechModel::tech45(), &sizes());
         assert_eq!(e.total_pj(), 0.0);
     }
 

@@ -69,7 +69,11 @@ pub fn skip_intersect(c: &mut Counters, a: &[u32], b: &[u32]) -> Matches {
 /// the Gustavson-specific intersection both reference accelerators perform
 /// before fetching B rows. `b_row_nnz[k] > 0` marks a useful row. Counts one
 /// comparison (a row_ptr subtract + test, paper Fig. 7) per id.
-pub fn filter_nonempty(c: &mut Counters, a_cols: &[u32], b_row_nnz: impl Fn(usize) -> usize) -> Matches {
+pub fn filter_nonempty(
+    c: &mut Counters,
+    a_cols: &[u32],
+    b_row_nnz: impl Fn(usize) -> usize,
+) -> Matches {
     let mut out = Vec::new();
     for (p, &k) in a_cols.iter().enumerate() {
         c.intersect_cmp += 1;

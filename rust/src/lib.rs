@@ -100,7 +100,7 @@ pub mod prelude {
     pub use crate::noc::Topology;
     pub use crate::sim::{
         simulate_spmspm, Axis, CellModel, CellResult, DesResult, DesignSpace, DiskCache,
-        SimEngine, SimResult, SweepResult, SweepSpec, WorkloadKey,
+        ShardSpec, SimEngine, SimResult, SweepResult, SweepShard, SweepSpec, WorkloadKey,
     };
     pub use crate::sparse::{Coo, Csc, Csr};
 }

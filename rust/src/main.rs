@@ -25,7 +25,10 @@
 use maple::config::{axis, AcceleratorConfig, ConfigAxis};
 use maple::coordinator::Policy;
 use maple::report;
-use maple::sim::{Axis, CellModel, DesignSpace, DiskCache, SimEngine, WorkloadKey};
+use maple::sim::{
+    shard, Axis, CellModel, DesignSpace, DiskCache, ShardSpec, SimEngine, SweepResult,
+    WorkloadKey,
+};
 use maple::sparse::suite;
 
 /// Dependency-free CLI error type.
@@ -103,16 +106,30 @@ COMMANDS:
   simulate --config <preset|file.toml> --dataset <name>
            [--scale N] [--seed S] [--policy round-robin|chunked|greedy]
            [--cell-model analytic|des|both]
-  sweep  [--config <preset|file.toml>] [--dataset wv[,fb,...]]
+  sweep  [--config <preset|file.toml|paper>] [--dataset wv[,fb,...]|all]
            [--axis noc=crossbar:8,mesh:4x2] [--axis macs=2,4,8,16]
            [--axis prefetch=2,4,8] [--axis pe-model=name,...]
            [--policy round-robin[,chunked,greedy]] [--pivot <axis>]
            [--macs 1,2,4,...] [--scale N] [--seed S] [--threads N]
            [--cell-model analytic|des|both]
+           [--shard i/n --out <dir>] [--fingerprint]
            Design-space sweep over the base config: each repeatable --axis
            adds one typed grid dimension (axes also load from a [sweep]
            block in the --config TOML); --pivot renders the cycle grid
            pivoted on that axis. --macs is shorthand for --axis macs=...
+           --config paper sweeps the four paper configurations (no default
+           axis), --datasets all is the whole Table-I suite. --shard i/n
+           computes only that contiguous slice of the cell grid and writes
+           it to --out as a shard artifact; --fingerprint prints the
+           design-space fingerprint (what merge validates) and exits.
+  merge  <dir> [--pivot <axis>] [--bench-json <path>]
+           Merge the shard artifacts in <dir> back into the full sweep
+           grid. Validates compatibility (one fingerprint, one shard
+           count, no gaps/overlaps/duplicates) and exits non-zero on any
+           violation; on success renders exactly what the unsharded sweep
+           would have printed. --bench-json additionally writes the
+           machine-readable BENCH_sweep.json (shard wall-times, cells/sec,
+           warm-vs-cold cache hits).
   crossval [--scale N] [--datasets wv,fb,...] [--seed S] [--policy P]
            DES vs analytic cross-validation over the four paper configs;
            exits non-zero if any cell leaves the documented agreement band
@@ -176,9 +193,11 @@ fn parse_cell_model(args: &Args) -> CliResult<CellModel> {
 }
 
 /// Canonical Table-I abbreviations for a `--datasets` list (comma-separated
-/// names or abbreviations); the whole suite when the flag is absent.
+/// names or abbreviations); the whole suite when the flag is absent or
+/// spelled `all`.
 fn dataset_names(datasets: Option<&str>) -> CliResult<Vec<&'static str>> {
     match datasets {
+        Some("all") => Ok(suite::TABLE_I.iter().map(|d| d.abbrev).collect()),
         Some(list) => list
             .split(',')
             .map(|s| {
@@ -224,7 +243,13 @@ fn crossval(
 
 /// Fig. 9 across datasets: one engine sweep — each dataset profiled once,
 /// all (config × dataset) cells in parallel.
-fn fig9(engine: &SimEngine, scale: usize, datasets: Option<&str>, seed: u64, csv: bool) -> CliResult {
+fn fig9(
+    engine: &SimEngine,
+    scale: usize,
+    datasets: Option<&str>,
+    seed: u64,
+    csv: bool,
+) -> CliResult {
     let names = dataset_names(datasets)?;
     let keys = names.iter().map(|&n| WorkloadKey::suite(n, seed, scale)).collect();
     let grid = engine.sweep(&DesignSpace::paper(keys))?;
@@ -233,9 +258,178 @@ fn fig9(engine: &SimEngine, scale: usize, datasets: Option<&str>, seed: u64, csv
     // base (2) / maple (3).
     let matraptor = report::fig9_rows_from_sweep(&grid, 0, 1, 0);
     let extensor = report::fig9_rows_from_sweep(&grid, 2, 3, 0);
-    println!("{}", report::fig9_report("Fig. 9 — Matraptor (Maple vs baseline)", &matraptor, !csv));
-    println!("{}", report::fig9_report("Fig. 9 — Extensor (Maple vs baseline)", &extensor, !csv));
+    let m_title = "Fig. 9 — Matraptor (Maple vs baseline)";
+    let e_title = "Fig. 9 — Extensor (Maple vs baseline)";
+    println!("{}", report::fig9_report(m_title, &matraptor, !csv));
+    println!("{}", report::fig9_report(e_title, &extensor, !csv));
     Ok(())
+}
+
+/// Render a sweep grid exactly the way `maple sweep` prints it: the
+/// grid-shape line on stderr, the (optionally pivoted) table on stdout,
+/// then the DES cross-validation table when the grid ran a DES-bearing
+/// cell model. `maple merge` shares this renderer, which is what makes
+/// merged output byte-identical to the unsharded sweep's.
+fn render_grid(grid: &SweepResult, pivot: Option<&str>, md: bool) -> CliResult {
+    eprintln!("grid: {} -> {} cells", grid.shape_line(), grid.cell_count());
+    match pivot {
+        Some(pivot) => {
+            let table = report::sweep_pivot_report(grid, pivot, md)
+                .ok_or_else(|| format!("--pivot {pivot}: not an axis of this sweep"))?;
+            print!("{table}");
+        }
+        None => print!("{}", report::sweep_axis_report(grid, md)),
+    }
+    if grid.cell_model.runs_des() {
+        println!();
+        print!("{}", report::des_validation_report(grid, md));
+    }
+    Ok(())
+}
+
+/// The `sweep` command: build the design space from flags/TOML, then run
+/// it whole, run one shard of it (`--shard i/n --out dir`), or just print
+/// its fingerprint (`--fingerprint`).
+fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
+    // Config axes: the [sweep] block of a --config TOML file first, then
+    // every repeatable --axis flag, then the legacy --macs shorthand;
+    // with no axis at all (and a single base config), the historical
+    // default MACs/PE sweep. Presets resolve before the filesystem (same
+    // order as `parse_config`), so only a genuinely loaded file
+    // contributes a [sweep] block. `--config paper` sweeps the four paper
+    // configurations as the base set — the Table-I / Fig.-9 grid — with
+    // no implicit default axis.
+    let config_arg = args.opt_or("--config", "extensor-maple");
+    let (bases, mut axes): (Vec<AcceleratorConfig>, Vec<ConfigAxis>) = if config_arg == "paper" {
+        (AcceleratorConfig::paper_configs(), Vec::new())
+    } else {
+        match parse_preset(config_arg) {
+            Some(cfg) => (vec![cfg], Vec::new()),
+            None => {
+                let s = read_config_file(config_arg)?;
+                (vec![AcceleratorConfig::from_toml(&s)?], axis::sweep_axes_from_toml(&s)?)
+            }
+        }
+    };
+    let scale = args.parse_or("--scale", 4usize)?;
+    let seed = args.parse_or("--seed", 7u64)?;
+    let datasets = args.opt("--datasets").or_else(|| args.opt("--dataset"));
+    let keys: Vec<WorkloadKey> = dataset_names(Some(datasets.unwrap_or("wikiVote")))?
+        .iter()
+        .map(|&n| WorkloadKey::suite(n, seed, scale))
+        .collect();
+
+    let axis_flags = args.opt_all("--axis");
+    if axis_flags.len() != args.count("--axis") {
+        return Err("--axis expects a following name=v1,v2,... value".into());
+    }
+    for spec in axis_flags {
+        let (name, values) = spec.split_once('=').ok_or_else(|| {
+            CliError::from(format!("--axis expects name=v1,v2,... (got {spec:?})"))
+        })?;
+        axes.push(ConfigAxis::parse(name, values)?);
+    }
+    if let Some(macs) = args.opt("--macs") {
+        axes.push(ConfigAxis::parse("macs", macs)?);
+    }
+    if axes.is_empty() && bases.len() == 1 {
+        axes.push(ConfigAxis::parse("macs", "1,2,4,8,16,32")?);
+    }
+    // Validate --pivot against the known dimension names *before* the
+    // sweep runs — a typo must fail in milliseconds, not after minutes of
+    // simulation.
+    let pivot = args.opt("--pivot");
+    if let Some(p) = pivot {
+        let mut known = vec!["dataset", "config"];
+        known.extend(axes.iter().map(|a| a.name()));
+        known.push("policy");
+        if !known.contains(&p) {
+            return Err(format!(
+                "--pivot {p}: not an axis of this sweep (expected one of: {})",
+                known.join(", ")
+            )
+            .into());
+        }
+    }
+    let policies: Vec<Policy> = args
+        .opt_or("--policy", "round-robin")
+        .split(',')
+        .map(|p| parse_policy(p.trim()))
+        .collect::<CliResult<_>>()?;
+
+    let model = parse_cell_model(args)?;
+    let mut space = DesignSpace::over(bases).with_cell_model(model).with_axis(Axis::Dataset(keys));
+    for a in axes {
+        space = space.with_axis(Axis::Config(a));
+    }
+    space = space.with_axis(Axis::Policy(policies));
+
+    // The space fingerprint alone — what `merge` validates shard sets
+    // against — without profiling or simulating anything.
+    if args.flag("--fingerprint") {
+        println!("fingerprint: {:016x}", space.fingerprint()?);
+        return Ok(());
+    }
+
+    let mut engine = make_engine(args);
+    if let Some(threads) = args.opt("--threads") {
+        let threads: usize =
+            threads.parse().map_err(|_| format!("bad value for --threads: {threads}"))?;
+        engine = engine.with_threads(threads);
+    }
+
+    if let Some(spec) = args.opt("--shard") {
+        let shard_spec: ShardSpec = spec.parse()?;
+        let out = args
+            .opt("--out")
+            .ok_or("--shard requires --out <dir> to receive the shard artifact")?;
+        let result = engine.sweep_shard(&space, shard_spec)?;
+        let path = result.write_to(std::path::Path::new(out))?;
+        eprintln!(
+            "shard {shard_spec}: cells [{}..{}) of {}, fingerprint {:016x} -> {}",
+            result.range().start,
+            result.range().end,
+            result.total_cells(),
+            result.fingerprint,
+            path.display()
+        );
+        return Ok(());
+    }
+
+    let grid = engine.sweep(&space)?;
+    render_grid(&grid, pivot, !csv)
+}
+
+/// The `merge` command: reassemble a sharded sweep from its artifact
+/// directory. Any compatibility violation — mixed fingerprints or shard
+/// counts, missing/duplicate shards, an undecodable artifact — is a hard
+/// error (non-zero exit); success renders exactly what the unsharded
+/// sweep of the same design space prints.
+fn merge_cmd(args: &Args, csv: bool) -> CliResult {
+    // The shard directory is positional but may come before or after the
+    // flags; skip over flags *and* the values of the value-bearing ones
+    // (`merge --bench-json out.json shards/` must not read `out.json` as
+    // the directory).
+    const VALUE_FLAGS: [&str; 2] = ["--pivot", "--bench-json"];
+    let dir = args
+        .argv
+        .iter()
+        .enumerate()
+        .find(|(i, s)| {
+            !s.starts_with("--")
+                && (*i == 0 || !VALUE_FLAGS.contains(&args.argv[i - 1].as_str()))
+        })
+        .map(|(_, s)| s)
+        .ok_or("usage: maple merge <dir> [--pivot <axis>] [--bench-json <path>] [--csv]")?;
+    let shards = shard::read_dir(std::path::Path::new(dir.as_str()))?;
+    let grid = shard::merge(&shards)?;
+    eprint!("{}", report::merge_provenance(&shards, &grid));
+    if let Some(path) = args.opt("--bench-json") {
+        std::fs::write(path, report::bench_sweep_json(&shards, &grid))
+            .map_err(|e| format!("cannot write {path}: {e}"))?;
+        eprintln!("bench: wrote {path}");
+    }
+    render_grid(&grid, args.opt("--pivot"), !csv)
 }
 
 #[cfg(feature = "runtime")]
@@ -347,108 +541,8 @@ fn main() -> CliResult {
                 );
             }
         }
-        "sweep" => {
-            // Config axes: the [sweep] block of a --config TOML file first,
-            // then every repeatable --axis flag, then the legacy --macs
-            // shorthand; with no axis at all, the historical default
-            // MACs/PE sweep. Presets resolve before the filesystem (same
-            // order as `parse_config`), so only a genuinely loaded file
-            // contributes a [sweep] block.
-            let config_arg = args.opt_or("--config", "extensor-maple");
-            let (base, mut axes): (AcceleratorConfig, Vec<ConfigAxis>) =
-                match parse_preset(config_arg) {
-                    Some(cfg) => (cfg, Vec::new()),
-                    None => {
-                        let s = read_config_file(config_arg)?;
-                        (AcceleratorConfig::from_toml(&s)?, axis::sweep_axes_from_toml(&s)?)
-                    }
-                };
-            let scale = args.parse_or("--scale", 4usize)?;
-            let seed = args.parse_or("--seed", 7u64)?;
-            let datasets = args.opt("--datasets").or_else(|| args.opt("--dataset"));
-            let keys: Vec<WorkloadKey> = dataset_names(Some(datasets.unwrap_or("wikiVote")))?
-                .iter()
-                .map(|&n| WorkloadKey::suite(n, seed, scale))
-                .collect();
-
-            let axis_flags = args.opt_all("--axis");
-            if axis_flags.len() != args.count("--axis") {
-                return Err("--axis expects a following name=v1,v2,... value".into());
-            }
-            for spec in axis_flags {
-                let (name, values) = spec.split_once('=').ok_or_else(|| {
-                    CliError::from(format!("--axis expects name=v1,v2,... (got {spec:?})"))
-                })?;
-                axes.push(ConfigAxis::parse(name, values)?);
-            }
-            if let Some(macs) = args.opt("--macs") {
-                axes.push(ConfigAxis::parse("macs", macs)?);
-            }
-            if axes.is_empty() {
-                axes.push(ConfigAxis::parse("macs", "1,2,4,8,16,32")?);
-            }
-            // Validate --pivot against the known dimension names *before*
-            // the sweep runs — a typo must fail in milliseconds, not after
-            // minutes of simulation.
-            let pivot = args.opt("--pivot");
-            if let Some(p) = pivot {
-                let mut known = vec!["dataset", "config"];
-                known.extend(axes.iter().map(|a| a.name()));
-                known.push("policy");
-                if !known.contains(&p) {
-                    return Err(format!(
-                        "--pivot {p}: not an axis of this sweep (expected one of: {})",
-                        known.join(", ")
-                    )
-                    .into());
-                }
-            }
-            let policies: Vec<Policy> = args
-                .opt_or("--policy", "round-robin")
-                .split(',')
-                .map(|p| parse_policy(p.trim()))
-                .collect::<CliResult<_>>()?;
-
-            let model = parse_cell_model(&args)?;
-            let mut space = DesignSpace::over(vec![base])
-                .with_cell_model(model)
-                .with_axis(Axis::Dataset(keys));
-            for a in axes {
-                space = space.with_axis(Axis::Config(a));
-            }
-            space = space.with_axis(Axis::Policy(policies));
-
-            let mut engine = make_engine(&args);
-            if let Some(threads) = args.opt("--threads") {
-                let threads: usize = threads
-                    .parse()
-                    .map_err(|_| format!("bad value for --threads: {threads}"))?;
-                engine = engine.with_threads(threads);
-            }
-            let grid = engine.sweep(&space)?;
-
-            // Grid-shape line (CI asserts shape and 1-vs-N-thread identity).
-            // On stderr so `--csv` stdout stays a pure machine-readable table.
-            let shape = grid
-                .dims
-                .iter()
-                .map(|d| format!("{}={}", d.name, d.len()))
-                .collect::<Vec<_>>()
-                .join(" x ");
-            eprintln!("grid: {shape} -> {} cells", grid.cell_count());
-            match pivot {
-                Some(pivot) => {
-                    let table = report::sweep_pivot_report(&grid, pivot, md)
-                        .ok_or_else(|| format!("--pivot {pivot}: not an axis of this sweep"))?;
-                    print!("{table}");
-                }
-                None => print!("{}", report::sweep_axis_report(&grid, md)),
-            }
-            if model.runs_des() {
-                println!();
-                print!("{}", report::des_validation_report(&grid, md));
-            }
-        }
+        "sweep" => sweep_cmd(&args, csv)?,
+        "merge" => merge_cmd(&args, csv)?,
         "crossval" => {
             let scale = args.parse_or("--scale", 16usize)?;
             let seed = args.parse_or("--seed", 7u64)?;

@@ -144,7 +144,8 @@ mod tests {
 
     #[test]
     fn clustered_compresses_better_than_random() {
-        let banded = generate(500, 5000, 10_000, Profile::Banded { rel_bandwidth: 0.01, cluster: 6 }, 4);
+        let banded =
+            generate(500, 5000, 10_000, Profile::Banded { rel_bandwidth: 0.01, cluster: 6 }, 4);
         let uniform = generate(500, 5000, 10_000, Profile::Uniform, 4);
         let rb = metadata_compression_ratio(&banded);
         let ru = metadata_compression_ratio(&uniform);

@@ -79,7 +79,8 @@ mod tests {
 
     #[test]
     fn counts_words_and_schedules() {
-        let mut d = DramModel::new(DramParams { words_per_cycle: 4.0, access_latency: 10, burst_words: 4 });
+        let mut d =
+            DramModel::new(DramParams { words_per_cycle: 4.0, access_latency: 10, burst_words: 4 });
         let mut c = Counters::default();
         let t1 = d.read(&mut c, 0, 8); // 2 cycles xfer + 10 latency
         assert_eq!(c.dram_read, 8);
@@ -92,7 +93,8 @@ mod tests {
 
     #[test]
     fn short_transfers_round_to_burst() {
-        let mut d = DramModel::new(DramParams { words_per_cycle: 4.0, access_latency: 0, burst_words: 16 });
+        let mut d =
+            DramModel::new(DramParams { words_per_cycle: 4.0, access_latency: 0, burst_words: 16 });
         let mut c = Counters::default();
         let t = d.write(&mut c, 0, 1);
         // 1 word pads to 16 -> 4 cycles.

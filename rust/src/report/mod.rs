@@ -4,7 +4,7 @@
 use crate::accel::fig8;
 use crate::config::AcceleratorConfig;
 use crate::energy::TechModel;
-use crate::sim::{CacheStats, SimResult, SweepResult};
+use crate::sim::{CacheStats, SimResult, SweepResult, SweepShard};
 use crate::sparse::suite::TABLE_I;
 
 /// Render a markdown table.
@@ -288,6 +288,81 @@ pub fn sweep_pivot_report(sweep: &SweepResult, pivot: &str, markdown: bool) -> O
     Some(if markdown { markdown_table(&header_refs, &rows) } else { csv(&header_refs, &rows) })
 }
 
+/// Provenance of a merged sharded sweep: which shards made up the grid,
+/// their cell ranges, wall-times, and warm-vs-cold cache behaviour, headed
+/// by the shared space fingerprint. `maple merge` prints this to stderr so
+/// stdout stays byte-identical to the unsharded sweep's table.
+pub fn merge_provenance(shards: &[SweepShard], grid: &SweepResult) -> String {
+    let fingerprint = shards.first().map(|s| s.fingerprint).unwrap_or(0);
+    let mut s = format!(
+        "merged {} shards (fingerprint {fingerprint:016x}): {} -> {} cells\n",
+        shards.len(),
+        grid.shape_line(),
+        grid.cell_count()
+    );
+    for sh in shards {
+        s.push_str(&format!(
+            "  shard {}: cells [{}..{}) in {} ms ({} profiled, {} disk hits)\n",
+            sh.spec,
+            sh.range().start,
+            sh.range().end,
+            sh.meta.wall_ms,
+            sh.meta.profiles_run,
+            sh.meta.disk_hits
+        ));
+    }
+    s
+}
+
+/// The machine-readable sweep benchmark (`BENCH_sweep.json`), emitted by
+/// the CI merge job: total cells, per-shard wall-times and throughput, and
+/// the warm (disk hits) vs cold (fresh profiles) split. Hand-rolled JSON —
+/// the offline build has no serde (DESIGN.md §Dependencies).
+pub fn bench_sweep_json(shards: &[SweepShard], grid: &SweepResult) -> String {
+    // Throughput guards against a sub-millisecond wall-time reading as
+    // infinite cells/sec on tiny grids.
+    let cells_per_sec = |cells: usize, ms: u64| cells as f64 * 1000.0 / ms.max(1) as f64;
+    let wall_sum: u64 = shards.iter().map(|s| s.meta.wall_ms).sum();
+    let wall_critical = shards.iter().map(|s| s.meta.wall_ms).max().unwrap_or(0);
+    let cold: u64 = shards.iter().map(|s| s.meta.profiles_run).sum();
+    let warm: u64 = shards.iter().map(|s| s.meta.disk_hits).sum();
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"sweep\",\n");
+    s.push_str(&format!("  \"cells\": {},\n", grid.cell_count()));
+    s.push_str(&format!(
+        "  \"fingerprint\": \"{:016x}\",\n",
+        shards.first().map(|sh| sh.fingerprint).unwrap_or(0)
+    ));
+    s.push_str("  \"shards\": [\n");
+    for (i, sh) in shards.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"index\": {}, \"count\": {}, \"cells\": {}, \"wall_ms\": {}, \
+             \"cells_per_sec\": {:.3}, \"cold_profiles\": {}, \"warm_disk_hits\": {}}}{}\n",
+            sh.spec.index,
+            sh.spec.count,
+            sh.cells.len(),
+            sh.meta.wall_ms,
+            cells_per_sec(sh.cells.len(), sh.meta.wall_ms),
+            sh.meta.profiles_run,
+            sh.meta.disk_hits,
+            if i + 1 < shards.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ],\n");
+    // Shards run concurrently in the CI matrix, so the slowest shard is
+    // the grid's wall-clock; the sum is the total compute burned.
+    s.push_str(&format!("  \"wall_ms_sum\": {wall_sum},\n"));
+    s.push_str(&format!("  \"wall_ms_critical_path\": {wall_critical},\n"));
+    s.push_str(&format!(
+        "  \"cells_per_sec\": {:.3},\n",
+        cells_per_sec(grid.cell_count(), wall_critical)
+    ));
+    s.push_str(&format!("  \"cold_profiles\": {cold},\n"));
+    s.push_str(&format!("  \"warm_disk_hits\": {warm}\n"));
+    s.push_str("}\n");
+    s
+}
+
 /// Fig. 9 report over a set of dataset rows, with the paper-style mean.
 pub fn fig9_report(title: &str, rows: &[Fig9Row], markdown: bool) -> String {
     let header = ["Dataset", "Energy benefit %", "Speedup %"];
@@ -440,6 +515,36 @@ mod tests {
             .unwrap();
         let md = sweep_axis_report(&single, true);
         assert!(md.starts_with("| dataset | config | policy | cycles |"), "{md}");
+    }
+
+    #[test]
+    fn merge_provenance_and_bench_json_cover_every_shard() {
+        use crate::sim::{shard, ShardSpec, SimEngine, SweepSpec, WorkloadKey};
+        let engine = SimEngine::new();
+        let spec = SweepSpec::paper(vec![WorkloadKey::suite("wv", 7, 64)]);
+        let shards: Vec<_> = (0..2)
+            .map(|i| engine.sweep_shard(&spec, ShardSpec::new(i, 2).unwrap()).unwrap())
+            .collect();
+        let grid = shard::merge(&shards).unwrap();
+        let prov = merge_provenance(&shards, &grid);
+        assert!(prov.starts_with("merged 2 shards (fingerprint "), "{prov}");
+        assert!(prov.contains("shard 0/2: cells [0..2)"), "{prov}");
+        assert!(prov.contains("shard 1/2: cells [2..4)"), "{prov}");
+        let json = bench_sweep_json(&shards, &grid);
+        for needle in [
+            "\"bench\": \"sweep\"",
+            "\"cells\": 4",
+            "\"wall_ms_sum\":",
+            "\"wall_ms_critical_path\":",
+            "\"cells_per_sec\":",
+            // One dataset: shard 0 profiles it cold, shard 1 reuses the
+            // shared engine's in-memory slot.
+            "\"cold_profiles\": 1",
+            "\"warm_disk_hits\": 0",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert_eq!(json.matches("\"index\":").count(), 2, "{json}");
     }
 
     #[test]

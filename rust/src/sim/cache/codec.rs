@@ -1,7 +1,9 @@
 //! Versioned, checksummed binary codec for cache artifacts.
 //!
-//! Two artifact kinds share one envelope: a CSR matrix and a profiled
-//! [`Workload`]. Everything is hand-rolled on `std` like the rest of the
+//! Three artifact kinds share one envelope: a CSR matrix, a profiled
+//! [`Workload`], and a sweep shard ([`crate::sim::shard::SweepShard`] —
+//! one contiguous cell range of a design-space grid plus its metadata).
+//! Everything is hand-rolled on `std` like the rest of the
 //! crate (DESIGN.md §Dependencies) and byte-stable across platforms: all
 //! integers are little-endian, floats are stored as their IEEE-754 bit
 //! patterns, so an artifact decodes to *bit-identical* values everywhere.
@@ -10,7 +12,7 @@
 //!
 //! ```text
 //! offset  size  field
-//! 0       8     magic            (b"MAPLECSR" | b"MAPLEWL\0")
+//! 0       8     magic            (b"MAPLECSR" | b"MAPLEWL\0" | b"MAPLESHD")
 //! 8       4     codec version    (u32, == CODEC_VERSION)
 //! 12      8     payload length   (u64, byte count of the payload section)
 //! 20      8     FNV-1a-64        (u64, over the payload bytes)
@@ -33,9 +35,15 @@
 //! decoded parts are re-validated through [`Csr::try_new`], so a decoded
 //! matrix upholds every CSR invariant the rest of the crate assumes.
 
+use crate::coordinator::Policy;
+use crate::energy::EnergyBreakdown;
 use crate::pe::RowProfile;
-use crate::sim::Workload;
+use crate::sim::des::{DesPeStats, DesResult};
+use crate::sim::engine::{coords_for, intern_dim_name, AxisDim, CellModel, CellResult, WorkloadKey};
+use crate::sim::shard::{ShardMeta, ShardSpec, SweepShard};
+use crate::sim::{SimResult, Workload};
 use crate::sparse::Csr;
+use crate::trace::Counters;
 
 /// Bump on any layout change: old artifacts are rejected (and evicted) on
 /// load, and the store's file names change so caches start cold. CI keys
@@ -46,6 +54,7 @@ pub const CODEC_VERSION: u32 = 1;
 
 const MAGIC_CSR: [u8; 8] = *b"MAPLECSR";
 const MAGIC_WORKLOAD: [u8; 8] = *b"MAPLEWL\0";
+const MAGIC_SHARD: [u8; 8] = *b"MAPLESHD";
 const HEADER_LEN: usize = 28;
 
 /// Codec errors. Every variant means "do not trust this artifact".
@@ -134,6 +143,156 @@ pub fn encode_workload(w: &Workload) -> Vec<u8> {
     seal(MAGIC_WORKLOAD, &p)
 }
 
+/// Length-prefixed string section. Crate-visible: the design-space
+/// fingerprint ([`crate::sim::engine::DesignSpace::fingerprint`]) reuses
+/// the same framing, so hash layout and codec layout stay defined here.
+pub(crate) fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+/// Stable on-disk policy tags (the `Debug` spelling is for humans only).
+fn policy_tag(p: Policy) -> u32 {
+    match p {
+        Policy::RoundRobin => 0,
+        Policy::Chunked => 1,
+        Policy::GreedyBalance => 2,
+    }
+}
+
+fn policy_from_tag(tag: u32) -> Option<Policy> {
+    match tag {
+        0 => Some(Policy::RoundRobin),
+        1 => Some(Policy::Chunked),
+        2 => Some(Policy::GreedyBalance),
+        _ => None,
+    }
+}
+
+/// [`Counters`] fields in their declared order — encode and decode walk
+/// this same list, so the layout cannot drift between the two.
+fn counters_fields(c: &Counters) -> [u64; 21] {
+    [
+        c.mac_mul,
+        c.mac_add,
+        c.intersect_cmp,
+        c.cd_elems,
+        c.arb_read,
+        c.arb_write,
+        c.brb_read,
+        c.brb_write,
+        c.psb_read,
+        c.psb_write,
+        c.queue_read,
+        c.queue_write,
+        c.peb_read,
+        c.peb_write,
+        c.l1_read,
+        c.l1_write,
+        c.pob_read,
+        c.pob_write,
+        c.dram_read,
+        c.dram_write,
+        c.noc_flit_hops,
+    ]
+}
+
+/// [`EnergyBreakdown`] fields in their declared order (see
+/// [`counters_fields`]).
+fn energy_fields(e: &EnergyBreakdown) -> [f64; 8] {
+    [
+        e.mac_pj,
+        e.intersect_pj,
+        e.cd_pj,
+        e.l0_pj,
+        e.pe_buffer_pj,
+        e.l1_pj,
+        e.dram_pj,
+        e.noc_pj,
+    ]
+}
+
+fn put_sim_result(buf: &mut Vec<u8>, r: &SimResult) {
+    put_str(buf, &r.config);
+    put_u64(buf, r.cycles_compute);
+    put_u64(buf, r.cycles_dram_bound);
+    put_u64(buf, r.cycles);
+    for v in counters_fields(&r.counters) {
+        put_u64(buf, v);
+    }
+    for v in energy_fields(&r.energy) {
+        put_f64(buf, v);
+    }
+    put_u64(buf, r.out_nnz);
+    put_f64(buf, r.checksum);
+    put_u64(buf, r.total_products);
+    put_f64(buf, r.balance);
+}
+
+/// Encode one sweep shard (see [`crate::sim::shard`]): full grid metadata
+/// plus the contiguous cell range this shard computed. Cell coordinates
+/// are *not* stored — they are a pure function of the grid dimensions and
+/// the flat index, and [`decode_shard`] recomputes them.
+pub fn encode_shard(s: &SweepShard) -> Vec<u8> {
+    let mut p = Vec::new();
+    put_u64(&mut p, s.fingerprint);
+    put_u64(&mut p, s.spec.index as u64);
+    put_u64(&mut p, s.spec.count as u64);
+    put_u64(&mut p, s.start as u64);
+    put_u32(&mut p, s.cell_model.tag() as u32);
+    put_u64(&mut p, s.meta.wall_ms);
+    put_u64(&mut p, s.meta.profiles_run);
+    put_u64(&mut p, s.meta.disk_hits);
+    put_u64(&mut p, s.meta.profile_threads as u64);
+    put_u64(&mut p, s.dims.len() as u64);
+    for d in &s.dims {
+        put_str(&mut p, d.name);
+        put_u64(&mut p, d.labels.len() as u64);
+        for l in &d.labels {
+            put_str(&mut p, l);
+        }
+    }
+    put_u64(&mut p, s.datasets.len() as u64);
+    for k in &s.datasets {
+        put_str(&mut p, &k.dataset);
+        put_u64(&mut p, k.seed);
+        put_u64(&mut p, k.scale as u64);
+    }
+    put_u64(&mut p, s.configs.len() as u64);
+    for c in &s.configs {
+        put_str(&mut p, c);
+    }
+    put_u64(&mut p, s.policies.len() as u64);
+    for &pol in &s.policies {
+        put_u32(&mut p, policy_tag(pol));
+    }
+    put_u64(&mut p, s.cells.len() as u64);
+    for cell in &s.cells {
+        put_sim_result(&mut p, &cell.analytic);
+        match &cell.des {
+            Some(d) => {
+                p.push(1);
+                put_u64(&mut p, d.cycles);
+                put_u64(&mut p, d.dram_transactions);
+                put_f64(&mut p, d.pe_utilisation);
+                put_u64(&mut p, d.per_pe.len() as u64);
+                for pe in &d.per_pe {
+                    put_u64(&mut p, pe.rows);
+                    put_u64(&mut p, pe.front_busy_cycles);
+                    put_u64(&mut p, pe.back_busy_cycles);
+                    put_u64(&mut p, pe.finish);
+                }
+            }
+            None => p.push(0),
+        }
+    }
+    seal(MAGIC_SHARD, &p)
+}
+
 // ---------------------------------------------------------------- decoding
 
 /// Bounds-checked little-endian reader over the payload section.
@@ -167,7 +326,24 @@ impl<'a> Reader<'a> {
 
     fn index(&mut self) -> Result<usize, CodecError> {
         let v = self.u64()?;
-        usize::try_from(v).map_err(|_| CodecError::Inconsistent(format!("index {v} overflows usize")))
+        usize::try_from(v)
+            .map_err(|_| CodecError::Inconsistent(format!("index {v} overflows usize")))
+    }
+
+    fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn byte(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Length-prefixed UTF-8 string.
+    fn string(&mut self) -> Result<String, CodecError> {
+        let n = self.index()?;
+        self.expect_items(n, 1)?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| CodecError::Inconsistent("non-UTF-8 string".into()))
     }
 
     /// Guard for count-prefixed sections: the claimed item count must fit
@@ -304,6 +480,202 @@ pub fn decode_workload(bytes: &[u8]) -> Result<Workload, CodecError> {
     Ok(Workload { rows, cols, rows_b, nnz_a, nnz_b, out_nnz, total_products, profiles, checksum })
 }
 
+fn read_sim_result(r: &mut Reader<'_>) -> Result<SimResult, CodecError> {
+    let config = r.string()?;
+    let cycles_compute = r.u64()?;
+    let cycles_dram_bound = r.u64()?;
+    let cycles = r.u64()?;
+    // Struct literals evaluate fields in source order, so this walks the
+    // payload exactly as `counters_fields` wrote it.
+    let counters = Counters {
+        mac_mul: r.u64()?,
+        mac_add: r.u64()?,
+        intersect_cmp: r.u64()?,
+        cd_elems: r.u64()?,
+        arb_read: r.u64()?,
+        arb_write: r.u64()?,
+        brb_read: r.u64()?,
+        brb_write: r.u64()?,
+        psb_read: r.u64()?,
+        psb_write: r.u64()?,
+        queue_read: r.u64()?,
+        queue_write: r.u64()?,
+        peb_read: r.u64()?,
+        peb_write: r.u64()?,
+        l1_read: r.u64()?,
+        l1_write: r.u64()?,
+        pob_read: r.u64()?,
+        pob_write: r.u64()?,
+        dram_read: r.u64()?,
+        dram_write: r.u64()?,
+        noc_flit_hops: r.u64()?,
+    };
+    let energy = EnergyBreakdown {
+        mac_pj: r.f64()?,
+        intersect_pj: r.f64()?,
+        cd_pj: r.f64()?,
+        l0_pj: r.f64()?,
+        pe_buffer_pj: r.f64()?,
+        l1_pj: r.f64()?,
+        dram_pj: r.f64()?,
+        noc_pj: r.f64()?,
+    };
+    Ok(SimResult {
+        config,
+        cycles_compute,
+        cycles_dram_bound,
+        cycles,
+        counters,
+        energy,
+        out_nnz: r.u64()?,
+        checksum: r.f64()?,
+        total_products: r.u64()?,
+        balance: r.f64()?,
+    })
+}
+
+/// Decode a sweep shard, cross-checking every structural invariant: valid
+/// shard spec, known dimension names, a cell range inside the grid, and
+/// grid metadata that agrees with the dimensions. Cell coordinates are
+/// recomputed from the dimensions and the flat index (see
+/// [`encode_shard`]).
+pub fn decode_shard(bytes: &[u8]) -> Result<SweepShard, CodecError> {
+    let mut r = open(MAGIC_SHARD, bytes)?;
+    let fingerprint = r.u64()?;
+    let index = r.index()?;
+    let count = r.index()?;
+    if count == 0 || index >= count {
+        return Err(CodecError::Inconsistent(format!("shard index {index} not < count {count}")));
+    }
+    let start = r.index()?;
+    let model_tag = r.u32()?;
+    let cell_model = CellModel::from_tag(model_tag)
+        .ok_or_else(|| CodecError::Inconsistent(format!("unknown cell-model tag {model_tag}")))?;
+    let meta = ShardMeta {
+        wall_ms: r.u64()?,
+        profiles_run: r.u64()?,
+        disk_hits: r.u64()?,
+        profile_threads: r.index()?,
+    };
+
+    let n_dims = r.index()?;
+    r.expect_items(n_dims, 16)?;
+    let mut dims = Vec::with_capacity(n_dims);
+    for _ in 0..n_dims {
+        let name = r.string()?;
+        let name = intern_dim_name(&name)
+            .ok_or_else(|| CodecError::Inconsistent(format!("unknown grid dimension {name:?}")))?;
+        let n_labels = r.index()?;
+        r.expect_items(n_labels, 8)?;
+        let mut labels = Vec::with_capacity(n_labels);
+        for _ in 0..n_labels {
+            labels.push(r.string()?);
+        }
+        if labels.is_empty() {
+            return Err(CodecError::Inconsistent(format!("empty grid dimension {name}")));
+        }
+        dims.push(AxisDim { name, labels });
+    }
+    if dims.is_empty() {
+        return Err(CodecError::Inconsistent("shard has no grid dimensions".into()));
+    }
+    let total = dims
+        .iter()
+        .try_fold(1usize, |acc, d| acc.checked_mul(d.len()))
+        .ok_or_else(|| CodecError::Inconsistent("grid size overflows usize".into()))?;
+
+    let n_datasets = r.index()?;
+    r.expect_items(n_datasets, 24)?;
+    let mut datasets = Vec::with_capacity(n_datasets);
+    for _ in 0..n_datasets {
+        datasets.push(WorkloadKey {
+            dataset: r.string()?,
+            seed: r.u64()?,
+            scale: r.index()?,
+        });
+    }
+    let n_configs = r.index()?;
+    r.expect_items(n_configs, 8)?;
+    let mut configs = Vec::with_capacity(n_configs);
+    for _ in 0..n_configs {
+        configs.push(r.string()?);
+    }
+    let n_policies = r.index()?;
+    r.expect_items(n_policies, 4)?;
+    let mut policies = Vec::with_capacity(n_policies);
+    for _ in 0..n_policies {
+        let tag = r.u32()?;
+        policies.push(policy_from_tag(tag).ok_or_else(|| {
+            CodecError::Inconsistent(format!("unknown policy tag {tag}"))
+        })?);
+    }
+    // The legacy flat-addressing invariant: dataset × expanded-config ×
+    // policy must cover the grid exactly.
+    if datasets
+        .len()
+        .checked_mul(configs.len())
+        .and_then(|v| v.checked_mul(policies.len()))
+        != Some(total)
+    {
+        return Err(CodecError::Inconsistent(format!(
+            "metadata ({} datasets x {} configs x {} policies) disagrees with a grid of {total}",
+            datasets.len(),
+            configs.len(),
+            policies.len()
+        )));
+    }
+
+    let n_cells = r.index()?;
+    r.expect_items(n_cells, 8)?;
+    let end = start
+        .checked_add(n_cells)
+        .ok_or_else(|| CodecError::Inconsistent("cell range overflows usize".into()))?;
+    if end > total {
+        return Err(CodecError::Inconsistent(format!(
+            "cell range {start}..{end} exceeds the {total}-cell grid"
+        )));
+    }
+    let mut cells = Vec::with_capacity(n_cells);
+    for i in 0..n_cells {
+        let analytic = read_sim_result(&mut r)?;
+        let des = match r.byte()? {
+            0 => None,
+            1 => {
+                let cycles = r.u64()?;
+                let dram_transactions = r.u64()?;
+                let pe_utilisation = r.f64()?;
+                let n_pes = r.index()?;
+                r.expect_items(n_pes, 32)?;
+                let mut per_pe = Vec::with_capacity(n_pes);
+                for _ in 0..n_pes {
+                    per_pe.push(DesPeStats {
+                        rows: r.u64()?,
+                        front_busy_cycles: r.u64()?,
+                        back_busy_cycles: r.u64()?,
+                        finish: r.u64()?,
+                    });
+                }
+                Some(DesResult { cycles, dram_transactions, pe_utilisation, per_pe })
+            }
+            b => return Err(CodecError::Inconsistent(format!("bad DES presence flag {b}"))),
+        };
+        cells.push(CellResult { analytic, des, coords: coords_for(&dims, start + i) });
+    }
+    r.done()?;
+    Ok(SweepShard {
+        fingerprint,
+        spec: ShardSpec { index, count },
+        start,
+        datasets,
+        configs,
+        policies,
+        cell_model,
+        dims,
+        cells,
+        meta,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -340,6 +712,77 @@ mod tests {
         let a = generate(10, 10, 30, Profile::Uniform, 1);
         assert!(matches!(decode_workload(&encode_csr(&a)), Err(CodecError::BadMagic)));
         assert!(matches!(decode_workload(b"junk"), Err(CodecError::Truncated { .. })));
+        assert!(matches!(decode_shard(&encode_workload(&w)), Err(CodecError::BadMagic)));
+    }
+
+    fn tiny_shard() -> SweepShard {
+        let dims = vec![
+            AxisDim { name: "dataset", labels: vec!["wv".into()] },
+            AxisDim { name: "config", labels: vec!["c".into()] },
+            AxisDim { name: "policy", labels: vec!["RoundRobin".into()] },
+        ];
+        let analytic = SimResult {
+            config: "c".into(),
+            cycles_compute: 5,
+            cycles_dram_bound: 3,
+            cycles: 5,
+            counters: Counters { mac_mul: 2, dram_read: 9, ..Counters::default() },
+            energy: EnergyBreakdown { mac_pj: 1.25, ..EnergyBreakdown::default() },
+            out_nnz: 1,
+            checksum: 1.5,
+            total_products: 2,
+            balance: 1.0,
+        };
+        let cells = vec![CellResult { analytic, des: None, coords: coords_for(&dims, 0) }];
+        SweepShard {
+            fingerprint: 42,
+            spec: ShardSpec { index: 0, count: 1 },
+            start: 0,
+            datasets: vec![WorkloadKey::suite("wv", 7, 64)],
+            configs: vec!["c".into()],
+            policies: vec![Policy::RoundRobin],
+            cell_model: CellModel::Analytic,
+            dims,
+            cells,
+            meta: ShardMeta { wall_ms: 3, profiles_run: 1, disk_hits: 0, profile_threads: 1 },
+        }
+    }
+
+    #[test]
+    fn shard_round_trips_with_recomputed_coords() {
+        let s = tiny_shard();
+        let d = decode_shard(&encode_shard(&s)).unwrap();
+        assert_eq!(d, s);
+        // Coordinates were not stored — they were recomputed and still
+        // match the original cell-for-cell (asserted via PartialEq above,
+        // spot-checked here).
+        assert_eq!(d.cells[0].coords[0].label, "wv");
+        // Re-encoding the decoded shard is byte-identical.
+        assert_eq!(encode_shard(&d), encode_shard(&s));
+    }
+
+    #[test]
+    fn shard_structural_lies_are_rejected() {
+        // Metadata that disagrees with the grid dimensions must not decode,
+        // even though the envelope checksum is internally consistent.
+        let mut s = tiny_shard();
+        s.configs.push("phantom".into());
+        assert!(matches!(
+            decode_shard(&encode_shard(&s)),
+            Err(CodecError::Inconsistent(_))
+        ));
+        let mut s = tiny_shard();
+        s.start = 5; // range 5..6 of a 1-cell grid
+        assert!(matches!(
+            decode_shard(&encode_shard(&s)),
+            Err(CodecError::Inconsistent(_))
+        ));
+        let mut s = tiny_shard();
+        s.spec = ShardSpec { index: 3, count: 2 };
+        assert!(matches!(
+            decode_shard(&encode_shard(&s)),
+            Err(CodecError::Inconsistent(_))
+        ));
     }
 
     #[test]

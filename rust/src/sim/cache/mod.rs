@@ -25,5 +25,8 @@
 pub mod codec;
 pub mod store;
 
-pub use codec::{decode_csr, decode_workload, encode_csr, encode_workload, CodecError, CODEC_VERSION};
+pub use codec::{
+    decode_csr, decode_shard, decode_workload, encode_csr, encode_shard, encode_workload,
+    CodecError, CODEC_VERSION,
+};
 pub use store::{CacheStats, DiskCache, CACHE_DIR_ENV};

@@ -27,8 +27,10 @@
 //! width.
 
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::config::axis::ConfigAxis;
 use crate::config::AcceleratorConfig;
@@ -36,6 +38,7 @@ use crate::coordinator::Policy;
 use crate::noc::Topology;
 use crate::sim::cache::DiskCache;
 use crate::sim::des::{agreement_band, simulate_des, DesResult};
+use crate::sim::shard::{ShardMeta, ShardSpec, SweepShard};
 use crate::sim::{profile_workload_parallel, simulate_workload, SimResult, Workload};
 use crate::sparse::{suite, Csr};
 
@@ -52,6 +55,8 @@ pub enum EngineError {
     InvalidAxisPoint(&'static str, String),
     #[error(transparent)]
     Pe(#[from] crate::pe::registry::RegistryError),
+    #[error(transparent)]
+    Shard(#[from] crate::sim::shard::ShardError),
 }
 
 /// Cache key for one profiled workload: a Table-I dataset (by name or
@@ -97,6 +102,25 @@ impl CellModel {
     /// Does this model run the transaction-level DES per cell?
     pub fn runs_des(self) -> bool {
         !matches!(self, CellModel::Analytic)
+    }
+
+    /// Stable on-disk tag (shard codec + space fingerprint).
+    pub(crate) fn tag(self) -> u8 {
+        match self {
+            CellModel::Analytic => 0,
+            CellModel::Des => 1,
+            CellModel::Both => 2,
+        }
+    }
+
+    /// Inverse of [`CellModel::tag`]; `None` for a foreign tag.
+    pub(crate) fn from_tag(tag: u32) -> Option<Self> {
+        match tag {
+            0 => Some(CellModel::Analytic),
+            1 => Some(CellModel::Des),
+            2 => Some(CellModel::Both),
+            _ => None,
+        }
     }
 }
 
@@ -207,9 +231,20 @@ pub struct AxisCoord {
     pub label: String,
 }
 
+/// The closed set of grid-dimension names, as `'static` strs. Shard
+/// artifacts store dimension names as plain bytes; decoding re-interns them
+/// here (a foreign name is a decode error, never a leak). A new
+/// [`ConfigAxis`] kind must be added to this list before its grids can ride
+/// through shard artifacts.
+pub(crate) fn intern_dim_name(name: &str) -> Option<&'static str> {
+    const KNOWN: [&str; 7] =
+        ["dataset", "config", "policy", "noc", "macs", "prefetch", "pe-model"];
+    KNOWN.into_iter().find(|&k| k == name)
+}
+
 /// Named-axis coordinates of the cell at flat `idx` in a row-major grid
 /// over `dims` (innermost dimension last).
-fn coords_for(dims: &[AxisDim], idx: usize) -> Vec<AxisCoord> {
+pub(crate) fn coords_for(dims: &[AxisDim], idx: usize) -> Vec<AxisCoord> {
     let mut out = Vec::with_capacity(dims.len());
     let mut rem = idx;
     for d in dims.iter().rev() {
@@ -275,6 +310,17 @@ impl DesignSpace {
     pub fn with_cell_model(mut self, cell_model: CellModel) -> Self {
         self.cell_model = cell_model;
         self
+    }
+
+    /// Stable fingerprint of the expanded design space — the value shard
+    /// artifacts carry and [`crate::sim::shard::merge`] compares. It covers
+    /// everything that determines cell contents (grid dimensions and
+    /// labels, dataset keys, every *expanded* configuration's full TOML,
+    /// the policy list, the cell model, and the codec version), so two
+    /// spaces fingerprint equal iff their grids are cell-for-cell
+    /// compatible. Cheap: no profiling or simulation runs.
+    pub fn fingerprint(&self) -> Result<u64, EngineError> {
+        Ok(self.expand()?.fingerprint(self.cell_model))
     }
 
     /// The dataset axis points (empty when the axis is absent).
@@ -382,6 +428,46 @@ struct Expanded {
     dims: Vec<AxisDim>,
 }
 
+impl Expanded {
+    /// Total cell count (product of the dimension lengths).
+    fn total_cells(&self) -> usize {
+        self.dims.iter().map(|d| d.len()).product()
+    }
+
+    /// Order-sensitive FNV-1a over everything that determines cell
+    /// contents. Configurations hash as their full TOML, so two spaces
+    /// whose configs differ in any knob — not just the name — fingerprint
+    /// apart; every variable-length field is length-prefixed so adjacent
+    /// fields can never alias.
+    fn fingerprint(&self, model: CellModel) -> u64 {
+        use crate::sim::cache::codec::put_str;
+        let mut buf = Vec::new();
+        put_str(&mut buf, "maple-design-space");
+        buf.extend_from_slice(&crate::sim::cache::CODEC_VERSION.to_le_bytes());
+        buf.push(model.tag());
+        buf.extend_from_slice(&(self.dims.len() as u64).to_le_bytes());
+        for d in &self.dims {
+            put_str(&mut buf, d.name);
+            buf.extend_from_slice(&(d.labels.len() as u64).to_le_bytes());
+            for l in &d.labels {
+                put_str(&mut buf, l);
+            }
+        }
+        for k in &self.datasets {
+            put_str(&mut buf, &k.dataset);
+            buf.extend_from_slice(&k.seed.to_le_bytes());
+            buf.extend_from_slice(&(k.scale as u64).to_le_bytes());
+        }
+        for cfg in &self.configs {
+            put_str(&mut buf, &cfg.to_toml());
+        }
+        for p in &self.policies {
+            put_str(&mut buf, &format!("{p:?}"));
+        }
+        crate::sim::cache::codec::fnv1a(&buf)
+    }
+}
+
 /// One sweep cell: the analytic result, plus the DES cross-check when the
 /// sweep's [`CellModel`] ran it, addressed by its named-axis coordinates.
 #[derive(Debug, Clone, PartialEq)]
@@ -440,7 +526,10 @@ pub struct SweepResult {
     /// Named grid dimensions, row-major; their length product equals
     /// [`SweepResult::cell_count`].
     pub dims: Vec<AxisDim>,
-    cells: Vec<CellResult>,
+    /// Crate-visible so [`crate::sim::shard::merge`] can reassemble a grid
+    /// from shard artifacts; external construction still goes through
+    /// [`SimEngine::sweep`] or the merge path.
+    pub(crate) cells: Vec<CellResult>,
 }
 
 impl SweepResult {
@@ -465,6 +554,16 @@ impl SweepResult {
     /// Points per dimension, in row-major dimension order.
     pub fn shape(&self) -> Vec<usize> {
         self.dims.iter().map(|d| d.len()).collect()
+    }
+
+    /// Human-readable shape, e.g. `dataset=2 x config=4 x policy=1` — the
+    /// one rendering shared by the CLI grid line and the merge provenance.
+    pub fn shape_line(&self) -> String {
+        self.dims
+            .iter()
+            .map(|d| format!("{}={}", d.name, d.len()))
+            .collect::<Vec<_>>()
+            .join(" x ")
     }
 
     /// The named dimension, if it is part of this grid.
@@ -774,11 +873,85 @@ impl SimEngine {
         for cfg in &ex.configs {
             crate::pe::registry::build(cfg)?;
         }
+        let cells = self.run_range(&ex, spec.cell_model, 0..ex.total_cells())?;
+        Ok(SweepResult {
+            datasets: ex.datasets,
+            configs: ex.configs.iter().map(|c| c.name.clone()).collect(),
+            policies: ex.policies,
+            cell_model: spec.cell_model,
+            dims: ex.dims,
+            cells,
+        })
+    }
 
-        // Phase 1 — profile distinct datasets, one worker each (bounded by
-        // the fan-out width). Dedup keeps the first occurrence's order.
+    /// Run one shard of a [`DesignSpace`]: the contiguous flat-index range
+    /// [`ShardSpec::range`] selects out of the expanded cell grid. Only the
+    /// datasets that range touches are profiled (dataset is the outermost
+    /// grid dimension, so a contiguous cell range maps to a contiguous
+    /// dataset span), and the resulting [`SweepShard`] carries the full
+    /// grid metadata, the space fingerprint, and per-shard run stats —
+    /// everything [`crate::sim::shard::merge`] needs to reassemble a
+    /// [`SweepResult`] identical to the unsharded [`SimEngine::sweep`].
+    pub fn sweep_shard(
+        &self,
+        spec: &DesignSpace,
+        shard: ShardSpec,
+    ) -> Result<SweepShard, EngineError> {
+        shard.validate()?;
+        let ex = spec.expand()?;
+        for cfg in &ex.configs {
+            crate::pe::registry::build(cfg)?;
+        }
+        let fingerprint = ex.fingerprint(spec.cell_model);
+        let range = shard.range(ex.total_cells());
+        let start = Instant::now();
+        let (profiles_before, hits_before) = (self.profiles_run(), self.disk_hits());
+        let cells = self.run_range(&ex, spec.cell_model, range.clone())?;
+        let meta = ShardMeta {
+            wall_ms: start.elapsed().as_millis() as u64,
+            profiles_run: self.profiles_run() - profiles_before,
+            disk_hits: self.disk_hits() - hits_before,
+            profile_threads: self.profile_threads,
+        };
+        Ok(SweepShard {
+            fingerprint,
+            spec: shard,
+            start: range.start,
+            datasets: ex.datasets,
+            configs: ex.configs.iter().map(|c| c.name.clone()).collect(),
+            policies: ex.policies,
+            cell_model: spec.cell_model,
+            dims: ex.dims,
+            cells,
+            meta,
+        })
+    }
+
+    /// Profile the datasets a contiguous cell range touches, then run those
+    /// cells on scoped workers; slot `i` of the returned vec is grid cell
+    /// `range.start + i`. The full sweep is `run_range(.., 0..total)`; a
+    /// shard passes its sub-range and computes the identical cells, because
+    /// every cell is a pure function of its flat index.
+    fn run_range(
+        &self,
+        ex: &Expanded,
+        model: CellModel,
+        range: Range<usize>,
+    ) -> Result<Vec<CellResult>, EngineError> {
+        if range.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (nc, np) = (ex.configs.len(), ex.policies.len());
+        // Dataset is the outermost dimension, so this range touches the
+        // contiguous dataset span below — a shard never synthesises or
+        // loads workloads outside its slice of the grid.
+        let span = (range.start / (nc * np))..((range.end - 1) / (nc * np) + 1);
+
+        // Phase 1 — profile the span's distinct datasets, one worker each
+        // (bounded by the fan-out width). Dedup keeps first-occurrence
+        // order.
         let mut unique: Vec<&WorkloadKey> = Vec::new();
-        for k in &ex.datasets {
+        for k in &ex.datasets[span.clone()] {
             if !unique.contains(&k) {
                 unique.push(k);
             }
@@ -812,36 +985,42 @@ impl SimEngine {
             return Err(e);
         }
 
-        // Phase 2 — every cell, work-stealing over a shared index counter.
-        // All workloads are cache hits now. The flat index decomposes over
-        // the legacy (dataset, config, policy) view; the named coordinates
-        // decompose the same index over the full dimension list — both are
-        // row-major, so they address the same cell.
-        let workloads: Vec<Arc<Workload>> =
-            ex.datasets.iter().map(|k| self.workload(k)).collect::<Result<_, _>>()?;
-        let (nc, np) = (ex.configs.len(), ex.policies.len());
-        let total = ex.datasets.len() * nc * np;
+        // Phase 2 — every cell in range, work-stealing over a shared
+        // offset counter. All touched workloads are cache hits now. The
+        // flat index decomposes over the legacy (dataset, config, policy)
+        // view; the named coordinates decompose the same index over the
+        // full dimension list — both are row-major, so they address the
+        // same cell.
+        let workloads: Vec<Option<Arc<Workload>>> = ex
+            .datasets
+            .iter()
+            .enumerate()
+            .map(|(d, k)| if span.contains(&d) { self.workload(k).map(Some) } else { Ok(None) })
+            .collect::<Result<_, _>>()?;
+        let count = range.len();
         let next = AtomicUsize::new(0);
-        let cell_workers = self.threads.clamp(1, total);
+        let cell_workers = self.threads.clamp(1, count);
         let parts: Vec<Vec<(usize, CellResult)>> = std::thread::scope(|scope| {
             let handles: Vec<_> = (0..cell_workers)
                 .map(|_| {
                     scope.spawn(|| {
                         let mut out = Vec::new();
                         loop {
-                            let idx = next.fetch_add(1, Ordering::Relaxed);
-                            if idx >= total {
+                            let o = next.fetch_add(1, Ordering::Relaxed);
+                            if o >= count {
                                 break;
                             }
+                            let idx = range.start + o;
                             let (d, rem) = (idx / (nc * np), idx % (nc * np));
                             let (c, p) = (rem / np, rem % np);
+                            let w = workloads[d].as_ref().expect("dataset in range profiled");
                             out.push((
-                                idx,
+                                o,
                                 Self::run_cell(
                                     &ex.configs[c],
-                                    &workloads[d],
+                                    w,
                                     ex.policies[p],
-                                    spec.cell_model,
+                                    model,
                                     coords_for(&ex.dims, idx),
                                 ),
                             ));
@@ -853,18 +1032,11 @@ impl SimEngine {
             handles.into_iter().map(|h| h.join().expect("sweep worker panicked")).collect()
         });
 
-        let mut cells: Vec<Option<CellResult>> = vec![None; total];
-        for (idx, r) in parts.into_iter().flatten() {
-            cells[idx] = Some(r);
+        let mut cells: Vec<Option<CellResult>> = vec![None; count];
+        for (o, r) in parts.into_iter().flatten() {
+            cells[o] = Some(r);
         }
-        Ok(SweepResult {
-            datasets: ex.datasets,
-            configs: ex.configs.iter().map(|c| c.name.clone()).collect(),
-            policies: ex.policies,
-            cell_model: spec.cell_model,
-            dims: ex.dims,
-            cells: cells.into_iter().map(|c| c.expect("sweep cell computed")).collect(),
-        })
+        Ok(cells.into_iter().map(|c| c.expect("sweep cell computed")).collect())
     }
 }
 
@@ -1166,6 +1338,68 @@ mod tests {
             let grid = SimEngine::new().with_threads(threads).sweep(&spec).unwrap();
             assert_eq!(grid, reference, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn every_config_axis_name_is_internable() {
+        // Shard artifacts round-trip dimension names through
+        // `intern_dim_name`; a new `ConfigAxis` kind must be added to its
+        // KNOWN list or sharded sweeps fail only at merge time. The
+        // wildcard-free match makes this test a compile error for any new
+        // variant until it is listed here (and interned).
+        let axes = [
+            ConfigAxis::Topology(vec![Topology::Crossbar { ports: 8 }]),
+            ConfigAxis::MacsPerPe(vec![2]),
+            ConfigAxis::PrefetchDepth(vec![4]),
+            ConfigAxis::PeModel(vec!["maple".into()]),
+        ];
+        for a in &axes {
+            let name = match a {
+                ConfigAxis::Topology(_)
+                | ConfigAxis::MacsPerPe(_)
+                | ConfigAxis::PrefetchDepth(_)
+                | ConfigAxis::PeModel(_) => a.name(),
+            };
+            assert_eq!(intern_dim_name(name), Some(name), "axis {name} not internable");
+        }
+        for fixed in ["dataset", "config", "policy"] {
+            assert_eq!(intern_dim_name(fixed), Some(fixed));
+        }
+        assert_eq!(intern_dim_name("warp"), None);
+    }
+
+    #[test]
+    fn fingerprint_tracks_space_content() {
+        let base = SweepSpec::paper(vec![small_key()]);
+        let fp = base.fingerprint().unwrap();
+        // Deterministic, and cheap enough to call twice.
+        assert_eq!(fp, base.fingerprint().unwrap());
+        // Every content change moves it: dataset, scale, cell model, axis
+        // grid, and a config knob hidden behind an unchanged name.
+        assert_ne!(
+            fp,
+            SweepSpec::paper(vec![WorkloadKey::suite("fb", 7, 64)]).fingerprint().unwrap()
+        );
+        assert_ne!(
+            fp,
+            SweepSpec::paper(vec![WorkloadKey::suite("wv", 7, 32)]).fingerprint().unwrap()
+        );
+        assert_ne!(
+            fp,
+            base.clone().with_cell_model(CellModel::Both).fingerprint().unwrap()
+        );
+        assert_ne!(
+            fp,
+            base.clone().with_axis(Axis::macs_per_pe(vec![2, 4])).fingerprint().unwrap()
+        );
+        let mut configs = AcceleratorConfig::paper_configs();
+        configs[0].pe.macs_per_pe *= 2; // same name, different hardware
+        let knob = DesignSpace::new(configs, vec![small_key()], vec![Policy::RoundRobin]);
+        assert_ne!(fp, knob.fingerprint().unwrap());
+        // An invalid space has no fingerprint.
+        assert!(DesignSpace::new(vec![], vec![small_key()], vec![Policy::RoundRobin])
+            .fingerprint()
+            .is_err());
     }
 
     #[test]

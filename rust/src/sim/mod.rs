@@ -10,11 +10,15 @@
 //! of typed axes (dataset, config, NoC topology, MACs/PE, prefetch depth,
 //! PE model, policy) — run through [`engine::SimEngine`], which caches
 //! profiles and fans the expanded cell grid out across worker threads.
+//! Grids too large for one process split by contiguous flat-index range
+//! ([`shard`]): `SimEngine::sweep_shard` runs one [`ShardSpec`] slice and
+//! persists it, [`shard::merge`] reassembles the full grid bit-exactly.
 
 pub mod cache;
 pub mod des;
 pub mod engine;
 mod profile;
+pub mod shard;
 pub mod timeline;
 
 pub use cache::{CacheStats, DiskCache};
@@ -24,6 +28,7 @@ pub use engine::{
     SweepResult, SweepSpec, WorkloadKey,
 };
 pub use profile::{profile_workload, profile_workload_parallel, Workload};
+pub use shard::{ShardError, ShardMeta, ShardSpec, SweepShard};
 pub use timeline::{exact_pipeline, TwoStageTimeline};
 
 use crate::accel::Accelerator;

@@ -1,0 +1,433 @@
+//! Sharded multi-process sweeps: partition a [`DesignSpace`] cell grid by
+//! contiguous flat-index range, run each range in its own process (or CI
+//! job), and merge the on-disk shard artifacts back into the exact
+//! [`SweepResult`] a single-process sweep would have produced.
+//!
+//! The grid made this possible: PR 4's axis refactor made every sweep cell
+//! a pure function of its flat row-major index, so a [`ShardSpec`] only
+//! has to name *which* contiguous index range a process owns — the same
+//! shard-then-reduce shape distributed dataframe systems use. The pieces:
+//!
+//! * [`ShardSpec`] — `index/count`, parsed from the CLI as `--shard i/n`;
+//!   [`ShardSpec::range`] splits `0..total` into `count` contiguous,
+//!   near-equal ranges that tile the grid exactly.
+//! * [`SweepShard`] — one executed range plus the full grid metadata
+//!   (dims, datasets, configs, policies, cell model), the space
+//!   fingerprint ([`DesignSpace::fingerprint`]), and per-shard run stats.
+//!   Persisted through the [`crate::sim::cache`] codec envelope (magic
+//!   `MAPLESHD`, same version/checksum discipline) via
+//!   [`SweepShard::write_to`] / [`read_dir`].
+//! * [`merge`] — validates that a shard set is complete and compatible
+//!   (one fingerprint, one shard count, no missing or duplicate shards,
+//!   ranges tiling the grid exactly) and reassembles the [`SweepResult`].
+//!   Every violation is a hard error: a partial merge must never pass for
+//!   a full-grid result.
+//!
+//! Unlike the workload cache — where a bad artifact is silently evicted
+//! and recomputed — shard artifacts fail *loudly*: a merge that cannot
+//! prove it has every cell of the one intended grid exits non-zero.
+//!
+//! [`DesignSpace`]: crate::sim::DesignSpace
+//! [`DesignSpace::fingerprint`]: crate::sim::DesignSpace::fingerprint
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::Policy;
+use crate::sim::cache::codec::{self, CodecError};
+use crate::sim::cache::CODEC_VERSION;
+use crate::sim::engine::{AxisDim, CellModel, CellResult, SweepResult, WorkloadKey};
+
+/// Shard artifact file extension (the full name also carries the codec
+/// version, so a version bump starts cold without touching old files).
+pub const SHARD_EXT: &str = "mshd";
+
+/// Shard-layer errors. Merge-side variants are deliberately loud and
+/// specific: CI logs must say *which* invariant a bad shard set broke.
+#[derive(Debug, thiserror::Error)]
+pub enum ShardError {
+    #[error("invalid shard {index}/{count}: need index < count and count >= 1")]
+    InvalidSpec { index: usize, count: usize },
+    #[error("bad shard spec {0:?}: expected i/n, e.g. 0/4")]
+    BadSpec(String),
+    #[error("cannot merge an empty shard set")]
+    Empty,
+    #[error("no shard artifacts (*.mshd) in {}", .0.display())]
+    NoShards(PathBuf),
+    #[error("{}: {source}", .path.display())]
+    Io {
+        path: PathBuf,
+        #[source]
+        source: io::Error,
+    },
+    #[error("shard artifact {} is invalid: {source}", .path.display())]
+    Artifact {
+        path: PathBuf,
+        #[source]
+        source: CodecError,
+    },
+    #[error(
+        "shard {index}/{count} fingerprint {found:#018x} != {expected:#018x}: \
+         shards come from different design spaces"
+    )]
+    FingerprintMismatch { index: usize, count: usize, expected: u64, found: u64 },
+    #[error("shard count mismatch: {a}-way and {b}-way shards cannot merge")]
+    CountMismatch { a: usize, b: usize },
+    #[error("duplicate shard {index}/{count}: overlapping cell ranges")]
+    DuplicateShard { index: usize, count: usize },
+    #[error("missing shards {missing:?} of a {count}-way split: gap in the cell grid")]
+    MissingShards { missing: Vec<usize>, count: usize },
+    #[error(
+        "shard {index}/{count} covers cells {found_start}..{found_end} but the grid \
+         expects it to start at {expected_start}"
+    )]
+    RangeMismatch {
+        index: usize,
+        count: usize,
+        found_start: usize,
+        found_end: usize,
+        expected_start: usize,
+    },
+    #[error("incompatible shards: {0}")]
+    Incompatible(String),
+}
+
+/// Which contiguous slice of a sweep grid one process owns: shard `index`
+/// of a `count`-way split (zero-based, so the CLI spelling is `--shard
+/// 0/4` … `--shard 3/4`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSpec {
+    /// A validated spec (`index < count`, `count ≥ 1`).
+    pub fn new(index: usize, count: usize) -> Result<Self, ShardError> {
+        let spec = Self { index, count };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Re-check the invariant (the fields are public, so a hand-built or
+    /// decoded spec revalidates before use).
+    pub fn validate(&self) -> Result<(), ShardError> {
+        if self.count == 0 || self.index >= self.count {
+            return Err(ShardError::InvalidSpec { index: self.index, count: self.count });
+        }
+        Ok(())
+    }
+
+    /// This shard's contiguous flat-index range over a grid of `total`
+    /// cells. Cells split as evenly as possible — the first `total %
+    /// count` shards take one extra — so the `count` ranges tile
+    /// `0..total` exactly, in index order, and no two shard sizes differ
+    /// by more than one cell. With `count > total`, trailing shards are
+    /// empty (and still required at merge time: an empty shard proves its
+    /// slice was computed, not lost).
+    pub fn range(&self, total: usize) -> Range<usize> {
+        let base = total / self.count;
+        let extra = total % self.count;
+        let start = self.index * base + self.index.min(extra);
+        let len = base + usize::from(self.index < extra);
+        start..start + len
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+impl std::str::FromStr for ShardSpec {
+    type Err = ShardError;
+
+    fn from_str(s: &str) -> Result<Self, ShardError> {
+        let (i, n) = s.split_once('/').ok_or_else(|| ShardError::BadSpec(s.into()))?;
+        let index = i.trim().parse().map_err(|_| ShardError::BadSpec(s.into()))?;
+        let count = n.trim().parse().map_err(|_| ShardError::BadSpec(s.into()))?;
+        ShardSpec::new(index, count)
+    }
+}
+
+/// Per-shard run statistics, persisted in the artifact so the merge job
+/// can report wall-times and warm-vs-cold cache behaviour without access
+/// to the shard processes (the `BENCH_sweep.json` inputs).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct ShardMeta {
+    /// Wall-clock of the shard's profile + simulate phases, milliseconds.
+    pub wall_ms: u64,
+    /// Workloads this shard profiled from scratch (cold).
+    pub profiles_run: u64,
+    /// Workloads this shard loaded from the disk cache (warm).
+    pub disk_hits: u64,
+    /// The engine's profile-pass chunk count. Checksum bits depend on it,
+    /// so all shards of one merge must agree — it is part of the
+    /// compatibility check even though it is not part of the space.
+    pub profile_threads: usize,
+}
+
+/// One executed shard: a contiguous run of grid cells plus everything
+/// needed to validate and reassemble the full [`SweepResult`]. `cells[i]`
+/// is grid cell `start + i`; the grid metadata is carried whole (it is
+/// tiny next to the cells) so `merge` needs no access to the original
+/// [`crate::sim::DesignSpace`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepShard {
+    /// [`crate::sim::DesignSpace::fingerprint`] of the space that produced
+    /// this shard.
+    pub fingerprint: u64,
+    /// Which slice of which split this is.
+    pub spec: ShardSpec,
+    /// First flat cell index of this shard's range.
+    pub start: usize,
+    pub datasets: Vec<WorkloadKey>,
+    /// Expanded configuration names, grid order.
+    pub configs: Vec<String>,
+    pub policies: Vec<Policy>,
+    pub cell_model: CellModel,
+    /// Named grid dimensions, row-major (dims product = total cells).
+    pub dims: Vec<AxisDim>,
+    /// The computed cells, in flat-index order from `start`.
+    pub cells: Vec<CellResult>,
+    pub meta: ShardMeta,
+}
+
+impl SweepShard {
+    /// The flat cell range this shard covers.
+    pub fn range(&self) -> Range<usize> {
+        self.start..self.start + self.cells.len()
+    }
+
+    /// Total cells of the full grid (all shards together).
+    pub fn total_cells(&self) -> usize {
+        self.dims.iter().map(|d| d.len()).product()
+    }
+
+    /// Canonical artifact file name: shard position and codec version are
+    /// both in the name, so a re-run overwrites its own artifact and a
+    /// codec bump starts cold next to old files.
+    pub fn file_name(&self) -> String {
+        format!(
+            "shard-{:04}-of-{:04}.v{}.{}",
+            self.spec.index, self.spec.count, CODEC_VERSION, SHARD_EXT
+        )
+    }
+
+    /// Encode and atomically publish this shard into `dir` (created if
+    /// needed): temp file + `rename`, same discipline as the workload
+    /// store, so a concurrently merging reader never sees a torn artifact.
+    pub fn write_to(&self, dir: &Path) -> io::Result<PathBuf> {
+        fs::create_dir_all(dir)?;
+        let path = dir.join(self.file_name());
+        let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
+        fs::write(&tmp, codec::encode_shard(self))?;
+        match fs::rename(&tmp, &path) {
+            Ok(()) => Ok(path),
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Decode every current-version shard artifact (`*.v<N>.mshd`) in `dir`,
+/// sorted by shard index. Discovery filters on the codec version embedded
+/// in the file name, so a codec bump really does start cold next to old
+/// artifacts instead of tripping over them. Within the current version,
+/// loud by design: an unreadable or undecodable artifact is an error, not
+/// a skip — a merge must never silently proceed past a corrupt shard.
+/// Non-shard files (temp files, workload artifacts) are ignored.
+pub fn read_dir(dir: &Path) -> Result<Vec<SweepShard>, ShardError> {
+    let entries = fs::read_dir(dir)
+        .map_err(|e| ShardError::Io { path: dir.to_path_buf(), source: e })?;
+    let suffix = format!(".v{CODEC_VERSION}.{SHARD_EXT}");
+    let mut paths: Vec<PathBuf> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.is_file()
+                && p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(&suffix))
+        })
+        .collect();
+    paths.sort();
+    let mut shards = Vec::with_capacity(paths.len());
+    for path in paths {
+        let bytes =
+            fs::read(&path).map_err(|e| ShardError::Io { path: path.clone(), source: e })?;
+        let shard = codec::decode_shard(&bytes)
+            .map_err(|e| ShardError::Artifact { path: path.clone(), source: e })?;
+        shards.push(shard);
+    }
+    if shards.is_empty() {
+        return Err(ShardError::NoShards(dir.to_path_buf()));
+    }
+    shards.sort_by_key(|s| s.spec.index);
+    Ok(shards)
+}
+
+/// Merge a complete shard set back into the [`SweepResult`] the unsharded
+/// sweep would have produced — cell-for-cell, bit-for-bit.
+///
+/// Validation, in order: non-empty set; one fingerprint (same design
+/// space); one shard count; identical grid metadata and profile chunking;
+/// no duplicate shard indices (overlap); every index `0..count` present
+/// (gap); and the actual cell ranges tile `0..total` exactly in index
+/// order. Only then are the cells concatenated.
+pub fn merge(shards: &[SweepShard]) -> Result<SweepResult, ShardError> {
+    let first = shards.first().ok_or(ShardError::Empty)?;
+    for s in shards {
+        s.spec.validate()?;
+        if s.fingerprint != first.fingerprint {
+            return Err(ShardError::FingerprintMismatch {
+                index: s.spec.index,
+                count: s.spec.count,
+                expected: first.fingerprint,
+                found: s.fingerprint,
+            });
+        }
+        if s.spec.count != first.spec.count {
+            return Err(ShardError::CountMismatch { a: first.spec.count, b: s.spec.count });
+        }
+        // Defense in depth: with equal fingerprints these can only differ
+        // if an artifact was hand-edited past the checksum.
+        if s.dims != first.dims
+            || s.datasets != first.datasets
+            || s.configs != first.configs
+            || s.policies != first.policies
+            || s.cell_model != first.cell_model
+        {
+            return Err(ShardError::Incompatible(format!(
+                "shard {} grid metadata disagrees with shard {}",
+                s.spec, first.spec
+            )));
+        }
+        if s.meta.profile_threads != first.meta.profile_threads {
+            return Err(ShardError::Incompatible(format!(
+                "profile chunking differs across shards ({} vs {}): checksum bits \
+                 would not match an unsharded run",
+                first.meta.profile_threads, s.meta.profile_threads
+            )));
+        }
+    }
+
+    // Coverage check without any O(count) allocation — `count` comes from
+    // an artifact and may be absurd, but every spec is already validated
+    // (index < count), so `shards.len() == count` with no adjacent
+    // duplicates in sorted order pigeonholes the indices to exactly
+    // `0..count`.
+    let count = first.spec.count;
+    let mut ordered: Vec<&SweepShard> = shards.iter().collect();
+    ordered.sort_by_key(|s| s.spec.index);
+    for pair in ordered.windows(2) {
+        if pair[0].spec.index == pair[1].spec.index {
+            return Err(ShardError::DuplicateShard { index: pair[0].spec.index, count });
+        }
+    }
+    if ordered.len() != count {
+        // Report the first few missing indices (the list itself could be
+        // near-`count` long for a crafted artifact).
+        let mut missing = Vec::new();
+        let mut present = ordered.iter().map(|s| s.spec.index).peekable();
+        for i in 0..count {
+            match present.peek() {
+                Some(&p) if p == i => {
+                    present.next();
+                }
+                _ => {
+                    missing.push(i);
+                    if missing.len() >= 8 {
+                        break;
+                    }
+                }
+            }
+        }
+        return Err(ShardError::MissingShards { missing, count });
+    }
+
+    // Index order == range order for the canonical splitter; walking the
+    // sorted set with a running expected-start catches any tampered or
+    // truncated range even when all indices are present.
+    let total = first.total_cells();
+    let mut expected_start = 0usize;
+    for s in &ordered {
+        if s.start != expected_start {
+            return Err(ShardError::RangeMismatch {
+                index: s.spec.index,
+                count,
+                found_start: s.start,
+                found_end: s.range().end,
+                expected_start,
+            });
+        }
+        expected_start += s.cells.len();
+    }
+    if expected_start != total {
+        return Err(ShardError::Incompatible(format!(
+            "shard ranges cover {expected_start} of {total} grid cells"
+        )));
+    }
+
+    let mut cells = Vec::with_capacity(total);
+    for s in &ordered {
+        cells.extend(s.cells.iter().cloned());
+    }
+    Ok(SweepResult {
+        datasets: first.datasets.clone(),
+        configs: first.configs.clone(),
+        policies: first.policies.clone(),
+        cell_model: first.cell_model,
+        dims: first.dims.clone(),
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_tile_every_grid_exactly() {
+        for total in 0..60 {
+            for count in 1..10 {
+                let mut covered = 0;
+                let mut next_start = 0;
+                let mut sizes = Vec::new();
+                for index in 0..count {
+                    let r = ShardSpec::new(index, count).unwrap().range(total);
+                    assert_eq!(r.start, next_start, "total={total} count={count} i={index}");
+                    next_start = r.end;
+                    covered += r.len();
+                    sizes.push(r.len());
+                }
+                assert_eq!(next_start, total, "total={total} count={count}");
+                assert_eq!(covered, total);
+                let (min, max) =
+                    (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "unbalanced split: {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_validates() {
+        let s: ShardSpec = "0/4".parse().unwrap();
+        assert_eq!(s, ShardSpec { index: 0, count: 4 });
+        assert_eq!("3/4".parse::<ShardSpec>().unwrap().to_string(), "3/4");
+        assert_eq!(" 1 / 2 ".parse::<ShardSpec>().unwrap(), ShardSpec { index: 1, count: 2 });
+        assert!(matches!("4/4".parse::<ShardSpec>(), Err(ShardError::InvalidSpec { .. })));
+        assert!(matches!("0/0".parse::<ShardSpec>(), Err(ShardError::InvalidSpec { .. })));
+        assert!(matches!("7".parse::<ShardSpec>(), Err(ShardError::BadSpec(_))));
+        assert!(matches!("a/b".parse::<ShardSpec>(), Err(ShardError::BadSpec(_))));
+        assert!(ShardSpec { index: 9, count: 2 }.validate().is_err());
+    }
+
+    #[test]
+    fn empty_merge_is_an_error() {
+        assert!(matches!(merge(&[]), Err(ShardError::Empty)));
+    }
+}

@@ -66,7 +66,9 @@ pub fn generate(rows: usize, cols: usize, nnz: usize, profile: Profile, seed: u6
         // Top up if clustering produced overlaps (keeps nnz exact). Banded
         // rows top up *inside the band* so the structure stays banded.
         let (lo, hi) = match profile {
-            Profile::Banded { rel_bandwidth, cluster } => band_range(i, rows, cols, rel_bandwidth, cluster),
+            Profile::Banded { rel_bandwidth, cluster } => {
+                band_range(i, rows, cols, rel_bandwidth, cluster)
+            }
             _ => (0u32, cols as u32 - 1),
         };
         let mut span = (hi - lo + 1) as u64;
@@ -94,7 +96,13 @@ pub fn generate(rows: usize, cols: usize, nnz: usize, profile: Profile, seed: u6
 }
 
 /// Row counts: near-uniform with optional multiplicative jitter.
-fn spread_counts(rows: usize, cols: usize, nnz: usize, rng: &mut SplitMix64, jitter: f64) -> Vec<usize> {
+fn spread_counts(
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    rng: &mut SplitMix64,
+    jitter: f64,
+) -> Vec<usize> {
     let mut counts = vec![nnz / rows; rows];
     let mut rem = nnz - (nnz / rows) * rows;
     // Distribute the remainder over random rows.
@@ -122,7 +130,13 @@ fn spread_counts(rows: usize, cols: usize, nnz: usize, rng: &mut SplitMix64, jit
 }
 
 /// Zipf row-length distribution scaled to sum exactly to `nnz`.
-fn zipf_counts(rows: usize, cols: usize, nnz: usize, alpha: f64, rng: &mut SplitMix64) -> Vec<usize> {
+fn zipf_counts(
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    alpha: f64,
+    rng: &mut SplitMix64,
+) -> Vec<usize> {
     // Weight w_r = (r+1)^-alpha over a random permutation of rows, so heavy
     // rows are scattered (as in real web graphs after vertex relabeling).
     // Degrees are capped at 100× the mean: real web/social graphs have
@@ -188,7 +202,13 @@ fn sample_distinct(cols: usize, k: usize, rng: &mut SplitMix64, out: &mut Vec<u3
 }
 
 /// The diagonal band `[lo, hi]` for row `i` under a banded profile.
-fn band_range(i: usize, rows: usize, cols: usize, rel_bandwidth: f64, cluster: usize) -> (u32, u32) {
+fn band_range(
+    i: usize,
+    rows: usize,
+    cols: usize,
+    rel_bandwidth: f64,
+    cluster: usize,
+) -> (u32, u32) {
     let center = (i as f64 / rows as f64 * cols as f64) as i64;
     let half = ((rel_bandwidth * cols as f64) as i64).max(cluster as i64 + 1);
     let lo = (center - half).max(0) as u32;
@@ -242,7 +262,12 @@ mod tests {
         assert_eq!(a.nnz(), 8000);
         let s = stats::row_stats(&a);
         // A Zipf profile must have max row length far above the mean.
-        assert!(s.max_row_nnz as f64 > 4.0 * s.mean_row_nnz, "max={} mean={}", s.max_row_nnz, s.mean_row_nnz);
+        assert!(
+            s.max_row_nnz as f64 > 4.0 * s.mean_row_nnz,
+            "max={} mean={}",
+            s.max_row_nnz,
+            s.mean_row_nnz
+        );
     }
 
     #[test]

@@ -95,14 +95,18 @@ pub fn read_matrix_market_from<R: BufRead>(r: R) -> Result<Csr, MmError> {
             .parse()
             .map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad col {}", parts[1]) })?;
         if r == 0 || c == 0 || r > rows || c > cols {
-            return Err(MmError::Parse { line: no + 1, msg: format!("coordinate ({r},{c}) out of bounds") });
+            return Err(MmError::Parse {
+                line: no + 1,
+                msg: format!("coordinate ({r},{c}) out of bounds"),
+            });
         }
         let v: f32 = if field == "pattern" {
             1.0
         } else {
-            parts[2]
-                .parse()
-                .map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad value {}", parts[2]) })?
+            parts[2].parse().map_err(|_| MmError::Parse {
+                line: no + 1,
+                msg: format!("bad value {}", parts[2]),
+            })?
         };
         // MatrixMarket is 1-indexed.
         coo.push((r - 1) as u32, (c - 1) as u32, v);

@@ -64,6 +64,8 @@ fn hash_name(s: &str) -> u64 {
 }
 
 /// The paper's Table I, in its row order (sorted by increasing density).
+/// One aligned row per dataset — kept tabular on purpose.
+#[rustfmt::skip]
 pub const TABLE_I: &[DatasetSpec] = &[
     DatasetSpec { name: "web-Google",     abbrev: "wg", rows: 916_000, cols: 916_000, nnz: 5_100_000, profile: Profile::PowerLaw { alpha: 0.8 } },
     DatasetSpec { name: "mario002",       abbrev: "m2", rows: 390_000, cols: 390_000, nnz: 2_100_000, profile: Profile::Banded { rel_bandwidth: 0.002, cluster: 3 } },
@@ -83,7 +85,9 @@ pub const TABLE_I: &[DatasetSpec] = &[
 
 /// Look a dataset up by SuiteSparse name or paper abbreviation.
 pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
-    TABLE_I.iter().find(|d| d.name.eq_ignore_ascii_case(name) || d.abbrev.eq_ignore_ascii_case(name))
+    TABLE_I
+        .iter()
+        .find(|d| d.name.eq_ignore_ascii_case(name) || d.abbrev.eq_ignore_ascii_case(name))
 }
 
 #[cfg(test)]

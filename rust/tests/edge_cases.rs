@@ -123,7 +123,8 @@ fn scratchpad_overflow_spills_accounted() {
 
 #[test]
 fn dram_saturation_serialises() {
-    let mut d = DramModel::new(DramParams { words_per_cycle: 1.0, access_latency: 5, burst_words: 1 });
+    let mut d =
+        DramModel::new(DramParams { words_per_cycle: 1.0, access_latency: 5, burst_words: 1 });
     let mut c = Counters::default();
     let mut done = 0u64;
     for _ in 0..100 {

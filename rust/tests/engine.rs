@@ -232,7 +232,12 @@ fn prefetch_axis_varies_the_des_and_composes_with_cell_model() {
     assert_eq!(shallow.analytic.energy, deep.analytic.energy);
     assert_eq!(shallow.analytic.checksum.to_bits(), deep.analytic.checksum.to_bits());
     let (s_des, d_des) = (shallow.des.as_ref().unwrap(), deep.des.as_ref().unwrap());
-    assert!(s_des.cycles >= d_des.cycles, "depth 1 ({}) < depth 6 ({})", s_des.cycles, d_des.cycles);
+    assert!(
+        s_des.cycles >= d_des.cycles,
+        "depth 1 ({}) < depth 6 ({})",
+        s_des.cycles,
+        d_des.cycles
+    );
 }
 
 // --- Open PE registry: add a PE without touching accel/ ------------------

@@ -61,7 +61,8 @@ fn paper_headline_bands_at_bench_scale() {
     for name in family_samples() {
         let a = suite::by_name(name).unwrap().generate_scaled(7, 48);
         let w = profile_workload(&a, &a);
-        let mb = simulate_workload(&AcceleratorConfig::matraptor_baseline(), &w, Policy::RoundRobin);
+        let mb =
+            simulate_workload(&AcceleratorConfig::matraptor_baseline(), &w, Policy::RoundRobin);
         let mm = simulate_workload(&AcceleratorConfig::matraptor_maple(), &w, Policy::RoundRobin);
         let eb = simulate_workload(&AcceleratorConfig::extensor_baseline(), &w, Policy::RoundRobin);
         let em = simulate_workload(&AcceleratorConfig::extensor_maple(), &w, Policy::RoundRobin);

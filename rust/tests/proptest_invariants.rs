@@ -27,7 +27,10 @@ fn arb_matrix(seed: u64) -> Csr {
     let profile = match r.below(3) {
         0 => Profile::Uniform,
         1 => Profile::PowerLaw { alpha: 0.5 + r.unit_f64() },
-        _ => Profile::Banded { rel_bandwidth: 0.05 + 0.1 * r.unit_f64(), cluster: 1 + r.below(5) as usize },
+        _ => Profile::Banded {
+            rel_bandwidth: 0.05 + 0.1 * r.unit_f64(),
+            cluster: 1 + r.below(5) as usize,
+        },
     };
     generate(rows, cols, nnz, profile, seed.wrapping_mul(0x9E37_79B9))
 }
@@ -240,7 +243,12 @@ fn prop_mesh_hops_geometry_invariants() {
 fn prop_energy_monotone_in_counters() {
     use maple::energy::{BufferSizes, EnergyBreakdown, TechModel};
     let t = TechModel::tech45();
-    let sizes = BufferSizes { pe_buffer_bytes: 48 << 10, l1_bytes: 256 << 10, pob_bytes: 1 << 20, reg_bytes: 2048 };
+    let sizes = BufferSizes {
+        pe_buffer_bytes: 48 << 10,
+        l1_bytes: 256 << 10,
+        pob_bytes: 1 << 20,
+        reg_bytes: 2048,
+    };
     let mut rng = SplitMix64::new(31);
     for _ in 0..100 {
         let c1 = Counters {

@@ -1,0 +1,215 @@
+//! Sharded-sweep contracts: shard artifacts round-trip bit-exactly, merge
+//! reassembles the unsharded grid byte-for-byte, and every incompatible or
+//! incomplete shard set is rejected loudly.
+
+use maple::config::AcceleratorConfig;
+use maple::sim::cache::{decode_shard, encode_shard};
+use maple::sim::shard::{self, ShardError, ShardSpec};
+use maple::sim::{Axis, CellModel, DesignSpace, SimEngine, SweepShard, WorkloadKey};
+
+/// A small but representative space: two datasets × one base config ×
+/// three MACs points × one policy = 6 cells, with the DES attached so the
+/// optional `DesResult` section of the codec is exercised.
+fn space() -> DesignSpace {
+    DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+        .with_axis(Axis::Dataset(vec![
+            WorkloadKey::suite("wv", 7, 64),
+            WorkloadKey::suite("fb", 7, 64),
+        ]))
+        .with_axis(Axis::macs_per_pe(vec![2, 4, 8]))
+        .with_cell_model(CellModel::Both)
+}
+
+fn shards_of(engine: &SimEngine, spec: &DesignSpace, count: usize) -> Vec<SweepShard> {
+    (0..count)
+        .map(|i| engine.sweep_shard(spec, ShardSpec::new(i, count).unwrap()).unwrap())
+        .collect()
+}
+
+#[test]
+fn shard_codec_round_trips_bit_exact() {
+    let engine = SimEngine::new();
+    let spec = space();
+    // Full grid (1 shard), split cells (3 shards), and empty trailing
+    // ranges (more shards than cells) all round-trip.
+    for count in [1, 3, 8] {
+        for s in shards_of(&engine, &spec, count) {
+            let bytes = encode_shard(&s);
+            let d = decode_shard(&bytes).unwrap();
+            assert_eq!(d, s, "{count}-way shard {}", s.spec);
+            // Checksum bits survive exactly, and re-encoding is stable.
+            for (a, b) in s.cells.iter().zip(&d.cells) {
+                assert_eq!(a.analytic.checksum.to_bits(), b.analytic.checksum.to_bits());
+            }
+            assert_eq!(encode_shard(&d), bytes);
+        }
+    }
+    // 8-way over 6 cells: the trailing shards really were empty.
+    let eight = shards_of(&engine, &spec, 8);
+    assert!(eight[6].cells.is_empty() && eight[7].cells.is_empty());
+    assert_eq!(eight.iter().map(|s| s.cells.len()).sum::<usize>(), 6);
+}
+
+#[test]
+fn corrupt_shard_artifacts_never_decode() {
+    let engine = SimEngine::new();
+    let spec = DesignSpace::paper(vec![WorkloadKey::suite("wv", 7, 64)]);
+    let shard = engine.sweep_shard(&spec, ShardSpec::new(0, 2).unwrap()).unwrap();
+    let clean = encode_shard(&shard);
+    for pos in (0..clean.len()).step_by(7) {
+        let mut bad = clean.clone();
+        bad[pos] ^= 0x20;
+        assert!(decode_shard(&bad).is_err(), "flip at byte {pos} went undetected");
+    }
+    for cut in [0, 11, 27, 28, clean.len() / 2, clean.len() - 1] {
+        assert!(decode_shard(&clean[..cut]).is_err(), "cut at {cut}");
+    }
+}
+
+#[test]
+fn merged_shards_equal_the_unsharded_sweep() {
+    let engine = SimEngine::new();
+    let spec = space();
+    let reference = engine.sweep(&spec).unwrap();
+    for count in [2, 3] {
+        let shards = shards_of(&engine, &spec, count);
+        let merged = shard::merge(&shards).unwrap();
+        // `SweepResult` equality is bit-for-bit over every cell (SimResult,
+        // DES results, coordinates) — the byte-identity contract.
+        assert_eq!(merged, reference, "{count}-way merge");
+        for idx in 0..reference.cell_count() {
+            assert_eq!(
+                merged.cell(idx).analytic.checksum.to_bits(),
+                reference.cell(idx).analytic.checksum.to_bits()
+            );
+        }
+    }
+    // The same holds through the on-disk artifact: encode, decode, merge.
+    let shards = shards_of(&engine, &spec, 2);
+    let reloaded: Vec<SweepShard> =
+        shards.iter().map(|s| decode_shard(&encode_shard(s)).unwrap()).collect();
+    assert_eq!(shard::merge(&reloaded).unwrap(), reference);
+}
+
+#[test]
+fn merge_rejects_incomplete_or_incompatible_sets() {
+    let engine = SimEngine::new();
+    let spec = space();
+    let three = shards_of(&engine, &spec, 3);
+
+    // Gap: shard 1 of 3 missing.
+    let gapped = vec![three[0].clone(), three[2].clone()];
+    match shard::merge(&gapped) {
+        Err(ShardError::MissingShards { missing, count }) => {
+            assert_eq!((missing, count), (vec![1], 3));
+        }
+        other => panic!("expected MissingShards, got {other:?}"),
+    }
+
+    // Overlap: shard 0 twice.
+    let dup = vec![three[0].clone(), three[0].clone(), three[1].clone(), three[2].clone()];
+    assert!(matches!(
+        shard::merge(&dup),
+        Err(ShardError::DuplicateShard { index: 0, count: 3 })
+    ));
+
+    // Mixed split widths of the same space: same fingerprint, caught by
+    // the count check.
+    let two = shards_of(&engine, &spec, 2);
+    let mixed = vec![two[0].clone(), three[1].clone(), three[2].clone()];
+    assert!(matches!(shard::merge(&mixed), Err(ShardError::CountMismatch { .. })));
+
+    // A different design space: caught by the fingerprint before anything
+    // else (same shard position, same cell count, different macs axis).
+    let other_spec = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+        .with_axis(Axis::Dataset(vec![
+            WorkloadKey::suite("wv", 7, 64),
+            WorkloadKey::suite("fb", 7, 64),
+        ]))
+        .with_axis(Axis::macs_per_pe(vec![2, 4, 16]))
+        .with_cell_model(CellModel::Both);
+    let foreign = engine.sweep_shard(&other_spec, ShardSpec::new(1, 3).unwrap()).unwrap();
+    let crossed = vec![three[0].clone(), foreign, three[2].clone()];
+    assert!(matches!(
+        shard::merge(&crossed),
+        Err(ShardError::FingerprintMismatch { .. })
+    ));
+
+    // A tampered range (fields are public): all indices present, but the
+    // cells no longer tile the grid.
+    let mut tampered = shards_of(&engine, &spec, 2);
+    tampered[1].start += 1;
+    assert!(matches!(
+        shard::merge(&tampered),
+        Err(ShardError::RangeMismatch { index: 1, .. })
+    ));
+
+    // Profile chunking must agree across shards (checksum bits depend on
+    // it), even though it is not part of the space fingerprint.
+    let chunked_engine = SimEngine::new().with_profile_threads(4);
+    let mut mixed_chunks = shards_of(&engine, &spec, 2);
+    mixed_chunks[1] =
+        chunked_engine.sweep_shard(&spec, ShardSpec::new(1, 2).unwrap()).unwrap();
+    assert!(matches!(
+        shard::merge(&mixed_chunks),
+        Err(ShardError::Incompatible(_))
+    ));
+}
+
+#[test]
+fn shard_dir_round_trip_and_loud_failures() {
+    let dir = std::env::temp_dir().join(format!("maple-shard-dir-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let engine = SimEngine::new();
+    let spec = space();
+    let shards = shards_of(&engine, &spec, 2);
+    for s in &shards {
+        let path = s.write_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), s.file_name());
+    }
+    // Foreign non-shard files and stale old-codec-version artifacts are
+    // ignored by discovery — a codec bump starts cold next to old files.
+    std::fs::write(dir.join("notes.txt"), b"not a shard").unwrap();
+    std::fs::write(dir.join("shard-0000-of-0002.v0.mshd"), b"stale codec version").unwrap();
+    let loaded = shard::read_dir(&dir).unwrap();
+    assert_eq!(loaded, shards);
+    assert_eq!(shard::merge(&loaded).unwrap(), engine.sweep(&spec).unwrap());
+
+    // Re-running a shard overwrites its own artifact (same canonical name).
+    shards[0].write_to(&dir).unwrap();
+    assert_eq!(shard::read_dir(&dir).unwrap().len(), 2);
+
+    // A corrupt artifact is a hard error, not a silent skip.
+    let victim = dir.join(shards[1].file_name());
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&victim, &bytes).unwrap();
+    assert!(matches!(shard::read_dir(&dir), Err(ShardError::Artifact { .. })));
+
+    // An empty directory has no shards to merge.
+    let empty = dir.join("empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    assert!(matches!(shard::read_dir(&empty), Err(ShardError::NoShards(_))));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharding_profiles_only_touched_datasets() {
+    // 6 cells over (wv, fb): shard 0/2 covers cells 0..3 — all of wv plus
+    // none of fb's range would be wrong; the boundary is inside wv×macs
+    // only when counts align. With 3 macs points per dataset, cells 0..3
+    // are exactly dataset wv; the shard must not profile fb at all.
+    let engine = SimEngine::new();
+    let spec = space();
+    let s0 = engine.sweep_shard(&spec, ShardSpec::new(0, 2).unwrap()).unwrap();
+    assert_eq!(s0.range(), 0..3);
+    assert_eq!(engine.profiles_run(), 1, "shard 0 must profile only wv");
+    let s1 = engine.sweep_shard(&spec, ShardSpec::new(1, 2).unwrap()).unwrap();
+    assert_eq!(s1.range(), 3..6);
+    assert_eq!(engine.profiles_run(), 2, "shard 1 adds only fb");
+    // Meta reflects the per-shard deltas.
+    assert_eq!(s0.meta.profiles_run, 1);
+    assert_eq!(s1.meta.profiles_run, 1);
+    assert_eq!(s0.meta.profile_threads, 1);
+}
