@@ -5,12 +5,13 @@
 #   make bench          all harness-less benches, release mode
 #   make sweep-noc      topology × MACs design-space sweep on the wv workload
 #   make sweep-sharded  2-way sharded sweep + merge, diffed vs the unsharded run
+#   make explore        guided search vs the exhaustive grid + estval gate
 #   make artifacts      AOT-lower the Pallas kernel to HLO text (needs jax)
 
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify fmt clippy test bench sweep-noc sweep-sharded artifacts
+.PHONY: verify fmt clippy test bench sweep-noc sweep-sharded explore artifacts
 
 verify: fmt clippy test
 
@@ -52,6 +53,21 @@ sweep-sharded:
 	        --axis macs=2,4 --csv > target/sweep-unsharded.csv && \
 	diff target/sweep-merged.csv target/sweep-unsharded.csv && \
 	echo "sharded run == unsharded run"
+
+# Search-driven design-space exploration: validate the sampled profiler
+# against the exact pass (estval exits non-zero outside the agreement
+# band), then run the two-tier (μ+λ) search over the macs × prefetch ×
+# noc × policy cube and cross-check it against the exhaustive grid argmin
+# (non-zero exit if the search leaves the band; BENCH_explore.json is
+# written either way).
+explore:
+	cd $(RUST_DIR) && $(CARGO) run --release -- estval --datasets wv,fb --budget 64 && \
+	$(CARGO) run --release -- explore --datasets wv,fb --scale 64 \
+	        --axis macs=1,2,3,4,6,8,12,16,24,32,48,64 \
+	        --axis prefetch=1,2,3,4,6,8,12,16,24,32 \
+	        --axis noc=crossbar:2,crossbar:4,crossbar:8,crossbar:16,crossbar:32,crossbar:64,mesh:2x2,mesh:4x2,mesh:4x4,mesh:8x4,mesh:8x8,mesh:16x8 \
+	        --policy round-robin,chunked,greedy \
+	        --budget 32 --exhaustive --bench-json ../BENCH_explore.json
 
 # Skips the rebuild when the artifacts are newer than the Python sources.
 artifacts: artifacts/maple_pe.hlo.txt

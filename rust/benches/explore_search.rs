@@ -1,0 +1,106 @@
+//! Bench: the two-tier explorer against the exhaustive sweep it replaces —
+//! the sampled-profiler speedup over the exact pass, and the search's
+//! evaluation count / wall-clock as a fraction of the full grid.
+//!
+//! ```text
+//! cargo bench --bench explore_search
+//! ```
+
+include!("harness.rs");
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::sim::{
+    check_against_exhaustive, profile_workload, profile_workload_sampled, Axis, DesignSpace,
+    ExploreSpec, Explorer, Tier, WorkloadKey,
+};
+
+fn main() {
+    let scale = bench_scale();
+    let spec = maple::sparse::suite::by_name("wv").unwrap();
+    let a = spec.generate_scaled(7, scale);
+    let exact = profile_workload(&a, &a);
+    println!(
+        "workload: wikiVote/{scale} — {}x{}, {} nnz, {} products\n",
+        a.rows(),
+        a.cols(),
+        a.nnz(),
+        exact.total_products
+    );
+
+    // 1. Fitness-tier cost: exact profile pass vs the sampled estimator.
+    let (iters, total) = measure(std::time::Duration::from_secs(1), || {
+        std::hint::black_box(profile_workload(&a, &a).total_products);
+    });
+    report_line("profile_workload (exact)", iters, total, Some((exact.total_products, "products")));
+    let exact_per_iter = total.as_secs_f64() / iters.max(1) as f64;
+    for budget in [64usize, 256] {
+        let est = profile_workload_sampled(&a, &a, budget, 7);
+        let (iters, total) = measure(std::time::Duration::from_millis(500), || {
+            std::hint::black_box(profile_workload_sampled(&a, &a, budget, 7).workload.out_nnz);
+        });
+        let label = format!("profile_workload_sampled[{budget}]");
+        report_line(&label, iters, total, Some((exact.total_products, "products")));
+        let per_iter = total.as_secs_f64() / iters.max(1) as f64;
+        let err = (est.workload.out_nnz as f64 - exact.out_nnz as f64).abs()
+            / exact.out_nnz.max(1) as f64;
+        println!(
+            "    speedup {:>6.1}x   out-nnz err {:>6.3}% (claimed ≤ {:.3}%)",
+            exact_per_iter / per_iter.max(1e-12),
+            err * 1e2,
+            est.out_nnz_rel_err * 1e2
+        );
+    }
+
+    // 2. Search vs exhaustive grid over the macs × prefetch × policy cube.
+    let engine = bench_engine();
+    let space = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+        .with_axis(Axis::Dataset(vec![
+            WorkloadKey::suite("wv", 7, scale),
+            WorkloadKey::suite("fb", 7, scale),
+        ]))
+        .with_axis(Axis::macs_per_pe(vec![1, 2, 4, 8, 16, 32]))
+        .with_axis(Axis::prefetch_depth(vec![1, 2, 4, 8]))
+        .with_axis(Axis::Policy(vec![
+            Policy::RoundRobin,
+            Policy::Chunked,
+            Policy::GreedyBalance,
+        ]));
+    let explore_spec =
+        ExploreSpec { tier: Tier::TwoTier, budget: 48, sample_budget: 128, ..Default::default() };
+
+    let t0 = std::time::Instant::now();
+    let result = Explorer::new(&engine, space.clone(), explore_spec).run().unwrap();
+    let search_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = std::time::Instant::now();
+    let grid = engine.sweep(&space).unwrap();
+    let sweep_ms = t1.elapsed().as_secs_f64() * 1e3;
+    let check = check_against_exhaustive(&result, &grid, t1.elapsed().as_millis() as u64);
+
+    println!();
+    println!(
+        "explore: {} fresh evals ({} est + {} exact) over {} cells = {:.2}% of the grid",
+        result.evals_total(),
+        result.evals_estimate(),
+        result.evals_exact(),
+        result.grid_cells,
+        result.eval_fraction() * 1e2
+    );
+    println!(
+        "explore: search {search_ms:.0} ms vs sweep {sweep_ms:.0} ms ({:.1}x), in-band {}/{}",
+        sweep_ms / search_ms.max(1e-9),
+        check.per_dataset.iter().filter(|d| d.in_band).count(),
+        check.per_dataset.len()
+    );
+    for best in &check.per_dataset {
+        println!(
+            "explore[{}]: search {:.0} vs optimum {:.0} cycles, argmin_match={}, in_band={}",
+            best.dataset,
+            best.search_fitness,
+            best.best_fitness,
+            best.argmin_match,
+            best.in_band
+        );
+    }
+    report_cache_line(&engine);
+}

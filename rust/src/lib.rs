@@ -100,7 +100,8 @@ pub mod prelude {
     pub use crate::noc::Topology;
     pub use crate::sim::{
         simulate_spmspm, Axis, CellModel, CellResult, DesResult, DesignSpace, DiskCache,
-        ShardSpec, SimEngine, SimResult, SweepResult, SweepShard, SweepSpec, WorkloadKey,
+        ExploreResult, ExploreSpec, Explorer, Objective, ShardSpec, SimEngine, SimResult,
+        Strategy, SweepResult, SweepShard, SweepSpec, Tier, WorkloadKey,
     };
     pub use crate::sparse::{Coo, Csc, Csr};
 }

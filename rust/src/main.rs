@@ -26,10 +26,11 @@ use maple::config::{axis, AcceleratorConfig, ConfigAxis};
 use maple::coordinator::Policy;
 use maple::report;
 use maple::sim::{
-    shard, Axis, CellModel, DesignSpace, DiskCache, ShardSpec, SimEngine, SweepResult,
-    WorkloadKey,
+    check_against_exhaustive, explore, profile_workload, profile_workload_sampled, shard,
+    simulate_workload, Axis, CellModel, DesignSpace, DiskCache, ExploreSpec, Explorer,
+    Objective, ShardSpec, SimEngine, Strategy, SweepResult, Tier, WorkloadKey, ESTIMATE_BAND,
 };
-use maple::sparse::suite;
+use maple::sparse::{stats, suite};
 
 /// Dependency-free CLI error type.
 type CliError = Box<dyn std::error::Error>;
@@ -122,6 +123,26 @@ COMMANDS:
            computes only that contiguous slice of the cell grid and writes
            it to --out as a shard artifact; --fingerprint prints the
            design-space fingerprint (what merge validates) and exits.
+  explore [same space flags as sweep] [--objective cycles|energy|edp]
+           [--strategy hill|es|es:MU+LAMBDA] [--tier exact|estimate|two-tier]
+           [--budget N] [--elite N] [--sample-budget N] [--search-seed S]
+           [--exhaustive] [--bench-json <path>]
+           Search the design space instead of sweeping it: hill-climb or a
+           (mu+lambda) evolution strategy over the same grid the sweep
+           enumerates, one search per dataset. The default two-tier
+           evaluator scores candidates against the sampled profiler and
+           re-scores the elite front exactly; every evaluation is memoized
+           in the disk cache (warm re-runs cost zero simulations).
+           --exhaustive additionally runs the full sweep and verifies the
+           search landed on the argmin (or inside the estimator band),
+           exiting non-zero otherwise; --bench-json writes
+           BENCH_explore.json (evaluations vs grid cells, wall-clock).
+  estval [--scale N] [--datasets wv,fb,...] [--seed S] [--budget N]
+           Sampled-profiler cross-validation (the estimator analogue of
+           crossval): per dataset, the measured out-nnz error vs the
+           estimator's claimed bound, and the simulated cycle/energy error
+           across the paper configs; exits non-zero if any dataset leaves
+           the agreement band
   merge  <dir> [--pivot <axis>] [--bench-json <path>]
            Merge the shard artifacts in <dir> back into the full sweep
            grid. Validates compatibility (one fingerprint, one shard
@@ -287,18 +308,21 @@ fn render_grid(grid: &SweepResult, pivot: Option<&str>, md: bool) -> CliResult {
     Ok(())
 }
 
-/// The `sweep` command: build the design space from flags/TOML, then run
-/// it whole, run one shard of it (`--shard i/n --out dir`), or just print
-/// its fingerprint (`--fingerprint`).
-fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
-    // Config axes: the [sweep] block of a --config TOML file first, then
-    // every repeatable --axis flag, then the legacy --macs shorthand;
-    // with no axis at all (and a single base config), the historical
-    // default MACs/PE sweep. Presets resolve before the filesystem (same
-    // order as `parse_config`), so only a genuinely loaded file
-    // contributes a [sweep] block. `--config paper` sweeps the four paper
-    // configurations as the base set — the Table-I / Fig.-9 grid — with
-    // no implicit default axis.
+/// Build the design space shared by `sweep` and `explore` from the
+/// `--config`/`--datasets`/`--axis`/`--macs`/`--policy`/`--scale`/`--seed`
+/// flags (one grid definition, two drivers — an explore result is always
+/// checkable against the sweep of the same flags).
+///
+/// Config axes: the [sweep] block of a --config TOML file first, then
+/// every repeatable --axis flag, then the legacy --macs shorthand; with no
+/// axis at all (and a single base config), the historical default MACs/PE
+/// sweep. Presets resolve before the filesystem (same order as
+/// `parse_config`), so only a genuinely loaded file contributes a [sweep]
+/// block. `--config paper` sweeps the four paper configurations as the
+/// base set — the Table-I / Fig.-9 grid — with no implicit default axis.
+/// `--pivot`, when present, is validated against the axis names here so a
+/// typo fails in milliseconds, not after minutes of simulation.
+fn space_from_args(args: &Args) -> CliResult<DesignSpace> {
     let config_arg = args.opt_or("--config", "extensor-maple");
     let (bases, mut axes): (Vec<AcceleratorConfig>, Vec<ConfigAxis>) = if config_arg == "paper" {
         (AcceleratorConfig::paper_configs(), Vec::new())
@@ -335,11 +359,7 @@ fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
     if axes.is_empty() && bases.len() == 1 {
         axes.push(ConfigAxis::parse("macs", "1,2,4,8,16,32")?);
     }
-    // Validate --pivot against the known dimension names *before* the
-    // sweep runs — a typo must fail in milliseconds, not after minutes of
-    // simulation.
-    let pivot = args.opt("--pivot");
-    if let Some(p) = pivot {
+    if let Some(p) = args.opt("--pivot") {
         let mut known = vec!["dataset", "config"];
         known.extend(axes.iter().map(|a| a.name()));
         known.push("policy");
@@ -362,7 +382,15 @@ fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
     for a in axes {
         space = space.with_axis(Axis::Config(a));
     }
-    space = space.with_axis(Axis::Policy(policies));
+    Ok(space.with_axis(Axis::Policy(policies)))
+}
+
+/// The `sweep` command: build the design space from flags/TOML, then run
+/// it whole, run one shard of it (`--shard i/n --out dir`), or just print
+/// its fingerprint (`--fingerprint`).
+fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
+    let space = space_from_args(args)?;
+    let pivot = args.opt("--pivot");
 
     // The space fingerprint alone — what `merge` validates shard sets
     // against — without profiling or simulating anything.
@@ -398,6 +426,119 @@ fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
 
     let grid = engine.sweep(&space)?;
     render_grid(&grid, pivot, !csv)
+}
+
+/// The `explore` command: guided search over the same design space `sweep`
+/// enumerates. Prints the per-dataset search report; `--exhaustive` also
+/// runs the full sweep, prints the argmin comparison, and exits non-zero
+/// if any dataset's search landed outside the estimator agreement band of
+/// the true optimum; `--bench-json` writes BENCH_explore.json.
+fn explore_cmd(args: &Args, csv: bool) -> CliResult {
+    let space = space_from_args(args)?;
+    let seed = args.parse_or("--seed", 7u64)?;
+    let spec = ExploreSpec {
+        objective: args.opt_or("--objective", "cycles").parse::<Objective>()?,
+        strategy: args.opt_or("--strategy", "es").parse::<Strategy>()?,
+        tier: args.opt_or("--tier", "two-tier").parse::<Tier>()?,
+        budget: args.parse_or("--budget", 64usize)?,
+        elite: args.parse_or("--elite", 4usize)?,
+        sample_budget: args.parse_or("--sample-budget", 128usize)?,
+        // The search RNG / sampling seed follows the dataset seed unless
+        // pinned separately (so --seed alone moves the whole experiment).
+        seed: args.parse_or("--search-seed", seed)?,
+    };
+    let mut engine = make_engine(args);
+    if let Some(threads) = args.opt("--threads") {
+        let threads: usize =
+            threads.parse().map_err(|_| format!("bad value for --threads: {threads}"))?;
+        engine = engine.with_threads(threads);
+    }
+    let result = Explorer::new(&engine, space.clone(), spec).run()?;
+    print!("{}", report::explore_report(&result, !csv));
+
+    let check = if args.flag("--exhaustive") {
+        let t = std::time::Instant::now();
+        let grid = engine.sweep(&space)?;
+        let check = check_against_exhaustive(&result, &grid, t.elapsed().as_millis() as u64);
+        println!();
+        print!("{}", report::exhaustive_check_report(&result, &check));
+        Some(check)
+    } else {
+        None
+    };
+    if let Some(path) = args.opt("--bench-json") {
+        std::fs::write(path, report::bench_explore_json(&result, check.as_ref()))
+            .map_err(|e| format!("cannot write {path}: {e}"))?;
+        eprintln!("bench: wrote {path}");
+    }
+    if let Some(c) = &check {
+        if !c.all_in_band() {
+            return Err("explore landed outside the estimator agreement band of the \
+                        exhaustive optimum"
+                .into());
+        }
+    }
+    Ok(())
+}
+
+/// The `estval` command: cross-validate the sampled profiler against the
+/// exact one (the estimator analogue of `crossval`). Two gates per
+/// dataset: the measured out-nnz error must not exceed the estimator's own
+/// claimed bound, and replaying the estimated workload through the four
+/// paper configs must keep cycles and energy inside the agreement band.
+fn estval_cmd(args: &Args, csv: bool) -> CliResult {
+    let scale = args.parse_or("--scale", 16usize)?;
+    let seed = args.parse_or("--seed", 7u64)?;
+    let budget = args.parse_or("--budget", 64usize)?;
+    let names = dataset_names(args.opt("--datasets"))?;
+    let mut rows = Vec::with_capacity(names.len());
+    for name in names {
+        let key = WorkloadKey::suite(name, seed, scale);
+        let a = explore::suite_matrix(&key)?;
+        let exact = profile_workload(&a, &a);
+        let est = profile_workload_sampled(&a, &a, budget, seed);
+        let summary = stats::row_nnz_summary(&a);
+        let rel = |est_v: f64, exact_v: f64| (est_v - exact_v).abs() / exact_v.abs().max(1.0);
+        let measured_rel_err = rel(est.workload.out_nnz as f64, exact.out_nnz as f64);
+        let (mut max_cycle_err, mut max_energy_err) = (0f64, 0f64);
+        for cfg in AcceleratorConfig::paper_configs() {
+            let re = simulate_workload(&cfg, &exact, Policy::RoundRobin);
+            let rs = simulate_workload(&cfg, &est.workload, Policy::RoundRobin);
+            max_cycle_err =
+                max_cycle_err.max(rel(rs.cycles_compute as f64, re.cycles_compute as f64));
+            max_energy_err =
+                max_energy_err.max(rel(rs.energy.total_pj(), re.energy.total_pj()));
+        }
+        let in_band = measured_rel_err <= est.out_nnz_rel_err + 1e-12
+            && max_cycle_err <= ESTIMATE_BAND
+            && max_energy_err <= ESTIMATE_BAND;
+        rows.push(report::EstvalRow {
+            dataset: name.to_string(),
+            rows: exact.rows,
+            nnz: exact.nnz_a as usize,
+            cv: summary.cv,
+            heavy_share: summary.heavy_share,
+            sampled_rows: est.sampled_rows,
+            exact_out: exact.out_nnz,
+            est_out: est.workload.out_nnz,
+            measured_rel_err,
+            claimed_rel_err: est.out_nnz_rel_err,
+            max_cycle_err,
+            max_energy_err,
+            in_band,
+        });
+    }
+    print!("{}", report::estval_report(&rows, budget, !csv));
+    let violations: Vec<&str> =
+        rows.iter().filter(|r| !r.in_band).map(|r| r.dataset.as_str()).collect();
+    if !violations.is_empty() {
+        return Err(format!(
+            "sampled-profiler agreement violated in: {}",
+            violations.join(", ")
+        )
+        .into());
+    }
+    Ok(())
 }
 
 /// The `merge` command: reassemble a sharded sweep from its artifact
@@ -542,6 +683,8 @@ fn main() -> CliResult {
             }
         }
         "sweep" => sweep_cmd(&args, csv)?,
+        "explore" => explore_cmd(&args, csv)?,
+        "estval" => estval_cmd(&args, csv)?,
         "merge" => merge_cmd(&args, csv)?,
         "crossval" => {
             let scale = args.parse_or("--scale", 16usize)?;
@@ -569,10 +712,82 @@ fn main() -> CliResult {
         "validate" => validate(&args)?,
         "--help" | "-h" | "help" => print!("{USAGE}"),
         other => {
-            eprintln!("unknown command: {other}\n");
+            match closest_command(other) {
+                Some(hint) => eprintln!("unknown command: {other} (did you mean {hint:?}?)\n"),
+                None => eprintln!("unknown command: {other}\n"),
+            }
             eprint!("{USAGE}");
             std::process::exit(2);
         }
     }
     Ok(())
+}
+
+/// Every dispatchable command name, kept in sync with the `main` match (a
+/// unit test walks USAGE against this list).
+const COMMANDS: [&str; 13] = [
+    "datasets", "fig3", "fig8", "fig9", "simulate", "sweep", "explore", "estval", "merge",
+    "crossval", "cache", "config", "validate",
+];
+
+/// The closest known command within a small edit distance — the
+/// "did you mean" hint for typos like `sweeep` or `exlpore`.
+fn closest_command(input: &str) -> Option<&'static str> {
+    COMMANDS
+        .iter()
+        .map(|&c| (levenshtein(input, c), c))
+        .filter(|&(d, _)| d <= 2)
+        .min_by_key(|&(d, _)| d)
+        .map(|(_, c)| c)
+}
+
+/// Plain O(n·m) Levenshtein distance (two-row rolling buffer).
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_lists_every_command() {
+        for cmd in COMMANDS {
+            assert!(
+                USAGE.lines().any(|l| {
+                    let t = l.trim_start();
+                    t == cmd || t.starts_with(&format!("{cmd} "))
+                }),
+                "USAGE is missing the {cmd} command"
+            );
+        }
+    }
+
+    #[test]
+    fn typos_get_a_hint() {
+        assert_eq!(closest_command("sweeep"), Some("sweep"));
+        assert_eq!(closest_command("exploer"), Some("explore"));
+        assert_eq!(closest_command("estvall"), Some("estval"));
+        assert_eq!(closest_command("corssval"), Some("crossval"));
+        assert_eq!(closest_command("zzzzzz"), None);
+    }
+
+    #[test]
+    fn levenshtein_basics() {
+        assert_eq!(levenshtein("", "abc"), 3);
+        assert_eq!(levenshtein("abc", "abc"), 0);
+        assert_eq!(levenshtein("kitten", "sitting"), 3);
+    }
 }

@@ -4,7 +4,7 @@
 use crate::accel::fig8;
 use crate::config::AcceleratorConfig;
 use crate::energy::TechModel;
-use crate::sim::{CacheStats, SimResult, SweepResult, SweepShard};
+use crate::sim::{CacheStats, ExhaustiveCheck, ExploreResult, SimResult, SweepResult, SweepShard};
 use crate::sparse::suite::TABLE_I;
 
 /// Render a markdown table.
@@ -94,6 +94,7 @@ pub fn cache_stats_report(stats: &CacheStats, markdown: bool) -> String {
         vec!["cache dir".into(), stats.dir.display().to_string()],
         vec!["workload artifacts (current codec)".into(), stats.workloads.to_string()],
         vec!["matrix artifacts (current codec)".into(), stats.matrices.to_string()],
+        vec!["eval journals (current codec)".into(), stats.evals.to_string()],
         vec!["stale / foreign files".into(), stats.stale.to_string()],
         vec!["total bytes".into(), stats.bytes.to_string()],
     ];
@@ -363,6 +364,231 @@ pub fn bench_sweep_json(shards: &[SweepShard], grid: &SweepResult) -> String {
     s
 }
 
+/// The `maple explore` report: one row per dataset search — sub-grid size,
+/// the best point's axis coordinates and fitness, the fresh-simulation
+/// counts per tier, and the memo/journal hit split — followed by each
+/// dataset's best-so-far trajectory and the evaluations-vs-grid headline.
+pub fn explore_report(result: &ExploreResult, markdown: bool) -> String {
+    let mut s = format!(
+        "explore: objective={} strategy={} tier={} budget={}/dataset grid={} cells \
+         (fingerprint {:016x})\n\n",
+        result.objective,
+        result.strategy,
+        result.tier,
+        result.budget,
+        result.grid_cells,
+        result.fingerprint
+    );
+    let header = [
+        "Dataset", "Cells", "Best point", "Fitness", "Est fitness", "Exact", "Est", "Memo",
+        "Journal", "ms",
+    ];
+    let rows: Vec<Vec<String>> = result
+        .searches
+        .iter()
+        .map(|d| {
+            // Dataset is the row label; the remaining coordinates are the
+            // design point.
+            let point: Vec<String> = d.best_coords[1..]
+                .iter()
+                .map(|c| format!("{}={}", c.axis, c.label))
+                .collect();
+            vec![
+                d.dataset.clone(),
+                d.cells.to_string(),
+                point.join(" "),
+                format!("{:.1}", d.best_fitness),
+                d.estimate_fitness.map_or("-".into(), |f| format!("{f:.1}")),
+                d.evals_exact.to_string(),
+                d.evals_estimate.to_string(),
+                d.memo_hits.to_string(),
+                d.journal_hits.to_string(),
+                d.wall_ms.to_string(),
+            ]
+        })
+        .collect();
+    s.push_str(&if markdown { markdown_table(&header, &rows) } else { csv(&header, &rows) });
+    for d in &result.searches {
+        let steps: Vec<String> =
+            d.trajectory.iter().map(|t| format!("{}:{:.1}", t.calls, t.fitness)).collect();
+        s.push_str(&format!(
+            "\n{} trajectory (calls:fitness): {}\n",
+            d.dataset,
+            steps.join(" → ")
+        ));
+    }
+    s.push_str(&format!(
+        "\nfresh evaluations: {} ({} exact + {} estimate) vs {} grid cells = {:.2}% of \
+         exhaustive\n",
+        result.evals_total(),
+        result.evals_exact(),
+        result.evals_estimate(),
+        result.grid_cells,
+        100.0 * result.eval_fraction()
+    ));
+    s
+}
+
+/// The `maple explore --exhaustive` verdict: per dataset, the search's best
+/// point against the full-grid argmin, and whether it matched outright or
+/// landed inside the estimator agreement band.
+pub fn exhaustive_check_report(result: &ExploreResult, check: &ExhaustiveCheck) -> String {
+    let mut s = String::new();
+    for d in &check.per_dataset {
+        let verdict = if d.argmin_match {
+            "match=argmin"
+        } else if d.in_band {
+            "match=in-band"
+        } else {
+            "match=OUT-OF-BAND"
+        };
+        s.push_str(&format!(
+            "{}: search {:.1} vs optimum {:.1} (cell {}) {}\n",
+            d.dataset, d.search_fitness, d.best_fitness, d.best_index, verdict
+        ));
+    }
+    let evals = result.evals_total().max(1);
+    s.push_str(&format!(
+        "exhaustive: {} cells in {} ms; search: {} fresh evals in {} ms — {:.0}x fewer \
+         evaluations\n",
+        check.cells,
+        check.wall_ms,
+        result.evals_total(),
+        result.wall_ms,
+        check.cells as f64 / evals as f64
+    ));
+    s
+}
+
+/// One dataset's row of the `maple estval` gate: the sampled profiler's
+/// measured error against the exact profile, the bound it claimed, and the
+/// row-nnz shape statistics the stratification responds to.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstvalRow {
+    pub dataset: String,
+    pub rows: usize,
+    pub nnz: usize,
+    /// Row-nnz coefficient of variation ([`crate::sparse::stats::RowNnzSummary`]).
+    pub cv: f64,
+    /// Heavy-row (> 2× mean nnz) share of all nonzeros.
+    pub heavy_share: f64,
+    pub sampled_rows: usize,
+    pub exact_out: u64,
+    pub est_out: u64,
+    /// |est − exact| / exact for `out_nnz`.
+    pub measured_rel_err: f64,
+    /// The estimator's own claimed bound ([`crate::sim::WorkloadEstimate`]).
+    pub claimed_rel_err: f64,
+    /// Worst relative cycle error across the paper configs.
+    pub max_cycle_err: f64,
+    /// Worst relative energy error across the paper configs.
+    pub max_energy_err: f64,
+    /// All gates hold: measured ≤ claimed, and simulated cycles/energy
+    /// within the agreement band.
+    pub in_band: bool,
+}
+
+/// The `maple estval` cross-validation table (the sampled-profiler analogue
+/// of [`des_validation_report`]).
+pub fn estval_report(rows: &[EstvalRow], budget: usize, markdown: bool) -> String {
+    let header = [
+        "Dataset", "Rows", "Sampled", "CV", "Heavy %", "Exact out", "Est out", "Err %",
+        "Claimed %", "Cycle err %", "Energy err %", "In band",
+    ];
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.dataset.clone(),
+                r.rows.to_string(),
+                r.sampled_rows.to_string(),
+                format!("{:.2}", r.cv),
+                format!("{:.1}", 100.0 * r.heavy_share),
+                r.exact_out.to_string(),
+                r.est_out.to_string(),
+                format!("{:.2}", 100.0 * r.measured_rel_err),
+                format!("{:.2}", 100.0 * r.claimed_rel_err),
+                format!("{:.2}", 100.0 * r.max_cycle_err),
+                format!("{:.2}", 100.0 * r.max_energy_err),
+                if r.in_band { "yes" } else { "NO" }.to_string(),
+            ]
+        })
+        .collect();
+    let in_band = rows.iter().filter(|r| r.in_band).count();
+    let mut s = if markdown { markdown_table(&header, &body) } else { csv(&header, &body) };
+    s.push_str(&format!(
+        "\nestimator agreement: {in_band}/{} datasets in band at budget {budget} \
+         (band ±{:.0}%, measured ≤ claimed)\n",
+        rows.len(),
+        100.0 * crate::sim::ESTIMATE_BAND
+    ));
+    s
+}
+
+/// The machine-readable explore benchmark (`BENCH_explore.json`): the
+/// search's fresh-evaluation counts and wall-clock, per-dataset best
+/// points, and — when the exhaustive sweep ran — the measured reduction
+/// factor. Hand-rolled JSON like [`bench_sweep_json`].
+pub fn bench_explore_json(result: &ExploreResult, check: Option<&ExhaustiveCheck>) -> String {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"explore\",\n");
+    s.push_str(&format!("  \"objective\": \"{}\",\n", result.objective));
+    s.push_str(&format!("  \"strategy\": \"{}\",\n", result.strategy));
+    s.push_str(&format!("  \"tier\": \"{}\",\n", result.tier));
+    s.push_str(&format!("  \"budget_per_dataset\": {},\n", result.budget));
+    s.push_str(&format!("  \"fingerprint\": \"{:016x}\",\n", result.fingerprint));
+    s.push_str(&format!("  \"grid_cells\": {},\n", result.grid_cells));
+    s.push_str(&format!("  \"evals_exact\": {},\n", result.evals_exact()));
+    s.push_str(&format!("  \"evals_estimate\": {},\n", result.evals_estimate()));
+    s.push_str(&format!("  \"evals_total\": {},\n", result.evals_total()));
+    s.push_str(&format!("  \"eval_fraction\": {:.6},\n", result.eval_fraction()));
+    s.push_str(&format!("  \"memo_hits\": {},\n", result.memo_hits()));
+    s.push_str(&format!("  \"journal_hits\": {},\n", result.journal_hits()));
+    s.push_str(&format!("  \"wall_ms\": {},\n", result.wall_ms));
+    s.push_str("  \"datasets\": [\n");
+    for (i, d) in result.searches.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"cells\": {}, \"best_index\": {}, \"fitness\": {:.3}, \
+             \"evals_exact\": {}, \"evals_estimate\": {}, \"memo_hits\": {}, \
+             \"journal_hits\": {}, \"wall_ms\": {}}}{}\n",
+            d.dataset,
+            d.cells,
+            d.best_index,
+            d.best_fitness,
+            d.evals_exact,
+            d.evals_estimate,
+            d.memo_hits,
+            d.journal_hits,
+            if i + 1 < result.searches.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]");
+    match check {
+        Some(c) => {
+            s.push_str(",\n  \"exhaustive\": {\n");
+            s.push_str(&format!("    \"cells\": {},\n", c.cells));
+            s.push_str(&format!("    \"wall_ms\": {},\n", c.wall_ms));
+            s.push_str(&format!(
+                "    \"eval_reduction\": {:.1},\n",
+                c.cells as f64 / result.evals_total().max(1) as f64
+            ));
+            s.push_str(&format!(
+                "    \"wall_clock_speedup\": {:.1},\n",
+                c.wall_ms as f64 / result.wall_ms.max(1) as f64
+            ));
+            s.push_str(&format!("    \"all_in_band\": {},\n", c.all_in_band()));
+            s.push_str(&format!(
+                "    \"argmin_matches\": {}\n",
+                c.per_dataset.iter().filter(|d| d.argmin_match).count()
+            ));
+            s.push_str("  }\n");
+        }
+        None => s.push('\n'),
+    }
+    s.push_str("}\n");
+    s
+}
+
 /// Fig. 9 report over a set of dataset rows, with the paper-style mean.
 pub fn fig9_report(title: &str, rows: &[Fig9Row], markdown: bool) -> String {
     let header = ["Dataset", "Energy benefit %", "Speedup %"];
@@ -421,15 +647,16 @@ mod tests {
             dir: std::path::PathBuf::from("/tmp/maple-cache"),
             workloads: 14,
             matrices: 2,
+            evals: 3,
             stale: 1,
             bytes: 4096,
         };
         let md = cache_stats_report(&stats, true);
-        for needle in ["/tmp/maple-cache", "workload artifacts", "14", "4096"] {
+        for needle in ["/tmp/maple-cache", "workload artifacts", "eval journals", "14", "4096"] {
             assert!(md.contains(needle), "missing {needle} in:\n{md}");
         }
         let c = cache_stats_report(&stats, false);
-        assert!(c.lines().count() == 6 && c.starts_with("Metric,Value"));
+        assert!(c.lines().count() == 7 && c.starts_with("Metric,Value"));
     }
 
     #[test]

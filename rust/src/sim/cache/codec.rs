@@ -1,8 +1,10 @@
 //! Versioned, checksummed binary codec for cache artifacts.
 //!
-//! Three artifact kinds share one envelope: a CSR matrix, a profiled
-//! [`Workload`], and a sweep shard ([`crate::sim::shard::SweepShard`] —
-//! one contiguous cell range of a design-space grid plus its metadata).
+//! Four artifact kinds share one envelope: a CSR matrix, a profiled
+//! [`Workload`], a sweep shard ([`crate::sim::shard::SweepShard`] — one
+//! contiguous cell range of a design-space grid plus its metadata), and an
+//! explore eval journal ([`crate::sim::explore::EvalJournal`] — memoized
+//! search fitness evaluations keyed by design-space fingerprint).
 //! Everything is hand-rolled on `std` like the rest of the
 //! crate (DESIGN.md §Dependencies) and byte-stable across platforms: all
 //! integers are little-endian, floats are stored as their IEEE-754 bit
@@ -12,7 +14,7 @@
 //!
 //! ```text
 //! offset  size  field
-//! 0       8     magic            (b"MAPLECSR" | b"MAPLEWL\0" | b"MAPLESHD")
+//! 0       8     magic            (b"MAPLECSR" | b"MAPLEWL\0" | b"MAPLESHD" | b"MAPLEEVL")
 //! 8       4     codec version    (u32, == CODEC_VERSION)
 //! 12      8     payload length   (u64, byte count of the payload section)
 //! 20      8     FNV-1a-64        (u64, over the payload bytes)
@@ -40,6 +42,7 @@ use crate::energy::EnergyBreakdown;
 use crate::pe::RowProfile;
 use crate::sim::des::{DesPeStats, DesResult};
 use crate::sim::engine::{coords_for, intern_dim_name, AxisDim, CellModel, CellResult, WorkloadKey};
+use crate::sim::explore::{EvalJournal, EvalRecord, TIER_ESTIMATE};
 use crate::sim::shard::{ShardMeta, ShardSpec, SweepShard};
 use crate::sim::{SimResult, Workload};
 use crate::sparse::Csr;
@@ -55,6 +58,7 @@ pub const CODEC_VERSION: u32 = 1;
 const MAGIC_CSR: [u8; 8] = *b"MAPLECSR";
 const MAGIC_WORKLOAD: [u8; 8] = *b"MAPLEWL\0";
 const MAGIC_SHARD: [u8; 8] = *b"MAPLESHD";
+const MAGIC_EVALS: [u8; 8] = *b"MAPLEEVL";
 const HEADER_LEN: usize = 28;
 
 /// Codec errors. Every variant means "do not trust this artifact".
@@ -291,6 +295,61 @@ pub fn encode_shard(s: &SweepShard) -> Vec<u8> {
         }
     }
     seal(MAGIC_SHARD, &p)
+}
+
+/// Encode an explore eval journal ([`crate::sim::explore::EvalJournal`]):
+/// the design-space fingerprint + evaluator-tier key, then one 24-byte
+/// record per evaluated flat grid index. `BTreeMap` iteration makes the
+/// encoding canonical — equal journals are byte-identical artifacts.
+pub fn encode_evals(j: &EvalJournal) -> Vec<u8> {
+    let mut p = Vec::with_capacity(33 + j.entries.len() * 24);
+    put_u64(&mut p, j.fingerprint);
+    p.push(j.tier);
+    put_u64(&mut p, j.sample_budget);
+    put_u64(&mut p, j.sample_seed);
+    put_u64(&mut p, j.entries.len() as u64);
+    for (&idx, rec) in &j.entries {
+        put_u64(&mut p, idx);
+        put_u64(&mut p, rec.cycles);
+        put_f64(&mut p, rec.energy_pj);
+    }
+    seal(MAGIC_EVALS, &p)
+}
+
+/// Decode an eval journal, rejecting unknown tiers, out-of-order or
+/// duplicate indices, and non-finite energies.
+pub fn decode_evals(bytes: &[u8]) -> Result<EvalJournal, CodecError> {
+    let mut r = open(MAGIC_EVALS, bytes)?;
+    let fingerprint = r.u64()?;
+    let tier = r.byte()?;
+    if tier > TIER_ESTIMATE {
+        return Err(CodecError::Inconsistent(format!("unknown eval tier {tier}")));
+    }
+    let sample_budget = r.u64()?;
+    let sample_seed = r.u64()?;
+    let n = r.index()?;
+    r.expect_items(n, 24)?;
+    let mut entries = std::collections::BTreeMap::new();
+    let mut last: Option<u64> = None;
+    for _ in 0..n {
+        let idx = r.u64()?;
+        if last.is_some_and(|l| idx <= l) {
+            return Err(CodecError::Inconsistent(format!(
+                "eval indices not strictly increasing at {idx}"
+            )));
+        }
+        last = Some(idx);
+        let cycles = r.u64()?;
+        let energy_pj = r.f64()?;
+        if !energy_pj.is_finite() {
+            return Err(CodecError::Inconsistent(format!(
+                "non-finite energy for eval index {idx}"
+            )));
+        }
+        entries.insert(idx, EvalRecord { cycles, energy_pj });
+    }
+    r.done()?;
+    Ok(EvalJournal { fingerprint, tier, sample_budget, sample_seed, entries })
 }
 
 // ---------------------------------------------------------------- decoding
@@ -783,6 +842,54 @@ mod tests {
             decode_shard(&encode_shard(&s)),
             Err(CodecError::Inconsistent(_))
         ));
+    }
+
+    fn sample_journal() -> EvalJournal {
+        let mut entries = std::collections::BTreeMap::new();
+        entries.insert(3u64, EvalRecord { cycles: 120, energy_pj: 4.5 });
+        entries.insert(17u64, EvalRecord { cycles: 90, energy_pj: 6.25 });
+        entries.insert(200u64, EvalRecord { cycles: 77, energy_pj: 1.0 });
+        EvalJournal {
+            fingerprint: 0xDEAD_BEEF,
+            tier: TIER_ESTIMATE,
+            sample_budget: 128,
+            sample_seed: 7,
+            entries,
+        }
+    }
+
+    #[test]
+    fn evals_round_trip_bit_exact() {
+        let j = sample_journal();
+        let d = decode_evals(&encode_evals(&j)).unwrap();
+        assert_eq!(d, j);
+        // Canonical encoding: re-encode is byte-identical.
+        assert_eq!(encode_evals(&d), encode_evals(&j));
+        // Empty journals are valid artifacts too.
+        let empty = EvalJournal::empty(9, 0, 0, 0);
+        assert_eq!(decode_evals(&encode_evals(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn evals_structural_lies_are_rejected() {
+        // Unknown tier.
+        let mut j = sample_journal();
+        j.tier = 9;
+        assert!(matches!(decode_evals(&encode_evals(&j)), Err(CodecError::Inconsistent(_))));
+        // Non-finite energy.
+        let mut j = sample_journal();
+        j.entries.insert(5, EvalRecord { cycles: 1, energy_pj: f64::NAN });
+        assert!(matches!(decode_evals(&encode_evals(&j)), Err(CodecError::Inconsistent(_))));
+        // Wrong magic.
+        assert!(matches!(
+            decode_evals(&encode_workload(&sample_workload())),
+            Err(CodecError::BadMagic)
+        ));
+        // Truncations.
+        let bytes = encode_evals(&sample_journal());
+        for cut in [0, 10, 28, bytes.len() - 1] {
+            assert!(decode_evals(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
     }
 
     #[test]

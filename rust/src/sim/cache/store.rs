@@ -1,7 +1,8 @@
 //! The on-disk artifact store: [`WorkloadKey`] → cache file.
 //!
 //! A [`DiskCache`] owns one flat directory of codec-sealed artifacts
-//! (workloads `.mwl`, matrices `.mcsr`). File names encode the full cache
+//! (workloads `.mwl`, matrices `.mcsr`, explore eval journals `.mevl`).
+//! File names encode the full cache
 //! key — sanitized dataset name, seed, scale divisor, profile chunk count,
 //! an FNV-1a of the raw dataset name (collision-proofing the sanitization),
 //! and the codec version:
@@ -33,6 +34,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::codec::{self, CODEC_VERSION};
 use crate::sim::engine::WorkloadKey;
+use crate::sim::explore::EvalJournal;
 use crate::sim::Workload;
 use crate::sparse::Csr;
 
@@ -41,6 +43,7 @@ pub const CACHE_DIR_ENV: &str = "MAPLE_CACHE_DIR";
 
 const WORKLOAD_EXT: &str = "mwl";
 const MATRIX_EXT: &str = "mcsr";
+const EVALS_EXT: &str = "mevl";
 
 /// Distinguishes racing writers within one process; the pid handles racing
 /// processes.
@@ -60,6 +63,8 @@ pub struct CacheStats {
     pub workloads: usize,
     /// Matrix artifacts at the current codec version.
     pub matrices: usize,
+    /// Explore eval-journal artifacts at the current codec version.
+    pub evals: usize,
     /// Old-version artifacts, orphaned temp files, foreign files.
     pub stale: usize,
     /// Total bytes across all files in the directory.
@@ -164,6 +169,64 @@ impl DiskCache {
         self.persist(&self.matrix_path(name), &codec::encode_csr(a))
     }
 
+    /// The artifact file for one explore eval journal. The full journal key
+    /// — design-space fingerprint, evaluator tier, and the estimate tier's
+    /// sampling parameters — is in the name, so a different space or a
+    /// different fitness parameterisation never aliases.
+    pub fn evals_path(
+        &self,
+        fingerprint: u64,
+        tier: u8,
+        sample_budget: u64,
+        sample_seed: u64,
+    ) -> PathBuf {
+        self.dir.join(format!(
+            "evals-{:016x}-t{}-b{}-s{}.v{}.{}",
+            fingerprint,
+            tier,
+            sample_budget,
+            sample_seed,
+            CODEC_VERSION,
+            EVALS_EXT,
+        ))
+    }
+
+    /// Load a cached eval journal (same miss/eviction contract as
+    /// workloads). A decoded journal whose embedded key disagrees with the
+    /// requested one — a hand-renamed file — is evicted too.
+    pub fn load_evals(
+        &self,
+        fingerprint: u64,
+        tier: u8,
+        sample_budget: u64,
+        sample_seed: u64,
+    ) -> Option<EvalJournal> {
+        let path = self.evals_path(fingerprint, tier, sample_budget, sample_seed);
+        let bytes = fs::read(&path).ok()?;
+        match codec::decode_evals(&bytes) {
+            Ok(j)
+                if j.fingerprint == fingerprint
+                    && j.tier == tier
+                    && j.sample_budget == sample_budget
+                    && j.sample_seed == sample_seed =>
+            {
+                Some(j)
+            }
+            _ => {
+                let _ = fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    /// Persist an eval journal (atomic publish).
+    pub fn store_evals(&self, j: &EvalJournal) -> io::Result<()> {
+        self.persist(
+            &self.evals_path(j.fingerprint, j.tier, j.sample_budget, j.sample_seed),
+            &codec::encode_evals(j),
+        )
+    }
+
     /// Write `bytes` to a unique sibling temp file, then `rename` over the
     /// final path — atomic on POSIX, so readers never observe a torn file.
     fn persist(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
@@ -189,6 +252,7 @@ impl DiskCache {
         let current = format!(".v{CODEC_VERSION}.");
         let workload_suffix = format!(".{WORKLOAD_EXT}");
         let matrix_suffix = format!(".{MATRIX_EXT}");
+        let evals_suffix = format!(".{EVALS_EXT}");
         for e in entries.flatten() {
             let path = e.path();
             if !path.is_file() {
@@ -203,6 +267,8 @@ impl DiskCache {
                 s.workloads += 1;
             } else if name.ends_with(&matrix_suffix) && name.contains(&current) {
                 s.matrices += 1;
+            } else if name.ends_with(&evals_suffix) && name.contains(&current) {
+                s.evals += 1;
             } else {
                 s.stale += 1;
             }
@@ -296,13 +362,35 @@ mod tests {
         let (key, w) = sample();
         cache.store_workload(&key, 1, &w).unwrap();
         cache.store_matrix("m", &generate(10, 10, 20, Profile::Uniform, 1)).unwrap();
+        cache.store_evals(&EvalJournal::empty(1, 0, 0, 0)).unwrap();
         fs::write(cache.dir().join("foreign.bin"), b"junk").unwrap();
         let s = cache.stats();
-        assert_eq!((s.workloads, s.matrices, s.stale), (1, 1, 1));
+        assert_eq!((s.workloads, s.matrices, s.evals, s.stale), (1, 1, 1, 1));
         assert!(s.bytes > 0);
-        assert_eq!(cache.clear().unwrap(), 3);
+        assert_eq!(cache.clear().unwrap(), 4);
         let s = cache.stats();
-        assert_eq!((s.workloads, s.matrices, s.stale, s.bytes), (0, 0, 0, 0));
+        assert_eq!((s.workloads, s.matrices, s.evals, s.stale, s.bytes), (0, 0, 0, 0, 0));
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn evals_round_trip_and_key_mismatch_evicts() {
+        let cache = tmp_cache("evals");
+        let mut j = EvalJournal::empty(0xABCD, 1, 128, 7);
+        j.entries.insert(4, crate::sim::explore::EvalRecord { cycles: 10, energy_pj: 2.0 });
+        j.entries.insert(9, crate::sim::explore::EvalRecord { cycles: 8, energy_pj: 3.5 });
+        assert!(cache.load_evals(0xABCD, 1, 128, 7).is_none(), "fresh dir must miss");
+        cache.store_evals(&j).unwrap();
+        assert_eq!(cache.load_evals(0xABCD, 1, 128, 7).unwrap(), j);
+        // A different key component is a different artifact.
+        assert!(cache.load_evals(0xABCD, 0, 0, 0).is_none());
+        assert!(cache.load_evals(0xABCD, 1, 64, 7).is_none());
+        // A hand-renamed artifact (embedded key disagrees with the file
+        // name) must be evicted, not trusted.
+        let wrong = cache.evals_path(0xEEEE, 1, 128, 7);
+        fs::copy(cache.evals_path(0xABCD, 1, 128, 7), &wrong).unwrap();
+        assert!(cache.load_evals(0xEEEE, 1, 128, 7).is_none());
+        assert!(!wrong.exists(), "mismatched journal must be evicted");
         let _ = fs::remove_dir_all(cache.dir());
     }
 

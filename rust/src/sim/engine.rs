@@ -338,7 +338,7 @@ impl DesignSpace {
     /// kind, no empty or degenerate ones), materialise the expanded config
     /// list (base × config-axis product, transforms applied in axis order),
     /// and name every dimension.
-    fn expand(&self) -> Result<Expanded, EngineError> {
+    pub(crate) fn expand(&self) -> Result<Expanded, EngineError> {
         if self.configs.is_empty() {
             return Err(EngineError::EmptySweep("configs"));
         }
@@ -418,19 +418,20 @@ impl DesignSpace {
     }
 }
 
-/// A [`DesignSpace`] expanded to concrete grid dimensions.
-struct Expanded {
-    datasets: Vec<WorkloadKey>,
+/// A [`DesignSpace`] expanded to concrete grid dimensions. Crate-visible so
+/// [`crate::sim::explore`] can walk the same grid the sweep path runs.
+pub(crate) struct Expanded {
+    pub(crate) datasets: Vec<WorkloadKey>,
     /// Base × config-axis product, transforms applied, names suffixed.
-    configs: Vec<AcceleratorConfig>,
-    policies: Vec<Policy>,
+    pub(crate) configs: Vec<AcceleratorConfig>,
+    pub(crate) policies: Vec<Policy>,
     /// Row-major dimension order: dataset, config, config axes…, policy.
-    dims: Vec<AxisDim>,
+    pub(crate) dims: Vec<AxisDim>,
 }
 
 impl Expanded {
     /// Total cell count (product of the dimension lengths).
-    fn total_cells(&self) -> usize {
+    pub(crate) fn total_cells(&self) -> usize {
         self.dims.iter().map(|d| d.len()).product()
     }
 
@@ -439,7 +440,7 @@ impl Expanded {
     /// whose configs differ in any knob — not just the name — fingerprint
     /// apart; every variable-length field is length-prefixed so adjacent
     /// fields can never alias.
-    fn fingerprint(&self, model: CellModel) -> u64 {
+    pub(crate) fn fingerprint(&self, model: CellModel) -> u64 {
         use crate::sim::cache::codec::put_str;
         let mut buf = Vec::new();
         put_str(&mut buf, "maple-design-space");
@@ -849,7 +850,7 @@ impl SimEngine {
     /// The per-cell dispatch shared by [`SimEngine::simulate_cell`] and the
     /// sweep workers: the analytic replay always runs (functional oracle);
     /// the DES runs alongside when the cell model asks for it.
-    fn run_cell(
+    pub(crate) fn run_cell(
         cfg: &AcceleratorConfig,
         w: &Workload,
         policy: Policy,

@@ -1,0 +1,926 @@
+//! Search-driven design-space exploration.
+//!
+//! PR 4 made axes cheap to add and PR 5 made sweeps sharded, which makes
+//! the grid itself the bottleneck: a 5-axis space blows past 10⁶ cells.
+//! Following SparseMap (evolutionary search over mapping spaces) and
+//! Sparseloop (cheap statistical density models standing in for exact
+//! per-datum profiling), this module navigates a [`DesignSpace`] with a
+//! guided search instead of enumeration:
+//!
+//! * [`Explorer`] runs hill-climb or a small (μ+λ) evolution strategy over
+//!   the grid's flat indices. A mutation is one step along one typed axis;
+//!   fitness is cycles / energy / EDP from the same per-cell dispatch the
+//!   sweep path uses ([`SimEngine::run_cell`]).
+//! * A **two-tier evaluator**: the search runs against the sampled
+//!   profiler ([`profile_workload_sampled`]) — exact dimensions and product
+//!   counts, estimated merge behaviour — and only the elite front is
+//!   re-scored against the exact profile. The search is per dataset
+//!   (dataset is the outermost grid dimension): "which MAC count / prefetch
+//!   depth / topology per sparsity regime" is the Maple-paper question, and
+//!   a cross-dataset argmin would answer nothing.
+//! * Every evaluated point is memoized in an [`EvalJournal`] keyed by the
+//!   design-space fingerprint and persisted through the engine's
+//!   [`crate::sim::cache::DiskCache`], so repeated or warm searches cost
+//!   near zero simulations.
+//!
+//! The budget counts fitness *calls* (memo hits included), so a warm
+//! re-run walks the identical deterministic trajectory with zero fresh
+//! simulations. [`exhaustive_argmin`] + [`check_against_exhaustive`]
+//! compare a search against the full grid — the `maple explore
+//! --exhaustive` gate and the BENCH_explore headline.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::str::FromStr;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::sim::engine::{
+    coords_for, AxisCoord, AxisDim, CellModel, DesignSpace, EngineError, Expanded, SimEngine,
+    SweepResult, WorkloadKey,
+};
+use crate::sim::profile::{estimate_in_band, profile_workload_sampled};
+use crate::sim::Workload;
+use crate::sparse::{suite, Csr, SplitMix64};
+
+/// Journal tag for the exact-profile evaluator.
+pub(crate) const TIER_EXACT: u8 = 0;
+/// Journal tag for the sampled-estimate evaluator.
+pub(crate) const TIER_ESTIMATE: u8 = 1;
+
+/// What the search minimises.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Authoritative cycle count under the space's cell model.
+    Cycles,
+    /// Total energy (pJ).
+    Energy,
+    /// Energy-delay product (cycles × pJ).
+    Edp,
+}
+
+impl Objective {
+    /// The scalar the search minimises for one evaluated cell.
+    pub fn fitness(self, rec: &EvalRecord) -> f64 {
+        match self {
+            Objective::Cycles => rec.cycles as f64,
+            Objective::Energy => rec.energy_pj,
+            Objective::Edp => rec.cycles as f64 * rec.energy_pj,
+        }
+    }
+}
+
+impl std::fmt::Display for Objective {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Objective::Cycles => "cycles",
+            Objective::Energy => "energy",
+            Objective::Edp => "edp",
+        })
+    }
+}
+
+impl FromStr for Objective {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "cycles" => Ok(Objective::Cycles),
+            "energy" => Ok(Objective::Energy),
+            "edp" => Ok(Objective::Edp),
+            other => Err(format!("unknown objective {other} (cycles|energy|edp)")),
+        }
+    }
+}
+
+/// Which fitness evaluator(s) the search runs against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Exact profile for every evaluation (engine workload cache).
+    Exact,
+    /// Sampled-profile estimates only — fastest, fitness carries the
+    /// estimator's error band.
+    Estimate,
+    /// Search on estimates, then re-score the elite front exactly.
+    TwoTier,
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Tier::Exact => "exact",
+            Tier::Estimate => "estimate",
+            Tier::TwoTier => "two-tier",
+        })
+    }
+}
+
+impl FromStr for Tier {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "exact" => Ok(Tier::Exact),
+            "estimate" => Ok(Tier::Estimate),
+            "two" | "two-tier" => Ok(Tier::TwoTier),
+            other => Err(format!("unknown tier {other} (exact|estimate|two-tier)")),
+        }
+    }
+}
+
+/// The search strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Steepest-descent over ±1 axis steps, random restarts until the
+    /// budget runs out.
+    HillClimb,
+    /// A (μ+λ) evolution strategy: `lambda` children per generation, each
+    /// one axis-step mutation of a random parent; best `mu` survive.
+    Evolution { mu: usize, lambda: usize },
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Strategy::HillClimb => f.write_str("hill-climb"),
+            Strategy::Evolution { mu, lambda } => write!(f, "es:{mu}+{lambda}"),
+        }
+    }
+}
+
+impl FromStr for Strategy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "hill" | "hill-climb" => Ok(Strategy::HillClimb),
+            "es" | "evolution" => Ok(Strategy::Evolution { mu: 4, lambda: 8 }),
+            other => {
+                // es:MU+LAMBDA, e.g. es:2+6.
+                if let Some(spec) = other.strip_prefix("es:") {
+                    if let Some((mu, lambda)) = spec.split_once('+') {
+                        if let (Ok(mu), Ok(lambda)) = (mu.parse(), lambda.parse()) {
+                            if mu >= 1 && lambda >= 1 {
+                                return Ok(Strategy::Evolution { mu, lambda });
+                            }
+                        }
+                    }
+                }
+                Err(format!("unknown strategy {other} (hill|es|es:MU+LAMBDA)"))
+            }
+        }
+    }
+}
+
+/// One memoized fitness evaluation: the authoritative cycle count under
+/// the space's cell model and total energy — enough to reconstruct every
+/// [`Objective`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalRecord {
+    pub cycles: u64,
+    pub energy_pj: f64,
+}
+
+/// The on-disk memo of one (design space, evaluator tier): every evaluated
+/// flat grid index with its record. `sample_budget`/`sample_seed` are zero
+/// for the exact tier and part of the cache key for the estimate tier (a
+/// different sampling parameterisation is a different fitness function).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvalJournal {
+    /// The design-space fingerprint the indices are valid against.
+    pub fingerprint: u64,
+    /// [`TIER_EXACT`] or [`TIER_ESTIMATE`].
+    pub tier: u8,
+    pub sample_budget: u64,
+    pub sample_seed: u64,
+    /// Flat grid index → record, ordered (stable encoding).
+    pub entries: BTreeMap<u64, EvalRecord>,
+}
+
+impl EvalJournal {
+    /// An empty journal for the given key.
+    pub fn empty(fingerprint: u64, tier: u8, sample_budget: u64, sample_seed: u64) -> Self {
+        Self { fingerprint, tier, sample_budget, sample_seed, entries: BTreeMap::new() }
+    }
+}
+
+/// One point of a search's best-so-far trajectory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrajectoryPoint {
+    /// Fitness calls consumed when this best was found.
+    pub calls: usize,
+    /// The (search-tier) fitness at that point.
+    pub fitness: f64,
+    /// Full-grid flat index of the point.
+    pub index: usize,
+}
+
+/// The per-dataset outcome of one explore run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DatasetSearch {
+    pub dataset: String,
+    /// Sub-grid size searched (all dimensions but dataset).
+    pub cells: usize,
+    /// Full-grid flat index of the best point found.
+    pub best_index: usize,
+    pub best_coords: Vec<AxisCoord>,
+    /// Authoritative fitness of the best point (exact tier when the run
+    /// re-scored exactly, estimate fitness for a pure estimate run).
+    pub best_fitness: f64,
+    pub best: EvalRecord,
+    /// Estimate-tier fitness of the best point (two-tier runs).
+    pub estimate_fitness: Option<f64>,
+    /// Fresh exact simulations this dataset's search ran.
+    pub evals_exact: usize,
+    /// Fresh estimate-tier simulations this dataset's search ran.
+    pub evals_estimate: usize,
+    /// Fitness calls answered by the in-run memo.
+    pub memo_hits: usize,
+    /// Fitness calls answered by the preloaded disk journal.
+    pub journal_hits: usize,
+    pub trajectory: Vec<TrajectoryPoint>,
+    pub wall_ms: u64,
+}
+
+/// The outcome of one [`Explorer::run`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreResult {
+    pub objective: Objective,
+    pub strategy: Strategy,
+    pub tier: Tier,
+    /// Fitness-call budget per dataset.
+    pub budget: usize,
+    /// Full grid size (what an exhaustive sweep would evaluate).
+    pub grid_cells: usize,
+    pub fingerprint: u64,
+    pub dims: Vec<AxisDim>,
+    pub searches: Vec<DatasetSearch>,
+    pub wall_ms: u64,
+}
+
+impl ExploreResult {
+    /// Fresh exact simulations across all datasets (elite re-scoring
+    /// included).
+    pub fn evals_exact(&self) -> usize {
+        self.searches.iter().map(|s| s.evals_exact).sum()
+    }
+
+    /// Fresh estimate-tier simulations across all datasets.
+    pub fn evals_estimate(&self) -> usize {
+        self.searches.iter().map(|s| s.evals_estimate).sum()
+    }
+
+    /// All fresh simulations — the number the ≥100× headline compares to
+    /// [`ExploreResult::grid_cells`].
+    pub fn evals_total(&self) -> usize {
+        self.evals_exact() + self.evals_estimate()
+    }
+
+    /// Fresh simulations as a fraction of the exhaustive grid.
+    pub fn eval_fraction(&self) -> f64 {
+        self.evals_total() as f64 / self.grid_cells.max(1) as f64
+    }
+
+    pub fn memo_hits(&self) -> usize {
+        self.searches.iter().map(|s| s.memo_hits).sum()
+    }
+
+    pub fn journal_hits(&self) -> usize {
+        self.searches.iter().map(|s| s.journal_hits).sum()
+    }
+}
+
+/// Per-dataset comparison against the exhaustive grid optimum.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExhaustiveBest {
+    pub dataset: String,
+    /// Flat index of the exhaustive argmin.
+    pub best_index: usize,
+    pub best_fitness: f64,
+    /// The search's best fitness on the same (authoritative) scale.
+    pub search_fitness: f64,
+    /// The search found the argmin itself (same cell or bit-equal fitness).
+    pub argmin_match: bool,
+    /// The search landed within [`crate::sim::ESTIMATE_BAND`] of the
+    /// optimum.
+    pub in_band: bool,
+}
+
+/// The exhaustive-sweep side of a `maple explore --exhaustive` comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExhaustiveCheck {
+    pub cells: usize,
+    pub wall_ms: u64,
+    pub per_dataset: Vec<ExhaustiveBest>,
+}
+
+impl ExhaustiveCheck {
+    /// Whether every dataset's search result sits inside the band.
+    pub fn all_in_band(&self) -> bool {
+        self.per_dataset.iter().all(|d| d.in_band)
+    }
+}
+
+/// Per-dataset `(flat index, fitness)` argmin of a full sweep grid under
+/// `objective` — the ground truth a search is judged against.
+pub fn exhaustive_argmin(grid: &SweepResult, objective: Objective) -> Vec<(usize, f64)> {
+    let nd = grid.datasets.len().max(1);
+    let per = grid.cell_count() / nd;
+    (0..grid.datasets.len())
+        .map(|d| {
+            let mut best = (d * per, f64::INFINITY);
+            for i in d * per..(d + 1) * per {
+                let cell = grid.cell(i);
+                let rec = EvalRecord {
+                    cycles: cell.cycles(grid.cell_model),
+                    energy_pj: cell.analytic.energy.total_pj(),
+                };
+                let f = objective.fitness(&rec);
+                if f < best.1 {
+                    best = (i, f);
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Compare a finished search against the exhaustive sweep of the same
+/// space (`wall_ms` is the sweep's wall-clock).
+pub fn check_against_exhaustive(
+    result: &ExploreResult,
+    grid: &SweepResult,
+    wall_ms: u64,
+) -> ExhaustiveCheck {
+    let argmin = exhaustive_argmin(grid, result.objective);
+    let per_dataset = result
+        .searches
+        .iter()
+        .zip(&argmin)
+        .map(|(s, &(best_index, best_fitness))| ExhaustiveBest {
+            dataset: s.dataset.clone(),
+            best_index,
+            best_fitness,
+            search_fitness: s.best_fitness,
+            argmin_match: s.best_index == best_index || s.best_fitness == best_fitness,
+            in_band: estimate_in_band(best_fitness, s.best_fitness),
+        })
+        .collect();
+    ExhaustiveCheck { cells: grid.cell_count(), wall_ms, per_dataset }
+}
+
+/// Synthesise the suite matrix a [`WorkloadKey`] names — the estimate
+/// tier's input (and `maple estval`'s), bypassing the exact profile.
+pub fn suite_matrix(key: &WorkloadKey) -> Result<Csr, EngineError> {
+    let spec = suite::by_name(&key.dataset)
+        .ok_or_else(|| EngineError::UnknownDataset(key.dataset.clone()))?;
+    Ok(if key.scale.max(1) <= 1 {
+        spec.generate(key.seed)
+    } else {
+        spec.generate_scaled(key.seed, key.scale)
+    })
+}
+
+/// Search parameters; see the field docs for the knobs the CLI exposes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExploreSpec {
+    pub objective: Objective,
+    pub strategy: Strategy,
+    pub tier: Tier,
+    /// Fitness calls per dataset (memo hits count, so warm re-runs walk
+    /// the identical trajectory and terminate).
+    pub budget: usize,
+    /// Points of the estimate front re-scored exactly ([`Tier::TwoTier`]).
+    pub elite: usize,
+    /// Row budget of the sampled profiler (estimate tier).
+    pub sample_budget: usize,
+    /// Seed for both the search RNG and the sampled profiler.
+    pub seed: u64,
+}
+
+impl Default for ExploreSpec {
+    fn default() -> Self {
+        Self {
+            objective: Objective::Cycles,
+            strategy: Strategy::Evolution { mu: 4, lambda: 8 },
+            tier: Tier::TwoTier,
+            budget: 64,
+            elite: 4,
+            sample_budget: 128,
+            seed: 7,
+        }
+    }
+}
+
+/// In-run state of one evaluator tier: the (journal-backed) memo plus hit
+/// counters.
+struct TierState {
+    journal: EvalJournal,
+    /// Indices present when the journal was loaded from disk; first touch
+    /// of one counts as a journal hit, later touches as memo hits.
+    preloaded: BTreeSet<u64>,
+    fresh: usize,
+    memo_hits: usize,
+    journal_hits: usize,
+}
+
+impl TierState {
+    fn new(journal: EvalJournal) -> Self {
+        let preloaded = journal.entries.keys().copied().collect();
+        Self { journal, preloaded, fresh: 0, memo_hits: 0, journal_hits: 0 }
+    }
+
+    fn lookup(&mut self, idx: u64) -> Option<EvalRecord> {
+        let rec = self.journal.entries.get(&idx).copied()?;
+        if self.preloaded.remove(&idx) {
+            self.journal_hits += 1;
+        } else {
+            self.memo_hits += 1;
+        }
+        Some(rec)
+    }
+
+    fn insert(&mut self, idx: u64, rec: EvalRecord) {
+        self.journal.entries.insert(idx, rec);
+        self.fresh += 1;
+    }
+
+    fn snapshot(&self) -> (usize, usize, usize) {
+        (self.fresh, self.memo_hits, self.journal_hits)
+    }
+}
+
+/// The per-dataset fitness oracle: lazily materialises the exact workload
+/// (engine cache) and/or the sampled estimate, and dispatches cells
+/// through the same [`SimEngine::run_cell`] the sweep path uses.
+struct Eval<'a> {
+    engine: &'a SimEngine,
+    ex: &'a Expanded,
+    model: CellModel,
+    key: &'a WorkloadKey,
+    sample_budget: usize,
+    sample_seed: u64,
+    exact_w: Option<Arc<Workload>>,
+    estimate_w: Option<Arc<Workload>>,
+}
+
+impl Eval<'_> {
+    fn record(
+        &mut self,
+        state: &mut TierState,
+        idx: u64,
+        exact: bool,
+    ) -> Result<EvalRecord, EngineError> {
+        if let Some(rec) = state.lookup(idx) {
+            return Ok(rec);
+        }
+        let w = if exact { self.exact_workload()? } else { self.estimate_workload()? };
+        let (nc, np) = (self.ex.configs.len(), self.ex.policies.len());
+        let i = idx as usize;
+        let rem = i % (nc * np);
+        let (c, p) = (rem / np, rem % np);
+        let cell = SimEngine::run_cell(
+            &self.ex.configs[c],
+            &w,
+            self.ex.policies[p],
+            self.model,
+            coords_for(&self.ex.dims, i),
+        );
+        let rec = EvalRecord {
+            cycles: cell.cycles(self.model),
+            energy_pj: cell.analytic.energy.total_pj(),
+        };
+        state.insert(idx, rec);
+        Ok(rec)
+    }
+
+    fn exact_workload(&mut self) -> Result<Arc<Workload>, EngineError> {
+        if self.exact_w.is_none() {
+            self.exact_w = Some(self.engine.workload(self.key)?);
+        }
+        Ok(Arc::clone(self.exact_w.as_ref().expect("just filled")))
+    }
+
+    /// Synthesis + sampled profile — `O(nnz + sampled products)` instead of
+    /// the exact pass's `O(total products)`; never persisted as a workload
+    /// artifact (only its fitness evaluations are journaled).
+    fn estimate_workload(&mut self) -> Result<Arc<Workload>, EngineError> {
+        if self.estimate_w.is_none() {
+            let a = suite_matrix(self.key)?;
+            let est = profile_workload_sampled(&a, &a, self.sample_budget, self.sample_seed);
+            self.estimate_w = Some(Arc::new(est.workload));
+        }
+        Ok(Arc::clone(self.estimate_w.as_ref().expect("just filled")))
+    }
+}
+
+/// One in-flight dataset search: budget accounting, the evaluated-point
+/// map, and the best-so-far trajectory.
+struct Search<'a, 'b> {
+    eval: &'a mut Eval<'b>,
+    state: &'a mut TierState,
+    exact: bool,
+    objective: Objective,
+    evaluated: &'a mut BTreeMap<u64, f64>,
+    trajectory: &'a mut Vec<TrajectoryPoint>,
+    calls: usize,
+    budget: usize,
+    best: Option<(u64, f64)>,
+}
+
+impl Search<'_, '_> {
+    fn exhausted(&self) -> bool {
+        self.calls >= self.budget
+    }
+
+    fn eval_point(&mut self, idx: u64) -> Result<f64, EngineError> {
+        let rec = self.eval.record(self.state, idx, self.exact)?;
+        self.calls += 1;
+        let fit = self.objective.fitness(&rec);
+        self.evaluated.insert(idx, fit);
+        let improved = match self.best {
+            Some((_, b)) => fit < b,
+            None => true,
+        };
+        if improved {
+            self.best = Some((idx, fit));
+            self.trajectory.push(TrajectoryPoint {
+                calls: self.calls,
+                fitness: fit,
+                index: idx as usize,
+            });
+        }
+        Ok(fit)
+    }
+}
+
+/// Flat row-major index of per-dimension coordinates.
+fn flat_index(dims: &[AxisDim], coords: &[usize]) -> u64 {
+    coords.iter().zip(dims).fold(0u64, |acc, (&c, d)| acc * d.len() as u64 + c as u64)
+}
+
+/// A uniform random point of dataset `d`'s sub-grid.
+fn random_point(dims: &[AxisDim], d: usize, rng: &mut SplitMix64) -> Vec<usize> {
+    let mut p: Vec<usize> =
+        dims.iter().map(|dim| rng.below(dim.len() as u64) as usize).collect();
+    p[0] = d;
+    p
+}
+
+/// One mutation: a step along one searchable axis. Three times out of
+/// four a ±1 step with wraparound (ordered axes like MACs/prefetch); one
+/// time in four a uniform jump to a different point, which keeps the
+/// search ergodic on categorical axes (policy, topology, PE model).
+fn mutate(
+    point: &[usize],
+    dims: &[AxisDim],
+    searchable: &[usize],
+    rng: &mut SplitMix64,
+) -> Vec<usize> {
+    let mut out = point.to_vec();
+    let j = searchable[rng.below(searchable.len() as u64) as usize];
+    let len = dims[j].len();
+    let cur = out[j];
+    out[j] = if rng.below(4) == 0 {
+        let mut v = rng.below((len - 1) as u64) as usize;
+        if v >= cur {
+            v += 1;
+        }
+        v
+    } else if rng.below(2) == 0 {
+        (cur + 1) % len
+    } else {
+        (cur + len - 1) % len
+    };
+    out
+}
+
+/// Steepest-descent over ±1 axis steps with random restarts.
+fn hill_climb(
+    s: &mut Search<'_, '_>,
+    dims: &[AxisDim],
+    d: usize,
+    rng: &mut SplitMix64,
+) -> Result<(), EngineError> {
+    let searchable: Vec<usize> = (1..dims.len()).filter(|&j| dims[j].len() > 1).collect();
+    while !s.exhausted() {
+        let mut cur = random_point(dims, d, rng);
+        let mut cur_fit = s.eval_point(flat_index(dims, &cur))?;
+        if searchable.is_empty() {
+            break;
+        }
+        'climb: loop {
+            let mut next: Option<(Vec<usize>, f64)> = None;
+            for &j in &searchable {
+                for dir in [-1i64, 1] {
+                    let v = cur[j] as i64 + dir;
+                    if v < 0 || v >= dims[j].len() as i64 {
+                        continue;
+                    }
+                    if s.exhausted() {
+                        break 'climb;
+                    }
+                    let mut cand = cur.clone();
+                    cand[j] = v as usize;
+                    let fit = s.eval_point(flat_index(dims, &cand))?;
+                    if fit < next.as_ref().map_or(cur_fit, |(_, f)| *f) {
+                        next = Some((cand, fit));
+                    }
+                }
+            }
+            match next {
+                Some((p, f)) => {
+                    cur = p;
+                    cur_fit = f;
+                }
+                None => break,
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The (μ+λ) evolution strategy.
+fn evolution(
+    s: &mut Search<'_, '_>,
+    dims: &[AxisDim],
+    d: usize,
+    rng: &mut SplitMix64,
+    mu: usize,
+    lambda: usize,
+) -> Result<(), EngineError> {
+    let searchable: Vec<usize> = (1..dims.len()).filter(|&j| dims[j].len() > 1).collect();
+    let mut pop: Vec<(Vec<usize>, f64)> = Vec::new();
+    for _ in 0..mu {
+        if s.exhausted() {
+            return Ok(());
+        }
+        let p = random_point(dims, d, rng);
+        let f = s.eval_point(flat_index(dims, &p))?;
+        pop.push((p, f));
+    }
+    if searchable.is_empty() {
+        return Ok(());
+    }
+    while !s.exhausted() {
+        let parents = pop.len();
+        for _ in 0..lambda {
+            if s.exhausted() {
+                break;
+            }
+            let parent = pop[rng.below(parents as u64) as usize].0.clone();
+            let child = mutate(&parent, dims, &searchable, rng);
+            let f = s.eval_point(flat_index(dims, &child))?;
+            pop.push((child, f));
+        }
+        // Stable sort → deterministic survivor set under fitness ties.
+        pop.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        pop.truncate(mu);
+    }
+    Ok(())
+}
+
+/// The search driver. Borrows an engine (for the workload cache tiers and
+/// the disk journal) and owns the space + spec for one run.
+pub struct Explorer<'e> {
+    engine: &'e SimEngine,
+    space: DesignSpace,
+    spec: ExploreSpec,
+}
+
+impl<'e> Explorer<'e> {
+    pub fn new(engine: &'e SimEngine, space: DesignSpace, spec: ExploreSpec) -> Self {
+        Self { engine, space, spec }
+    }
+
+    /// Run the search over every dataset of the space. Deterministic for a
+    /// fixed (space, spec): the RNG streams, the call budget, and the
+    /// tie-breaking are all fixed, and memo hits consume budget exactly
+    /// like fresh evaluations — so a warm run reproduces the cold run's
+    /// answer with zero fresh simulations.
+    pub fn run(&self) -> Result<ExploreResult, EngineError> {
+        let t_run = Instant::now();
+        let ex = self.space.expand()?;
+        for cfg in &ex.configs {
+            crate::pe::registry::build(cfg)?;
+        }
+        let fingerprint = ex.fingerprint(self.space.cell_model);
+        let spec = &self.spec;
+        let disk = self.engine.disk_cache();
+        let needs_exact = spec.tier != Tier::Estimate;
+        let needs_estimate = spec.tier != Tier::Exact;
+        let load = |wanted: bool, tier: u8, budget: u64, seed: u64| {
+            wanted
+                .then(|| disk.and_then(|d| d.load_evals(fingerprint, tier, budget, seed)))
+                .flatten()
+                .unwrap_or_else(|| EvalJournal::empty(fingerprint, tier, budget, seed))
+        };
+        let mut exact_state = TierState::new(load(needs_exact, TIER_EXACT, 0, 0));
+        let mut estimate_state = TierState::new(load(
+            needs_estimate,
+            TIER_ESTIMATE,
+            spec.sample_budget as u64,
+            spec.seed,
+        ));
+
+        let mut searches = Vec::with_capacity(ex.datasets.len());
+        for (d, key) in ex.datasets.iter().enumerate() {
+            searches.push(self.search_dataset(
+                &ex,
+                d,
+                key,
+                &mut exact_state,
+                &mut estimate_state,
+            )?);
+        }
+
+        // Publish the journals best-effort (like workload artifacts, a
+        // full disk must never fail a search).
+        if let Some(disk) = disk {
+            if needs_exact && exact_state.fresh > 0 {
+                let _ = disk.store_evals(&exact_state.journal);
+            }
+            if needs_estimate && estimate_state.fresh > 0 {
+                let _ = disk.store_evals(&estimate_state.journal);
+            }
+        }
+
+        Ok(ExploreResult {
+            objective: spec.objective,
+            strategy: spec.strategy,
+            tier: spec.tier,
+            budget: spec.budget,
+            grid_cells: ex.total_cells(),
+            fingerprint,
+            dims: ex.dims.clone(),
+            searches,
+            wall_ms: t_run.elapsed().as_millis() as u64,
+        })
+    }
+
+    fn search_dataset(
+        &self,
+        ex: &Expanded,
+        d: usize,
+        key: &WorkloadKey,
+        exact_state: &mut TierState,
+        estimate_state: &mut TierState,
+    ) -> Result<DatasetSearch, EngineError> {
+        let t0 = Instant::now();
+        let spec = &self.spec;
+        let exact_before = exact_state.snapshot();
+        let estimate_before = estimate_state.snapshot();
+        let cells: usize = ex.dims[1..].iter().map(|x| x.len()).product();
+        let mut eval = Eval {
+            engine: self.engine,
+            ex,
+            model: self.space.cell_model,
+            key,
+            sample_budget: spec.sample_budget,
+            sample_seed: spec.seed,
+            exact_w: None,
+            estimate_w: None,
+        };
+        // One independent, deterministic RNG stream per dataset.
+        let mut rng = SplitMix64::new(
+            spec.seed ^ 0x5851_F42D_4C95_7F2Du64.wrapping_mul(d as u64 + 1),
+        );
+        let mut evaluated: BTreeMap<u64, f64> = BTreeMap::new();
+        let mut trajectory = Vec::new();
+        let search_exact = spec.tier == Tier::Exact;
+        {
+            let mut s = Search {
+                eval: &mut eval,
+                state: if search_exact { &mut *exact_state } else { &mut *estimate_state },
+                exact: search_exact,
+                objective: spec.objective,
+                evaluated: &mut evaluated,
+                trajectory: &mut trajectory,
+                calls: 0,
+                budget: spec.budget.max(1),
+                best: None,
+            };
+            match spec.strategy {
+                Strategy::HillClimb => hill_climb(&mut s, &ex.dims, d, &mut rng)?,
+                Strategy::Evolution { mu, lambda } => {
+                    evolution(&mut s, &ex.dims, d, &mut rng, mu.max(1), lambda.max(1))?
+                }
+            }
+        }
+
+        // The search-tier front, best first; ties break on the lower index
+        // (BTreeMap iteration order + strict improvement keep this
+        // deterministic).
+        let mut front: Vec<(f64, u64)> = evaluated.iter().map(|(&i, &f)| (f, i)).collect();
+        front.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+
+        let (best_index, best_fitness, best, estimate_fitness) = match spec.tier {
+            Tier::Exact | Tier::Estimate => {
+                let &(fit, idx) = front.first().expect("budget ≥ 1 evaluates a point");
+                let state = if search_exact { &mut *exact_state } else { &mut *estimate_state };
+                let rec = state.journal.entries[&idx];
+                (idx, fit, rec, None)
+            }
+            Tier::TwoTier => {
+                let mut best: Option<(u64, f64, EvalRecord, f64)> = None;
+                for &(est_fit, idx) in front.iter().take(spec.elite.max(1)) {
+                    let rec = eval.record(exact_state, idx, true)?;
+                    let fit = spec.objective.fitness(&rec);
+                    let improved = match best {
+                        Some((_, b, _, _)) => fit < b,
+                        None => true,
+                    };
+                    if improved {
+                        best = Some((idx, fit, rec, est_fit));
+                    }
+                }
+                let (idx, fit, rec, est_fit) = best.expect("elite front non-empty");
+                (idx, fit, rec, Some(est_fit))
+            }
+        };
+
+        let exact_after = exact_state.snapshot();
+        let estimate_after = estimate_state.snapshot();
+        Ok(DatasetSearch {
+            dataset: key.dataset.clone(),
+            cells,
+            best_index: best_index as usize,
+            best_coords: coords_for(&ex.dims, best_index as usize),
+            best_fitness,
+            best,
+            estimate_fitness,
+            evals_exact: exact_after.0 - exact_before.0,
+            evals_estimate: estimate_after.0 - estimate_before.0,
+            memo_hits: (exact_after.1 - exact_before.1) + (estimate_after.1 - estimate_before.1),
+            journal_hits: (exact_after.2 - exact_before.2)
+                + (estimate_after.2 - estimate_before.2),
+            trajectory,
+            wall_ms: t0.elapsed().as_millis() as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_strategy_tier_parse_and_display() {
+        assert_eq!("cycles".parse::<Objective>().unwrap(), Objective::Cycles);
+        assert_eq!("edp".parse::<Objective>().unwrap(), Objective::Edp);
+        assert!("speed".parse::<Objective>().is_err());
+        assert_eq!("hill".parse::<Strategy>().unwrap(), Strategy::HillClimb);
+        assert_eq!(
+            "es".parse::<Strategy>().unwrap(),
+            Strategy::Evolution { mu: 4, lambda: 8 }
+        );
+        assert_eq!(
+            "es:2+6".parse::<Strategy>().unwrap(),
+            Strategy::Evolution { mu: 2, lambda: 6 }
+        );
+        assert!("es:0+3".parse::<Strategy>().is_err());
+        assert_eq!("two".parse::<Tier>().unwrap(), Tier::TwoTier);
+        assert_eq!("exact".parse::<Tier>().unwrap(), Tier::Exact);
+        assert_eq!(Tier::TwoTier.to_string(), "two-tier");
+        assert_eq!(Strategy::Evolution { mu: 4, lambda: 8 }.to_string(), "es:4+8");
+    }
+
+    #[test]
+    fn objective_fitness_definitions() {
+        let rec = EvalRecord { cycles: 100, energy_pj: 2.5 };
+        assert_eq!(Objective::Cycles.fitness(&rec), 100.0);
+        assert_eq!(Objective::Energy.fitness(&rec), 2.5);
+        assert_eq!(Objective::Edp.fitness(&rec), 250.0);
+    }
+
+    #[test]
+    fn flat_index_is_row_major() {
+        let dims = vec![
+            AxisDim { name: "dataset", labels: vec!["a".into(), "b".into()] },
+            AxisDim { name: "config", labels: vec!["x".into(), "y".into(), "z".into()] },
+            AxisDim { name: "policy", labels: vec!["p".into(), "q".into()] },
+        ];
+        assert_eq!(flat_index(&dims, &[0, 0, 0]), 0);
+        assert_eq!(flat_index(&dims, &[0, 0, 1]), 1);
+        assert_eq!(flat_index(&dims, &[0, 1, 0]), 2);
+        assert_eq!(flat_index(&dims, &[1, 2, 1]), 11);
+    }
+
+    #[test]
+    fn mutate_changes_exactly_one_searchable_dim() {
+        let dims = vec![
+            AxisDim { name: "dataset", labels: vec!["a".into()] },
+            AxisDim { name: "macs", labels: (0..6).map(|i| i.to_string()).collect() },
+            AxisDim { name: "policy", labels: vec!["p".into(), "q".into()] },
+        ];
+        let searchable = vec![1usize, 2];
+        let mut rng = SplitMix64::new(42);
+        let point = vec![0usize, 3, 1];
+        for _ in 0..200 {
+            let m = mutate(&point, &dims, &searchable, &mut rng);
+            let diff: Vec<usize> =
+                (0..3).filter(|&j| m[j] != point[j]).collect();
+            assert_eq!(diff.len(), 1, "{m:?}");
+            assert!(searchable.contains(&diff[0]));
+            assert!(m[diff[0]] < dims[diff[0]].len());
+        }
+    }
+}

@@ -17,6 +17,7 @@
 pub mod cache;
 pub mod des;
 pub mod engine;
+pub mod explore;
 mod profile;
 pub mod shard;
 pub mod timeline;
@@ -27,7 +28,15 @@ pub use engine::{
     Axis, AxisCoord, AxisDim, CellModel, CellResult, DesignSpace, EngineError, SimEngine,
     SweepResult, SweepSpec, WorkloadKey,
 };
-pub use profile::{profile_workload, profile_workload_parallel, Workload};
+pub use explore::{
+    check_against_exhaustive, exhaustive_argmin, DatasetSearch, EvalJournal, EvalRecord,
+    ExhaustiveCheck, ExploreResult, ExploreSpec, Explorer, Objective, Strategy, Tier,
+    TrajectoryPoint,
+};
+pub use profile::{
+    estimate_in_band, profile_workload, profile_workload_parallel, profile_workload_sampled,
+    StratumEstimate, Workload, WorkloadEstimate, ESTIMATE_BAND,
+};
 pub use shard::{ShardError, ShardMeta, ShardSpec, SweepShard};
 pub use timeline::{exact_pipeline, TwoStageTimeline};
 

@@ -9,7 +9,7 @@
 //! profiling all fourteen Table-I workloads stays fast and memory-flat.
 
 use crate::pe::RowProfile;
-use crate::sparse::Csr;
+use crate::sparse::{Csr, SplitMix64};
 
 /// Everything a simulation needs to know about one `C = A × B` workload.
 /// `PartialEq` compares every field bit-for-bit (profiles and the f64
@@ -112,7 +112,7 @@ pub fn profile_workload_parallel(a: &Csr, b: &Csr, threads: usize) -> Workload {
 /// chunk therefore carries at most `⌈nnz/threads⌉ + max_row_nnz` nonzeros,
 /// no matter how skewed the row-length distribution is. Monotone, starts at
 /// 0, ends at `rows` (chunks over trailing empty rows may be empty).
-fn nnz_balanced_bounds(a: &Csr, threads: usize) -> Vec<usize> {
+pub(crate) fn nnz_balanced_bounds(a: &Csr, threads: usize) -> Vec<usize> {
     let rows = a.rows();
     let nnz = a.nnz();
     let mut bounds = Vec::with_capacity(threads + 1);
@@ -124,6 +124,27 @@ fn nnz_balanced_bounds(a: &Csr, threads: usize) -> Vec<usize> {
         bounds.push(cut.max(prev));
     }
     bounds.push(rows);
+    bounds
+}
+
+/// Stratum cuts over a cumulative-mass prefix (`prefix[j]` = mass of the
+/// first `j` ranks, so `prefix.len()` = ranks + 1): cut `t` is the first
+/// rank whose prefix reaches `t·total/parts`. Monotone, starts at 0, ends
+/// at the rank count — the sampled pass's analogue of
+/// [`nnz_balanced_bounds`], over the product-sorted row order instead of
+/// the raw row order.
+fn mass_balanced_bounds(prefix: &[u64], parts: usize) -> Vec<usize> {
+    let n = prefix.len() - 1;
+    let total = prefix[n];
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0usize);
+    for t in 1..parts {
+        let target = total as u128 * t as u128 / parts as u128;
+        let cut = prefix[..n].partition_point(|&p| (p as u128) < target).min(n);
+        let prev = *bounds.last().expect("bounds non-empty");
+        bounds.push(cut.max(prev));
+    }
+    bounds.push(n);
     bounds
 }
 
@@ -146,25 +167,56 @@ pub fn profile_workload(a: &Csr, b: &Csr) -> Workload {
 
 /// Serial profile over the row range `[lo, hi)` (the parallel pass's unit).
 fn profile_rows(a: &Csr, b: &Csr, lo: usize, hi: usize) -> (Vec<RowProfile>, u64, u64, f64) {
-    let cols = b.cols();
-    // Interleaved (tag, acc) cells: one cache line per SPA touch instead of
-    // two (EXPERIMENTS.md §Perf iteration 2).
-    let mut spa: Vec<(u32, f32)> = vec![(0u32, 0f32); cols];
-    let mut touched: Vec<u32> = Vec::with_capacity(1024);
-    let mut generation = 0u32;
-
+    let mut spa = Spa::new(b.cols());
     let mut profiles = Vec::with_capacity(hi - lo);
     let mut out_nnz = 0u64;
     let mut total_products = 0u64;
     let mut checksum = 0f64;
 
     for i in lo..hi {
-        generation = generation.wrapping_add(1);
-        if generation == 0 {
-            spa.fill((0, 0.0));
-            generation = 1;
+        let p = spa.profile_row(a, b, i, &mut checksum);
+        out_nnz += p.out_nnz as u64;
+        total_products += p.products;
+        profiles.push(p);
+    }
+
+    (profiles, out_nnz, total_products, checksum)
+}
+
+/// The generation-tagged sparse accumulator, reusable across rows. Both the
+/// exact pass ([`profile_rows`]) and the sampled pass
+/// ([`profile_workload_sampled`]) run rows through this one implementation,
+/// so a sampled row's profile is bit-identical to the exact pass's — and
+/// the exact pass's checksum association order (touch order within a row,
+/// row order across rows) is preserved, which the disk cache's
+/// warm-equals-cold contract leans on.
+struct Spa {
+    /// Interleaved (tag, acc) cells: one cache line per SPA touch instead
+    /// of two (EXPERIMENTS.md §Perf iteration 2).
+    cells: Vec<(u32, f32)>,
+    touched: Vec<u32>,
+    generation: u32,
+}
+
+impl Spa {
+    fn new(cols: usize) -> Self {
+        Self {
+            cells: vec![(0u32, 0f32); cols],
+            touched: Vec::with_capacity(1024),
+            generation: 0,
         }
-        touched.clear();
+    }
+
+    /// Functionally execute output row `i` of `C = A × B`, adding the row's
+    /// value sum onto `checksum` in SPA touch order.
+    fn profile_row(&mut self, a: &Csr, b: &Csr, i: usize, checksum: &mut f64) -> RowProfile {
+        self.generation = self.generation.wrapping_add(1);
+        if self.generation == 0 {
+            self.cells.fill((0, 0.0));
+            self.generation = 1;
+        }
+        let generation = self.generation;
+        self.touched.clear();
         let mut products = 0u64;
         for (k, av) in a.row_iter(i) {
             let k = k as usize;
@@ -179,31 +231,315 @@ fn profile_rows(a: &Csr, b: &Csr, lo: usize, hi: usize) -> (Vec<RowProfile>, u64
                 // SAFETY: p < bc.len() == bv.len(); col ids validated < cols.
                 let (j, v) = unsafe { (*bc.get_unchecked(p), *bv.get_unchecked(p)) };
                 let prod = av * v;
-                let cell = unsafe { spa.get_unchecked_mut(j as usize) };
+                let cell = unsafe { self.cells.get_unchecked_mut(j as usize) };
                 if cell.0 == generation {
                     cell.1 += prod;
                 } else {
                     *cell = (generation, prod);
-                    touched.push(j);
+                    self.touched.push(j);
                 }
             }
         }
-        for &j in &touched {
+        for &j in &self.touched {
             // SAFETY: every j in `touched` was bounds-validated (< cols)
             // when the lane loop pushed it, so the drain can skip the
             // bounds check too.
-            checksum += unsafe { spa.get_unchecked(j as usize) }.1 as f64;
+            *checksum += unsafe { self.cells.get_unchecked(j as usize) }.1 as f64;
         }
-        out_nnz += touched.len() as u64;
-        total_products += products;
-        profiles.push(RowProfile {
+        RowProfile {
             a_nnz: a.row_nnz(i) as u32,
             products,
-            out_nnz: touched.len() as u32,
+            out_nnz: self.touched.len() as u32,
+        }
+    }
+}
+
+/// Relative agreement band for estimated quantities (out_nnz, cycles,
+/// energy) versus their exact counterparts — the sampled-profiler analogue
+/// of the DES band ([`crate::sim::des::agreement_band`]). `maple estval`
+/// and `maple explore --exhaustive` gate on it.
+pub const ESTIMATE_BAND: f64 = 0.10;
+
+/// Whether `estimate` agrees with `exact` within [`ESTIMATE_BAND`]
+/// (relative, with an absolute floor of 1 so near-zero exacts don't demand
+/// impossible precision).
+pub fn estimate_in_band(exact: f64, estimate: f64) -> bool {
+    (estimate - exact).abs() <= ESTIMATE_BAND * exact.abs().max(1.0)
+}
+
+/// Upper bound on the stratum count of the sampled pass. Strata are cut on
+/// the product-mass prefix of the **product-sorted** row order, so rows of
+/// similar work share a stratum; 16 keeps per-stratum sample counts large
+/// enough for the variance estimate to mean something.
+const MAX_STRATA: usize = 16;
+
+/// One stratum of the sampled profile pass: a contiguous rank range of the
+/// product-sorted row order, its exact product mass, and what the sample
+/// said about it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StratumEstimate {
+    /// The stratum's rank range over the product-sorted row order (strata
+    /// tile `0..rows` in rank space).
+    pub rows: std::ops::Range<usize>,
+    /// Rows profiled exactly.
+    pub sampled_rows: usize,
+    /// Exact scalar-product mass of the whole stratum (cheap pass).
+    pub products: u64,
+    /// Product mass covered by the sampled rows.
+    pub sampled_products: u64,
+    /// Estimated outputs-per-product compression ratio (`Σout / Σproducts`
+    /// over the sample; in `[0, 1]` since a row's out_nnz ≤ its products).
+    pub out_ratio: f64,
+    /// Absolute out_nnz error bound this stratum contributes.
+    pub out_err: u64,
+}
+
+/// The sampled profiler's result: a full [`Workload`] (exact dimensions,
+/// nnz, and per-row product counts; estimated out_nnz and checksum) plus
+/// the per-stratum estimators and the claimed relative error bound on
+/// `out_nnz`. `PartialEq` is bit-for-bit — the determinism contract for a
+/// fixed `(budget, seed)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadEstimate {
+    /// Drop-in workload for the analytic/DES cost models. `rows`, `cols`,
+    /// `nnz_*`, `total_products`, and every profile's `a_nnz`/`products`
+    /// are **exact**; `out_nnz` (total and per row) and `checksum` are
+    /// estimates.
+    pub workload: Workload,
+    /// The row budget the caller asked for.
+    pub budget: usize,
+    /// The sampling seed.
+    pub seed: u64,
+    /// Rows actually profiled exactly (≤ budget).
+    pub sampled_rows: usize,
+    /// Whether the budget covered every row — the estimate degenerated to
+    /// the exact profile (zero error).
+    pub exact: bool,
+    /// Per-stratum telemetry, in ascending rank order.
+    pub strata: Vec<StratumEstimate>,
+    /// Claimed relative error bound on `workload.out_nnz`: the true value
+    /// is claimed to lie within `est ± rel_err × max(est, 1)`. Zero when
+    /// `exact`. Cross-validated by `maple estval` and the estimator
+    /// property tests.
+    pub out_nnz_rel_err: f64,
+}
+
+/// Profile a stratified sample of A's rows instead of all of them — the
+/// fast fitness tier behind [`crate::sim::explore`].
+///
+/// The cheap part of the exact pass is kept exact: per-row products
+/// (`Σ_{k ∈ A row i} nnz(B row k)`) cost `O(nnz(A))` without touching a
+/// SPA, so `total_products`, `nnz`, and every profile's `a_nnz`/`products`
+/// come out exact. Only the merge-dependent quantities — per-row `out_nnz`
+/// and the checksum, the `O(total_products)` part — are estimated:
+///
+/// * Rows are sorted by their (exact) product mass and the **sorted order**
+///   is cut into ≤ [`MAX_STRATA`] strata of equal product mass. Sorting is
+///   what makes the strata homogeneous: heavy power-law rows share a
+///   stratum with other heavy rows instead of being averaged against the
+///   light tail, which is where a row-order ratio estimator picks up most
+///   of its bias. Each stratum's heaviest row is always included, so the
+///   rows that dominate the grid's cost are never extrapolated.
+/// * Within a stratum, the sampled rows run through the exact [`Spa`] and
+///   the unsampled rows get `out_nnz ≈ products × (Σout/Σproducts over the
+///   sample)`, clamped to the row's products and the output width — a
+///   per-stratum ratio estimator.
+/// * Each stratum's error contribution is bounded by its unsampled product
+///   mass times a ratio-spread band (4 sample standard deviations + a 5%
+///   floor, clamped to 1); a stratum with fewer than two informative
+///   samples is fully conservative (any ratio in `[0,1]` is possible).
+///
+/// Deterministic for a fixed `(budget, seed)`; `budget ≥ rows` returns the
+/// exact profile verbatim with a zero error bound.
+pub fn profile_workload_sampled(a: &Csr, b: &Csr, budget: usize, seed: u64) -> WorkloadEstimate {
+    assert_eq!(a.cols(), b.rows(), "dimension mismatch");
+    let rows = a.rows();
+    let budget = budget.max(1);
+    if budget >= rows {
+        let workload = profile_workload(a, b);
+        let out_ratio = if workload.total_products == 0 {
+            0.0
+        } else {
+            workload.out_nnz as f64 / workload.total_products as f64
+        };
+        return WorkloadEstimate {
+            budget,
+            seed,
+            sampled_rows: rows,
+            exact: true,
+            strata: vec![StratumEstimate {
+                rows: 0..rows,
+                sampled_rows: rows,
+                products: workload.total_products,
+                sampled_products: workload.total_products,
+                out_ratio,
+                out_err: 0,
+            }],
+            out_nnz_rel_err: 0.0,
+            workload,
+        };
+    }
+
+    // Cheap exact pass: per-row product mass in O(nnz(A)).
+    let row_products: Vec<u64> = (0..rows)
+        .map(|i| a.row_cols(i).iter().map(|&k| b.row_nnz(k as usize) as u64).sum())
+        .collect();
+
+    // Stratify over the product-sorted row order (ascending, index
+    // tie-break keeps the sort deterministic), cut into strata of equal
+    // product mass.
+    let mut order: Vec<usize> = (0..rows).collect();
+    order.sort_unstable_by_key(|&i| (row_products[i], i));
+    let mut prefix: Vec<u64> = Vec::with_capacity(rows + 1);
+    prefix.push(0);
+    for &i in &order {
+        let last = *prefix.last().expect("prefix non-empty");
+        prefix.push(last + row_products[i]);
+    }
+
+    let n_strata = budget.min(MAX_STRATA);
+    let bounds = mass_balanced_bounds(&prefix, n_strata);
+    let mut rng = SplitMix64::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    let mut spa = Spa::new(b.cols());
+
+    // Exact a_nnz/products everywhere; out_nnz filled per stratum below.
+    let mut profiles: Vec<RowProfile> = (0..rows)
+        .map(|i| RowProfile { a_nnz: a.row_nnz(i) as u32, products: row_products[i], out_nnz: 0 })
+        .collect();
+    let mut checksum = 0f64;
+    let mut strata = Vec::with_capacity(n_strata);
+    let mut err_abs = 0f64;
+    let mut sampled_total = 0usize;
+    let out_cap = b.cols() as u64;
+
+    for (s, w) in bounds.windows(2).enumerate() {
+        let (lo, hi) = (w[0], w[1]);
+        let len = hi - lo;
+        let stratum_products: u64 = prefix[hi] - prefix[lo];
+        if len == 0 {
+            strata.push(StratumEstimate {
+                rows: lo..hi,
+                sampled_rows: 0,
+                products: 0,
+                sampled_products: 0,
+                out_ratio: 0.0,
+                out_err: 0,
+            });
+            continue;
+        }
+        // Equal row quota per stratum, remainder to the leading strata.
+        let quota = (budget / n_strata + usize::from(s < budget % n_strata)).clamp(1, len);
+
+        // Sample `quota` distinct ranks: Floyd's algorithm for a uniform
+        // distinct draw, then force-include the stratum's heaviest row —
+        // with the ascending sort that is simply the last rank.
+        let mut picks: Vec<usize> = Vec::with_capacity(quota);
+        if quota == len {
+            picks.extend(lo..hi);
+        } else {
+            for j in (len - quota)..len {
+                let t = lo + rng.below((j + 1) as u64) as usize;
+                if picks.contains(&t) {
+                    picks.push(lo + j);
+                } else {
+                    picks.push(t);
+                }
+            }
+            let heavy = hi - 1;
+            if !picks.contains(&heavy) {
+                picks[0] = heavy;
+            }
+            picks.sort_unstable();
+        }
+
+        // Profile the sample exactly.
+        let mut stratum_checksum = 0f64;
+        let mut sampled_products = 0u64;
+        let mut sampled_out = 0u64;
+        let mut ratios: Vec<f64> = Vec::with_capacity(picks.len());
+        for &pos in &picks {
+            let i = order[pos];
+            let p = spa.profile_row(a, b, i, &mut stratum_checksum);
+            sampled_products += p.products;
+            sampled_out += p.out_nnz as u64;
+            if p.products > 0 {
+                ratios.push(p.out_nnz as f64 / p.products as f64);
+            }
+            profiles[i] = p;
+        }
+        sampled_total += picks.len();
+
+        // Ratio estimator for the unsampled remainder.
+        let out_ratio = if sampled_products == 0 {
+            0.0
+        } else {
+            sampled_out as f64 / sampled_products as f64
+        };
+        let mut pick_iter = picks.iter().copied().peekable();
+        for pos in lo..hi {
+            if pick_iter.peek() == Some(&pos) {
+                pick_iter.next();
+                continue;
+            }
+            let i = order[pos];
+            let est = (row_products[i] as f64 * out_ratio).round() as u64;
+            profiles[i].out_nnz = est.min(row_products[i]).min(out_cap) as u32;
+        }
+
+        // Scale the sampled checksum up by the uncovered product mass.
+        checksum += if sampled_products == 0 {
+            stratum_checksum
+        } else {
+            stratum_checksum * (stratum_products as f64 / sampled_products as f64)
+        };
+
+        // Error bound: unsampled product mass × ratio-spread band.
+        let unsampled_products = stratum_products - sampled_products;
+        let err = if unsampled_products == 0 {
+            0.0
+        } else if ratios.len() >= 2 {
+            let n = ratios.len() as f64;
+            let mean = ratios.iter().sum::<f64>() / n;
+            let var = ratios.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / (n - 1.0);
+            let band = (4.0 * var.sqrt() + 0.05).min(1.0);
+            unsampled_products as f64 * band
+        } else {
+            // Fewer than two informative samples: any compression ratio in
+            // [0, 1] is possible, so the whole unsampled mass is at risk.
+            unsampled_products as f64
+        };
+        err_abs += err;
+        strata.push(StratumEstimate {
+            rows: lo..hi,
+            sampled_rows: picks.len(),
+            products: stratum_products,
+            sampled_products,
+            out_ratio,
+            out_err: err.ceil() as u64,
         });
     }
 
-    (profiles, out_nnz, total_products, checksum)
+    let out_nnz: u64 = profiles.iter().map(|p| p.out_nnz as u64).sum();
+    let workload = Workload {
+        rows,
+        cols: b.cols(),
+        rows_b: b.rows(),
+        nnz_a: a.nnz() as u64,
+        nnz_b: b.nnz() as u64,
+        out_nnz,
+        total_products: row_products.iter().sum(),
+        profiles,
+        checksum,
+    };
+    WorkloadEstimate {
+        workload,
+        budget,
+        seed,
+        sampled_rows: sampled_total,
+        exact: false,
+        strata,
+        out_nnz_rel_err: err_abs / out_nnz.max(1) as f64,
+    }
 }
 
 #[cfg(test)]

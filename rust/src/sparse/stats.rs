@@ -79,6 +79,60 @@ pub fn row_stats(a: &Csr) -> RowStats {
     }
 }
 
+/// Row-nnz distribution summary — the shape statistics the sampled
+/// profiler's stratification responds to ([`crate::sim`]'s
+/// `profile_workload_sampled` cuts strata of equal product mass over the
+/// product-sorted row order, so skew here predicts how unequal the *row
+/// counts* per stratum get) and what `maple estval` prints next to each
+/// dataset's measured estimator error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RowNnzSummary {
+    pub rows: usize,
+    pub nnz: usize,
+    pub mean: f64,
+    /// Coefficient of variation (stddev / mean) of row nnz — 0 for
+    /// uniform rows, ≫1 for power-law graphs.
+    pub cv: f64,
+    pub max: usize,
+    /// The single heaviest row's share of all nonzeros.
+    pub max_share: f64,
+    /// Rows holding more than 2× the mean nnz ("heavy" rows).
+    pub heavy_rows: usize,
+    /// Fraction of all nonzeros held by heavy rows.
+    pub heavy_share: f64,
+}
+
+/// Compute [`RowNnzSummary`] in two passes over the row pointer.
+pub fn row_nnz_summary(a: &Csr) -> RowNnzSummary {
+    let rows = a.rows();
+    let nnz = a.nnz();
+    let mean = nnz as f64 / rows.max(1) as f64;
+    let mut sum_sq = 0f64;
+    let mut max = 0usize;
+    let mut heavy_rows = 0usize;
+    let mut heavy_nnz = 0usize;
+    for i in 0..rows {
+        let k = a.row_nnz(i);
+        sum_sq += (k * k) as f64;
+        max = max.max(k);
+        if k as f64 > 2.0 * mean {
+            heavy_rows += 1;
+            heavy_nnz += k;
+        }
+    }
+    let var = (sum_sq / rows.max(1) as f64 - mean * mean).max(0.0);
+    RowNnzSummary {
+        rows,
+        nnz,
+        mean,
+        cv: if mean > 0.0 { var.sqrt() / mean } else { 0.0 },
+        max,
+        max_share: if nnz == 0 { 0.0 } else { max as f64 / nnz as f64 },
+        heavy_rows,
+        heavy_share: if nnz == 0 { 0.0 } else { heavy_nnz as f64 / nnz as f64 },
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +164,42 @@ mod tests {
         assert_eq!(s.empty_rows, 4);
         assert_eq!(s.adjacency_fraction, 0.0);
         assert_eq!(s.mean_run_length, 0.0);
+    }
+
+    #[test]
+    fn row_nnz_summary_on_hand_matrix() {
+        // rows of nnz [4, 0, 2]: mean 2; row 0 sits exactly at 2×mean,
+        // which the strict > excludes from the heavy set.
+        let a = Csr::from_triplets(
+            3,
+            8,
+            vec![(0, 0, 1.0), (0, 1, 1.0), (0, 2, 1.0), (0, 3, 1.0), (2, 0, 1.0), (2, 5, 1.0)],
+        );
+        let s = row_nnz_summary(&a);
+        assert_eq!((s.rows, s.nnz, s.max), (3, 6, 4));
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.max_share - 4.0 / 6.0).abs() < 1e-12);
+        assert_eq!(s.heavy_rows, 0);
+        assert_eq!(s.heavy_share, 0.0);
+        // Add a dominant row: nnz [4, 0, 2, 10] → mean 4, row 3 is heavy.
+        let mut t: Vec<(usize, usize, f32)> =
+            vec![(0, 0, 1.0), (0, 1, 1.0), (0, 2, 1.0), (0, 3, 1.0), (2, 0, 1.0), (2, 5, 1.0)];
+        t.extend((0..10).map(|c| (3, c, 1.0)));
+        let s = row_nnz_summary(&Csr::from_triplets(4, 12, t));
+        assert_eq!(s.heavy_rows, 1);
+        assert!((s.heavy_share - 10.0 / 16.0).abs() < 1e-12);
+        assert!(s.cv > 0.5);
+    }
+
+    #[test]
+    fn row_nnz_summary_degenerate_inputs() {
+        let s = row_nnz_summary(&Csr::zero(4, 4));
+        assert_eq!((s.rows, s.nnz, s.max, s.heavy_rows), (4, 0, 0, 0));
+        assert_eq!((s.mean, s.cv, s.max_share, s.heavy_share), (0.0, 0.0, 0.0, 0.0));
+        let s = row_nnz_summary(&Csr::identity(10));
+        assert_eq!((s.max, s.heavy_rows), (1, 0));
+        assert_eq!(s.cv, 0.0);
+        assert!((s.max_share - 0.1).abs() < 1e-12);
     }
 
     #[test]

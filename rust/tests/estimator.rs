@@ -1,0 +1,145 @@
+//! Property coverage for the sampled statistical profiler
+//! (`profile_workload_sampled`) against the exact pass: the exact-by-
+//! construction fields really are exact, the claimed out-nnz error bound
+//! holds, runs are deterministic for a fixed `(budget, seed)`, and a
+//! budget that covers every row degenerates to the exact profile verbatim.
+//!
+//! Same property-test discipline as `cache.rs`: no proptest crate,
+//! deterministic SplitMix64-driven case sweeps, failures print the
+//! offending seed.
+
+use maple::sim::{estimate_in_band, profile_workload, profile_workload_sampled, ESTIMATE_BAND};
+use maple::sparse::gen::{generate, Profile};
+use maple::sparse::{Csr, SplitMix64};
+
+/// Random square CSR from a seed, cycling through the three structural
+/// families (uniform / power-law / banded) so every ratio-estimator regime
+/// is hit.
+fn arb_square(seed: u64) -> Csr {
+    let mut r = SplitMix64::new(seed);
+    let n = 40 + r.below(160) as usize;
+    let nnz = (n + r.below((n * n / 8).max(1) as u64) as usize).min(n * n);
+    let profile = match r.below(3) {
+        0 => Profile::Uniform,
+        1 => Profile::PowerLaw { alpha: 0.6 + r.unit_f64() },
+        _ => Profile::Banded { rel_bandwidth: 0.1, cluster: 1 + r.below(4) as usize },
+    };
+    generate(n, n, nnz.max(1), profile, seed.wrapping_mul(0x9E37_79B9))
+}
+
+#[test]
+fn prop_sampled_profile_keeps_exact_fields_exact_and_bounds_honest() {
+    for seed in 0..48 {
+        let a = arb_square(seed);
+        let exact = profile_workload(&a, &a);
+        for budget in [9usize, 24, 72] {
+            let est = profile_workload_sampled(&a, &a, budget, seed);
+            let w = &est.workload;
+            // The cheap pass is exact: dimensions, nnz, and product mass.
+            assert_eq!(w.rows, exact.rows, "seed {seed} budget {budget}");
+            assert_eq!(w.cols, exact.cols);
+            assert_eq!(w.rows_b, exact.rows_b);
+            assert_eq!(w.nnz_a, exact.nnz_a);
+            assert_eq!(w.nnz_b, exact.nnz_b);
+            assert_eq!(w.total_products, exact.total_products);
+            for (i, (p, q)) in w.profiles.iter().zip(&exact.profiles).enumerate() {
+                assert_eq!(p.a_nnz, q.a_nnz, "seed {seed} row {i}");
+                assert_eq!(p.products, q.products, "seed {seed} row {i}");
+                // Estimated rows stay inside the structural caps.
+                assert!(p.out_nnz as u64 <= p.products.min(w.cols as u64));
+            }
+            // The claimed error band must cover the measured error.
+            let measured = (w.out_nnz as f64 - exact.out_nnz as f64).abs();
+            let claimed = est.out_nnz_rel_err * (w.out_nnz.max(1)) as f64;
+            assert!(
+                measured <= claimed + 1e-9,
+                "seed {seed} budget {budget}: |{} - {}| = {measured} > claimed {claimed}",
+                w.out_nnz,
+                exact.out_nnz,
+            );
+            // Budget accounting and stratum tiling.
+            assert!(est.sampled_rows <= budget.max(1), "seed {seed} budget {budget}");
+            assert_eq!(est.strata.first().expect("strata non-empty").rows.start, 0);
+            assert_eq!(est.strata.last().expect("strata non-empty").rows.end, w.rows);
+            for pair in est.strata.windows(2) {
+                assert_eq!(pair[0].rows.end, pair[1].rows.start, "seed {seed}");
+            }
+            // Determinism: a fixed (budget, seed) reproduces every bit.
+            let again = profile_workload_sampled(&a, &a, budget, seed);
+            assert_eq!(again, est, "seed {seed} budget {budget}");
+            assert_eq!(again.workload.checksum.to_bits(), w.checksum.to_bits());
+        }
+    }
+}
+
+#[test]
+fn full_budget_degenerates_to_the_exact_profile() {
+    for seed in [1u64, 13, 27] {
+        let a = arb_square(seed);
+        let exact = profile_workload(&a, &a);
+        for budget in [a.rows(), a.rows() + 100, usize::MAX] {
+            let est = profile_workload_sampled(&a, &a, budget, seed);
+            assert!(est.exact, "seed {seed}");
+            assert_eq!(est.workload, exact, "seed {seed}");
+            assert_eq!(est.workload.checksum.to_bits(), exact.checksum.to_bits());
+            assert_eq!(est.out_nnz_rel_err, 0.0);
+            assert_eq!(est.sampled_rows, a.rows());
+        }
+    }
+}
+
+#[test]
+fn dominant_rows_are_always_profiled_exactly() {
+    // One row holding half the matrix's work: the stratified sampler must
+    // include it (each stratum force-includes its heaviest row), so its
+    // profile is never extrapolated.
+    let mut t: Vec<(u32, u32, f32)> = (0..300u32).map(|j| (7, j, 1.0)).collect();
+    for i in 0..300u32 {
+        if i != 7 {
+            t.push((i, (i * 3) % 300, 0.5));
+        }
+    }
+    let a = Csr::from_triplets(300, 300, t);
+    let exact = profile_workload(&a, &a);
+    let heavy = (0..300).max_by_key(|&i| exact.profiles[i].products).expect("rows");
+    assert_eq!(heavy, 7);
+    for seed in 0..8 {
+        let est = profile_workload_sampled(&a, &a, 32, seed);
+        assert!(!est.exact);
+        assert_eq!(est.workload.profiles[7], exact.profiles[7], "seed {seed}");
+    }
+}
+
+#[test]
+fn rectangular_and_empty_workloads_sample_cleanly() {
+    let a = generate(30, 50, 200, Profile::Uniform, 5);
+    let b = generate(50, 20, 180, Profile::Uniform, 9);
+    let exact = profile_workload(&a, &b);
+    for (budget, seed) in [(8usize, 3u64), (16, 11)] {
+        let est = profile_workload_sampled(&a, &b, budget, seed);
+        assert_eq!(est.workload.rows, 30);
+        assert_eq!(est.workload.cols, 20);
+        assert_eq!(est.workload.rows_b, 50);
+        assert_eq!(est.workload.total_products, exact.total_products);
+        let measured = (est.workload.out_nnz as f64 - exact.out_nnz as f64).abs();
+        let claimed = est.out_nnz_rel_err * (est.workload.out_nnz.max(1)) as f64;
+        assert!(measured <= claimed + 1e-9, "budget {budget} seed {seed}");
+    }
+
+    let z = Csr::zero(9, 9);
+    let est = profile_workload_sampled(&z, &z, 3, 1);
+    assert_eq!(est.workload.out_nnz, 0);
+    assert_eq!(est.workload.total_products, 0);
+    assert_eq!(est.out_nnz_rel_err, 0.0);
+    assert_eq!(est.workload.checksum, 0.0);
+}
+
+#[test]
+fn estimate_band_semantics() {
+    assert_eq!(ESTIMATE_BAND, 0.10);
+    assert!(estimate_in_band(100.0, 109.0));
+    assert!(!estimate_in_band(100.0, 111.0));
+    // Absolute floor of 1 near zero: ±0.1 is fine, ±0.5 is not.
+    assert!(estimate_in_band(0.0, 0.05));
+    assert!(!estimate_in_band(0.0, 0.5));
+}

@@ -1,0 +1,182 @@
+//! Integration coverage for the search-driven design-space explorer: the
+//! exhaustive cross-check on a grid small enough to prove the argmin, the
+//! two-tier ↔ exact equivalence when the sample budget covers every row,
+//! the warm-journal re-run (zero fresh simulations), and the budget
+//! accounting + determinism of the evolution strategy.
+
+use std::path::PathBuf;
+
+use maple::config::AcceleratorConfig;
+use maple::coordinator::Policy;
+use maple::sim::{
+    check_against_exhaustive, Axis, DesignSpace, DiskCache, ExploreSpec, Explorer, Objective,
+    SimEngine, Strategy, Tier, WorkloadKey,
+};
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("maple-explore-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Two Table-I datasets (down-scaled) over a base config.
+fn two_dataset_space(macs: Vec<usize>) -> DesignSpace {
+    DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+        .with_axis(Axis::Dataset(vec![
+            WorkloadKey::suite("wv", 7, 64),
+            WorkloadKey::suite("fb", 7, 64),
+        ]))
+        .with_axis(Axis::macs_per_pe(macs))
+}
+
+#[test]
+fn exact_hill_climb_finds_the_exhaustive_argmin_on_a_two_cell_axis() {
+    // On a single searchable axis of length 2, the first climb provably
+    // evaluates both cells (the start point plus its only neighbour), so
+    // the search best IS the exhaustive argmin — not just within the band.
+    let engine = SimEngine::new();
+    let space = two_dataset_space(vec![1, 32]);
+    let spec = ExploreSpec {
+        strategy: Strategy::HillClimb,
+        tier: Tier::Exact,
+        budget: 8,
+        ..ExploreSpec::default()
+    };
+    let result = Explorer::new(&engine, space.clone(), spec).run().unwrap();
+    let grid = engine.sweep(&space).unwrap();
+    assert_eq!(result.grid_cells, grid.cell_count());
+    assert_eq!(result.grid_cells, 4);
+
+    let check = check_against_exhaustive(&result, &grid, 0);
+    assert!(check.all_in_band(), "{:?}", check.per_dataset);
+    for best in &check.per_dataset {
+        assert!(best.argmin_match, "search missed the argmin: {best:?}");
+    }
+    // Searches stay inside their dataset's sub-grid slice.
+    let per = result.grid_cells / 2;
+    for (d, s) in result.searches.iter().enumerate() {
+        assert_eq!(s.cells, per);
+        assert!(s.best_index >= d * per && s.best_index < (d + 1) * per, "{s:?}");
+        assert_eq!(s.best_coords[0].axis, "dataset");
+        assert_eq!(s.best_coords[0].index, d);
+        assert_eq!(s.evals_exact + s.memo_hits, 8, "every call is exact or memoized");
+        assert_eq!(s.journal_hits, 0);
+    }
+}
+
+#[test]
+fn two_tier_with_a_full_sample_budget_matches_the_exact_tier() {
+    // A sample budget covering every row degenerates the estimate tier to
+    // the exact workload, so the two runs walk identical trajectories and
+    // agree bit-for-bit on the optimum.
+    let engine = SimEngine::new();
+    let space = two_dataset_space(vec![1, 2, 4, 8]);
+    let base = ExploreSpec { budget: 12, elite: 3, seed: 7, ..ExploreSpec::default() };
+    let exact = Explorer::new(
+        &engine,
+        space.clone(),
+        ExploreSpec { tier: Tier::Exact, ..base.clone() },
+    )
+    .run()
+    .unwrap();
+    let two = Explorer::new(
+        &engine,
+        space,
+        ExploreSpec { tier: Tier::TwoTier, sample_budget: 1 << 20, ..base },
+    )
+    .run()
+    .unwrap();
+    for (e, t) in exact.searches.iter().zip(&two.searches) {
+        assert_eq!(e.best_index, t.best_index, "{}", e.dataset);
+        assert_eq!(e.best_fitness.to_bits(), t.best_fitness.to_bits(), "{}", e.dataset);
+        assert_eq!(e.best, t.best, "{}", e.dataset);
+        assert_eq!(t.estimate_fitness, Some(t.best_fitness), "degenerate estimate is exact");
+        let e_traj: Vec<(usize, usize)> =
+            e.trajectory.iter().map(|p| (p.calls, p.index)).collect();
+        let t_traj: Vec<(usize, usize)> =
+            t.trajectory.iter().map(|p| (p.calls, p.index)).collect();
+        assert_eq!(e_traj, t_traj, "{}", e.dataset);
+        assert!(t.evals_exact <= 3, "elite re-scoring is bounded by `elite`");
+    }
+}
+
+#[test]
+fn warm_journal_rerun_answers_every_call_from_disk() {
+    let dir = scratch_dir("journal");
+    let space = two_dataset_space(vec![1, 2, 4, 8]);
+    let spec = ExploreSpec {
+        strategy: Strategy::Evolution { mu: 2, lambda: 4 },
+        tier: Tier::TwoTier,
+        budget: 16,
+        elite: 3,
+        sample_budget: 32,
+        ..ExploreSpec::default()
+    };
+
+    let cold_engine = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let cold = Explorer::new(&cold_engine, space.clone(), spec.clone()).run().unwrap();
+    assert!(cold.evals_total() > 0);
+    assert_eq!(cold.journal_hits(), 0);
+    // One journal artifact per tier touched (estimate search + exact elite).
+    assert_eq!(cold_engine.disk_cache().unwrap().stats().evals, 2);
+
+    let warm_engine = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+    let warm = Explorer::new(&warm_engine, space, spec).run().unwrap();
+    assert_eq!(warm.evals_total(), 0, "a warm re-run must not simulate");
+    assert!(warm.journal_hits() > 0);
+    for (c, w) in cold.searches.iter().zip(&warm.searches) {
+        assert_eq!(c.best_index, w.best_index, "{}", c.dataset);
+        assert_eq!(c.best_fitness.to_bits(), w.best_fitness.to_bits(), "{}", c.dataset);
+        assert_eq!(c.best, w.best, "{}", c.dataset);
+        let c_traj: Vec<(usize, usize)> =
+            c.trajectory.iter().map(|p| (p.calls, p.index)).collect();
+        let w_traj: Vec<(usize, usize)> =
+            w.trajectory.iter().map(|p| (p.calls, p.index)).collect();
+        assert_eq!(c_traj, w_traj, "warm runs walk the cold trajectory");
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn evolution_budget_accounting_is_exact_and_deterministic() {
+    let engine = SimEngine::new();
+    let space = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+        .with_axis(Axis::Dataset(vec![WorkloadKey::suite("wv", 7, 64)]))
+        .with_axis(Axis::macs_per_pe(vec![1, 2, 4, 8, 16, 32]))
+        .with_axis(Axis::Policy(vec![
+            Policy::RoundRobin,
+            Policy::Chunked,
+            Policy::GreedyBalance,
+        ]));
+    let spec = ExploreSpec {
+        objective: Objective::Edp,
+        strategy: Strategy::Evolution { mu: 4, lambda: 8 },
+        tier: Tier::TwoTier,
+        budget: 40,
+        elite: 3,
+        sample_budget: 48,
+        seed: 11,
+    };
+    let a = Explorer::new(&engine, space.clone(), spec.clone()).run().unwrap();
+    let b = Explorer::new(&engine, space, spec).run().unwrap();
+
+    for s in &a.searches {
+        // Every one of the 40 fitness calls is a fresh estimate or a memo
+        // hit (no disk cache ⇒ no journal hits), and exact simulations
+        // only happen for the elite re-scoring.
+        assert_eq!(s.evals_estimate + s.memo_hits, 40, "{s:?}");
+        assert_eq!(s.journal_hits, 0);
+        assert!(s.evals_exact >= 1 && s.evals_exact <= 3, "{s:?}");
+        assert!(s.trajectory.windows(2).all(|p| p[1].fitness < p[0].fitness));
+    }
+    for (x, y) in a.searches.iter().zip(&b.searches) {
+        assert_eq!(x.best_index, y.best_index);
+        assert_eq!(x.best_fitness.to_bits(), y.best_fitness.to_bits());
+        assert_eq!(x.evals_estimate, y.evals_estimate);
+        assert_eq!(x.memo_hits, y.memo_hits);
+        assert_eq!(x.evals_exact, y.evals_exact);
+    }
+    assert!(a.eval_fraction() > 0.0 && a.eval_fraction() <= 1.0);
+}
