@@ -5,13 +5,14 @@
 #   make bench          all harness-less benches, release mode
 #   make sweep-noc      topology × MACs design-space sweep on the wv workload
 #   make sweep-sharded  2-way sharded sweep + merge, diffed vs the unsharded run
+#   make chaos          fault-injection harness: coordinator + workers, one faulty
 #   make explore        guided search vs the exhaustive grid + estval gate
 #   make artifacts      AOT-lower the Pallas kernel to HLO text (needs jax)
 
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify fmt clippy test bench sweep-noc sweep-sharded explore artifacts
+.PHONY: verify fmt clippy test bench sweep-noc sweep-sharded chaos explore artifacts
 
 verify: fmt clippy test
 
@@ -53,6 +54,14 @@ sweep-sharded:
 	        --axis macs=2,4 --csv > target/sweep-unsharded.csv && \
 	diff target/sweep-merged.csv target/sweep-unsharded.csv && \
 	echo "sharded run == unsharded run"
+
+# Distributed-sweep rehearsal: one coordinator + three in-process workers
+# over loopback TCP, worker w0 dying mid-lease. The command itself exits
+# non-zero unless the merged grid is bit-identical to the unsharded sweep
+# of the same flags (survivors must steal and recompute the lost lease).
+chaos:
+	cd $(RUST_DIR) && $(CARGO) run --release -- chaos --dataset wv,fb --scale 64 \
+	        --axis macs=2,4 --workers 3 --shards 6 --fault die --lease-ms 500
 
 # Search-driven design-space exploration: validate the sampled profiler
 # against the exact pass (estval exits non-zero outside the agreement

@@ -26,9 +26,10 @@ use maple::config::{axis, AcceleratorConfig, ConfigAxis};
 use maple::coordinator::Policy;
 use maple::report;
 use maple::sim::{
-    check_against_exhaustive, explore, profile_workload, profile_workload_sampled, shard,
-    simulate_workload, Axis, CellModel, DesignSpace, DiskCache, ExploreSpec, Explorer,
-    Objective, ShardSpec, SimEngine, Strategy, SweepResult, Tier, WorkloadKey, ESTIMATE_BAND,
+    check_against_exhaustive, explore, profile_workload, profile_workload_sampled, run_chaos, shard,
+    simulate_workload, Axis, CellModel, ChaosSpec, Coordinator, DesignSpace, DiskCache, ExploreSpec,
+    Explorer, FaultPlan, LeasePolicy, Objective, ServiceConfig, ShardSpec, SimEngine, Strategy,
+    SweepOutcome, SweepResult, Tier, WorkerConfig, WorkloadKey, ESTIMATE_BAND,
 };
 use maple::sparse::{stats, suite};
 
@@ -143,14 +144,42 @@ COMMANDS:
            estimator's claimed bound, and the simulated cycle/energy error
            across the paper configs; exits non-zero if any dataset leaves
            the agreement band
-  merge  <dir> [--pivot <axis>] [--bench-json <path>]
+  merge  <dir> [--allow-partial] [--pivot <axis>] [--bench-json <path>]
            Merge the shard artifacts in <dir> back into the full sweep
            grid. Validates compatibility (one fingerprint, one shard
            count, no gaps/overlaps/duplicates) and exits non-zero on any
            violation; on success renders exactly what the unsharded sweep
-           would have printed. --bench-json additionally writes the
-           machine-readable BENCH_sweep.json (shard wall-times, cells/sec,
-           warm-vs-cold cache hits).
+           would have printed. --allow-partial downgrades only the
+           missing-shards violation into a loud partial render of the
+           completed sub-grid (gaps become provenance lines); corrupt or
+           incompatible artifacts stay fatal. --bench-json additionally
+           writes the machine-readable BENCH_sweep.json (shard
+           wall-times, cells/sec, warm-vs-cold cache hits).
+  serve  --listen <host:port> [space flags as in sweep] [--shards N]
+           [--lease-ms MS] [--max-wall-ms MS] [--allow-partial]
+           Run the distributed-sweep coordinator: split the design space
+           into N shard leases and serve them to connecting workers over
+           TCP. Expired leases re-queue with exponential backoff
+           (work-stealing); workers that fail repeatedly are quarantined;
+           duplicate submissions are accepted idempotently and
+           byte-divergent ones rejected loudly. On completion renders
+           exactly what the unsharded sweep prints; if --max-wall-ms
+           passes first the run exits non-zero (or renders the completed
+           sub-grid with gap provenance under --allow-partial).
+  work   --connect <host:port> [--worker-id ID] [--threads N]
+           [--fault PLAN] [--fault-seed S] [--no-cache]
+           Run one sweep worker: register, lease, compute, submit until
+           the coordinator reports the sweep done. Survives coordinator
+           restarts by reconnecting and re-registering (bounded retry
+           budget, so a dead coordinator is an error, never a hang).
+           --fault arms the deterministic fault injector with a plan
+           (drop:N | corrupt:M | stall | dup | kill | die).
+  chaos  [space flags as in sweep] [--workers N] [--shards N]
+           [--fault PLAN] [--fault-seed S] [--lease-ms MS]
+           Fault-injection harness: run a coordinator plus N in-process
+           workers over loopback TCP with worker w0 executing the fault
+           plan, then verify the merged grid is bit-identical to the
+           unsharded sweep of the same space (exit non-zero otherwise).
   crossval [--scale N] [--datasets wv,fb,...] [--seed S] [--policy P]
            DES vs analytic cross-validation over the four paper configs;
            exits non-zero if any cell leaves the documented agreement band
@@ -545,7 +574,10 @@ fn estval_cmd(args: &Args, csv: bool) -> CliResult {
 /// directory. Any compatibility violation — mixed fingerprints or shard
 /// counts, missing/duplicate shards, an undecodable artifact — is a hard
 /// error (non-zero exit); success renders exactly what the unsharded
-/// sweep of the same design space prints.
+/// sweep of the same design space prints. `--allow-partial` downgrades
+/// exactly one violation — missing shards — into a loud partial render:
+/// the completed sub-grid plus a provenance block naming every gap.
+/// Corrupt or incompatible artifacts stay fatal even then.
 fn merge_cmd(args: &Args, csv: bool) -> CliResult {
     // The shard directory is positional but may come before or after the
     // flags; skip over flags *and* the values of the value-bearing ones
@@ -561,9 +593,21 @@ fn merge_cmd(args: &Args, csv: bool) -> CliResult {
                 && (*i == 0 || !VALUE_FLAGS.contains(&args.argv[i - 1].as_str()))
         })
         .map(|(_, s)| s)
-        .ok_or("usage: maple merge <dir> [--pivot <axis>] [--bench-json <path>] [--csv]")?;
+        .ok_or(
+            "usage: maple merge <dir> [--allow-partial] [--pivot <axis>] [--bench-json <path>]",
+        )?;
     let shards = shard::read_dir(std::path::Path::new(dir.as_str()))?;
-    let grid = shard::merge(&shards)?;
+    let grid = match shard::merge(&shards) {
+        Ok(grid) => grid,
+        Err(e @ shard::ShardError::MissingShards { .. }) if args.flag("--allow-partial") => {
+            let partial = shard::merge_partial(&shards)?;
+            eprintln!("merge: {e}");
+            eprint!("{}", report::partial_provenance(&partial));
+            print!("{}", report::partial_sweep_report(&partial, !csv));
+            return Ok(());
+        }
+        Err(e) => return Err(e.into()),
+    };
     eprint!("{}", report::merge_provenance(&shards, &grid));
     if let Some(path) = args.opt("--bench-json") {
         std::fs::write(path, report::bench_sweep_json(&shards, &grid))
@@ -571,6 +615,148 @@ fn merge_cmd(args: &Args, csv: bool) -> CliResult {
         eprintln!("bench: wrote {path}");
     }
     render_grid(&grid, args.opt("--pivot"), !csv)
+}
+
+/// The `serve` command: run the distributed-sweep coordinator. Builds the
+/// same design space as `sweep` from the same flags, splits it `--shards`
+/// ways, and leases the shards to every worker that connects (`maple
+/// work`). Expired leases re-queue with backoff (work-stealing), repeat
+/// failers are quarantined, and submissions merge idempotently; on
+/// completion the stdout rendering is byte-identical to the unsharded
+/// `maple sweep`. When `--max-wall-ms` passes first the run is a loud
+/// error — or, under `--allow-partial`, the completed sub-grid with gap
+/// provenance.
+fn serve_cmd(args: &Args, csv: bool) -> CliResult {
+    let space = space_from_args(args)?;
+    let listen = args.opt("--listen").ok_or("serve requires --listen <host:port>")?;
+    let shard_count = args.parse_or("--shards", 8usize)?;
+    let cfg = ServiceConfig {
+        shard_count,
+        lease: LeasePolicy {
+            lease_ms: args.parse_or("--lease-ms", 30_000u64)?,
+            ..LeasePolicy::default()
+        },
+        max_wall_ms: args.parse_or("--max-wall-ms", 600_000u64)?,
+        allow_partial: args.flag("--allow-partial"),
+        profile_threads: 1,
+    };
+    let coordinator = Coordinator::bind(listen, cfg)?;
+    eprintln!(
+        "serving {shard_count} shards (fingerprint {:016x}) on {}",
+        space.fingerprint()?,
+        coordinator.local_addr()?
+    );
+    let (outcome, stats) = coordinator.run(&space)?;
+    eprint!("{}", report::service_provenance(&stats));
+    match outcome {
+        SweepOutcome::Full(grid) => render_grid(&grid, args.opt("--pivot"), !csv),
+        SweepOutcome::Partial(partial) => {
+            eprint!("{}", report::partial_provenance(&partial));
+            print!("{}", report::partial_sweep_report(&partial, !csv));
+            Ok(())
+        }
+    }
+}
+
+/// The `work` command: one sweep worker. Connects to a coordinator,
+/// verifies the design-space fingerprint it receives against its own
+/// decode, then leases, computes, and submits shards until the
+/// coordinator says done. Transport failures — including a coordinator
+/// restart — are survived by reconnecting and idempotently
+/// re-registering; `--fault` arms the deterministic fault injector
+/// (chaos testing against a live service).
+fn work_cmd(args: &Args) -> CliResult {
+    let addr = args.opt("--connect").ok_or("work requires --connect <host:port>")?;
+    let mut engine = make_engine(args);
+    if let Some(threads) = args.opt("--threads") {
+        let threads: usize =
+            threads.parse().map_err(|_| format!("bad value for --threads: {threads}"))?;
+        engine = engine.with_threads(threads);
+    }
+    let fault = match args.opt("--fault") {
+        Some(spec) => Some(FaultPlan::parse(spec, args.parse_or("--fault-seed", 7u64)?)?),
+        None => None,
+    };
+    let cfg = WorkerConfig { fault, ..WorkerConfig::named(args.opt_or("--worker-id", "")) };
+    let summary = maple::sim::service::worker::run(addr, engine, cfg)?;
+    eprintln!(
+        "worker {}: {} leases, {} submitted, {} duplicate, {} rejected, {} reconnects{}",
+        summary.id,
+        summary.leases,
+        summary.submitted,
+        summary.duplicates,
+        summary.rejected,
+        summary.reconnects,
+        if summary.died { " — died (fault)" } else { "" }
+    );
+    for e in &summary.events {
+        eprintln!("  fault {}: {}", e.kind, e.detail);
+    }
+    Ok(())
+}
+
+/// The `chaos` command: the fault-injection harness, self-contained. One
+/// coordinator plus `--workers` in-process workers run the sweep over
+/// loopback TCP while worker w0 executes the `--fault` plan; the merged
+/// outcome is then checked bit-for-bit against the unsharded sweep of
+/// the same space. Exit status is the verdict: zero only when the
+/// service converged to the exact reference grid despite the faults.
+fn chaos_cmd(args: &Args, csv: bool) -> CliResult {
+    let space = space_from_args(args)?;
+    let workers = args.parse_or("--workers", 3usize)?;
+    let plan =
+        FaultPlan::parse(args.opt_or("--fault", "die"), args.parse_or("--fault-seed", 7u64)?)?;
+    let service = ServiceConfig {
+        shard_count: args.parse_or("--shards", 6usize)?,
+        lease: LeasePolicy {
+            lease_ms: args.parse_or("--lease-ms", 2_000u64)?,
+            ..LeasePolicy::default()
+        },
+        max_wall_ms: 600_000,
+        allow_partial: false,
+        profile_threads: 1,
+    };
+    eprintln!("chaos: {workers} workers, w0 runs plan {plan}");
+    let spec = ChaosSpec { workers, faulty: 0, plan: Some(plan), service };
+    let chaos = run_chaos(&space, &spec, &|| make_engine(args))?;
+    eprint!("{}", report::service_provenance(&chaos.stats));
+    for w in &chaos.workers {
+        match w {
+            Ok(r) => {
+                eprintln!(
+                    "worker {}: {} leases, {} submitted, {} reconnects{}",
+                    r.id,
+                    r.leases,
+                    r.submitted,
+                    r.reconnects,
+                    if r.died { " — died (fault)" } else { "" }
+                );
+                for e in &r.events {
+                    eprintln!("  fault {}: {}", e.kind, e.detail);
+                }
+            }
+            Err(e) => eprintln!("worker error (an expected chaos outcome): {e}"),
+        }
+    }
+    let reference = make_engine(args).sweep(&space)?;
+    match chaos.outcome {
+        SweepOutcome::Full(grid) if grid == reference => {
+            eprintln!("chaos OK: merged sweep is bit-identical to the unsharded reference");
+            render_grid(&grid, args.opt("--pivot"), !csv)
+        }
+        SweepOutcome::Full(_) => {
+            Err("chaos FAILED: merged sweep diverges from the unsharded reference".into())
+        }
+        SweepOutcome::Partial(partial) => {
+            eprint!("{}", report::partial_provenance(&partial));
+            Err(format!(
+                "chaos FAILED: sweep ended partial ({}/{} cells)",
+                partial.covered_cells(),
+                partial.total_cells
+            )
+            .into())
+        }
+    }
 }
 
 #[cfg(feature = "runtime")]
@@ -686,6 +872,9 @@ fn main() -> CliResult {
         "explore" => explore_cmd(&args, csv)?,
         "estval" => estval_cmd(&args, csv)?,
         "merge" => merge_cmd(&args, csv)?,
+        "serve" => serve_cmd(&args, csv)?,
+        "work" => work_cmd(&args)?,
+        "chaos" => chaos_cmd(&args, csv)?,
         "crossval" => {
             let scale = args.parse_or("--scale", 16usize)?;
             let seed = args.parse_or("--seed", 7u64)?;
@@ -725,9 +914,9 @@ fn main() -> CliResult {
 
 /// Every dispatchable command name, kept in sync with the `main` match (a
 /// unit test walks USAGE against this list).
-const COMMANDS: [&str; 13] = [
-    "datasets", "fig3", "fig8", "fig9", "simulate", "sweep", "explore", "estval", "merge",
-    "crossval", "cache", "config", "validate",
+const COMMANDS: [&str; 16] = [
+    "datasets", "fig3", "fig8", "fig9", "simulate", "sweep", "explore", "estval", "merge", "serve",
+    "work", "chaos", "crossval", "cache", "config", "validate",
 ];
 
 /// The closest known command within a small edit distance — the

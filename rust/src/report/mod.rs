@@ -4,7 +4,10 @@
 use crate::accel::fig8;
 use crate::config::AcceleratorConfig;
 use crate::energy::TechModel;
-use crate::sim::{CacheStats, ExhaustiveCheck, ExploreResult, SimResult, SweepResult, SweepShard};
+use crate::sim::{
+    CacheStats, ExhaustiveCheck, ExploreResult, PartialSweep, ServiceStats, SimResult,
+    SweepResult, SweepShard,
+};
 use crate::sparse::suite::TABLE_I;
 
 /// Render a markdown table.
@@ -312,6 +315,88 @@ pub fn merge_provenance(shards: &[SweepShard], grid: &SweepResult) -> String {
             sh.meta.disk_hits
         ));
     }
+    s
+}
+
+/// Provenance of a distributed sweep: the service counters that say *how*
+/// the grid was assembled — worker count, lease reassignments (work
+/// stolen from dead or stalled workers), idempotent duplicates, rejected
+/// submissions, quarantines. `maple serve` prints this to stderr; the
+/// chaos CI job greps the `reassignments:` line to prove the kill was
+/// actually recovered from, so the indented counter lines are part of the
+/// format contract.
+pub fn service_provenance(stats: &ServiceStats) -> String {
+    let mut s = format!(
+        "service: fingerprint {:016x}: {}/{} shards from {} workers in {} ms\n",
+        stats.fingerprint, stats.completed, stats.shard_count, stats.workers, stats.wall_ms
+    );
+    s.push_str(&format!("  reassignments: {}\n", stats.reassignments));
+    s.push_str(&format!("  duplicates: {}\n", stats.duplicates));
+    s.push_str(&format!("  rejected: {}\n", stats.rejected));
+    s.push_str(&format!("  quarantined: {}\n", stats.quarantined));
+    s
+}
+
+/// Provenance of a partial merge (`--allow-partial`): which shards made it,
+/// which cell spans are missing, and how much of the grid the rendered
+/// table actually covers. Loud by design — a partial result must never
+/// read like a full one.
+pub fn partial_provenance(partial: &PartialSweep) -> String {
+    let mut s = format!(
+        "PARTIAL merge: {} of {} shards (fingerprint {:016x}): {}/{} cells covered\n",
+        partial.present.len(),
+        partial.shard_count,
+        partial.fingerprint,
+        partial.covered_cells(),
+        partial.total_cells
+    );
+    for spec in &partial.present {
+        let r = spec.range(partial.total_cells);
+        s.push_str(&format!("  shard {}: cells [{}..{})\n", spec, r.start, r.end));
+    }
+    for span in &partial.missing_spans {
+        s.push_str(&format!(
+            "  MISSING cells [{}..{}) ({} cells)\n",
+            span.start,
+            span.end,
+            span.len()
+        ));
+    }
+    s
+}
+
+/// The completed sub-grid of a partial merge as a table — the
+/// [`sweep_axis_report`] layout (same columns, same label order) over only
+/// the cells that arrived, headed by an explicit partial banner so the
+/// output can never be mistaken for a full sweep.
+pub fn partial_sweep_report(partial: &PartialSweep, markdown: bool) -> String {
+    let mut shown: Vec<usize> =
+        (0..partial.dims.len()).filter(|&i| partial.dims[i].len() > 1).collect();
+    if shown.is_empty() {
+        shown = (0..partial.dims.len()).collect();
+    }
+    let mut header: Vec<&str> = shown.iter().map(|&i| partial.dims[i].name).collect();
+    header.extend(["cycles", "energy uJ"]);
+    let rows: Vec<Vec<String>> = partial
+        .segments
+        .iter()
+        .flat_map(|(_, cells)| cells.iter())
+        .map(|cell| {
+            let mut row: Vec<String> =
+                shown.iter().map(|&i| cell.coords[i].label.clone()).collect();
+            row.push(cell.cycles(partial.cell_model).to_string());
+            row.push(format!("{:.3}", cell.analytic.energy.total_pj() / 1e6));
+            row
+        })
+        .collect();
+    let mut s = format!(
+        "partial sweep: {}/{} cells ({} of {} shards missing)\n",
+        partial.covered_cells(),
+        partial.total_cells,
+        partial.missing_shards(),
+        partial.shard_count
+    );
+    s.push_str(&if markdown { markdown_table(&header, &rows) } else { csv(&header, &rows) });
     s
 }
 
@@ -772,6 +857,45 @@ mod tests {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");
         }
         assert_eq!(json.matches("\"index\":").count(), 2, "{json}");
+    }
+
+    #[test]
+    fn service_and_partial_reports_are_loud() {
+        use crate::sim::{shard, ShardSpec, SimEngine, SweepSpec, WorkloadKey};
+        let engine = SimEngine::new();
+        let spec = SweepSpec::paper(vec![WorkloadKey::suite("wv", 7, 64)]);
+        // Two of three shards: the middle one never arrives.
+        let shards: Vec<_> = [0usize, 2]
+            .iter()
+            .map(|&i| engine.sweep_shard(&spec, ShardSpec::new(i, 3).unwrap()).unwrap())
+            .collect();
+        let partial = shard::merge_partial(&shards).unwrap();
+        let prov = partial_provenance(&partial);
+        assert!(prov.starts_with("PARTIAL merge: 2 of 3 shards"), "{prov}");
+        assert!(prov.contains("shard 0/3"), "{prov}");
+        assert!(prov.contains("MISSING cells [2..3) (1 cells)"), "{prov}");
+        let table = partial_sweep_report(&partial, true);
+        assert!(table.starts_with("partial sweep: 3/4 cells (1 of 3 shards missing)"), "{table}");
+        assert_eq!(table.lines().count(), 1 + 2 + 3, "{table}");
+
+        let stats = ServiceStats {
+            fingerprint: 0xABCD,
+            shard_count: 6,
+            completed: 6,
+            workers: 3,
+            reassignments: 1,
+            duplicates: 2,
+            rejected: 0,
+            quarantined: 1,
+            wall_ms: 1234,
+        };
+        let s = service_provenance(&stats);
+        assert!(s.starts_with("service: fingerprint 000000000000abcd: 6/6 shards"), "{s}");
+        for needle in
+            ["  reassignments: 1\n", "  duplicates: 2\n", "  rejected: 0\n", "  quarantined: 1\n"]
+        {
+            assert!(s.contains(needle), "missing {needle:?} in:\n{s}");
+        }
     }
 
     #[test]

@@ -90,11 +90,11 @@ pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
 
 // ---------------------------------------------------------------- encoding
 
-fn put_u32(buf: &mut Vec<u8>, v: u32) {
+pub(crate) fn put_u32(buf: &mut Vec<u8>, v: u32) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-fn put_u64(buf: &mut Vec<u8>, v: u64) {
+pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -160,7 +160,9 @@ fn put_f64(buf: &mut Vec<u8>, v: f64) {
 }
 
 /// Stable on-disk policy tags (the `Debug` spelling is for humans only).
-fn policy_tag(p: Policy) -> u32 {
+/// Crate-visible: the sweep-service wire protocol ([`crate::sim::service`])
+/// ships policies with the same tags.
+pub(crate) fn policy_tag(p: Policy) -> u32 {
     match p {
         Policy::RoundRobin => 0,
         Policy::Chunked => 1,
@@ -168,7 +170,7 @@ fn policy_tag(p: Policy) -> u32 {
     }
 }
 
-fn policy_from_tag(tag: u32) -> Option<Policy> {
+pub(crate) fn policy_from_tag(tag: u32) -> Option<Policy> {
     match tag {
         0 => Some(Policy::RoundRobin),
         1 => Some(Policy::Chunked),
@@ -355,12 +357,20 @@ pub fn decode_evals(bytes: &[u8]) -> Result<EvalJournal, CodecError> {
 // ---------------------------------------------------------------- decoding
 
 /// Bounds-checked little-endian reader over the payload section.
-struct Reader<'a> {
+/// Crate-visible: the sweep-service wire protocol ([`crate::sim::service`])
+/// decodes its message payloads through the same defensive reader.
+pub(crate) struct Reader<'a> {
     bytes: &'a [u8],
     pos: usize,
 }
 
 impl<'a> Reader<'a> {
+    /// Reader over raw payload bytes (no envelope; the caller has already
+    /// verified framing and checksum).
+    pub(crate) fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
     fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
         let end = self
             .pos
@@ -375,30 +385,30 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
-    fn u32(&mut self) -> Result<u32, CodecError> {
+    pub(crate) fn u32(&mut self) -> Result<u32, CodecError> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4-byte slice")))
     }
 
-    fn u64(&mut self) -> Result<u64, CodecError> {
+    pub(crate) fn u64(&mut self) -> Result<u64, CodecError> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8-byte slice")))
     }
 
-    fn index(&mut self) -> Result<usize, CodecError> {
+    pub(crate) fn index(&mut self) -> Result<usize, CodecError> {
         let v = self.u64()?;
         usize::try_from(v)
             .map_err(|_| CodecError::Inconsistent(format!("index {v} overflows usize")))
     }
 
-    fn f64(&mut self) -> Result<f64, CodecError> {
+    pub(crate) fn f64(&mut self) -> Result<f64, CodecError> {
         Ok(f64::from_bits(self.u64()?))
     }
 
-    fn byte(&mut self) -> Result<u8, CodecError> {
+    pub(crate) fn byte(&mut self) -> Result<u8, CodecError> {
         Ok(self.take(1)?[0])
     }
 
     /// Length-prefixed UTF-8 string.
-    fn string(&mut self) -> Result<String, CodecError> {
+    pub(crate) fn string(&mut self) -> Result<String, CodecError> {
         let n = self.index()?;
         self.expect_items(n, 1)?;
         String::from_utf8(self.take(n)?.to_vec())
@@ -410,7 +420,7 @@ impl<'a> Reader<'a> {
     /// the payload matches its own stored hash — not that the counts are
     /// honest — so a crafted or foreign file must be a decode error here,
     /// never an over-allocation.
-    fn expect_items(&self, items: usize, bytes_per: usize) -> Result<(), CodecError> {
+    pub(crate) fn expect_items(&self, items: usize, bytes_per: usize) -> Result<(), CodecError> {
         let needed = items
             .checked_mul(bytes_per)
             .and_then(|n| n.checked_add(self.pos))
@@ -423,7 +433,7 @@ impl<'a> Reader<'a> {
         Ok(())
     }
 
-    fn done(&self) -> Result<(), CodecError> {
+    pub(crate) fn done(&self) -> Result<(), CodecError> {
         if self.pos == self.bytes.len() {
             Ok(())
         } else {

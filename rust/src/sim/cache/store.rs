@@ -49,6 +49,25 @@ const EVALS_EXT: &str = "mevl";
 /// processes.
 static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
 
+/// Write `bytes` to a unique sibling temp file, then `rename` over the
+/// final path — atomic on POSIX, so readers never observe a torn file. The
+/// temp name carries both the pid and a process-wide counter, so racing
+/// threads *and* racing processes each write their own temp file; the
+/// rename loser simply overwrites the winner. Shared by every artifact
+/// writer (workload/matrix/eval store, shard artifacts).
+pub(crate) fn atomic_publish(path: &Path, bytes: &[u8]) -> io::Result<()> {
+    let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!("tmp-{}-{n}", std::process::id()));
+    fs::write(&tmp, bytes)?;
+    match fs::rename(&tmp, path) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = fs::remove_file(&tmp);
+            Err(e)
+        }
+    }
+}
+
 /// One on-disk artifact directory (see the module docs for the layout).
 #[derive(Debug, Clone)]
 pub struct DiskCache {
@@ -79,12 +98,28 @@ impl DiskCache {
         Ok(Self { dir })
     }
 
-    /// Open the cache at `$MAPLE_CACHE_DIR`, or [`DiskCache::default_dir`].
+    /// Open the cache at `$MAPLE_CACHE_DIR`, or [`DiskCache::default_dir`],
+    /// proving the directory is actually writable. An unusable directory —
+    /// a path under a regular file, a read-only mount — errors *here*, so
+    /// [`crate::sim::engine::SimEngine::from_env`] can warn once and fall
+    /// back to uncached operation instead of failing on every store later.
     pub fn from_env() -> io::Result<Self> {
         match std::env::var_os(CACHE_DIR_ENV) {
-            Some(dir) => Self::new(PathBuf::from(dir)),
-            None => Self::new(Self::default_dir()),
+            Some(dir) => Self::open_checked(PathBuf::from(dir)),
+            None => Self::open_checked(Self::default_dir()),
         }
+    }
+
+    /// [`DiskCache::new`] plus a write probe: create-write-delete a unique
+    /// probe file so a directory that exists but cannot take writes is
+    /// reported as an error up front.
+    pub(crate) fn open_checked(dir: impl Into<PathBuf>) -> io::Result<Self> {
+        let cache = Self::new(dir)?;
+        let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
+        let probe = cache.dir.join(format!(".probe-{}-{n}", std::process::id()));
+        fs::write(&probe, b"maple")?;
+        fs::remove_file(&probe)?;
+        Ok(cache)
     }
 
     /// The default location: a `target/`-style throwaway directory relative
@@ -227,19 +262,9 @@ impl DiskCache {
         )
     }
 
-    /// Write `bytes` to a unique sibling temp file, then `rename` over the
-    /// final path — atomic on POSIX, so readers never observe a torn file.
+    /// Atomic temp-file + rename publish (see [`atomic_publish`]).
     fn persist(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
-        let n = TEMP_COUNTER.fetch_add(1, Ordering::Relaxed);
-        let tmp = path.with_extension(format!("tmp-{}-{n}", std::process::id()));
-        fs::write(&tmp, bytes)?;
-        match fs::rename(&tmp, path) {
-            Ok(()) => Ok(()),
-            Err(e) => {
-                let _ = fs::remove_file(&tmp);
-                Err(e)
-            }
-        }
+        atomic_publish(path, bytes)
     }
 
     /// Scan the directory. Infallible: an unreadable directory reports as
@@ -392,6 +417,55 @@ mod tests {
         assert!(cache.load_evals(0xEEEE, 1, 128, 7).is_none());
         assert!(!wrong.exists(), "mismatched journal must be evicted");
         let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn racing_writers_with_distinct_contents_publish_one_complete_file() {
+        // Harsher than the identical-bytes race below: 16 threads publish
+        // *different* payloads to the same path. Atomicity means the final
+        // file is exactly one candidate, never an interleaving, and no temp
+        // files survive.
+        let cache = tmp_cache("race-distinct");
+        let path = cache.dir().join("contended.bin");
+        let candidates: Vec<Vec<u8>> =
+            (0..16u8).map(|i| vec![i; 4096 + i as usize]).collect();
+        std::thread::scope(|scope| {
+            for c in &candidates {
+                let path = path.clone();
+                scope.spawn(move || atomic_publish(&path, c).unwrap());
+            }
+        });
+        let published = fs::read(&path).unwrap();
+        assert!(
+            candidates.iter().any(|c| *c == published),
+            "published file is not any single writer's payload (torn write)"
+        );
+        let leftovers: Vec<_> = fs::read_dir(cache.dir())
+            .unwrap()
+            .flatten()
+            .map(|e| e.file_name())
+            .filter(|n| n.to_string_lossy().contains("tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "orphaned temp files: {leftovers:?}");
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn unusable_cache_dir_is_reported_up_front() {
+        // A cache path *under a regular file* can never become a directory:
+        // the checked open must error so the engine can degrade to uncached
+        // operation with one warning instead of failing every store.
+        let dir = std::env::temp_dir()
+            .join(format!("maple-store-test-{}-unusable", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        let blocker = dir.join("blocker");
+        fs::write(&blocker, b"a file, not a directory").unwrap();
+        assert!(DiskCache::open_checked(blocker.join("cache")).is_err());
+        // And a good directory passes the probe without leaving it behind.
+        let good = DiskCache::open_checked(dir.join("good")).unwrap();
+        assert_eq!(good.stats().stale, 0, "probe file must not survive");
+        let _ = fs::remove_dir_all(&dir);
     }
 
     #[test]

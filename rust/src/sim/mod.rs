@@ -19,6 +19,7 @@ pub mod des;
 pub mod engine;
 pub mod explore;
 mod profile;
+pub mod service;
 pub mod shard;
 pub mod timeline;
 
@@ -37,7 +38,11 @@ pub use profile::{
     estimate_in_band, profile_workload, profile_workload_parallel, profile_workload_sampled,
     StratumEstimate, Workload, WorkloadEstimate, ESTIMATE_BAND,
 };
-pub use shard::{ShardError, ShardMeta, ShardSpec, SweepShard};
+pub use service::{
+    run_chaos, ChaosReport, ChaosSpec, Coordinator, FaultPlan, LeasePolicy, ServiceConfig,
+    ServiceError, ServiceStats, SweepOutcome, WorkerConfig, WorkerReport,
+};
+pub use shard::{PartialSweep, ShardError, ShardMeta, ShardSpec, SweepShard};
 pub use timeline::{exact_pipeline, TwoStageTimeline};
 
 use crate::accel::Accelerator;

@@ -1,0 +1,537 @@
+//! The sweep coordinator: owns the design space, leases shards to workers,
+//! merges `MAPLESHD` submissions incrementally, and survives every failure
+//! mode the fault harness can throw at it.
+//!
+//! One [`Coordinator::run`] call serves one [`DesignSpace`]: it
+//! fingerprints and splits the grid up front, then accepts worker
+//! connections on a nonblocking listener, each served by its own handler
+//! thread against shared [`LeaseTable`] + [`SubmissionLedger`] state. The
+//! accept loop doubles as the reaper tick (expired leases re-queue for
+//! work-stealing) and the wall-clock guard — a sweep can end complete,
+//! partial (`allow_partial`), or as a loud typed
+//! [`ServiceError::Incomplete`], but never as a hang: every socket read is
+//! bounded by a timeout and the whole run by `max_wall_ms`.
+//!
+//! The [`SubmissionLedger`] is deliberately a pure, connection-free type:
+//! it owns first-valid-wins idempotency (identical resubmissions are
+//! acknowledged as duplicates, byte-divergent ones rejected loudly) and is
+//! unit-tested in `tests/shard.rs` without a single socket. Submissions
+//! are compared in *canonical* form — volatile run stats (wall-time,
+//! cache-hit counters) zeroed — so the same cells computed at different
+//! speeds by different workers still count as the same shard.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::lease::{Grant, LeasePolicy, LeaseTable};
+use super::proto::{self, AckCode, Message, ProtoError};
+use super::ServiceError;
+use crate::sim::cache::codec::{self, CodecError};
+use crate::sim::engine::DesignSpace;
+use crate::sim::shard::{self, PartialSweep, SweepShard};
+use crate::sim::SweepResult;
+
+/// Coordinator knobs (CLI: `maple serve`).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// How many shards the grid splits into (work-stealing granularity).
+    pub shard_count: usize,
+    pub lease: LeasePolicy,
+    /// Hard wall-clock bound on the whole sweep — the no-hang guarantee
+    /// when every worker dies and nothing re-queues.
+    pub max_wall_ms: u64,
+    /// Render the completed sub-grid instead of erroring when the deadline
+    /// passes with shards missing.
+    pub allow_partial: bool,
+    /// Profile-pass chunk count every worker must run with (checksum bits
+    /// depend on it; the ledger rejects shards computed under any other).
+    pub profile_threads: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            shard_count: 8,
+            lease: LeasePolicy::default(),
+            max_wall_ms: 600_000,
+            allow_partial: false,
+            profile_threads: 1,
+        }
+    }
+}
+
+/// What one service run did — the provenance block's inputs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub fingerprint: u64,
+    pub shard_count: usize,
+    pub completed: usize,
+    /// Distinct workers that ever registered.
+    pub workers: usize,
+    /// Expired leases re-queued to other workers.
+    pub reassignments: u64,
+    /// Idempotently-accepted identical resubmissions.
+    pub duplicates: u64,
+    /// Invalid or byte-divergent submissions dropped.
+    pub rejected: u64,
+    /// Workers that exhausted their retry budget.
+    pub quarantined: usize,
+    pub wall_ms: u64,
+}
+
+/// A completed service sweep: the full bit-exact grid, or — under
+/// `allow_partial` — the completed sub-grid with explicit provenance.
+#[derive(Debug)]
+pub enum SweepOutcome {
+    Full(SweepResult),
+    Partial(PartialSweep),
+}
+
+// ------------------------------------------------------------------ ledger
+
+/// Submission outcome for a valid shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitOutcome {
+    /// First valid submission for its range.
+    Accepted,
+    /// Byte-identical (canonical form) resubmission: idempotent no-op.
+    Duplicate,
+}
+
+/// Why a submission was rejected. Loud and specific, like the merge-side
+/// [`crate::sim::shard::ShardError`] taxonomy it mirrors.
+#[derive(Debug, thiserror::Error)]
+pub enum SubmitError {
+    #[error("shard artifact undecodable: {0}")]
+    Artifact(#[from] CodecError),
+    #[error("shard fingerprint {found:#018x} != space fingerprint {expected:#018x}")]
+    Fingerprint { expected: u64, found: u64 },
+    #[error("shard is part of a {found}-way split, the service runs {expected}-way")]
+    Count { expected: usize, found: usize },
+    #[error("shard profiled with {found} chunks, the service requires {expected}")]
+    ProfileThreads { expected: usize, found: usize },
+    #[error("shard grid has {found} cells, the space has {expected}")]
+    Grid { expected: usize, found: usize },
+    #[error(
+        "shard {index} covers cells [{found_start}..{found_end}) but its canonical \
+         range is [{expected_start}..{expected_end})"
+    )]
+    Range {
+        index: usize,
+        found_start: usize,
+        found_end: usize,
+        expected_start: usize,
+        expected_end: usize,
+    },
+    #[error(
+        "byte-divergent resubmission of shard {index}: the stored result differs \
+         cell-for-cell from this one (first valid submission wins)"
+    )]
+    Conflict { index: usize },
+}
+
+/// Incremental, idempotent shard collection for one sweep. First valid
+/// submission per range wins; identical resubmissions are duplicates;
+/// divergent ones are conflicts. "Identical" means canonical-byte-identical:
+/// volatile [`crate::sim::shard::ShardMeta`] stats are zeroed before
+/// comparison (two workers computing the same cells at different speeds
+/// submit the *same* shard).
+pub struct SubmissionLedger {
+    fingerprint: u64,
+    shard_count: usize,
+    total_cells: usize,
+    profile_threads: usize,
+    slots: Vec<Option<(SweepShard, Vec<u8>)>>,
+    duplicates: u64,
+    rejected: u64,
+}
+
+impl SubmissionLedger {
+    pub fn new(
+        fingerprint: u64,
+        shard_count: usize,
+        total_cells: usize,
+        profile_threads: usize,
+    ) -> Self {
+        let mut slots = Vec::with_capacity(shard_count);
+        slots.resize_with(shard_count, || None);
+        Self {
+            fingerprint,
+            shard_count,
+            total_cells,
+            profile_threads,
+            slots,
+            duplicates: 0,
+            rejected: 0,
+        }
+    }
+
+    /// Offer raw `MAPLESHD` bytes. Returns the shard index with the
+    /// outcome, or why the submission was rejected (rejections are counted
+    /// but never stored).
+    pub fn offer(&mut self, bytes: &[u8]) -> Result<(usize, SubmitOutcome), SubmitError> {
+        match self.validate(bytes) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                self.rejected += 1;
+                Err(e)
+            }
+        }
+    }
+
+    fn validate(&mut self, bytes: &[u8]) -> Result<(usize, SubmitOutcome), SubmitError> {
+        let shard = codec::decode_shard(bytes)?;
+        if shard.fingerprint != self.fingerprint {
+            return Err(SubmitError::Fingerprint {
+                expected: self.fingerprint,
+                found: shard.fingerprint,
+            });
+        }
+        if shard.spec.count != self.shard_count {
+            return Err(SubmitError::Count {
+                expected: self.shard_count,
+                found: shard.spec.count,
+            });
+        }
+        if shard.meta.profile_threads != self.profile_threads {
+            return Err(SubmitError::ProfileThreads {
+                expected: self.profile_threads,
+                found: shard.meta.profile_threads,
+            });
+        }
+        if shard.total_cells() != self.total_cells {
+            return Err(SubmitError::Grid {
+                expected: self.total_cells,
+                found: shard.total_cells(),
+            });
+        }
+        let canonical_range = shard.spec.range(self.total_cells);
+        if shard.range() != canonical_range {
+            return Err(SubmitError::Range {
+                index: shard.spec.index,
+                found_start: shard.range().start,
+                found_end: shard.range().end,
+                expected_start: canonical_range.start,
+                expected_end: canonical_range.end,
+            });
+        }
+        let canonical = canonical_bytes(&shard);
+        let index = shard.spec.index;
+        match &self.slots[index] {
+            None => {
+                self.slots[index] = Some((shard, canonical));
+                Ok((index, SubmitOutcome::Accepted))
+            }
+            Some((_, stored)) if *stored == canonical => {
+                self.duplicates += 1;
+                Ok((index, SubmitOutcome::Duplicate))
+            }
+            Some(_) => Err(SubmitError::Conflict { index }),
+        }
+    }
+
+    pub fn completed(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.completed() == self.shard_count
+    }
+
+    /// Missing shard indices (first 8 — the same bound as
+    /// [`crate::sim::shard::ShardError::MissingShards`]).
+    pub fn missing(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .take(8)
+            .collect()
+    }
+
+    /// The stored shards, index order (for [`shard::merge`] /
+    /// [`shard::merge_partial`]).
+    pub fn shards(&self) -> Vec<SweepShard> {
+        self.slots.iter().flatten().map(|(s, _)| s.clone()).collect()
+    }
+
+    pub fn duplicates(&self) -> u64 {
+        self.duplicates
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+}
+
+/// The comparison form for duplicate detection: the artifact re-encoded
+/// with volatile run stats zeroed (`profile_threads` stays — it changes
+/// checksum bits, so it is identity, not noise).
+fn canonical_bytes(shard: &SweepShard) -> Vec<u8> {
+    let mut c = shard.clone();
+    c.meta.wall_ms = 0;
+    c.meta.profiles_run = 0;
+    c.meta.disk_hits = 0;
+    codec::encode_shard(&c)
+}
+
+// ------------------------------------------------------------- coordinator
+
+/// Shared state every connection handler works against.
+struct Shared {
+    lease: Mutex<LeaseTable>,
+    ledger: Mutex<SubmissionLedger>,
+    done: AtomicBool,
+    epoch: Instant,
+    lease_ms: u64,
+    shard_count: usize,
+    /// The `Space` frame, encoded once (it can be large).
+    space_frame: Vec<u8>,
+}
+
+impl Shared {
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+}
+
+/// A bound sweep service. [`Coordinator::bind`] then [`Coordinator::run`];
+/// `run` consumes the listener's lifetime but the coordinator can be
+/// re-bound for the next sweep.
+pub struct Coordinator {
+    listener: TcpListener,
+    cfg: ServiceConfig,
+}
+
+impl Coordinator {
+    /// Bind the service socket (use port 0 for an ephemeral test port).
+    pub fn bind(addr: impl ToSocketAddrs, cfg: ServiceConfig) -> Result<Self, ServiceError> {
+        let listener = TcpListener::bind(addr).map_err(ServiceError::Io)?;
+        Ok(Self { listener, cfg })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr, ServiceError> {
+        self.listener.local_addr().map_err(ServiceError::Io)
+    }
+
+    /// Serve one design space to completion (or the wall-clock bound).
+    pub fn run(&self, space: &DesignSpace) -> Result<(SweepOutcome, ServiceStats), ServiceError> {
+        let expanded = space.expand()?;
+        let total_cells = expanded.total_cells();
+        let fingerprint = expanded.fingerprint(space.cell_model);
+        let shard_count = self.cfg.shard_count.max(1);
+        let space_frame = proto::encode_message(&Message::Space {
+            fingerprint,
+            shard_count: shard_count as u64,
+            profile_threads: self.cfg.profile_threads as u64,
+            space: space.clone(),
+        });
+        let shared = Arc::new(Shared {
+            lease: Mutex::new(LeaseTable::new(shard_count, self.cfg.lease.clone())),
+            ledger: Mutex::new(SubmissionLedger::new(
+                fingerprint,
+                shard_count,
+                total_cells,
+                self.cfg.profile_threads,
+            )),
+            done: AtomicBool::new(false),
+            epoch: Instant::now(),
+            lease_ms: self.cfg.lease.lease_ms,
+            shard_count,
+            space_frame,
+        });
+
+        self.listener.set_nonblocking(true).map_err(ServiceError::Io)?;
+        let mut handlers = Vec::new();
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let shared = Arc::clone(&shared);
+                    handlers.push(std::thread::spawn(move || handle_connection(&shared, stream)));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}
+                // Transient accept errors (e.g. a peer resetting mid
+                // handshake) must not kill the sweep.
+                Err(_) => {}
+            }
+            let now = shared.now_ms();
+            shared.lease.lock().expect("lease table poisoned").reap(now);
+            if shared.ledger.lock().expect("ledger poisoned").is_complete()
+                || now >= self.cfg.max_wall_ms
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+
+        // Wind down: handlers keep answering `Done` for a short grace
+        // period (so polite workers exit cleanly), then exit on their own
+        // idle timers; joining bounds the run.
+        shared.done.store(true, Ordering::SeqCst);
+        for h in handlers {
+            let _ = h.join();
+        }
+
+        let lease = shared.lease.lock().expect("lease table poisoned");
+        let ledger = shared.ledger.lock().expect("ledger poisoned");
+        let stats = ServiceStats {
+            fingerprint,
+            shard_count,
+            completed: ledger.completed(),
+            workers: lease.workers(),
+            reassignments: lease.reassignments(),
+            duplicates: ledger.duplicates(),
+            rejected: ledger.rejected(),
+            quarantined: lease.quarantined(),
+            wall_ms: shared.now_ms(),
+        };
+        let shards = ledger.shards();
+        let outcome = if ledger.is_complete() {
+            SweepOutcome::Full(shard::merge(&shards)?)
+        } else if self.cfg.allow_partial && !shards.is_empty() {
+            SweepOutcome::Partial(shard::merge_partial(&shards)?)
+        } else {
+            return Err(ServiceError::Incomplete {
+                completed: ledger.completed(),
+                count: shard_count,
+                missing: ledger.missing(),
+            });
+        };
+        Ok((outcome, stats))
+    }
+}
+
+/// What one 100 ms read tick on a worker connection produced.
+enum Tick {
+    /// First byte of a frame arrived.
+    Byte(u8),
+    /// Peer closed the stream.
+    Eof,
+    /// Nothing arrived inside the timeout.
+    Idle,
+}
+
+fn read_tick(stream: &mut TcpStream) -> io::Result<Tick> {
+    let mut byte = [0u8; 1];
+    match stream.read(&mut byte) {
+        Ok(0) => Ok(Tick::Eof),
+        Ok(_) => Ok(Tick::Byte(byte[0])),
+        Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+            Ok(Tick::Idle)
+        }
+        Err(e) => Err(e),
+    }
+}
+
+/// Serve one worker connection. Any protocol violation — bad magic,
+/// checksum mismatch, a read dying mid-frame — closes the connection and
+/// penalises the worker (if it ever identified itself); the reaper handles
+/// whatever lease it held. A clean EOF is just a disconnect.
+fn handle_connection(shared: &Shared, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut worker_id: Option<String> = None;
+    let mut idle_ticks_after_done = 0u32;
+    loop {
+        let tick = match read_tick(&mut stream) {
+            Ok(t) => t,
+            Err(_) => break,
+        };
+        let first = match tick {
+            Tick::Eof => break,
+            Tick::Idle => {
+                if shared.done.load(Ordering::SeqCst) {
+                    idle_ticks_after_done += 1;
+                    // ~2 s of post-completion silence: the worker is gone
+                    // or asleep; stop holding the thread.
+                    if idle_ticks_after_done > 20 {
+                        break;
+                    }
+                }
+                continue;
+            }
+            Tick::Byte(b) => b,
+        };
+        idle_ticks_after_done = 0;
+        let msg = match proto::read_message_tail(first, &mut stream) {
+            Ok(msg) => msg,
+            Err(ProtoError::Io(_)) => break, // died mid-frame; reaper recovers
+            Err(_) => {
+                // A frame that decodes wrong (forged checksum, bad magic)
+                // is a worker failure: penalise and force a reconnect —
+                // there is no way to resynchronise a byte stream.
+                if let Some(id) = &worker_id {
+                    shared.lease.lock().expect("lease table poisoned").fail(id, shared.now_ms());
+                }
+                break;
+            }
+        };
+        let reply = match msg {
+            Message::Register { worker_id: id } => {
+                shared.lease.lock().expect("lease table poisoned").register(&id);
+                worker_id = Some(id);
+                // The Space frame is pre-encoded; send it verbatim.
+                if stream.write_all(&shared.space_frame).is_err() {
+                    break;
+                }
+                continue;
+            }
+            Message::Request { worker_id: id } => {
+                let grant = if shared.done.load(Ordering::SeqCst) {
+                    Grant::Done
+                } else {
+                    shared
+                        .lease
+                        .lock()
+                        .expect("lease table poisoned")
+                        .grant(&id, shared.now_ms())
+                };
+                worker_id = Some(id);
+                match grant {
+                    Grant::Lease { index, attempt } => Message::Lease {
+                        index: index as u64,
+                        count: shared.shard_count as u64,
+                        attempt,
+                        lease_ms: shared.lease_ms,
+                    },
+                    Grant::Wait { ms } => Message::Wait { ms },
+                    Grant::Done => Message::Done,
+                    Grant::Quarantined => Message::Quarantined,
+                }
+            }
+            Message::Submit { worker_id: id, shard } => {
+                worker_id = Some(id.clone());
+                let offered =
+                    shared.ledger.lock().expect("ledger poisoned").offer(&shard);
+                match offered {
+                    Ok((index, outcome)) => {
+                        shared.lease.lock().expect("lease table poisoned").complete(index);
+                        let code = match outcome {
+                            SubmitOutcome::Accepted => AckCode::Accepted,
+                            SubmitOutcome::Duplicate => AckCode::Duplicate,
+                        };
+                        Message::Ack { code, reason: String::new() }
+                    }
+                    Err(e) => {
+                        shared
+                            .lease
+                            .lock()
+                            .expect("lease table poisoned")
+                            .fail(&id, shared.now_ms());
+                        Message::Ack { code: AckCode::Rejected, reason: e.to_string() }
+                    }
+                }
+            }
+            // Coordinator-bound kinds arriving here mean a confused peer:
+            // drop the connection rather than guess.
+            _ => break,
+        };
+        if proto::write_message(&mut stream, &reply).is_err() {
+            break;
+        }
+    }
+}

@@ -1,0 +1,357 @@
+//! Deterministic fault injection for the sweep service, plus the chaos
+//! harness that drives a real coordinator + workers through a plan.
+//!
+//! A [`FaultPlan`] is a seeded list of faults a *worker* inflicts on
+//! itself, parsed from the CLI spelling `--fault drop:2,stall`:
+//!
+//! | spelling     | fault                                                   |
+//! |--------------|---------------------------------------------------------|
+//! | `drop:N`     | sever the connection when writing frame N+1             |
+//! | `corrupt:M`  | flip one checksum byte of the M-th frame written        |
+//! | `stall`      | sleep past the lease deadline before computing a shard  |
+//! | `dup`        | submit the same finished shard twice                    |
+//! | `kill`       | drop the connection after taking a lease, then rejoin   |
+//! | `die`        | exit for good after taking a lease (no rejoin)          |
+//!
+//! Each fault fires **once**, at a position derived only from the plan and
+//! its seed (frame counters, not wall-clock), and every firing is recorded
+//! as a [`FaultEvent`] — so the same plan + seed always produces the same
+//! event trace, which is exactly what `tests/service.rs` asserts. The
+//! transport faults forge real wire-level damage (a severed socket, a
+//! checksum that does not match) so the coordinator's defenses are
+//! exercised end-to-end, not simulated.
+//!
+//! [`run_chaos`] is the in-process harness behind `maple chaos` and the
+//! integration tests: bind a coordinator on a loopback port, run N worker
+//! threads (one of them faulty) against it over real TCP, and return the
+//! merged outcome next to every worker's report.
+
+use std::fmt;
+use std::io::{self, Write};
+use std::net::TcpStream;
+use std::str::FromStr;
+
+use super::coordinator::{Coordinator, ServiceConfig, ServiceStats, SweepOutcome};
+use super::proto::{Message, CHECKSUM_OFFSET};
+use super::worker::{self, WorkerConfig, WorkerReport};
+use super::ServiceError;
+use crate::sim::engine::{DesignSpace, SimEngine};
+use crate::sim::service::proto;
+
+/// One self-inflicted worker fault (see the module table for spellings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Sever the connection when attempting to write frame `n+1` (i.e.
+    /// after `n` frames were written successfully).
+    DropAfterFrames(u64),
+    /// Flip one checksum byte of the `m`-th frame written (1-based).
+    CorruptFrame(u64),
+    /// Sleep past the lease deadline before computing the leased shard.
+    StallPastLease,
+    /// Submit the finished shard twice (exercises idempotent acceptance).
+    DuplicateSubmit,
+    /// Drop the connection right after taking a lease, then reconnect and
+    /// re-register (kill-and-rejoin).
+    KillRejoin,
+    /// Exit for good right after taking a lease — the killed-mid-shard
+    /// worker of the chaos CI job.
+    Die,
+}
+
+impl fmt::Display for Fault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Fault::DropAfterFrames(n) => write!(f, "drop:{n}"),
+            Fault::CorruptFrame(m) => write!(f, "corrupt:{m}"),
+            Fault::StallPastLease => write!(f, "stall"),
+            Fault::DuplicateSubmit => write!(f, "dup"),
+            Fault::KillRejoin => write!(f, "kill"),
+            Fault::Die => write!(f, "die"),
+        }
+    }
+}
+
+impl FromStr for Fault {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if let Some(n) = s.strip_prefix("drop:") {
+            return n
+                .parse()
+                .map(Fault::DropAfterFrames)
+                .map_err(|_| format!("bad frame count in {s:?}"));
+        }
+        if let Some(m) = s.strip_prefix("corrupt:") {
+            let m: u64 =
+                m.parse().map_err(|_| format!("bad frame number in {s:?}"))?;
+            if m == 0 {
+                return Err("corrupt frames are 1-based: corrupt:1 is the first".into());
+            }
+            return Ok(Fault::CorruptFrame(m));
+        }
+        match s {
+            "stall" => Ok(Fault::StallPastLease),
+            "dup" => Ok(Fault::DuplicateSubmit),
+            "kill" => Ok(Fault::KillRejoin),
+            "die" => Ok(Fault::Die),
+            other => Err(format!(
+                "unknown fault {other:?} (drop:N | corrupt:M | stall | dup | kill | die)"
+            )),
+        }
+    }
+}
+
+/// A seeded, replayable list of faults for one worker.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub faults: Vec<Fault>,
+    /// Drives every seed-dependent choice (currently: which checksum byte
+    /// a corrupt frame flips). Same plan + seed ⇒ same event trace.
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the CLI spelling: a comma-separated fault list.
+    pub fn parse(spec: &str, seed: u64) -> Result<Self, String> {
+        let faults = spec
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(str::parse)
+            .collect::<Result<Vec<Fault>, String>>()?;
+        if faults.is_empty() {
+            return Err("empty fault plan".into());
+        }
+        Ok(Self { faults, seed })
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, fault) in self.faults.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{fault}")?;
+        }
+        write!(f, " (seed {})", self.seed)
+    }
+}
+
+/// One fault firing, recorded in plan order of occurrence. `detail` is a
+/// pure function of the plan and seed (frame numbers, byte offsets — never
+/// wall-clock), so equal plans produce equal traces.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub kind: &'static str,
+    pub detail: String,
+}
+
+/// Per-worker injector state: which faults are still armed, how many frames
+/// were written (the deterministic clock), and the recorded trace. Lives
+/// across reconnects — frame counts keep running, so `drop:1,corrupt:3`
+/// corrupts the third frame *overall*, not the third of some session.
+#[derive(Debug, Default)]
+pub(crate) struct FaultInjector {
+    drop_after: Option<u64>,
+    corrupt_frame: Option<u64>,
+    stall: bool,
+    dup: bool,
+    kill: bool,
+    die: bool,
+    seed: u64,
+    frames_written: u64,
+    pub(crate) events: Vec<FaultEvent>,
+}
+
+impl FaultInjector {
+    pub(crate) fn new(plan: Option<&FaultPlan>) -> Self {
+        let mut inj = Self::default();
+        let Some(plan) = plan else { return inj };
+        inj.seed = plan.seed;
+        for f in &plan.faults {
+            match *f {
+                Fault::DropAfterFrames(n) => inj.drop_after = Some(n),
+                Fault::CorruptFrame(m) => inj.corrupt_frame = Some(m),
+                Fault::StallPastLease => inj.stall = true,
+                Fault::DuplicateSubmit => inj.dup = true,
+                Fault::KillRejoin => inj.kill = true,
+                Fault::Die => inj.die = true,
+            }
+        }
+        inj
+    }
+
+    fn record(&mut self, kind: &'static str, detail: String) {
+        self.events.push(FaultEvent { kind, detail });
+    }
+
+    /// Encode and send one frame through the transport faults: an armed
+    /// `drop` severs the socket instead of writing; an armed `corrupt`
+    /// flips one checksum byte (offset seeded) before writing. Each fires
+    /// once.
+    pub(crate) fn send(&mut self, stream: &mut TcpStream, msg: &Message) -> io::Result<()> {
+        if let Some(n) = self.drop_after {
+            if self.frames_written >= n {
+                self.drop_after = None;
+                self.record("drop", format!("severed connection after {n} frames"));
+                let _ = stream.shutdown(std::net::Shutdown::Both);
+                return Err(io::Error::new(io::ErrorKind::BrokenPipe, "fault: drop"));
+            }
+        }
+        let mut frame = proto::encode_message(msg);
+        self.frames_written += 1;
+        if self.corrupt_frame == Some(self.frames_written) {
+            self.corrupt_frame = None;
+            let offset = CHECKSUM_OFFSET + (self.seed % 8) as usize;
+            frame[offset] ^= 0x01;
+            self.record(
+                "corrupt",
+                format!("flipped checksum byte {offset} of frame {}", self.frames_written),
+            );
+        }
+        stream.write_all(&frame)
+    }
+
+    /// Behavioural faults, consumed (fire-once) by the worker loop.
+    pub(crate) fn take_stall(&mut self, lease_ms: u64) -> bool {
+        let fire = std::mem::take(&mut self.stall);
+        if fire {
+            self.record("stall", format!("holding lease past its {lease_ms} ms deadline"));
+        }
+        fire
+    }
+
+    pub(crate) fn take_dup(&mut self, index: u64) -> bool {
+        let fire = std::mem::take(&mut self.dup);
+        if fire {
+            self.record("dup", format!("submitting shard {index} twice"));
+        }
+        fire
+    }
+
+    pub(crate) fn take_kill(&mut self, index: u64) -> bool {
+        let fire = std::mem::take(&mut self.kill);
+        if fire {
+            self.record("kill", format!("dropping connection while holding shard {index}"));
+        }
+        fire
+    }
+
+    pub(crate) fn take_die(&mut self, index: u64) -> bool {
+        let fire = std::mem::take(&mut self.die);
+        if fire {
+            self.record("die", format!("exiting while holding shard {index}"));
+        }
+        fire
+    }
+}
+
+// ------------------------------------------------------------ chaos harness
+
+/// One chaos experiment: `workers` workers against one coordinator, with
+/// worker number `faulty` running `plan`.
+#[derive(Debug, Clone)]
+pub struct ChaosSpec {
+    pub workers: usize,
+    /// Index of the worker that runs the fault plan (the others are clean).
+    pub faulty: usize,
+    pub plan: Option<FaultPlan>,
+    pub service: ServiceConfig,
+}
+
+/// Everything a chaos run produced: the merged outcome, the coordinator's
+/// stats, and each worker's report (or its error, stringified — worker
+/// errors like quarantine are expected outcomes of a chaos run, not
+/// harness failures).
+#[derive(Debug)]
+pub struct ChaosReport {
+    pub outcome: SweepOutcome,
+    pub stats: ServiceStats,
+    pub workers: Vec<Result<WorkerReport, String>>,
+}
+
+/// Run a coordinator + `spec.workers` workers over loopback TCP and return
+/// the merged outcome. `make_engine` builds each worker's engine (tests
+/// pass cold engines; the CLI passes disk-cached ones so chaos workers
+/// share the artifact store like real ones would).
+pub fn run_chaos(
+    space: &DesignSpace,
+    spec: &ChaosSpec,
+    make_engine: &(dyn Fn() -> SimEngine + Sync),
+) -> Result<ChaosReport, ServiceError> {
+    let coordinator = Coordinator::bind("127.0.0.1:0", spec.service.clone())?;
+    let addr = coordinator.local_addr()?.to_string();
+    let (service_result, worker_results) = std::thread::scope(|scope| {
+        let coord = scope.spawn(move || coordinator.run(space));
+        let workers: Vec<_> = (0..spec.workers)
+            .map(|i| {
+                let addr = addr.clone();
+                let plan = (i == spec.faulty).then(|| spec.plan.clone()).flatten();
+                scope.spawn(move || {
+                    let cfg = WorkerConfig { fault: plan, ..WorkerConfig::named(format!("w{i}")) };
+                    worker::run(&addr, make_engine(), cfg)
+                })
+            })
+            .collect();
+        let worker_results: Vec<Result<WorkerReport, String>> = workers
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked").map_err(|e| e.to_string()))
+            .collect();
+        (coord.join().expect("coordinator thread panicked"), worker_results)
+    });
+    let (outcome, stats) = service_result?;
+    Ok(ChaosReport { outcome, stats, workers: worker_results })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_parse_and_render() {
+        let plan = FaultPlan::parse("drop:2, corrupt:3,stall,dup,kill,die", 9).unwrap();
+        assert_eq!(
+            plan.faults,
+            vec![
+                Fault::DropAfterFrames(2),
+                Fault::CorruptFrame(3),
+                Fault::StallPastLease,
+                Fault::DuplicateSubmit,
+                Fault::KillRejoin,
+                Fault::Die,
+            ]
+        );
+        assert_eq!(plan.to_string(), "drop:2,corrupt:3,stall,dup,kill,die (seed 9)");
+        assert!(FaultPlan::parse("", 0).is_err());
+        assert!(FaultPlan::parse("explode", 0).is_err());
+        assert!(FaultPlan::parse("corrupt:0", 0).is_err(), "corrupt frames are 1-based");
+        assert!(FaultPlan::parse("drop:x", 0).is_err());
+    }
+
+    #[test]
+    fn behavioural_faults_fire_exactly_once() {
+        let plan = FaultPlan::parse("stall,dup,kill,die", 3).unwrap();
+        let mut inj = FaultInjector::new(Some(&plan));
+        assert!(inj.take_stall(500));
+        assert!(!inj.take_stall(500));
+        assert!(inj.take_dup(1));
+        assert!(!inj.take_dup(1));
+        assert!(inj.take_kill(2));
+        assert!(!inj.take_kill(2));
+        assert!(inj.take_die(3));
+        assert!(!inj.take_die(3));
+        let kinds: Vec<&str> = inj.events.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, ["stall", "dup", "kill", "die"]);
+    }
+
+    #[test]
+    fn corrupt_offset_is_a_pure_function_of_the_seed() {
+        for seed in 0..16 {
+            let plan = FaultPlan::parse("corrupt:1", seed).unwrap();
+            let inj = FaultInjector::new(Some(&plan));
+            let offset = CHECKSUM_OFFSET + (inj.seed % 8) as usize;
+            assert!((21..29).contains(&offset), "offset {offset} must hit the checksum field");
+        }
+    }
+}

@@ -1,0 +1,318 @@
+//! Shard leasing: who owns which slice of the grid, for how long, and what
+//! happens when they vanish.
+//!
+//! The coordinator holds one [`LeaseTable`] per sweep. Every shard is a
+//! slot that moves `Pending → Leased → Done`; a lease carries a deadline,
+//! and [`LeaseTable::reap`] moves expired leases back to `Pending` so any
+//! live worker can steal the work. Per-worker failure accounting drives
+//! exponential backoff with jitter ([`LeaseTable::fail`]) and, past the
+//! retry budget, quarantine — a quarantined worker is told to stop and
+//! never granted work again.
+//!
+//! The table is pure state-machine logic over a caller-supplied clock
+//! (milliseconds since the coordinator's epoch), so every policy decision
+//! is unit-testable with a fake clock — no sockets, no sleeps.
+
+use std::collections::BTreeMap;
+
+use crate::sparse::SplitMix64;
+
+/// Retry/backoff policy knobs.
+#[derive(Debug, Clone)]
+pub struct LeasePolicy {
+    /// How long a worker may hold a shard before the reaper re-queues it.
+    pub lease_ms: u64,
+    /// Failures (expired leases, corrupt frames, rejected submissions)
+    /// before a worker is quarantined.
+    pub max_failures: u32,
+    /// Base of the exponential backoff a failed worker sits out:
+    /// `base << (failures-1)` plus up to `base` of seeded jitter.
+    pub backoff_base_ms: u64,
+    /// Jitter seed (deterministic for a fixed grant/fail order).
+    pub seed: u64,
+}
+
+impl Default for LeasePolicy {
+    fn default() -> Self {
+        Self { lease_ms: 30_000, max_failures: 3, backoff_base_ms: 200, seed: 0x6d61_706c_65 }
+    }
+}
+
+/// What [`LeaseTable::grant`] hands a requesting worker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Grant {
+    /// Compute shard `index`; this is attempt number `attempt` on it.
+    Lease { index: usize, attempt: u32 },
+    /// Nothing grantable right now; ask again in about `ms`.
+    Wait { ms: u64 },
+    /// Every shard is done.
+    Done,
+    /// This worker exhausted its retry budget.
+    Quarantined,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Slot {
+    Pending { attempt: u32 },
+    Leased { worker: String, deadline: u64, attempt: u32 },
+    Done,
+}
+
+#[derive(Debug, Clone, Default)]
+struct WorkerState {
+    failures: u32,
+    backoff_until: u64,
+    quarantined: bool,
+}
+
+/// The coordinator's authoritative shard/worker state.
+#[derive(Debug)]
+pub struct LeaseTable {
+    slots: Vec<Slot>,
+    /// BTreeMap for deterministic iteration order in stats and tests.
+    workers: BTreeMap<String, WorkerState>,
+    policy: LeasePolicy,
+    rng: SplitMix64,
+    reassignments: u64,
+}
+
+impl LeaseTable {
+    pub fn new(shard_count: usize, policy: LeasePolicy) -> Self {
+        let rng = SplitMix64::new(policy.seed);
+        Self {
+            slots: vec![Slot::Pending { attempt: 0 }; shard_count],
+            workers: BTreeMap::new(),
+            policy,
+            rng,
+            reassignments: 0,
+        }
+    }
+
+    /// Register a worker (idempotent — re-registration after a reconnect or
+    /// a coordinator restart keeps the existing failure record if there is
+    /// one, so backoff/quarantine cannot be laundered by reconnecting).
+    pub fn register(&mut self, id: &str) {
+        self.workers.entry(id.to_string()).or_default();
+    }
+
+    /// Grant work to `id` at time `now` (ms since the coordinator epoch).
+    /// Auto-registers unknown workers: a worker that re-registered with a
+    /// restarted coordinator mid-request must not be refused.
+    pub fn grant(&mut self, id: &str, now: u64) -> Grant {
+        self.register(id);
+        let w = &self.workers[id];
+        if w.quarantined {
+            return Grant::Quarantined;
+        }
+        if now < w.backoff_until {
+            return Grant::Wait { ms: (w.backoff_until - now).clamp(10, 10_000) };
+        }
+        for (index, slot) in self.slots.iter_mut().enumerate() {
+            if let Slot::Pending { attempt } = *slot {
+                let attempt = attempt + 1;
+                *slot = Slot::Leased {
+                    worker: id.to_string(),
+                    deadline: now + self.policy.lease_ms,
+                    attempt,
+                };
+                return Grant::Lease { index, attempt };
+            }
+        }
+        if self.all_done() {
+            return Grant::Done;
+        }
+        // Everything is leased out: poll again around the earliest deadline
+        // (clamped so workers neither spin nor oversleep a reassignment).
+        let earliest = self
+            .slots
+            .iter()
+            .filter_map(|s| match s {
+                Slot::Leased { deadline, .. } => Some(*deadline),
+                _ => None,
+            })
+            .min()
+            .unwrap_or(now);
+        Grant::Wait { ms: earliest.saturating_sub(now).clamp(10, 200) }
+    }
+
+    /// Re-queue every expired lease (work-stealing) and penalise the holder.
+    /// Returns how many leases were reaped.
+    pub fn reap(&mut self, now: u64) -> usize {
+        let mut expired: Vec<(usize, String, u32)> = Vec::new();
+        for (i, slot) in self.slots.iter().enumerate() {
+            if let Slot::Leased { worker, deadline, attempt } = slot {
+                if now >= *deadline {
+                    expired.push((i, worker.clone(), *attempt));
+                }
+            }
+        }
+        for (i, worker, attempt) in &expired {
+            self.slots[*i] = Slot::Pending { attempt: *attempt };
+            self.reassignments += 1;
+            self.penalise(worker, now);
+        }
+        expired.len()
+    }
+
+    /// Mark shard `index` done. Accepts completion from *any* worker — a
+    /// stalled worker whose lease was stolen may still deliver first, and a
+    /// valid result is a valid result. Returns false if out of range or
+    /// already done.
+    pub fn complete(&mut self, index: usize) -> bool {
+        match self.slots.get_mut(index) {
+            Some(slot @ (Slot::Pending { .. } | Slot::Leased { .. })) => {
+                *slot = Slot::Done;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Record a failure for `id` (corrupt frame, rejected submission):
+    /// exponential backoff with jitter, quarantine past the budget.
+    pub fn fail(&mut self, id: &str, now: u64) {
+        self.register(id);
+        self.penalise(id, now);
+    }
+
+    fn penalise(&mut self, id: &str, now: u64) {
+        let base = self.policy.backoff_base_ms.max(1);
+        let max_failures = self.policy.max_failures;
+        // Jitter draws from the table RNG even when unused below, keeping
+        // the stream position a pure function of the penalty sequence.
+        let jitter = self.rng.below(base);
+        let Some(w) = self.workers.get_mut(id) else { return };
+        w.failures += 1;
+        if w.failures >= max_failures {
+            w.quarantined = true;
+        } else {
+            let shift = (w.failures - 1).min(6);
+            w.backoff_until = now + (base << shift) + jitter;
+        }
+    }
+
+    pub fn all_done(&self) -> bool {
+        self.slots.iter().all(|s| matches!(s, Slot::Done))
+    }
+
+    pub fn completed(&self) -> usize {
+        self.slots.iter().filter(|s| matches!(s, Slot::Done)).count()
+    }
+
+    /// How many expired leases were re-queued over the table's lifetime —
+    /// the provenance counter the chaos CI job asserts on.
+    pub fn reassignments(&self) -> u64 {
+        self.reassignments
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn quarantined(&self) -> usize {
+        self.workers.values().filter(|w| w.quarantined).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table(count: usize) -> LeaseTable {
+        LeaseTable::new(
+            count,
+            LeasePolicy { lease_ms: 100, max_failures: 3, backoff_base_ms: 50, seed: 1 },
+        )
+    }
+
+    #[test]
+    fn leases_then_waits_then_done() {
+        let mut t = table(2);
+        assert_eq!(t.grant("a", 0), Grant::Lease { index: 0, attempt: 1 });
+        assert_eq!(t.grant("b", 0), Grant::Lease { index: 1, attempt: 1 });
+        // Everything leased: a third worker waits, bounded by the deadline.
+        match t.grant("c", 10) {
+            Grant::Wait { ms } => assert!((10..=200).contains(&ms), "wait {ms}"),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        assert!(t.complete(0));
+        assert!(t.complete(1));
+        assert!(!t.complete(1), "double-complete is a no-op");
+        assert!(t.all_done());
+        assert_eq!(t.grant("a", 20), Grant::Done);
+        assert_eq!(t.completed(), 2);
+    }
+
+    #[test]
+    fn expired_leases_are_reaped_and_stolen() {
+        let mut t = table(1);
+        assert_eq!(t.grant("slow", 0), Grant::Lease { index: 0, attempt: 1 });
+        assert_eq!(t.reap(99), 0, "lease still live at 99 ms");
+        assert_eq!(t.reap(100), 1, "lease expires at 100 ms");
+        assert_eq!(t.reassignments(), 1);
+        // The reassigned attempt counter increments; another worker steals.
+        assert_eq!(t.grant("fast", 101), Grant::Lease { index: 0, attempt: 2 });
+        // The slow worker's stale result is still a valid completion.
+        assert!(t.complete(0));
+        assert!(t.all_done());
+    }
+
+    #[test]
+    fn failures_back_off_exponentially_then_quarantine() {
+        let mut t = table(4);
+        t.fail("w", 0);
+        let wait1 = match t.grant("w", 1) {
+            Grant::Wait { ms } => ms,
+            other => panic!("expected backoff Wait, got {other:?}"),
+        };
+        // First failure: base(50) + jitter(<50) remaining.
+        assert!((10..100).contains(&wait1), "first backoff {wait1}");
+        // Past the backoff window the worker gets work again.
+        assert!(matches!(t.grant("w", 1000), Grant::Lease { .. }));
+        t.fail("w", 1000);
+        // Second failure doubles the base: 100 + jitter.
+        match t.grant("w", 1001) {
+            Grant::Wait { ms } => assert!((99..200).contains(&ms), "second backoff {ms}"),
+            other => panic!("expected Wait, got {other:?}"),
+        }
+        t.fail("w", 2000);
+        assert_eq!(t.grant("w", 9999), Grant::Quarantined);
+        assert_eq!(t.quarantined(), 1);
+        // Re-registering does not launder the quarantine.
+        t.register("w");
+        assert_eq!(t.grant("w", 10_000), Grant::Quarantined);
+        // Other workers are unaffected.
+        assert!(matches!(t.grant("v", 10_000), Grant::Lease { .. }));
+    }
+
+    #[test]
+    fn stalled_holder_is_penalised_by_the_reaper() {
+        let mut t = table(1);
+        for round in 0..3u64 {
+            let now = round * 1000;
+            match t.grant("stall", now + 900) {
+                Grant::Lease { .. } => {
+                    t.reap(now + 900 + 100); // let it expire
+                }
+                Grant::Wait { .. } => {} // still in backoff
+                Grant::Quarantined => break,
+                Grant::Done => panic!("nothing was completed"),
+            }
+        }
+        assert_eq!(t.grant("stall", 10_000), Grant::Quarantined);
+        assert_eq!(t.reassignments(), 3);
+    }
+
+    #[test]
+    fn jitter_is_seed_deterministic() {
+        let mk = || {
+            let mut t = table(2);
+            t.fail("w", 0);
+            match t.grant("w", 0) {
+                Grant::Wait { ms } => ms,
+                other => panic!("expected Wait, got {other:?}"),
+            }
+        };
+        assert_eq!(mk(), mk());
+    }
+}

@@ -1,0 +1,67 @@
+//! Fault-tolerant distributed sweep service.
+//!
+//! One coordinator ([`Coordinator`]) owns a [`crate::sim::engine::DesignSpace`],
+//! splits it with the existing [`crate::sim::shard::ShardSpec`] tiling, and
+//! leases shards to any number of workers ([`worker::run`]) over a
+//! length-framed, checksummed TCP protocol ([`proto`]) built on `std::net`
+//! and threads — no runtime, no new dependencies. Leases carry deadlines:
+//! a worker that stalls or dies simply loses its lease to the reaper and
+//! another worker steals the shard ([`lease`]). Workers that repeatedly
+//! fail back off exponentially (seeded jitter) and are quarantined past a
+//! retry budget. Submissions are idempotent — the first valid result for a
+//! range wins, identical resubmissions are acknowledged as duplicates, and
+//! byte-divergent ones are rejected loudly ([`SubmissionLedger`]).
+//!
+//! The end-to-end guarantee, enforced by `tests/service.rs`: a distributed
+//! sweep either merges **bit-identical** to the unsharded
+//! [`crate::sim::engine::SimEngine::sweep`], completes partially with loud
+//! provenance (`--allow-partial`), or fails with a typed error — never a
+//! hang and never a silent partial. The [`fault`] harness (CLI:
+//! `maple chaos`) injects deterministic, seed-replayable failures through
+//! the real worker code path to prove it.
+
+pub mod coordinator;
+pub mod fault;
+pub mod lease;
+pub mod proto;
+pub mod worker;
+
+pub use coordinator::{
+    Coordinator, ServiceConfig, ServiceStats, SubmissionLedger, SubmitError, SubmitOutcome,
+    SweepOutcome,
+};
+pub use fault::{run_chaos, ChaosReport, ChaosSpec, Fault, FaultEvent, FaultPlan};
+pub use lease::{Grant, LeasePolicy, LeaseTable};
+pub use proto::{AckCode, Message, ProtoError, PROTO_VERSION};
+pub use worker::{WorkerConfig, WorkerReport};
+
+use crate::sim::engine::EngineError;
+use crate::sim::shard::ShardError;
+
+/// Everything that can go wrong in a service run — every variant names the
+/// failing layer so a chaos run never ends in a bare `io::Error`.
+#[derive(Debug, thiserror::Error)]
+pub enum ServiceError {
+    #[error("engine error: {0}")]
+    Engine(#[from] EngineError),
+    #[error("shard error: {0}")]
+    Shard(#[from] ShardError),
+    #[error("protocol error: {0}")]
+    Proto(#[from] ProtoError),
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error(
+        "sweep incomplete: {completed}/{count} shards arrived (missing {missing:?}); \
+         rerun with --allow-partial to render the completed sub-grid"
+    )]
+    Incomplete { completed: usize, count: usize, missing: Vec<usize> },
+    #[error("worker {0} was quarantined by the coordinator (retry budget exhausted)")]
+    Quarantined(String),
+    #[error("cannot reach coordinator at {addr} after {attempts} attempts: {source}")]
+    Connect { addr: String, attempts: u32, source: std::io::Error },
+    #[error(
+        "space fingerprint skew: coordinator advertised {advertised:#018x} but the \
+         decoded space hashes to {decoded:#018x} (codec or version mismatch)"
+    )]
+    FingerprintSkew { advertised: u64, decoded: u64 },
+}

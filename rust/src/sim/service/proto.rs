@@ -1,0 +1,520 @@
+//! Length-framed wire protocol for the distributed sweep service.
+//!
+//! The same discipline as the on-disk codec ([`crate::sim::cache::codec`]):
+//! hand-rolled on `std`, little-endian, checksummed, strictly defensive.
+//! Every message travels in one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic            (b"MAPLESVC")
+//! 8       4     protocol version (u32, == PROTO_VERSION)
+//! 12      1     message kind     (u8, one per [`Message`] variant)
+//! 13      8     payload length   (u64)
+//! 21      8     FNV-1a-64        (u64, over the payload bytes)
+//! 29      n     payload sections
+//! ```
+//!
+//! A bad magic, foreign version, oversized frame, checksum mismatch, or
+//! internally inconsistent payload is a [`ProtoError`], never a partial
+//! message — the coordinator treats any of them as a failed frame from that
+//! worker (the fault-injection harness corrupts exactly one checksum byte
+//! to exercise this path deterministically).
+//!
+//! The [`Message::Space`] payload ships a whole [`DesignSpace`]:
+//! configurations as their full TOML (the same canonical form the space
+//! fingerprint hashes), axes as typed sections whose labels re-parse
+//! through [`ConfigAxis::parse`]. The worker re-fingerprints the decoded
+//! space and refuses to work if it does not match the fingerprint in the
+//! same frame, so a lossy round-trip can never silently compute the wrong
+//! grid.
+
+use std::io::{self, Read, Write};
+
+use crate::config::{AcceleratorConfig, ConfigAxis};
+use crate::sim::cache::codec::{
+    fnv1a, policy_from_tag, policy_tag, put_str, put_u32, put_u64, Reader,
+};
+use crate::sim::engine::{Axis, CellModel, DesignSpace, WorkloadKey};
+
+/// Bump on any frame or payload layout change; peers at different versions
+/// refuse each other loudly instead of misinterpreting bytes.
+pub const PROTO_VERSION: u32 = 1;
+
+const MAGIC: [u8; 8] = *b"MAPLESVC";
+const HEADER_LEN: usize = 29;
+
+/// Upper bound on one frame's payload — far above any realistic shard
+/// artifact, low enough that a corrupt length field cannot OOM the peer.
+pub const MAX_FRAME: u64 = 256 * 1024 * 1024;
+
+/// Byte offset of the frame checksum inside the header (the fault harness
+/// flips one byte in `21..29` to forge a deterministic corrupt frame).
+pub(crate) const CHECKSUM_OFFSET: usize = 21;
+
+/// Wire-protocol errors. Every variant means "this frame cannot be
+/// trusted"; the transport-level `Io` variant also covers a peer vanishing
+/// mid-frame.
+#[derive(Debug, thiserror::Error)]
+pub enum ProtoError {
+    #[error("service i/o: {0}")]
+    Io(#[from] io::Error),
+    #[error("bad magic: not a maple service frame")]
+    BadMagic,
+    #[error("protocol version {found} != supported {expected}")]
+    VersionMismatch { found: u32, expected: u32 },
+    #[error("frame of {len} bytes exceeds the {max}-byte limit")]
+    TooLarge { len: u64, max: u64 },
+    #[error("frame checksum mismatch: stored {stored:#018x}, computed {computed:#018x}")]
+    ChecksumMismatch { stored: u64, computed: u64 },
+    #[error("unknown message kind {0}")]
+    UnknownKind(u8),
+    #[error("malformed {kind} payload: {reason}")]
+    Malformed { kind: &'static str, reason: String },
+}
+
+/// Outcome tag of a shard submission, carried in [`Message::Ack`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AckCode {
+    /// First valid submission for its range: stored and counted.
+    Accepted,
+    /// Byte-identical resubmission of an already-stored range: idempotent.
+    Duplicate,
+    /// Invalid or byte-divergent submission: dropped, worker penalised.
+    Rejected,
+}
+
+impl AckCode {
+    fn tag(self) -> u8 {
+        match self {
+            AckCode::Accepted => 0,
+            AckCode::Duplicate => 1,
+            AckCode::Rejected => 2,
+        }
+    }
+
+    fn from_tag(tag: u8) -> Option<Self> {
+        match tag {
+            0 => Some(AckCode::Accepted),
+            1 => Some(AckCode::Duplicate),
+            2 => Some(AckCode::Rejected),
+            _ => None,
+        }
+    }
+}
+
+/// One service message. Worker → coordinator: `Register`, `Request`,
+/// `Submit`. Coordinator → worker: everything else.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker announces itself (idempotent — re-sent on every reconnect,
+    /// which is what makes coordinator restarts survivable).
+    Register { worker_id: String },
+    /// Coordinator's reply to `Register`: the design space to sweep, its
+    /// fingerprint, the shard split, and the profile chunking every worker
+    /// must run with (checksum bits depend on it).
+    Space { fingerprint: u64, shard_count: u64, profile_threads: u64, space: DesignSpace },
+    /// Worker asks for work.
+    Request { worker_id: String },
+    /// A shard lease: compute `index/count` and submit before `lease_ms`
+    /// elapses, or the coordinator re-queues it for another worker.
+    Lease { index: u64, count: u64, attempt: u32, lease_ms: u64 },
+    /// No work right now (all shards leased, or the worker is in backoff);
+    /// ask again in about `ms`.
+    Wait { ms: u64 },
+    /// The grid is complete (or the service is shutting down): disconnect.
+    Done,
+    /// A finished shard as raw `MAPLESHD` artifact bytes — the identical
+    /// bytes `maple sweep --shard` would have written to disk.
+    Submit { worker_id: String, shard: Vec<u8> },
+    /// Coordinator's verdict on a `Submit`.
+    Ack { code: AckCode, reason: String },
+    /// The worker exhausted its retry budget; it must stop.
+    Quarantined,
+}
+
+impl Message {
+    fn kind_tag(&self) -> u8 {
+        match self {
+            Message::Register { .. } => 1,
+            Message::Space { .. } => 2,
+            Message::Request { .. } => 3,
+            Message::Lease { .. } => 4,
+            Message::Wait { .. } => 5,
+            Message::Done => 6,
+            Message::Submit { .. } => 7,
+            Message::Ack { .. } => 8,
+            Message::Quarantined => 9,
+        }
+    }
+
+    /// Human name of the message kind (error context).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Message::Register { .. } => "register",
+            Message::Space { .. } => "space",
+            Message::Request { .. } => "request",
+            Message::Lease { .. } => "lease",
+            Message::Wait { .. } => "wait",
+            Message::Done => "done",
+            Message::Submit { .. } => "submit",
+            Message::Ack { .. } => "ack",
+            Message::Quarantined => "quarantined",
+        }
+    }
+}
+
+// ---------------------------------------------------------------- encoding
+
+fn encode_payload(msg: &Message) -> Vec<u8> {
+    let mut p = Vec::new();
+    match msg {
+        Message::Register { worker_id } | Message::Request { worker_id } => {
+            put_str(&mut p, worker_id);
+        }
+        Message::Space { fingerprint, shard_count, profile_threads, space } => {
+            put_u64(&mut p, *fingerprint);
+            put_u64(&mut p, *shard_count);
+            put_u64(&mut p, *profile_threads);
+            encode_space(&mut p, space);
+        }
+        Message::Lease { index, count, attempt, lease_ms } => {
+            put_u64(&mut p, *index);
+            put_u64(&mut p, *count);
+            put_u32(&mut p, *attempt);
+            put_u64(&mut p, *lease_ms);
+        }
+        Message::Wait { ms } => put_u64(&mut p, *ms),
+        Message::Done | Message::Quarantined => {}
+        Message::Submit { worker_id, shard } => {
+            put_str(&mut p, worker_id);
+            put_u64(&mut p, shard.len() as u64);
+            p.extend_from_slice(shard);
+        }
+        Message::Ack { code, reason } => {
+            p.push(code.tag());
+            put_str(&mut p, reason);
+        }
+    }
+    p
+}
+
+/// A [`DesignSpace`] as payload sections: cell-model tag, configurations as
+/// their full TOML, then each axis as a typed section. Config-axis labels
+/// round-trip through [`ConfigAxis::parse`] (the CLI's own parser), so the
+/// wire form is exactly the `--axis name=v1,v2` spelling.
+fn encode_space(p: &mut Vec<u8>, space: &DesignSpace) {
+    p.push(space.cell_model.tag());
+    put_u64(p, space.configs.len() as u64);
+    for cfg in &space.configs {
+        put_str(p, &cfg.to_toml());
+    }
+    put_u64(p, space.axes.len() as u64);
+    for axis in &space.axes {
+        match axis {
+            Axis::Dataset(keys) => {
+                p.push(0);
+                put_u64(p, keys.len() as u64);
+                for k in keys {
+                    put_str(p, &k.dataset);
+                    put_u64(p, k.seed);
+                    put_u64(p, k.scale as u64);
+                }
+            }
+            Axis::Policy(ps) => {
+                p.push(1);
+                put_u64(p, ps.len() as u64);
+                for &pol in ps {
+                    put_u32(p, policy_tag(pol));
+                }
+            }
+            Axis::Config(a) => {
+                p.push(2);
+                put_str(p, a.name());
+                put_str(p, &a.labels().join(","));
+            }
+        }
+    }
+}
+
+/// The full frame (header + payload) for one message.
+pub fn encode_message(msg: &Message) -> Vec<u8> {
+    let payload = encode_payload(msg);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
+    out.extend_from_slice(&MAGIC);
+    put_u32(&mut out, PROTO_VERSION);
+    out.push(msg.kind_tag());
+    put_u64(&mut out, payload.len() as u64);
+    put_u64(&mut out, fnv1a(&payload));
+    out.extend_from_slice(&payload);
+    out
+}
+
+/// Encode and write one message to `w` (single `write_all`, so a frame is
+/// never interleaved with another writer's bytes on the same stream).
+pub fn write_message<W: Write>(w: &mut W, msg: &Message) -> io::Result<()> {
+    w.write_all(&encode_message(msg))
+}
+
+// ---------------------------------------------------------------- decoding
+
+/// Read one message from `r` (blocks for a whole frame).
+pub fn read_message<R: Read>(r: &mut R) -> Result<Message, ProtoError> {
+    let mut first = [0u8; 1];
+    r.read_exact(&mut first)?;
+    read_message_tail(first[0], r)
+}
+
+/// Read one message whose first header byte was already consumed — the
+/// coordinator peeks one byte under a short timeout to distinguish an idle
+/// connection from an arriving frame, then hands the byte here.
+pub fn read_message_tail<R: Read>(first: u8, r: &mut R) -> Result<Message, ProtoError> {
+    let mut header = [0u8; HEADER_LEN];
+    header[0] = first;
+    r.read_exact(&mut header[1..])?;
+    if header[..8] != MAGIC {
+        return Err(ProtoError::BadMagic);
+    }
+    let version = u32::from_le_bytes(header[8..12].try_into().unwrap());
+    if version != PROTO_VERSION {
+        return Err(ProtoError::VersionMismatch { found: version, expected: PROTO_VERSION });
+    }
+    let kind = header[12];
+    let len = u64::from_le_bytes(header[13..21].try_into().unwrap());
+    if len > MAX_FRAME {
+        return Err(ProtoError::TooLarge { len, max: MAX_FRAME });
+    }
+    let stored = u64::from_le_bytes(header[21..29].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let computed = fnv1a(&payload);
+    if stored != computed {
+        return Err(ProtoError::ChecksumMismatch { stored, computed });
+    }
+    decode_payload(kind, &payload)
+}
+
+fn malformed(kind: &'static str, reason: impl ToString) -> ProtoError {
+    ProtoError::Malformed { kind, reason: reason.to_string() }
+}
+
+fn decode_payload(kind: u8, payload: &[u8]) -> Result<Message, ProtoError> {
+    let mut r = Reader::new(payload);
+    let msg = match kind {
+        1 => Message::Register { worker_id: r.string().map_err(|e| malformed("register", e))? },
+        2 => {
+            let e = |e: crate::sim::cache::codec::CodecError| malformed("space", e);
+            let fingerprint = r.u64().map_err(e)?;
+            let shard_count = r.u64().map_err(e)?;
+            let profile_threads = r.u64().map_err(e)?;
+            let space = decode_space(&mut r)?;
+            Message::Space { fingerprint, shard_count, profile_threads, space }
+        }
+        3 => Message::Request { worker_id: r.string().map_err(|e| malformed("request", e))? },
+        4 => {
+            let e = |e: crate::sim::cache::codec::CodecError| malformed("lease", e);
+            Message::Lease {
+                index: r.u64().map_err(e)?,
+                count: r.u64().map_err(e)?,
+                attempt: r.u32().map_err(e)?,
+                lease_ms: r.u64().map_err(e)?,
+            }
+        }
+        5 => Message::Wait { ms: r.u64().map_err(|e| malformed("wait", e))? },
+        6 => Message::Done,
+        7 => {
+            let e = |e: crate::sim::cache::codec::CodecError| malformed("submit", e);
+            let worker_id = r.string().map_err(e)?;
+            let n = r.index().map_err(e)?;
+            r.expect_items(n, 1).map_err(e)?;
+            let mut shard = Vec::with_capacity(n);
+            for _ in 0..n {
+                shard.push(r.byte().map_err(e)?);
+            }
+            Message::Submit { worker_id, shard }
+        }
+        8 => {
+            let e = |e: crate::sim::cache::codec::CodecError| malformed("ack", e);
+            let tag = r.byte().map_err(e)?;
+            let code = AckCode::from_tag(tag)
+                .ok_or_else(|| malformed("ack", format!("unknown ack code {tag}")))?;
+            Message::Ack { code, reason: r.string().map_err(e)? }
+        }
+        9 => Message::Quarantined,
+        other => return Err(ProtoError::UnknownKind(other)),
+    };
+    r.done().map_err(|e| malformed(msg.kind_name(), e))?;
+    Ok(msg)
+}
+
+fn decode_space(r: &mut Reader<'_>) -> Result<DesignSpace, ProtoError> {
+    let e = |e: crate::sim::cache::codec::CodecError| malformed("space", e);
+    let model_tag = r.byte().map_err(e)?;
+    let cell_model = CellModel::from_tag(model_tag as u32)
+        .ok_or_else(|| malformed("space", format!("unknown cell model tag {model_tag}")))?;
+    let n_configs = r.index().map_err(e)?;
+    r.expect_items(n_configs, 8).map_err(e)?;
+    let mut configs = Vec::with_capacity(n_configs);
+    for _ in 0..n_configs {
+        let toml = r.string().map_err(e)?;
+        configs.push(
+            AcceleratorConfig::from_toml(&toml)
+                .map_err(|err| malformed("space", format!("config toml: {err}")))?,
+        );
+    }
+    let n_axes = r.index().map_err(e)?;
+    r.expect_items(n_axes, 1).map_err(e)?;
+    let mut axes = Vec::with_capacity(n_axes);
+    for _ in 0..n_axes {
+        let tag = r.byte().map_err(e)?;
+        axes.push(match tag {
+            0 => {
+                let n = r.index().map_err(e)?;
+                r.expect_items(n, 24).map_err(e)?;
+                let mut keys = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let dataset = r.string().map_err(e)?;
+                    let seed = r.u64().map_err(e)?;
+                    let scale = r.u64().map_err(e)? as usize;
+                    keys.push(WorkloadKey { dataset, seed, scale });
+                }
+                Axis::Dataset(keys)
+            }
+            1 => {
+                let n = r.index().map_err(e)?;
+                r.expect_items(n, 4).map_err(e)?;
+                let mut ps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let t = r.u32().map_err(e)?;
+                    ps.push(policy_from_tag(t).ok_or_else(|| {
+                        malformed("space", format!("unknown policy tag {t}"))
+                    })?);
+                }
+                Axis::Policy(ps)
+            }
+            2 => {
+                let name = r.string().map_err(e)?;
+                let labels = r.string().map_err(e)?;
+                Axis::Config(
+                    ConfigAxis::parse(&name, &labels)
+                        .map_err(|err| malformed("space", format!("config axis: {err}")))?,
+                )
+            }
+            other => return Err(malformed("space", format!("unknown axis tag {other}"))),
+        });
+    }
+    Ok(DesignSpace { configs, axes, cell_model })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Policy;
+    use crate::noc::Topology;
+
+    fn round_trip(msg: &Message) -> Message {
+        let frame = encode_message(msg);
+        read_message(&mut frame.as_slice()).expect("round trip")
+    }
+
+    fn sample_space() -> DesignSpace {
+        DesignSpace::over(vec![
+            AcceleratorConfig::extensor_maple(),
+            AcceleratorConfig::matraptor_baseline(),
+        ])
+        .with_axis(Axis::Dataset(vec![
+            WorkloadKey::suite("wv", 7, 64),
+            WorkloadKey::suite("fb", 9, 32),
+        ]))
+        .with_axis(Axis::macs_per_pe(vec![2, 4, 8]))
+        .with_axis(Axis::topology(vec![
+            Topology::Crossbar { ports: 8 },
+            Topology::Mesh { width: 2, height: 2 },
+        ]))
+        .with_axis(Axis::Policy(vec![Policy::RoundRobin, Policy::GreedyBalance]))
+        .with_cell_model(CellModel::Both)
+    }
+
+    #[test]
+    fn every_message_kind_round_trips() {
+        let msgs = [
+            Message::Register { worker_id: "w0".into() },
+            Message::Request { worker_id: "worker-π".into() },
+            Message::Lease { index: 3, count: 8, attempt: 2, lease_ms: 30_000 },
+            Message::Wait { ms: 120 },
+            Message::Done,
+            Message::Submit { worker_id: "w1".into(), shard: vec![0xAB; 257] },
+            Message::Ack { code: AckCode::Duplicate, reason: String::new() },
+            Message::Ack { code: AckCode::Rejected, reason: "byte-divergent".into() },
+            Message::Quarantined,
+        ];
+        for msg in msgs {
+            assert_eq!(round_trip(&msg), msg);
+        }
+    }
+
+    #[test]
+    fn space_round_trips_with_identical_fingerprint() {
+        let space = sample_space();
+        let fingerprint = space.fingerprint().unwrap();
+        let msg = Message::Space {
+            fingerprint,
+            shard_count: 6,
+            profile_threads: 2,
+            space: space.clone(),
+        };
+        match round_trip(&msg) {
+            Message::Space { fingerprint: f, shard_count, profile_threads, space: decoded } => {
+                assert_eq!(f, fingerprint);
+                assert_eq!((shard_count, profile_threads), (6, 2));
+                // The wire round-trip must preserve the grid exactly — the
+                // fingerprint covers every expanded config TOML and label.
+                assert_eq!(decoded.fingerprint().unwrap(), fingerprint);
+                assert_eq!(decoded, space);
+            }
+            other => panic!("expected Space, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corruption_anywhere_is_rejected() {
+        let frame = encode_message(&Message::Lease { index: 1, count: 4, attempt: 1, lease_ms: 5 });
+        for i in 0..frame.len() {
+            let mut bad = frame.clone();
+            bad[i] ^= 0x40;
+            assert!(
+                read_message(&mut bad.as_slice()).is_err(),
+                "flipping byte {i} must not decode cleanly"
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_and_version_skew_are_loud() {
+        let frame = encode_message(&Message::Register { worker_id: "w".into() });
+        for cut in 0..frame.len() {
+            assert!(read_message(&mut frame[..cut].to_vec().as_slice()).is_err());
+        }
+        let mut skewed = frame.clone();
+        skewed[8] ^= 0xFF; // version field
+        assert!(matches!(
+            read_message(&mut skewed.as_slice()),
+            Err(ProtoError::VersionMismatch { .. })
+        ));
+        let mut huge = frame;
+        huge[13..21].copy_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        assert!(matches!(read_message(&mut huge.as_slice()), Err(ProtoError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_in_a_payload_are_rejected() {
+        let mut frame = encode_message(&Message::Done);
+        // Forge one trailing payload byte with a matching checksum.
+        frame[13..21].copy_from_slice(&1u64.to_le_bytes());
+        frame[21..29].copy_from_slice(&fnv1a(&[0x55]).to_le_bytes());
+        frame.push(0x55);
+        assert!(matches!(
+            read_message(&mut frame.as_slice()),
+            Err(ProtoError::Malformed { .. })
+        ));
+    }
+}

@@ -1,0 +1,292 @@
+//! The sweep worker: connect, register, lease shards, compute, submit.
+//!
+//! A worker is a thin loop around [`crate::sim::engine::SimEngine::sweep_shard`]:
+//! it registers with the coordinator, receives the full [`DesignSpace`] over
+//! the wire (verifying the advertised fingerprint against its own decode —
+//! a worker never computes against a space it cannot prove it agrees on),
+//! and then requests leases until the coordinator says `Done`. Every
+//! transport hiccup — a dropped connection, a timed-out read, a coordinator
+//! restart — is survived by reconnecting and idempotently re-registering,
+//! bounded by [`WorkerConfig::max_reconnects`] so a dead coordinator is a
+//! loud [`ServiceError::Connect`], never a hang.
+//!
+//! All frames leave through the [`FaultInjector`] so `maple chaos` and the
+//! integration tests can make *this exact code path* drop, corrupt, stall,
+//! duplicate, kill-and-rejoin, or die on a deterministic schedule.
+
+use std::io;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::fault::{FaultEvent, FaultInjector, FaultPlan};
+use super::proto::{self, AckCode, Message};
+use super::ServiceError;
+use crate::sim::cache::codec;
+use crate::sim::engine::{DesignSpace, SimEngine};
+use crate::sim::shard::ShardSpec;
+
+/// Worker knobs (CLI: `maple work`).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerConfig {
+    /// Stable identity across reconnects — the coordinator's failure
+    /// accounting and lease table key. Defaults to `worker-<pid>`.
+    pub id: String,
+    /// Total (re)connection attempts before giving up on the coordinator.
+    pub max_reconnects: u32,
+    /// Pause between connection attempts.
+    pub reconnect_ms: u64,
+    /// Self-inflicted faults (chaos testing); `None` for honest work.
+    pub fault: Option<FaultPlan>,
+}
+
+impl WorkerConfig {
+    /// A default-tuned config with an explicit identity.
+    pub fn named(id: impl Into<String>) -> Self {
+        Self { id: id.into(), max_reconnects: 40, reconnect_ms: 100, fault: None }
+    }
+
+    fn with_defaults(mut self) -> Self {
+        if self.id.is_empty() {
+            self.id = format!("worker-{}", std::process::id());
+        }
+        if self.max_reconnects == 0 {
+            self.max_reconnects = 40;
+        }
+        if self.reconnect_ms == 0 {
+            self.reconnect_ms = 100;
+        }
+        self
+    }
+}
+
+/// What one worker run did, for the CLI summary and chaos assertions.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerReport {
+    pub id: String,
+    /// Leases taken (including ones lost to faults).
+    pub leases: u64,
+    /// Shards submitted and accepted as first-valid.
+    pub submitted: u64,
+    /// Submissions acknowledged as idempotent duplicates.
+    pub duplicates: u64,
+    /// Submissions rejected by the coordinator.
+    pub rejected: u64,
+    /// Sessions re-established after a drop/kill/restart.
+    pub reconnects: u64,
+    /// The worker executed a `die` fault and exited mid-sweep.
+    pub died: bool,
+    /// The deterministic fault trace (empty for honest workers).
+    pub events: Vec<FaultEvent>,
+}
+
+impl WorkerReport {
+    fn new(id: String) -> Self {
+        Self {
+            id,
+            leases: 0,
+            submitted: 0,
+            duplicates: 0,
+            rejected: 0,
+            reconnects: 0,
+            died: false,
+            events: Vec::new(),
+        }
+    }
+}
+
+/// Why the current session ended and what the outer loop should do.
+enum Session {
+    /// Coordinator said `Done` — the sweep is over.
+    Finished,
+    /// The worker executed a `die` fault.
+    Died,
+    /// Connection lost (fault or genuine) — reconnect and re-register.
+    Reconnect,
+}
+
+/// Run one worker against `addr` until the sweep completes, the fault plan
+/// kills it, or the coordinator becomes unreachable.
+pub fn run(addr: &str, engine: SimEngine, cfg: WorkerConfig) -> Result<WorkerReport, ServiceError> {
+    let cfg = cfg.with_defaults();
+    let mut report = WorkerReport::new(cfg.id.clone());
+    // The injector (and its frame counter) lives across reconnects, so a
+    // plan like `drop:1,corrupt:3` counts frames over the whole run.
+    let mut injector = FaultInjector::new(cfg.fault.as_ref());
+    let mut engine = engine;
+    let mut attempts_left = cfg.max_reconnects;
+    let outcome = loop {
+        let mut stream = match connect(addr, &cfg, &mut attempts_left) {
+            Ok(stream) => stream,
+            Err(e) => break Err(e),
+        };
+        match session(&mut stream, &mut engine, &cfg, &mut injector, &mut report) {
+            Ok(Session::Finished) => break Ok(()),
+            Ok(Session::Died) => {
+                report.died = true;
+                break Ok(());
+            }
+            Ok(Session::Reconnect) => {
+                report.reconnects += 1;
+                continue;
+            }
+            Err(SessionError::Fatal(e)) => break Err(e),
+            Err(SessionError::Transport) => {
+                report.reconnects += 1;
+                continue;
+            }
+        }
+    };
+    report.events = injector.events.clone();
+    outcome.map(|()| report)
+}
+
+fn connect(
+    addr: &str,
+    cfg: &WorkerConfig,
+    attempts_left: &mut u32,
+) -> Result<TcpStream, ServiceError> {
+    let mut last_err: Option<io::Error> = None;
+    while *attempts_left > 0 {
+        *attempts_left -= 1;
+        match TcpStream::connect(addr) {
+            Ok(stream) => {
+                let _ = stream.set_nodelay(true);
+                // Generous read timeout: the no-hang backstop when the
+                // coordinator vanishes between a request and its reply.
+                let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+                return Ok(stream);
+            }
+            Err(e) => {
+                last_err = Some(e);
+                std::thread::sleep(Duration::from_millis(cfg.reconnect_ms));
+            }
+        }
+    }
+    let source = last_err.unwrap_or_else(|| io::Error::other("reconnect budget exhausted"));
+    Err(ServiceError::Connect { addr: addr.to_string(), attempts: cfg.max_reconnects, source })
+}
+
+/// Session-scoped error split: transport errors trigger a reconnect, fatal
+/// ones abort the worker.
+enum SessionError {
+    Transport,
+    Fatal(ServiceError),
+}
+
+impl From<io::Error> for SessionError {
+    fn from(_: io::Error) -> Self {
+        SessionError::Transport
+    }
+}
+
+impl From<proto::ProtoError> for SessionError {
+    // Both I/O (peer vanished mid-frame) and decode failures (a frame that
+    // cannot be trusted) resolve the same way: a fresh connection. The
+    // bounded reconnect budget keeps a persistently-bad coordinator loud.
+    fn from(_: proto::ProtoError) -> Self {
+        SessionError::Transport
+    }
+}
+
+fn session(
+    stream: &mut TcpStream,
+    engine: &mut SimEngine,
+    cfg: &WorkerConfig,
+    injector: &mut FaultInjector,
+    report: &mut WorkerReport,
+) -> Result<Session, SessionError> {
+    injector.send(stream, &Message::Register { worker_id: cfg.id.clone() })?;
+    let space: DesignSpace = match proto::read_message(stream)? {
+        Message::Space { fingerprint, shard_count: _, profile_threads, space } => {
+            // Prove the decoded space is the one the coordinator hashed —
+            // a codec or version skew must fail here, not as a rejected
+            // submission three minutes of compute later.
+            let decoded = match space.fingerprint() {
+                Ok(f) => f,
+                Err(e) => return Err(SessionError::Fatal(ServiceError::Engine(e))),
+            };
+            if decoded != fingerprint {
+                return Err(SessionError::Fatal(ServiceError::FingerprintSkew {
+                    advertised: fingerprint,
+                    decoded,
+                }));
+            }
+            apply_profile_threads(engine, profile_threads as usize);
+            space
+        }
+        _ => return Err(SessionError::Transport),
+    };
+    loop {
+        injector.send(stream, &Message::Request { worker_id: cfg.id.clone() })?;
+        match proto::read_message(stream)? {
+            Message::Lease { index, count, attempt: _, lease_ms } => {
+                report.leases += 1;
+                if injector.take_die(index) {
+                    return Ok(Session::Died);
+                }
+                if injector.take_kill(index) {
+                    let _ = stream.shutdown(std::net::Shutdown::Both);
+                    return Ok(Session::Reconnect);
+                }
+                if injector.take_stall(lease_ms) {
+                    std::thread::sleep(Duration::from_millis(lease_ms + 150));
+                }
+                let spec = match ShardSpec::new(index as usize, count as usize) {
+                    Ok(spec) => spec,
+                    Err(e) => return Err(SessionError::Fatal(ServiceError::Shard(e))),
+                };
+                let shard = match engine.sweep_shard(&space, spec) {
+                    Ok(shard) => shard,
+                    Err(e) => return Err(SessionError::Fatal(ServiceError::Engine(e))),
+                };
+                let bytes = codec::encode_shard(&shard);
+                submit(stream, injector, cfg, report, &bytes)?;
+                if injector.take_dup(index) {
+                    submit(stream, injector, cfg, report, &bytes)?;
+                }
+            }
+            Message::Wait { ms } => {
+                std::thread::sleep(Duration::from_millis(ms.clamp(1, 250)));
+            }
+            Message::Done => return Ok(Session::Finished),
+            Message::Quarantined => {
+                return Err(SessionError::Fatal(ServiceError::Quarantined(cfg.id.clone())))
+            }
+            _ => return Err(SessionError::Transport),
+        }
+    }
+}
+
+fn submit(
+    stream: &mut TcpStream,
+    injector: &mut FaultInjector,
+    cfg: &WorkerConfig,
+    report: &mut WorkerReport,
+    bytes: &[u8],
+) -> Result<(), SessionError> {
+    injector.send(
+        stream,
+        &Message::Submit { worker_id: cfg.id.clone(), shard: bytes.to_vec() },
+    )?;
+    match proto::read_message(stream)? {
+        Message::Ack { code, reason } => {
+            match code {
+                AckCode::Accepted => report.submitted += 1,
+                AckCode::Duplicate => report.duplicates += 1,
+                AckCode::Rejected => {
+                    report.rejected += 1;
+                    eprintln!("warning: worker {}: submission rejected: {reason}", cfg.id);
+                }
+            }
+            Ok(())
+        }
+        _ => Err(SessionError::Transport),
+    }
+}
+
+fn apply_profile_threads(engine: &mut SimEngine, profile_threads: usize) {
+    // `with_profile_threads` is a by-value builder; route through a
+    // temporary move to apply it in place.
+    let current = std::mem::replace(engine, SimEngine::new());
+    *engine = current.with_profile_threads(profile_threads);
+}

@@ -219,20 +219,16 @@ impl SweepShard {
     }
 
     /// Encode and atomically publish this shard into `dir` (created if
-    /// needed): temp file + `rename`, same discipline as the workload
-    /// store, so a concurrently merging reader never sees a torn artifact.
+    /// needed): unique temp file + `rename`, the same
+    /// [`crate::sim::cache::store::atomic_publish`] discipline as the
+    /// workload store, so a concurrently merging reader never sees a torn
+    /// artifact and racing writers (threads or processes) never share a
+    /// temp name.
     pub fn write_to(&self, dir: &Path) -> io::Result<PathBuf> {
         fs::create_dir_all(dir)?;
         let path = dir.join(self.file_name());
-        let tmp = path.with_extension(format!("tmp-{}", std::process::id()));
-        fs::write(&tmp, codec::encode_shard(self))?;
-        match fs::rename(&tmp, &path) {
-            Ok(()) => Ok(path),
-            Err(e) => {
-                let _ = fs::remove_file(&tmp);
-                Err(e)
-            }
-        }
+        crate::sim::cache::store::atomic_publish(&path, &codec::encode_shard(self))?;
+        Ok(path)
     }
 }
 
@@ -270,15 +266,16 @@ pub fn read_dir(dir: &Path) -> Result<Vec<SweepShard>, ShardError> {
     Ok(shards)
 }
 
-/// Merge a complete shard set back into the [`SweepResult`] the unsharded
-/// sweep would have produced — cell-for-cell, bit-for-bit.
-///
-/// Validation, in order: non-empty set; one fingerprint (same design
-/// space); one shard count; identical grid metadata and profile chunking;
-/// no duplicate shard indices (overlap); every index `0..count` present
-/// (gap); and the actual cell ranges tile `0..total` exactly in index
-/// order. Only then are the cells concatenated.
-pub fn merge(shards: &[SweepShard]) -> Result<SweepResult, ShardError> {
+/// Validate everything about a shard set that does not require it to be
+/// *complete*: non-empty; one fingerprint (same design space); one shard
+/// count; identical grid metadata and profile chunking; no duplicate shard
+/// indices; and every present shard sitting exactly on its canonical
+/// [`ShardSpec::range`] — a shard with the right index but the wrong cells
+/// is tampering, complete set or not. Returns the shards sorted by index
+/// plus the grid's total cell count. Shared by [`merge`] (which then
+/// requires completeness) and [`merge_partial`] (which reports the gaps
+/// instead).
+fn validate_set(shards: &[SweepShard]) -> Result<(Vec<&SweepShard>, usize), ShardError> {
     let first = shards.first().ok_or(ShardError::Empty)?;
     for s in shards {
         s.spec.validate()?;
@@ -315,11 +312,6 @@ pub fn merge(shards: &[SweepShard]) -> Result<SweepResult, ShardError> {
         }
     }
 
-    // Coverage check without any O(count) allocation — `count` comes from
-    // an artifact and may be absurd, but every spec is already validated
-    // (index < count), so `shards.len() == count` with no adjacent
-    // duplicates in sorted order pigeonholes the indices to exactly
-    // `0..count`.
     let count = first.spec.count;
     let mut ordered: Vec<&SweepShard> = shards.iter().collect();
     ordered.sort_by_key(|s| s.spec.index);
@@ -328,6 +320,35 @@ pub fn merge(shards: &[SweepShard]) -> Result<SweepResult, ShardError> {
             return Err(ShardError::DuplicateShard { index: pair[0].spec.index, count });
         }
     }
+
+    // Every present shard must sit exactly on its canonical range — this
+    // catches a tampered or truncated shard even in a partial set, where
+    // the running expected-start walk of a complete merge has no anchor.
+    let total = first.total_cells();
+    for s in &ordered {
+        let canonical = s.spec.range(total);
+        if s.start != canonical.start || s.cells.len() != canonical.len() {
+            return Err(ShardError::RangeMismatch {
+                index: s.spec.index,
+                count,
+                found_start: s.start,
+                found_end: s.range().end,
+                expected_start: canonical.start,
+            });
+        }
+    }
+    Ok((ordered, total))
+}
+
+/// Merge a complete shard set back into the [`SweepResult`] the unsharded
+/// sweep would have produced — cell-for-cell, bit-for-bit.
+///
+/// [`validate_set`] plus completeness: every index `0..count` present.
+/// Only then are the cells concatenated.
+pub fn merge(shards: &[SweepShard]) -> Result<SweepResult, ShardError> {
+    let (ordered, total) = validate_set(shards)?;
+    let first = ordered[0];
+    let count = first.spec.count;
     if ordered.len() != count {
         // Report the first few missing indices (the list itself could be
         // near-`count` long for a crafted artifact).
@@ -349,29 +370,6 @@ pub fn merge(shards: &[SweepShard]) -> Result<SweepResult, ShardError> {
         return Err(ShardError::MissingShards { missing, count });
     }
 
-    // Index order == range order for the canonical splitter; walking the
-    // sorted set with a running expected-start catches any tampered or
-    // truncated range even when all indices are present.
-    let total = first.total_cells();
-    let mut expected_start = 0usize;
-    for s in &ordered {
-        if s.start != expected_start {
-            return Err(ShardError::RangeMismatch {
-                index: s.spec.index,
-                count,
-                found_start: s.start,
-                found_end: s.range().end,
-                expected_start,
-            });
-        }
-        expected_start += s.cells.len();
-    }
-    if expected_start != total {
-        return Err(ShardError::Incompatible(format!(
-            "shard ranges cover {expected_start} of {total} grid cells"
-        )));
-    }
-
     let mut cells = Vec::with_capacity(total);
     for s in &ordered {
         cells.extend(s.cells.iter().cloned());
@@ -383,6 +381,97 @@ pub fn merge(shards: &[SweepShard]) -> Result<SweepResult, ShardError> {
         cell_model: first.cell_model,
         dims: first.dims.clone(),
         cells,
+    })
+}
+
+/// The completed sub-grid of an interrupted sharded sweep, with the gaps
+/// named: contiguous runs of present cells ([`PartialSweep::segments`]) and
+/// the missing index spans between them. Only produced by an *explicit*
+/// opt-in (`--allow-partial`); the strict [`merge`] path never returns one.
+/// Every present shard passed the full [`validate_set`] compatibility and
+/// canonical-range checks — partial means incomplete, never invalid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PartialSweep {
+    pub fingerprint: u64,
+    pub shard_count: usize,
+    /// Total cells of the full grid (covered + missing).
+    pub total_cells: usize,
+    pub datasets: Vec<WorkloadKey>,
+    pub configs: Vec<String>,
+    pub policies: Vec<Policy>,
+    pub cell_model: CellModel,
+    pub dims: Vec<AxisDim>,
+    /// Which shards arrived, index order.
+    pub present: Vec<ShardSpec>,
+    /// Contiguous missing flat-index spans, in order (empty iff complete).
+    pub missing_spans: Vec<Range<usize>>,
+    /// Contiguous covered runs: `(first flat index, cells)`.
+    pub segments: Vec<(usize, Vec<CellResult>)>,
+}
+
+impl PartialSweep {
+    pub fn covered_cells(&self) -> usize {
+        self.segments.iter().map(|(_, c)| c.len()).sum()
+    }
+
+    pub fn missing_cells(&self) -> usize {
+        self.total_cells - self.covered_cells()
+    }
+
+    pub fn missing_shards(&self) -> usize {
+        self.shard_count - self.present.len()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.missing_spans.is_empty()
+    }
+}
+
+/// Merge whatever subset of a shard set arrived into a [`PartialSweep`].
+/// Same compatibility validation as [`merge`]; the difference is that gaps
+/// become provenance ([`PartialSweep::missing_spans`]) instead of a
+/// [`ShardError::MissingShards`] error. Missing spans are computed from the
+/// *present* shards' canonical ranges, never by iterating `0..count` — an
+/// artifact can claim an absurd `count` and must not drive allocation.
+pub fn merge_partial(shards: &[SweepShard]) -> Result<PartialSweep, ShardError> {
+    let (ordered, total) = validate_set(shards)?;
+    let first = ordered[0];
+
+    let mut missing_spans: Vec<Range<usize>> = Vec::new();
+    let mut segments: Vec<(usize, Vec<CellResult>)> = Vec::new();
+    let mut next_expected = 0usize;
+    for s in &ordered {
+        let r = s.range();
+        if r.start > next_expected {
+            missing_spans.push(next_expected..r.start);
+        }
+        // Adjacent present shards coalesce into one covered segment. Empty
+        // shards (count > total) cover nothing but still count as present.
+        match segments.last_mut() {
+            Some((seg_start, cells)) if *seg_start + cells.len() == r.start => {
+                cells.extend(s.cells.iter().cloned());
+            }
+            _ if !s.cells.is_empty() => segments.push((r.start, s.cells.clone())),
+            _ => {}
+        }
+        next_expected = r.end;
+    }
+    if next_expected < total {
+        missing_spans.push(next_expected..total);
+    }
+
+    Ok(PartialSweep {
+        fingerprint: first.fingerprint,
+        shard_count: first.spec.count,
+        total_cells: total,
+        datasets: first.datasets.clone(),
+        configs: first.configs.clone(),
+        policies: first.policies.clone(),
+        cell_model: first.cell_model,
+        dims: first.dims.clone(),
+        present: ordered.iter().map(|s| s.spec).collect(),
+        missing_spans,
+        segments,
     })
 }
 

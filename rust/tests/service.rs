@@ -1,0 +1,196 @@
+//! Acceptance tests for the fault-tolerant distributed sweep service.
+//!
+//! The contract under test: every fault scenario ends in a bit-exact merge
+//! or a loud typed error — never a hang and never a silent partial — and
+//! fault injection is seed-deterministic (same plan + seed replays the
+//! same event trace). Everything here runs real coordinator + worker
+//! threads over loopback TCP; nothing is mocked below the socket.
+
+use maple::config::AcceleratorConfig;
+use maple::sim::cache::encode_shard;
+use maple::sim::service::proto::{self, AckCode, Message};
+use maple::sim::{
+    run_chaos, Axis, ChaosReport, ChaosSpec, Coordinator, DesignSpace, FaultPlan, LeasePolicy,
+    ServiceConfig, ServiceError, ShardSpec, SimEngine, SweepOutcome, WorkloadKey,
+};
+
+/// Six analytic cells: two datasets × one base config × three MACs points.
+/// Small enough that every scenario simulates in well under a second,
+/// large enough that a multi-way split gives workers real work to lose,
+/// steal, and resubmit.
+fn space() -> DesignSpace {
+    DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+        .with_axis(Axis::Dataset(vec![
+            WorkloadKey::suite("wv", 7, 64),
+            WorkloadKey::suite("fb", 7, 64),
+        ]))
+        .with_axis(Axis::macs_per_pe(vec![2, 4, 8]))
+}
+
+/// Tight leases (`lease_ms`) so stolen work re-queues quickly, and a far
+/// wall-clock bound so only the lone-worker test ever reaches it.
+fn service_config(shard_count: usize, lease_ms: u64) -> ServiceConfig {
+    ServiceConfig {
+        shard_count,
+        lease: LeasePolicy { lease_ms, ..LeasePolicy::default() },
+        max_wall_ms: 60_000,
+        allow_partial: false,
+        profile_threads: 1,
+    }
+}
+
+#[test]
+fn three_workers_one_dying_mid_lease_still_bit_identical() {
+    let space = space();
+    let reference = SimEngine::new().sweep(&space).unwrap();
+    let spec = ChaosSpec {
+        workers: 3,
+        faulty: 0,
+        plan: Some(FaultPlan::parse("die", 7).unwrap()),
+        service: service_config(6, 400),
+    };
+    let chaos = run_chaos(&space, &spec, &SimEngine::new).unwrap();
+    match &chaos.outcome {
+        SweepOutcome::Full(grid) => assert_eq!(grid, &reference),
+        other => panic!("expected a full merge, got {other:?}"),
+    }
+    assert_eq!(chaos.stats.completed, 6);
+    assert!(
+        chaos.stats.reassignments >= 1,
+        "the dead worker's lease must be reaped and re-queued: {:?}",
+        chaos.stats
+    );
+    // The dying worker reported its own demise, deterministically.
+    let w0 = chaos.workers[0].as_ref().unwrap();
+    assert!(w0.died, "worker 0 ran the die plan: {w0:?}");
+    assert_eq!(w0.events.iter().map(|e| e.kind).collect::<Vec<_>>(), ["die"]);
+}
+
+#[test]
+fn every_fault_scenario_converges_to_the_reference_grid() {
+    let space = space();
+    let reference = SimEngine::new().sweep(&space).unwrap();
+    // One scenario per fault kind that a worker can survive: severed
+    // connections, forged checksums, stalled leases, duplicate
+    // submissions, kill-and-rejoin. (`die` is the lethal one; it has its
+    // own tests above and below.)
+    for plan in ["drop:2", "corrupt:3", "stall", "dup", "kill"] {
+        let spec = ChaosSpec {
+            workers: 2,
+            faulty: 0,
+            plan: Some(FaultPlan::parse(plan, 11).unwrap()),
+            service: service_config(4, 400),
+        };
+        let chaos = run_chaos(&space, &spec, &SimEngine::new)
+            .unwrap_or_else(|e| panic!("plan {plan}: {e}"));
+        match &chaos.outcome {
+            SweepOutcome::Full(grid) => assert_eq!(grid, &reference, "plan {plan}"),
+            other => panic!("plan {plan}: expected a full merge, got {other:?}"),
+        }
+        let w0 = chaos.workers[0].as_ref().unwrap_or_else(|e| panic!("plan {plan}: {e}"));
+        assert!(!w0.events.is_empty(), "plan {plan} never fired its fault");
+    }
+}
+
+#[test]
+fn fault_injection_is_seed_deterministic() {
+    let space = space();
+    let run = || {
+        let spec = ChaosSpec {
+            workers: 2,
+            faulty: 0,
+            plan: Some(FaultPlan::parse("drop:1,corrupt:3", 9).unwrap()),
+            service: service_config(4, 400),
+        };
+        run_chaos(&space, &spec, &SimEngine::new).unwrap()
+    };
+    let (a, b) = (run(), run());
+    let trace = |r: &ChaosReport| r.workers[0].as_ref().unwrap().events.clone();
+    assert!(!trace(&a).is_empty(), "the plan must fire");
+    assert_eq!(trace(&a), trace(&b), "same plan + seed must replay the same event trace");
+    // Honest workers carry no trace at all.
+    assert!(a.workers[1].as_ref().unwrap().events.is_empty());
+    // And the faults never bent the data: both runs merged bit-exactly.
+    let reference = SimEngine::new().sweep(&space).unwrap();
+    for (tag, chaos) in [("first", &a), ("second", &b)] {
+        match &chaos.outcome {
+            SweepOutcome::Full(grid) => assert_eq!(grid, &reference, "{tag} run"),
+            other => panic!("{tag} run: expected a full merge, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn lone_dying_worker_is_a_loud_error_not_a_hang() {
+    let space = space();
+    let spec = ChaosSpec {
+        workers: 1,
+        faulty: 0,
+        plan: Some(FaultPlan::parse("die", 7).unwrap()),
+        service: ServiceConfig {
+            shard_count: 2,
+            lease: LeasePolicy { lease_ms: 400, ..LeasePolicy::default() },
+            max_wall_ms: 2_500,
+            allow_partial: false,
+            profile_threads: 1,
+        },
+    };
+    let started = std::time::Instant::now();
+    match run_chaos(&space, &spec, &SimEngine::new) {
+        Err(ServiceError::Incomplete { completed, count, missing }) => {
+            assert_eq!((completed, count), (0, 2));
+            assert_eq!(missing, vec![0, 1]);
+        }
+        other => panic!("expected ServiceError::Incomplete, got {other:?}"),
+    }
+    assert!(started.elapsed().as_secs() < 30, "the bounded run must never hang");
+}
+
+/// Under `allow_partial`, a sweep that ends with shards missing renders
+/// the completed sub-grid with explicit provenance instead of erroring.
+/// The test plays the worker role over the raw wire protocol: register,
+/// submit exactly one of two shards, let the wall-clock bound expire.
+#[test]
+fn allow_partial_reports_the_completed_sub_grid() {
+    let space = space();
+    let engine = SimEngine::new();
+    let shard0 = engine.sweep_shard(&space, ShardSpec::new(0, 2).unwrap()).unwrap();
+    let cfg = ServiceConfig {
+        shard_count: 2,
+        lease: LeasePolicy { lease_ms: 60_000, ..LeasePolicy::default() },
+        max_wall_ms: 1_500,
+        allow_partial: true,
+        profile_threads: 1,
+    };
+    let coordinator = Coordinator::bind("127.0.0.1:0", cfg).unwrap();
+    let addr = coordinator.local_addr().unwrap();
+    let (outcome, stats) = std::thread::scope(|s| {
+        let run = s.spawn(|| coordinator.run(&space));
+        let mut stream = std::net::TcpStream::connect(addr).unwrap();
+        proto::write_message(&mut stream, &Message::Register { worker_id: "half".into() })
+            .unwrap();
+        // The Space broadcast; this "worker" already knows what to compute.
+        let _space_msg = proto::read_message(&mut stream).unwrap();
+        proto::write_message(
+            &mut stream,
+            &Message::Submit { worker_id: "half".into(), shard: encode_shard(&shard0) },
+        )
+        .unwrap();
+        let ack = proto::read_message(&mut stream).unwrap();
+        assert!(
+            matches!(ack, Message::Ack { code: AckCode::Accepted, .. }),
+            "unexpected ack {ack:?}"
+        );
+        run.join().expect("coordinator panicked")
+    })
+    .unwrap();
+    assert_eq!(stats.completed, 1);
+    match outcome {
+        SweepOutcome::Partial(partial) => {
+            assert_eq!(partial.covered_cells(), 3);
+            assert_eq!(partial.missing_cells(), 3);
+            assert_eq!(partial.missing_spans, vec![3..6]);
+        }
+        other => panic!("expected a partial sweep, got {other:?}"),
+    }
+}

@@ -195,6 +195,82 @@ fn shard_dir_round_trip_and_loud_failures() {
 }
 
 #[test]
+fn ledger_accepts_duplicates_and_rejects_conflicts() {
+    use maple::sim::service::{SubmissionLedger, SubmitError, SubmitOutcome};
+    let engine = SimEngine::new();
+    let spec = space();
+    let shards = shards_of(&engine, &spec, 3);
+    let mut ledger = SubmissionLedger::new(shards[0].fingerprint, 3, shards[0].total_cells(), 1);
+
+    // First valid submission wins.
+    let bytes0 = encode_shard(&shards[0]);
+    assert_eq!(ledger.offer(&bytes0).unwrap(), (0, SubmitOutcome::Accepted));
+    // An identical resubmission is an idempotent duplicate, not an error.
+    assert_eq!(ledger.offer(&bytes0).unwrap(), (0, SubmitOutcome::Duplicate));
+    // A re-run of the same cells on a slower machine differs only in the
+    // volatile meta stats — canonically still the same shard.
+    let mut slower = shards[0].clone();
+    slower.meta.wall_ms += 12_345;
+    slower.meta.disk_hits += 2;
+    assert_eq!(ledger.offer(&encode_shard(&slower)).unwrap(), (0, SubmitOutcome::Duplicate));
+    assert_eq!(ledger.duplicates(), 2);
+
+    // A byte-divergent result for the same range is a loud conflict: the
+    // first valid submission stays, the divergent one is refused.
+    let mut forged = shards[0].clone();
+    forged.cells[0].analytic.cycles_compute += 1;
+    match ledger.offer(&encode_shard(&forged)) {
+        Err(SubmitError::Conflict { index: 0 }) => {}
+        other => panic!("expected Conflict, got {other:?}"),
+    }
+    assert_eq!(ledger.rejected(), 1);
+    assert_eq!(ledger.completed(), 1);
+
+    // A shard computed under different profile chunking has different
+    // checksum bits by construction — refused before it can conflict.
+    let chunked = SimEngine::new().with_profile_threads(4);
+    let wrong = chunked.sweep_shard(&spec, ShardSpec::new(1, 3).unwrap()).unwrap();
+    assert!(matches!(
+        ledger.offer(&encode_shard(&wrong)),
+        Err(SubmitError::ProfileThreads { expected: 1, found: 4 })
+    ));
+
+    // Completing the set merges exactly the unsharded sweep.
+    assert_eq!(ledger.offer(&encode_shard(&shards[1])).unwrap(), (1, SubmitOutcome::Accepted));
+    assert!(!ledger.is_complete());
+    assert_eq!(ledger.missing(), vec![2]);
+    assert_eq!(ledger.offer(&encode_shard(&shards[2])).unwrap(), (2, SubmitOutcome::Accepted));
+    assert!(ledger.is_complete());
+    assert_eq!(shard::merge(&ledger.shards()).unwrap(), engine.sweep(&spec).unwrap());
+}
+
+#[test]
+fn concurrent_shard_writers_leave_one_valid_artifact() {
+    let dir = std::env::temp_dir().join(format!("maple-shard-race-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let engine = SimEngine::new();
+    let spec = space();
+    let shard0 = engine.sweep_shard(&spec, ShardSpec::new(0, 2).unwrap()).unwrap();
+    // Eight racing writers of the same artifact (the coordinator-restart /
+    // re-run scenario): whoever wins, the published file must be complete
+    // and decodable, with no temp droppings from the losers.
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| shard0.write_to(&dir).unwrap());
+        }
+    });
+    let loaded = shard::read_dir(&dir).unwrap();
+    assert_eq!(loaded, vec![shard0.clone()]);
+    let leftovers: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().file_name().into_string().unwrap())
+        .filter(|n| *n != shard0.file_name())
+        .collect();
+    assert_eq!(leftovers, Vec::<String>::new(), "losing writers left temp files");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn sharding_profiles_only_touched_datasets() {
     // 6 cells over (wv, fb): shard 0/2 covers cells 0..3 — all of wv plus
     // none of fb's range would be wrong; the boundary is inside wv×macs
