@@ -1,7 +1,8 @@
 # Maple — build / verify entry points.
 #
-#   make verify         fmt + clippy + tests on the rust crate (tier-1 + lint)
+#   make verify         fmt + clippy + tests + vet on the rust crate
 #   make test           tier-1 verify exactly: build --release && test -q
+#   make vet            determinism lint + lease-protocol model checker
 #   make bench          all harness-less benches, release mode
 #   make sweep-noc      topology × MACs design-space sweep on the wv workload
 #   make sweep-sharded  2-way sharded sweep + merge, diffed vs the unsharded run
@@ -12,9 +13,9 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify fmt clippy test bench sweep-noc sweep-sharded chaos explore artifacts
+.PHONY: verify fmt clippy test vet bench sweep-noc sweep-sharded chaos explore artifacts
 
-verify: fmt clippy test
+verify: fmt clippy test vet
 
 # Blocking since the crate was bulk-formatted (PR 5); CI gates on it too.
 fmt:
@@ -25,6 +26,12 @@ clippy:
 
 test:
 	cd $(RUST_DIR) && $(CARGO) build --release && $(CARGO) test -q
+
+# Determinism lint over src/ plus the bounded model checker for the
+# lease/ledger protocol (3 shards x 2 workers, exhaustive). Non-zero exit
+# on any finding, invariant violation, or non-exhausted search.
+vet:
+	cd $(RUST_DIR) && $(CARGO) run --release -- vet
 
 bench:
 	cd $(RUST_DIR) && for b in fig3_energy_ops fig8_area fig9_energy fig9_speedup \

@@ -1,0 +1,527 @@
+//! The determinism lint: a token-level scanner over the crate sources.
+//!
+//! [`lint_source`] lexes one Rust file just far enough to be sound about
+//! *where code is* — line and nested block comments, string and raw-string
+//! literals, and char-vs-lifetime `'` disambiguation are all handled, so a
+//! `HashMap` inside a doc comment or a test fixture string never fires —
+//! then matches the token stream against the [`Rule`] taxonomy.
+//! [`lint_path`] walks a source tree in sorted order and aggregates, so two
+//! runs over the same tree emit byte-identical reports.
+//!
+//! The escape hatch is an inline pragma on the flagged line or the line
+//! directly above it:
+//!
+//! ```text
+//! // vet:allow(wall-clock): wall time lands only in volatile ShardMeta stats
+//! let start = Instant::now();
+//! ```
+//!
+//! The pragma is itself linted ([`Rule::PragmaReason`]): an unknown rule id
+//! or an empty reason is a finding, and `pragma-reason` findings cannot be
+//! pragma-suppressed.
+
+use std::fmt;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use super::rules::Rule;
+
+/// One lint hit, anchored to a crate-relative path and 1-based line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: Rule,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+/// The lint result for one file.
+#[derive(Debug, Clone, Default)]
+pub struct FileLint {
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a valid `vet:allow` pragma.
+    pub suppressed: usize,
+}
+
+/// The lint result for a source tree: what `maple vet` prints.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub files: usize,
+    pub findings: Vec<Finding>,
+    pub suppressed: usize,
+}
+
+impl fmt::Display for LintReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for finding in &self.findings {
+            writeln!(f, "{finding}")?;
+        }
+        writeln!(
+            f,
+            "vet lint: {} files scanned, {} finding(s), {} suppressed by pragma",
+            self.files,
+            self.findings.len(),
+            self.suppressed
+        )
+    }
+}
+
+// ------------------------------------------------------------------- lexer
+
+/// One surviving token: an identifier/number word or a punctuation run we
+/// care about (`::` is kept as a single token so `Instant::now` is a
+/// three-token pattern).
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Tok {
+    line: usize,
+    text: String,
+}
+
+/// One `//` line comment, with the leading slashes stripped.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct LineComment {
+    line: usize,
+    text: String,
+}
+
+/// Lex just enough Rust: returns the code tokens and the line comments
+/// (pragma carriers). Everything inside strings, char literals, and block
+/// comments is skipped; lifetimes are skipped (they are not identifiers a
+/// rule could match against anyway).
+fn lex(source: &str) -> (Vec<Tok>, Vec<LineComment>) {
+    let chars: Vec<char> = source.chars().collect();
+    let mut tokens = Vec::new();
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    let n = chars.len();
+    let at = |i: usize| chars.get(i).copied().unwrap_or('\0');
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c == '/' && at(i + 1) == '/' {
+            // Line comment (incl. doc comments): capture to end of line.
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            let text: String = chars[start..j].iter().collect();
+            comments.push(LineComment { line, text });
+            i = j;
+        } else if c == '/' && at(i + 1) == '*' {
+            // Nested block comment: skip, tracking newlines.
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && at(j + 1) == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && at(j + 1) == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            i = j;
+        } else if c == '"' {
+            i = skip_string(&chars, i, &mut line);
+        } else if c == '\'' {
+            // Lifetime (`'a`, `'static`, `'_`) vs char literal (`'x'`,
+            // `'\n'`): a lifetime is `'` + ident with no closing quote.
+            let c1 = at(i + 1);
+            if (c1.is_alphanumeric() || c1 == '_') && c1 != '\\' && at(i + 2) != '\'' {
+                i += 2;
+                while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                // Char literal: skip to the closing quote, honouring escapes.
+                let mut j = i + 1;
+                while j < n && chars[j] != '\'' {
+                    if chars[j] == '\\' {
+                        j += 1;
+                    } else if chars[j] == '\n' {
+                        line += 1;
+                    }
+                    j += 1;
+                }
+                i = j + 1;
+            }
+        } else if c.is_alphanumeric() || c == '_' {
+            let start = i;
+            while i < n && (chars[i].is_alphanumeric() || chars[i] == '_') {
+                i += 1;
+            }
+            let word: String = chars[start..i].iter().collect();
+            // Raw string (`r"…"`, `br#"…"#`) or byte string (`b"…"`)
+            // immediately following the prefix word.
+            if (word == "r" || word == "br") && (at(i) == '"' || at(i) == '#') {
+                let mut hashes = 0usize;
+                while at(i + hashes) == '#' {
+                    hashes += 1;
+                }
+                if at(i + hashes) == '"' {
+                    i = skip_raw_string(&chars, i + hashes + 1, hashes, &mut line);
+                    continue;
+                }
+                // `r#ident` raw identifier: fall through, keep the word.
+            }
+            if word == "b" && at(i) == '"' {
+                i = skip_string(&chars, i, &mut line);
+                continue;
+            }
+            tokens.push(Tok { line, text: word });
+        } else if c == ':' && at(i + 1) == ':' {
+            tokens.push(Tok { line, text: "::".to_string() });
+            i += 2;
+        } else {
+            tokens.push(Tok { line, text: c.to_string() });
+            i += 1;
+        }
+    }
+    (tokens, comments)
+}
+
+/// Skip a `"…"` literal starting at the opening quote; returns the index
+/// past the closing quote.
+fn skip_string(chars: &[char], open: usize, line: &mut usize) -> usize {
+    let mut j = open + 1;
+    while j < chars.len() {
+        match chars[j] {
+            '\\' => j += 2,
+            '\n' => {
+                *line += 1;
+                j += 1;
+            }
+            '"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    j
+}
+
+/// Skip a raw string whose opening `"` is at `body - 1` with `hashes`
+/// leading `#`s; returns the index past the closing `"##…`.
+fn skip_raw_string(chars: &[char], body: usize, hashes: usize, line: &mut usize) -> usize {
+    let n = chars.len();
+    let mut j = body;
+    while j < n {
+        if chars[j] == '\n' {
+            *line += 1;
+            j += 1;
+            continue;
+        }
+        if chars[j] == '"' && (1..=hashes).all(|k| chars.get(j + k) == Some(&'#')) {
+            return j + 1 + hashes;
+        }
+        j += 1;
+    }
+    j
+}
+
+// ----------------------------------------------------------------- pragmas
+
+/// A parsed, valid `vet:allow(rule): reason` pragma.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Pragma {
+    line: usize,
+    rule: Rule,
+}
+
+const PRAGMA_PREFIX: &str = "vet:allow";
+
+/// Split the line comments into valid pragmas and `pragma-reason` findings.
+fn parse_pragmas(path: &str, comments: &[LineComment]) -> (Vec<Pragma>, Vec<Finding>) {
+    let mut pragmas = Vec::new();
+    let mut findings = Vec::new();
+    for c in comments {
+        // Doc comments arrive as `/ …`/`! …`; strip the markers so the
+        // prefix check sees the payload.
+        let text = c.text.trim_start_matches(['/', '!']).trim();
+        if !text.starts_with(PRAGMA_PREFIX) {
+            continue;
+        }
+        let mut reject = |message: String| {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: c.line,
+                rule: Rule::PragmaReason,
+                message,
+            });
+        };
+        let rest = &text[PRAGMA_PREFIX.len()..];
+        let Some(rest) = rest.strip_prefix('(') else {
+            reject(format!("malformed pragma {text:?}: expected vet:allow(rule): reason"));
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            reject(format!("malformed pragma {text:?}: missing closing ')'"));
+            continue;
+        };
+        let (id, tail) = (&rest[..close], &rest[close + 1..]);
+        let Some(rule) = Rule::from_id(id.trim()) else {
+            reject(format!("unknown rule {:?} in pragma (known: {})", id.trim(), known_ids()));
+            continue;
+        };
+        let Some(reason) = tail.trim_start().strip_prefix(':') else {
+            reject(format!("pragma for {rule} is missing the `: reason` tail"));
+            continue;
+        };
+        if reason.trim().is_empty() {
+            reject(format!("pragma for {rule} has an empty reason — justify the suppression"));
+            continue;
+        }
+        pragmas.push(Pragma { line: c.line, rule });
+    }
+    (pragmas, findings)
+}
+
+fn known_ids() -> String {
+    super::rules::RULES.iter().map(|r| r.id()).collect::<Vec<_>>().join(", ")
+}
+
+// ------------------------------------------------------------------ linter
+
+/// Narrowing `as`-cast targets the lossy-cast rule rejects in accounting
+/// paths. Widening (`as f64`, `as u64`, `as u128`, `as usize`) stays legal:
+/// every counter in the crate is bounded far below 2^53.
+const NARROW_TARGETS: [&str; 7] = ["f32", "u32", "i32", "u16", "i16", "u8", "i8"];
+
+/// Lint one file's source. `path` is the crate-relative `/`-separated path
+/// (it drives rule scoping); determinism: output order depends only on the
+/// source text.
+pub fn lint_source(path: &str, source: &str) -> FileLint {
+    let (tokens, comments) = lex(source);
+    let (pragmas, mut findings) = parse_pragmas(path, &comments);
+
+    let mut raw: Vec<(usize, Rule, String)> = Vec::new();
+    let mut hit = |line: usize, rule: Rule, message: String| {
+        if rule.applies_to(path) && !raw.iter().any(|(l, r, _)| *l == line && *r == rule) {
+            raw.push((line, rule, message));
+        }
+    };
+    let word = |i: usize| tokens.get(i).map(|t| t.text.as_str()).unwrap_or("");
+    for (i, tok) in tokens.iter().enumerate() {
+        match tok.text.as_str() {
+            "HashMap" | "HashSet" => hit(
+                tok.line,
+                Rule::HashIter,
+                format!("{} iteration order is nondeterministic; use a BTree or sort", tok.text),
+            ),
+            "Instant" if word(i + 1) == "::" && word(i + 2) == "now" => hit(
+                tok.line,
+                Rule::WallClock,
+                "Instant::now() outside the allowlisted timing layer (sim/service/, main.rs)"
+                    .to_string(),
+            ),
+            "SystemTime" => hit(
+                tok.line,
+                Rule::WallClock,
+                "SystemTime outside the allowlisted timing layer (sim/service/, main.rs)"
+                    .to_string(),
+            ),
+            "thread" if word(i + 1) == "::" && word(i + 2) == "spawn" => hit(
+                tok.line,
+                Rule::UnscopedThread,
+                "unscoped thread::spawn in sim code; use thread::scope or justify the join"
+                    .to_string(),
+            ),
+            "as" if NARROW_TARGETS.contains(&word(i + 1)) => hit(
+                tok.line,
+                Rule::LossyCast,
+                format!("narrowing cast `as {}` in an accounting path", word(i + 1)),
+            ),
+            _ => {}
+        }
+    }
+
+    // A valid pragma suppresses findings of its rule on its own line and
+    // the line directly below. `pragma-reason` findings are exempt: the
+    // escape hatch cannot excuse itself.
+    let mut suppressed = 0usize;
+    for (line, rule, message) in raw {
+        let covered = pragmas
+            .iter()
+            .any(|p| p.rule == rule && (p.line == line || p.line + 1 == line));
+        if covered {
+            suppressed += 1;
+        } else {
+            findings.push(Finding { file: path.to_string(), line, rule, message });
+        }
+    }
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    FileLint { findings, suppressed }
+}
+
+/// Recursively collect `*.rs` files under `root`, sorted by path — the
+/// determinism anchor for the whole report.
+fn rust_files(root: &Path) -> io::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    let mut dirs = vec![root.to_path_buf()];
+    while let Some(dir) = dirs.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                dirs.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Lint every `*.rs` file under `root` (the crate `src/` directory).
+/// Findings are sorted by (file, line, rule); two runs over the same tree
+/// render byte-identical reports.
+pub fn lint_path(root: &Path) -> io::Result<LintReport> {
+    let files = rust_files(root)?;
+    let mut report = LintReport { files: files.len(), ..LintReport::default() };
+    for file in &files {
+        let rel: String = file
+            .strip_prefix(root)
+            .unwrap_or(file)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let source = std::fs::read_to_string(file)?;
+        let mut lint = lint_source(&rel, &source);
+        report.findings.append(&mut lint.findings);
+        report.suppressed += lint.suppressed;
+    }
+    report.findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(lint: &FileLint) -> Vec<Rule> {
+        lint.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn hash_iter_positive_hit() {
+        let src = "use std::collections::HashMap;\nfn f() { let m: HashMap<u8, u8> = HashMap::new(); }\n";
+        let lint = lint_source("sim/engine.rs", src);
+        assert_eq!(rules_of(&lint), vec![Rule::HashIter, Rule::HashIter]);
+        assert_eq!(lint.findings[0].line, 1);
+        assert_eq!(lint.findings[1].line, 2, "one finding per (line, rule)");
+    }
+
+    #[test]
+    fn pragma_suppresses_line_below_and_same_line() {
+        let src = "// vet:allow(hash-iter): scratch map, drained into a sorted Vec\n\
+                   use std::collections::HashMap;\n\
+                   type T = std::collections::HashSet<u8>; // vet:allow(hash-iter): membership only\n";
+        let lint = lint_source("report.rs", src);
+        assert!(lint.findings.is_empty(), "{:?}", lint.findings);
+        assert_eq!(lint.suppressed, 2);
+    }
+
+    #[test]
+    fn pragma_for_the_wrong_rule_does_not_suppress() {
+        let src = "// vet:allow(wall-clock): not the rule that fires below\n\
+                   use std::collections::HashMap;\n";
+        let lint = lint_source("report.rs", src);
+        assert_eq!(rules_of(&lint), vec![Rule::HashIter]);
+        assert_eq!(lint.suppressed, 0);
+    }
+
+    #[test]
+    fn wall_clock_respects_the_allowlist() {
+        let src = "fn f() { let t = std::time::Instant::now(); }\n";
+        assert_eq!(rules_of(&lint_source("sim/engine.rs", src)), vec![Rule::WallClock]);
+        assert!(lint_source("sim/service/worker.rs", src).findings.is_empty());
+        assert!(lint_source("main.rs", src).findings.is_empty());
+        let sys = "fn f() -> std::time::SystemTime { std::time::SystemTime::now() }\n";
+        assert_eq!(rules_of(&lint_source("energy/mod.rs", sys)), vec![Rule::WallClock]);
+    }
+
+    #[test]
+    fn lossy_cast_scoped_to_accounting_paths() {
+        let src = "fn f(x: u64) -> u32 { x as u32 }\nfn g(x: u32) -> f64 { x as f64 }\n";
+        let lint = lint_source("energy/tech45.rs", src);
+        assert_eq!(rules_of(&lint), vec![Rule::LossyCast]);
+        assert_eq!(lint.findings[0].line, 1, "widening `as f64` stays legal");
+        assert!(lint_source("noc/mod.rs", src).findings.is_empty(), "out of scope");
+    }
+
+    #[test]
+    fn unscoped_thread_scoped_to_sim() {
+        let src = "fn f() { std::thread::spawn(|| {}); }\n";
+        assert_eq!(rules_of(&lint_source("sim/service/coordinator.rs", src)), vec![
+            Rule::UnscopedThread
+        ]);
+        assert!(lint_source("report.rs", src).findings.is_empty());
+        let scoped = "fn f() { std::thread::scope(|s| { s.spawn(|| {}); }); }\n";
+        assert!(lint_source("sim/engine.rs", scoped).findings.is_empty(), "scoped is fine");
+    }
+
+    #[test]
+    fn pragma_without_reason_is_rejected() {
+        for bad in [
+            "// vet:allow(hash-iter):\nuse std::collections::HashMap;\n",
+            "// vet:allow(hash-iter)\nuse std::collections::HashMap;\n",
+            "// vet:allow(bogus-rule): because\nuse std::collections::HashMap;\n",
+            "// vet:allow hash-iter: because\nuse std::collections::HashMap;\n",
+        ] {
+            let lint = lint_source("report.rs", bad);
+            assert_eq!(
+                rules_of(&lint),
+                vec![Rule::PragmaReason, Rule::HashIter],
+                "a broken pragma must both fire pragma-reason and fail to suppress: {bad:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn comments_strings_and_raw_strings_never_fire() {
+        let src = "// HashMap in a comment\n\
+                   /* Instant::now() in a /* nested */ block */\n\
+                   fn f() { let s = \"HashMap and Instant::now()\"; }\n";
+        assert!(lint_source("sim/engine.rs", src).findings.is_empty());
+        let raw = "fn f() { let s = r#\"use std::collections::HashMap; \"quoted\" \"#; }\n";
+        assert!(lint_source("sim/engine.rs", raw).findings.is_empty());
+    }
+
+    #[test]
+    fn lifetimes_and_char_literals_lex_cleanly() {
+        let src = "fn f<'a>(x: &'a str) -> char { let c = '\\n'; let d = 'x'; c.max(d) }\n\
+                   fn g() { let m: std::collections::HashMap<u8, u8> = Default::default(); }\n";
+        let lint = lint_source("sim/engine.rs", src);
+        assert_eq!(rules_of(&lint), vec![Rule::HashIter], "lexer must survive to line 2");
+        assert_eq!(lint.findings[0].line, 2);
+    }
+
+    #[test]
+    fn identifier_boundaries_are_respected() {
+        // `Instantiate` contains `Instant` but is one identifier token.
+        let src = "fn instantiate() {} struct Instantiate; type HashMapLike = u8;\n";
+        assert!(lint_source("sim/engine.rs", src).findings.is_empty());
+    }
+
+    #[test]
+    fn reports_are_deterministic() {
+        let src = "use std::collections::{HashMap, HashSet};\nfn f() { let _ = 1u64 as u32; }\n";
+        let a = lint_source("energy/mod.rs", src);
+        let b = lint_source("energy/mod.rs", src);
+        assert_eq!(a.findings, b.findings);
+    }
+}

@@ -1,0 +1,25 @@
+//! Static analysis and verification of the simulator itself (`maple vet`).
+//!
+//! Everything this repro promises rests on bit-exact determinism: sharded
+//! merges, `MAPLESHD`/`MAPLEEVL` artifacts, warm-cache replays, and the
+//! chaos tests all assert byte-identity. This module is the layer that
+//! keeps future changes honest *before* they run:
+//!
+//! - [`lint`] — a token-level determinism lint over `src/**` enforcing the
+//!   repo contract as a typed [`rules::Rule`] taxonomy with `file:line`
+//!   findings and a linted `// vet:allow(rule): reason` escape hatch.
+//! - [`model`] — a bounded model checker that drives the real
+//!   [`crate::sim::service::LeaseTable`] and ledger slot machine through
+//!   every abstract interleaving, proving the lease-protocol safety
+//!   invariants the fault injector's finite plans only sample, and
+//!   rendering each violation as a `FaultPlan` string `run_chaos` replays.
+//!
+//! Std-only, like the rest of the crate.
+
+pub mod lint;
+pub mod model;
+pub mod rules;
+
+pub use lint::{lint_path, lint_source, Finding, LintReport};
+pub use model::{check, Invariant, ModelReport, ModelSpec, Mutation, Violation};
+pub use rules::{Rule, RULES};

@@ -1,0 +1,718 @@
+//! Bounded model checking of the lease/ledger protocol.
+//!
+//! [`check`] drives the *real* [`LeaseTable`] and the pure
+//! [`LedgerCore`] slot machine — not re-implementations — through every
+//! interleaving of an abstract event alphabet (request/grant, lease
+//! expiry, valid/stale/duplicate/divergent/corrupt submissions) for a
+//! configurable N shards × M workers product state machine, breadth-first
+//! with visited-state hashing. Breadth-first order makes the first
+//! violation found a *minimal* counterexample trace.
+//!
+//! The search is exhaustive and terminates because the abstraction is
+//! finite and monotone: the visited projection keeps slot states (with
+//! attempt counters), per-worker failure counts, and ledger payload tags,
+//! but drops absolute times, backoff durations, and the jitter RNG stream.
+//! Every projection-changing transition strictly increases
+//! `sum(attempts) + sum(failures) + #Done`, attempts are bounded by the
+//! failure budget (a re-lease requires an expiry, which costs a failure;
+//! failures quarantine at the policy budget), so the abstract graph is a
+//! finite DAG — no cycles, every schedule reaches a terminal. Bounded
+//! liveness then reduces to checking terminals: each must be `AllDone` or
+//! the typed all-workers-quarantined `Incomplete`.
+//!
+//! Safety invariants, checked on every transition:
+//!
+//! 1. **merge-consistent** — a stored shard payload is immutable and
+//!    always the canonical bytes; identical resubmissions are duplicates,
+//!    divergent ones are conflicts (never accepted).
+//! 2. **no-lost-shard** — slots only move `Pending{a} → Leased{·,a+1}`,
+//!    `Leased → Pending{a}` (reap, only past the deadline), or `→ Done`.
+//!    A live lease silently re-granted (the double-grant bug) is illegal.
+//! 3. **quarantine-respected** — a quarantined worker's request is always
+//!    answered `Quarantined`, and only canonical payloads reach the merge.
+//! 4. **backoff-monotone** — each successive penalty's deterministic
+//!    backoff floor `base << min(failures-1, 6)` is non-decreasing, and
+//!    the observed backoff sits inside `[floor, floor + base)` (the jitter
+//!    window).
+//!
+//! Each violation renders its trace plus a [`FaultPlan`]-parseable string
+//! (`stall`, `corrupt:N`, `dup`) so `run_chaos` / `maple chaos --fault`
+//! can replay the failure class dynamically. The seeded-bug self-test
+//! ([`Mutation`]) proves the checker actually catches what it claims to.
+
+use std::collections::{BTreeSet, VecDeque};
+use std::fmt;
+
+use crate::sim::service::coordinator::LedgerCore;
+use crate::sim::service::lease::{Grant, LeasePolicy, LeaseTable, SlotView};
+
+/// Canonical shard payload in the abstract ledger (stands in for the
+/// canonical `MAPLESHD` bytes).
+const CANONICAL: &[u8] = &[0xCA];
+/// A byte-divergent payload for the same shard (a forged or corrupted
+/// result that decoded "validly").
+const DIVERGENT: &[u8] = &[0xD1];
+
+/// A protocol bug the checker can seed into the transition relation — the
+/// mutation self-test behind `maple vet --mutant`. The hooks live next to
+/// the real transition code ([`LeaseTable::force_grant`],
+/// [`LedgerCore::force_store`]) but are only ever called from here, and
+/// only when a mutation is selected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Mutation {
+    /// The faithful protocol.
+    #[default]
+    None,
+    /// Grant a shard that is still under a live lease to a second worker
+    /// (violates no-lost-shard).
+    DoubleGrant,
+    /// Store a byte-divergent resubmission over the merged payload instead
+    /// of rejecting it (violates merge-consistent / quarantine-respected).
+    QuarantineBypass,
+}
+
+impl std::str::FromStr for Mutation {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(Mutation::None),
+            "double-grant" => Ok(Mutation::DoubleGrant),
+            "quarantine-bypass" => Ok(Mutation::QuarantineBypass),
+            other => Err(format!("unknown mutant {other:?} (double-grant | quarantine-bypass)")),
+        }
+    }
+}
+
+/// What to check: the product-machine bounds and the seeded mutation.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// N shards (slots in the lease table / ledger).
+    pub shards: usize,
+    /// M workers (`w0..w{M-1}`).
+    pub workers: usize,
+    /// The real policy under test. The default keeps `max_failures` at 2
+    /// so the exhaustive space stays compact; raise it via the CLI to
+    /// explore deeper retry ladders.
+    pub policy: LeasePolicy,
+    /// Hard cap on explored states; exceeding it reports `exhausted:
+    /// false` (and fails `vet`) rather than running unbounded.
+    pub max_states: usize,
+    pub mutation: Mutation,
+}
+
+impl Default for ModelSpec {
+    fn default() -> Self {
+        Self {
+            shards: 3,
+            workers: 2,
+            policy: LeasePolicy { lease_ms: 8, max_failures: 2, backoff_base_ms: 4, seed: 0xa5 },
+            max_states: 500_000,
+            mutation: Mutation::None,
+        }
+    }
+}
+
+/// The four safety invariants plus bounded liveness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Invariant {
+    MergeConsistent,
+    NoLostShard,
+    QuarantineRespected,
+    BackoffMonotone,
+    BoundedTermination,
+}
+
+impl Invariant {
+    pub fn id(self) -> &'static str {
+        match self {
+            Invariant::MergeConsistent => "merge-consistent",
+            Invariant::NoLostShard => "no-lost-shard",
+            Invariant::QuarantineRespected => "quarantine-respected",
+            Invariant::BackoffMonotone => "backoff-monotone",
+            Invariant::BoundedTermination => "bounded-termination",
+        }
+    }
+}
+
+/// A violated invariant with its minimal counterexample.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub invariant: Invariant,
+    pub detail: String,
+    /// Event labels from the initial state to (and including) the
+    /// violating event.
+    pub trace: Vec<String>,
+    /// A `FaultPlan`-parseable dynamic trigger for the same failure class
+    /// (`maple chaos --fault <plan>` replays it).
+    pub fault_plan: String,
+}
+
+/// What one [`check`] run proved (or found).
+#[derive(Debug)]
+pub struct ModelReport {
+    pub shards: usize,
+    pub workers: usize,
+    pub states: usize,
+    pub transitions: usize,
+    /// Terminals where every shard merged.
+    pub all_done_terminals: usize,
+    /// Terminals where every worker is quarantined and un-computed shards
+    /// remain — the typed `ServiceError::Incomplete` outcome.
+    pub incomplete_terminals: usize,
+    /// True iff the frontier emptied under `max_states`: the full abstract
+    /// space was searched.
+    pub exhausted: bool,
+    pub violations: Vec<Violation>,
+}
+
+impl fmt::Display for ModelReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "vet model: {} shards x {} workers, {} states, {} transitions, exhausted={}",
+            self.shards, self.workers, self.states, self.transitions, self.exhausted
+        )?;
+        writeln!(
+            f,
+            "  terminals: {} AllDone, {} Incomplete (all workers quarantined)",
+            self.all_done_terminals, self.incomplete_terminals
+        )?;
+        if self.violations.is_empty() {
+            let proved = [
+                Invariant::MergeConsistent,
+                Invariant::NoLostShard,
+                Invariant::QuarantineRespected,
+                Invariant::BackoffMonotone,
+                Invariant::BoundedTermination,
+            ];
+            let ids: Vec<&str> = proved.iter().map(|i| i.id()).collect();
+            writeln!(f, "  invariants proved: {}", ids.join(", "))?;
+        }
+        for v in &self.violations {
+            writeln!(f, "vet model VIOLATION [{}]: {}", v.invariant.id(), v.detail)?;
+            writeln!(f, "  counterexample trace:")?;
+            for (i, step) in v.trace.iter().enumerate() {
+                writeln!(f, "    {}. {step}", i + 1)?;
+            }
+            writeln!(f, "  counterexample fault plan: {}", v.fault_plan)?;
+            writeln!(
+                f,
+                "  replay: maple chaos --workers 1 --shards 2 --fault {} --lease-ms 300",
+                v.fault_plan
+            )?;
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- state space
+
+/// Event kinds (the alphabet); labels carry the instance detail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Request,
+    Expire,
+    SubmitValid,
+    StaleSubmit,
+    Duplicate,
+    Divergent,
+    Corrupt,
+}
+
+/// One reached state: the real table + ledger plus the abstract clock
+/// (excluded from the visited projection — only event order matters).
+#[derive(Clone)]
+struct Node {
+    table: LeaseTable,
+    ledger: LedgerCore,
+    now: u64,
+}
+
+/// A stored search record: the node plus its parent edge (for traces).
+struct Rec {
+    node: Node,
+    parent: usize,
+    label: String,
+    kind: Kind,
+}
+
+/// The visited-set projection: slot states with attempt counters, worker
+/// failure records, and ledger payload tags. Absolute times, backoff
+/// durations, and the jitter RNG stream are deliberately dropped — they do
+/// not affect abstract behaviour (requests wait out backoff; expiries jump
+/// to the deadline), and keeping them would make the space infinite.
+fn project(node: &Node, ids: &[String]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(4 * ids.len() + 8);
+    for slot in node.table.slot_views() {
+        match slot {
+            SlotView::Pending { attempt } => {
+                bytes.push(0);
+                bytes.push(attempt.min(250) as u8);
+            }
+            SlotView::Leased { worker, attempt, .. } => {
+                let widx = ids.iter().position(|id| *id == worker).unwrap_or(255);
+                bytes.push(1);
+                bytes.push(widx as u8);
+                bytes.push(attempt.min(250) as u8);
+            }
+            SlotView::Done => bytes.push(2),
+        }
+        bytes.push(0xFE);
+    }
+    bytes.push(0xFF);
+    for view in node.table.worker_views() {
+        bytes.push(view.failures.min(250) as u8);
+        bytes.push(u8::from(view.quarantined));
+    }
+    bytes.push(0xFF);
+    for i in 0..node.ledger.shard_count() {
+        bytes.push(match node.ledger.payload(i) {
+            None => 0,
+            Some(p) if p == CANONICAL => 1,
+            Some(_) => 2,
+        });
+    }
+    bytes
+}
+
+/// Run the bounded check. Stops at the first violation (breadth-first, so
+/// it is minimal); a clean run proves all invariants over the exhausted
+/// space.
+pub fn check(spec: &ModelSpec) -> ModelReport {
+    let shards = spec.shards.max(1);
+    let worker_count = spec.workers.max(1);
+    let ids: Vec<String> = (0..worker_count).map(|i| format!("w{i}")).collect();
+    let mut report = ModelReport {
+        shards,
+        workers: worker_count,
+        states: 0,
+        transitions: 0,
+        all_done_terminals: 0,
+        incomplete_terminals: 0,
+        exhausted: false,
+        violations: Vec::new(),
+    };
+
+    let mut table = LeaseTable::new(shards, spec.policy.clone());
+    for id in &ids {
+        table.register(id);
+    }
+    let root = Node { table, ledger: LedgerCore::new(shards), now: 0 };
+
+    let mut recs: Vec<Rec> = Vec::new();
+    let mut visited: BTreeSet<Vec<u8>> = BTreeSet::new();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    visited.insert(project(&root, &ids));
+    recs.push(Rec {
+        node: root,
+        parent: usize::MAX,
+        label: "initial state".into(),
+        kind: Kind::Request,
+    });
+    queue.push_back(0);
+
+    while let Some(at) = queue.pop_front() {
+        if recs.len() > spec.max_states {
+            report.states = recs.len();
+            return report; // exhausted stays false: the cap was hit
+        }
+        let pre_projection = project(&recs[at].node, &ids);
+        let mut progressed = false;
+        for (kind, label, applied) in successors(&recs[at].node, &ids, spec) {
+            report.transitions += 1;
+            let outcome = verify_transition(&recs[at].node, &applied, &label, spec);
+            if let Err((invariant, detail)) = outcome {
+                report.violations.push(render_violation(
+                    invariant, detail, &recs, at, kind, &label,
+                ));
+                report.states = recs.len();
+                return report;
+            }
+            let projection = project(&applied, &ids);
+            if projection == pre_projection {
+                continue; // no-op transition (Wait, duplicate ack, ...)
+            }
+            progressed = true;
+            if visited.insert(projection) {
+                recs.push(Rec { node: applied, parent: at, label, kind });
+                queue.push_back(recs.len() - 1);
+            }
+        }
+        if !progressed {
+            classify_terminal(&mut report, &recs, at);
+            if !report.violations.is_empty() {
+                report.states = recs.len();
+                return report;
+            }
+        }
+    }
+    report.states = recs.len();
+    report.exhausted = true;
+    report
+}
+
+/// Enumerate every enabled event from `node`, each applied to a clone of
+/// the real state. Deterministic order: workers, then shards, then the
+/// submission alphabet.
+fn successors(node: &Node, ids: &[String], spec: &ModelSpec) -> Vec<(Kind, String, Node)> {
+    let mut out = Vec::new();
+    let slots = node.table.slot_views();
+    let workers = node.table.worker_views();
+    let quarantined =
+        |w: usize| workers.iter().find(|v| v.id == ids[w]).is_some_and(|v| v.quarantined);
+    let backoff_until =
+        |w: usize| workers.iter().find(|v| v.id == ids[w]).map_or(0, |v| v.backoff_until);
+
+    // request(w): the worker asks for work, waiting out any backoff first
+    // (fair scheduling — backoff delays, it never blocks forever).
+    for w in 0..ids.len() {
+        let mut next = node.clone();
+        next.now = node.now.max(backoff_until(w));
+        let mut grant = next.table.grant(&ids[w], next.now);
+        if spec.mutation == Mutation::DoubleGrant {
+            if let Grant::Wait { .. } = grant {
+                // Seeded bug: hand out a shard that is still under a live
+                // lease held by another worker.
+                let stolen = slots.iter().enumerate().find_map(|(i, s)| match s {
+                    SlotView::Leased { worker, .. } if *worker != ids[w] => Some(i),
+                    _ => None,
+                });
+                if let Some(index) = stolen {
+                    if let Some(attempt) = next.table.force_grant(index, &ids[w], next.now) {
+                        grant = Grant::Lease { index, attempt };
+                    }
+                }
+            }
+        }
+        out.push((Kind::Request, format!("request({}) -> {:?}", ids[w], grant), next));
+    }
+
+    // expire(shard): time jumps to the lease deadline and the reaper runs.
+    for (i, slot) in slots.iter().enumerate() {
+        if let SlotView::Leased { deadline, .. } = slot {
+            let mut next = node.clone();
+            next.now = node.now.max(*deadline);
+            next.table.reap(next.now);
+            out.push((Kind::Expire, format!("expire(shard {i}) at t={}", next.now), next));
+        }
+    }
+
+    for (i, slot) in slots.iter().enumerate() {
+        match slot {
+            // submit-valid(w, shard): the lease holder delivers the
+            // canonical result.
+            SlotView::Leased { worker, .. } => {
+                let w = ids.iter().position(|id| id == worker).unwrap_or(0);
+                let mut next = node.clone();
+                let res = next.ledger.offer(i, CANONICAL);
+                if res.is_ok() {
+                    next.table.complete(i);
+                } else {
+                    next.table.fail(&ids[w], next.now);
+                }
+                out.push((Kind::SubmitValid, format!("submit-valid({worker}, shard {i})"), next));
+            }
+            // stale-submit(shard): a reaped lease's original holder still
+            // delivers a valid result (any valid result counts).
+            SlotView::Pending { attempt } if *attempt >= 1 => {
+                let mut next = node.clone();
+                if next.ledger.offer(i, CANONICAL).is_ok() {
+                    next.table.complete(i);
+                }
+                out.push((Kind::StaleSubmit, format!("stale-submit(shard {i})"), next));
+            }
+            // duplicate(shard): an identical resubmission of a merged
+            // shard must be an idempotent no-op.
+            SlotView::Done => {
+                let mut next = node.clone();
+                let res = next.ledger.offer(i, CANONICAL);
+                next.table.complete(i);
+                let label = format!("duplicate(shard {i}) -> {res:?}");
+                out.push((Kind::Duplicate, label, next));
+            }
+            SlotView::Pending { .. } => {}
+        }
+    }
+
+    // divergent-submit(w, shard) / corrupt-frame(w): rejected submissions
+    // penalise the sender. Quarantined workers are skipped — the
+    // coordinator already dropped their connections, and unbounded
+    // post-quarantine penalties would make the space infinite.
+    for w in 0..ids.len() {
+        if quarantined(w) {
+            continue;
+        }
+        for i in 0..node.ledger.shard_count() {
+            if node.ledger.payload(i).is_none() {
+                continue;
+            }
+            let mut next = node.clone();
+            if spec.mutation == Mutation::QuarantineBypass {
+                // Seeded bug: the divergent payload overwrites the merge
+                // instead of being rejected.
+                next.ledger.force_store(i, DIVERGENT);
+                next.table.complete(i);
+            } else if next.ledger.offer(i, DIVERGENT).is_err() {
+                next.table.fail(&ids[w], next.now);
+            }
+            let label = format!("divergent-submit({}, shard {i})", ids[w]);
+            out.push((Kind::Divergent, label, next));
+        }
+        let mut next = node.clone();
+        next.table.fail(&ids[w], next.now);
+        out.push((Kind::Corrupt, format!("corrupt-frame({})", ids[w]), next));
+    }
+    out
+}
+
+/// Check every safety invariant across one applied transition. Returns the
+/// violated invariant and detail on failure.
+fn verify_transition(
+    pre: &Node,
+    post: &Node,
+    label: &str,
+    spec: &ModelSpec,
+) -> Result<(), (Invariant, String)> {
+    // I2 no-lost-shard: per-slot legal transitions only.
+    let pre_slots = pre.table.slot_views();
+    let post_slots = post.table.slot_views();
+    for (i, (a, b)) in pre_slots.iter().zip(post_slots.iter()).enumerate() {
+        let legal = match (a, b) {
+            _ if a == b => true,
+            (SlotView::Pending { attempt: pa }, SlotView::Leased { attempt: la, .. }) => {
+                *la == pa + 1
+            }
+            (SlotView::Pending { .. }, SlotView::Done) => true,
+            (SlotView::Leased { attempt: la, deadline, .. }, SlotView::Pending { attempt: pa }) => {
+                pa == la && *deadline <= post.now
+            }
+            (SlotView::Leased { .. }, SlotView::Done) => true,
+            _ => false,
+        };
+        if !legal {
+            return Err((
+                Invariant::NoLostShard,
+                format!("shard {i} moved illegally on {label}: {a:?} -> {b:?}"),
+            ));
+        }
+    }
+
+    // I3 quarantine-respected (grant side): encoded in the label because
+    // the grant outcome is part of it — a quarantined worker whose request
+    // produced anything but `Quarantined` leased or waited illegally.
+    if label.starts_with("request(") {
+        let wid = label.trim_start_matches("request(").split(')').next().unwrap_or("");
+        let was_quarantined =
+            pre.table.worker_views().iter().any(|v| v.id == wid && v.quarantined);
+        if was_quarantined && !label.ends_with("-> Quarantined") {
+            return Err((
+                Invariant::QuarantineRespected,
+                format!("quarantined worker {wid} was granted work: {label}"),
+            ));
+        }
+    }
+
+    // I1 / I3 (merge side): every stored payload must be the canonical
+    // bytes — a divergent payload in the ledger is a forged merge.
+    for i in 0..post.ledger.shard_count() {
+        if let Some(p) = post.ledger.payload(i) {
+            if p != CANONICAL {
+                return Err((
+                    Invariant::MergeConsistent,
+                    format!("shard {i} holds non-canonical bytes after {label}"),
+                ));
+            }
+        }
+        // Immutability: a stored payload never changes identity.
+        if pre.ledger.payload(i).is_some() && post.ledger.payload(i) != pre.ledger.payload(i) {
+            return Err((
+                Invariant::MergeConsistent,
+                format!("shard {i}'s merged payload changed on {label}"),
+            ));
+        }
+    }
+    if label.starts_with("duplicate(") && !label.ends_with("-> Ok(Duplicate)") {
+        return Err((
+            Invariant::MergeConsistent,
+            format!("identical resubmission was not idempotent: {label}"),
+        ));
+    }
+
+    // I4 backoff-monotone: failure streaks never reset while the sweep
+    // runs, and each new penalty's backoff sits inside the deterministic
+    // jitter window `[base << min(f-1, 6), +base)` — whose floor is
+    // therefore non-decreasing along the streak.
+    let base = spec.policy.backoff_base_ms.max(1);
+    let pre_workers = pre.table.worker_views();
+    for view in post.table.worker_views() {
+        let failures_before =
+            pre_workers.iter().find(|v| v.id == view.id).map_or(0, |v| v.failures);
+        if view.failures < failures_before {
+            return Err((
+                Invariant::BackoffMonotone,
+                format!("worker {}'s failure streak reset on {label}", view.id),
+            ));
+        }
+        if view.failures == failures_before || view.quarantined {
+            continue;
+        }
+        let floor = base << (view.failures - 1).min(6);
+        let duration = view.backoff_until.saturating_sub(post.now);
+        if duration < floor || duration >= floor + base {
+            return Err((
+                Invariant::BackoffMonotone,
+                format!(
+                    "worker {} backoff {duration} ms outside [{floor}, {}) after {label}",
+                    view.id,
+                    floor + base
+                ),
+            ));
+        }
+        if failures_before > 0 {
+            let prev_floor = base << (failures_before - 1).min(6);
+            if floor < prev_floor {
+                return Err((
+                    Invariant::BackoffMonotone,
+                    format!("worker {} backoff floor shrank to {floor} ms on {label}", view.id),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// A node with no state-changing successor must be a sanctioned outcome:
+/// all shards merged, or every worker quarantined with the remaining
+/// shards never computed (the typed `Incomplete`).
+fn classify_terminal(report: &mut ModelReport, recs: &[Rec], at: usize) {
+    let node = &recs[at].node;
+    if node.table.all_done() {
+        report.all_done_terminals += 1;
+    } else if node.table.quarantined() == node.table.workers() {
+        report.incomplete_terminals += 1;
+    } else {
+        report.violations.push(render_violation(
+            Invariant::BoundedTermination,
+            format!(
+                "stuck state: {}/{} shards done, {}/{} workers quarantined, no progress possible",
+                node.table.completed(),
+                report.shards,
+                node.table.quarantined(),
+                node.table.workers()
+            ),
+            recs,
+            at,
+            Kind::Request,
+            "(terminal)",
+        ));
+    }
+}
+
+/// Build the violation record: the parent-chain trace plus the violating
+/// event, and the `FaultPlan` string that re-triggers the failure class.
+fn render_violation(
+    invariant: Invariant,
+    detail: String,
+    recs: &[Rec],
+    at: usize,
+    kind: Kind,
+    label: &str,
+) -> Violation {
+    let mut trace = Vec::new();
+    let mut kinds = Vec::new();
+    let mut cursor = at;
+    while cursor != usize::MAX {
+        if recs[cursor].parent != usize::MAX {
+            trace.push(recs[cursor].label.clone());
+            kinds.push(recs[cursor].kind);
+        }
+        cursor = recs[cursor].parent;
+    }
+    trace.reverse();
+    kinds.reverse();
+    if label != "(terminal)" {
+        trace.push(label.to_string());
+        kinds.push(kind);
+    }
+    Violation { invariant, detail, trace, fault_plan: fault_plan(&kinds) }
+}
+
+/// Map a counterexample's event kinds onto the fault injector's alphabet.
+/// This is a dynamic *trigger* for the same failure class, not a literal
+/// transcript: an expiry is what `stall` provokes, a divergent/corrupt
+/// submission is what `corrupt:2` (the first post-register frame) forges
+/// on the wire, and a duplicate is literally `dup`. A trace with no
+/// fault-shaped event (e.g. pure double-grant request interleavings) maps
+/// to `stall` — the trigger that makes two workers hold one shard.
+fn fault_plan(kinds: &[Kind]) -> String {
+    let mut tokens: Vec<String> = Vec::new();
+    let mut push = |t: String| {
+        if !tokens.contains(&t) {
+            tokens.push(t);
+        }
+    };
+    for kind in kinds {
+        match kind {
+            Kind::Expire => push("stall".to_string()),
+            Kind::Divergent | Kind::Corrupt => push("corrupt:2".to_string()),
+            Kind::Duplicate | Kind::StaleSubmit => push("dup".to_string()),
+            Kind::Request | Kind::SubmitValid => {}
+        }
+    }
+    if tokens.is_empty() {
+        tokens.push("stall".to_string());
+    }
+    tokens.join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_small_space_proves_everything() {
+        let spec = ModelSpec { shards: 2, workers: 1, ..ModelSpec::default() };
+        let report = check(&spec);
+        assert!(report.exhausted, "frontier must empty: {report}");
+        assert!(report.violations.is_empty(), "{report}");
+        assert!(report.all_done_terminals >= 1, "{report}");
+        assert!(report.incomplete_terminals >= 1, "quarantine dead-end must exist: {report}");
+    }
+
+    #[test]
+    fn double_grant_mutant_is_caught() {
+        let spec = ModelSpec {
+            shards: 2,
+            workers: 2,
+            mutation: Mutation::DoubleGrant,
+            ..Default::default()
+        };
+        let report = check(&spec);
+        let v = report.violations.first().expect("double-grant must be caught");
+        assert_eq!(v.invariant, Invariant::NoLostShard, "{report}");
+        assert!(!v.trace.is_empty());
+        assert!(!v.fault_plan.is_empty());
+    }
+
+    #[test]
+    fn quarantine_bypass_mutant_is_caught() {
+        let spec = ModelSpec {
+            shards: 1,
+            workers: 1,
+            mutation: Mutation::QuarantineBypass,
+            ..Default::default()
+        };
+        let report = check(&spec);
+        let v = report.violations.first().expect("quarantine-bypass must be caught");
+        assert_eq!(v.invariant, Invariant::MergeConsistent, "{report}");
+        assert!(v.fault_plan.contains("corrupt"), "plan {:?}", v.fault_plan);
+    }
+
+    #[test]
+    fn mutant_spellings_parse() {
+        assert_eq!("double-grant".parse::<Mutation>(), Ok(Mutation::DoubleGrant));
+        assert_eq!("quarantine-bypass".parse::<Mutation>(), Ok(Mutation::QuarantineBypass));
+        assert!("explode".parse::<Mutation>().is_err());
+    }
+}

@@ -1,0 +1,121 @@
+//! The determinism-lint rule taxonomy.
+//!
+//! Every rule is a typed [`Rule`] with a stable kebab-case id (the spelling
+//! used in findings and in `vet:allow(<id>)` pragmas), a one-line summary,
+//! and a path scope — the crate-relative source paths it applies to. The
+//! scopes encode the repo's determinism contract rather than a generic
+//! style guide: wall-clock belongs in the service layer and the CLI (it
+//! feeds `ShardMeta`/bench telemetry, which the canonical-bytes comparison
+//! zeroes), accounting paths in `energy/` and `accel/` must not narrow
+//! numeric types, and anything that emits ordered output must not iterate a
+//! hash map.
+
+/// One lint rule. Ordered so findings sort deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `HashMap`/`HashSet` anywhere in the crate: iteration order is
+    /// nondeterministic (RandomState), which poisons every ordered-emission
+    /// site downstream. Use `BTreeMap`/`BTreeSet` or sort explicitly.
+    HashIter,
+    /// `Instant::now`/`SystemTime` outside the allowlisted timing modules
+    /// (`sim/service/` and the CLI): wall-clock must never feed cycle or
+    /// energy accounting.
+    WallClock,
+    /// Narrowing `as` casts in `energy/`/`accel/` accounting paths
+    /// (`as f32`/`as u32`/...): silent precision loss in the paper-facing
+    /// numbers. Widening to `f64`/`u64` stays legal.
+    LossyCast,
+    /// `thread::spawn` in `sim/` code: an unscoped thread can outlive the
+    /// sweep that spawned it. Use `thread::scope` or justify the join
+    /// discipline with a pragma.
+    UnscopedThread,
+    /// A malformed `// vet:allow(rule): reason` pragma — unknown rule id,
+    /// missing `(`/`)`/`:`, or an empty reason. The escape hatch itself is
+    /// linted so suppressions always carry a justification.
+    PragmaReason,
+}
+
+/// Every rule, in reporting order.
+pub const RULES: [Rule; 5] = [
+    Rule::HashIter,
+    Rule::WallClock,
+    Rule::LossyCast,
+    Rule::UnscopedThread,
+    Rule::PragmaReason,
+];
+
+impl Rule {
+    /// Stable kebab-case id: the finding label and the pragma spelling.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::HashIter => "hash-iter",
+            Rule::WallClock => "wall-clock",
+            Rule::LossyCast => "lossy-cast",
+            Rule::UnscopedThread => "unscoped-thread",
+            Rule::PragmaReason => "pragma-reason",
+        }
+    }
+
+    /// One-line summary (the README rule table and `--help` text).
+    pub fn summary(self) -> &'static str {
+        match self {
+            Rule::HashIter => {
+                "HashMap/HashSet iteration order is nondeterministic; use BTreeMap or sort"
+            }
+            Rule::WallClock => {
+                "Instant::now/SystemTime outside sim/service/ and the CLI timing layer"
+            }
+            Rule::LossyCast => "narrowing `as` cast in an energy/accel accounting path",
+            Rule::UnscopedThread => "thread::spawn in sim code (prefer thread::scope)",
+            Rule::PragmaReason => "vet:allow pragma without a known rule id and non-empty reason",
+        }
+    }
+
+    /// Parse a pragma/CLI spelling back to the rule.
+    pub fn from_id(id: &str) -> Option<Rule> {
+        RULES.iter().copied().find(|r| r.id() == id)
+    }
+
+    /// Does this rule apply to the crate-relative source path (`/`-separated,
+    /// e.g. `sim/service/lease.rs`)? Paths outside a rule's scope are
+    /// allowlisted by construction, not by pragma.
+    pub fn applies_to(self, path: &str) -> bool {
+        match self {
+            Rule::HashIter | Rule::PragmaReason => true,
+            Rule::WallClock => !(path.starts_with("sim/service/") || path == "main.rs"),
+            Rule::LossyCast => path.starts_with("energy/") || path.starts_with("accel/"),
+            Rule::UnscopedThread => path.starts_with("sim/"),
+        }
+    }
+}
+
+impl std::fmt::Display for Rule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.id())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_round_trip() {
+        for rule in RULES {
+            assert_eq!(Rule::from_id(rule.id()), Some(rule));
+        }
+        assert_eq!(Rule::from_id("bogus"), None);
+    }
+
+    #[test]
+    fn scopes_encode_the_contract() {
+        assert!(Rule::HashIter.applies_to("report.rs"));
+        assert!(Rule::WallClock.applies_to("sim/engine.rs"));
+        assert!(!Rule::WallClock.applies_to("sim/service/coordinator.rs"));
+        assert!(!Rule::WallClock.applies_to("main.rs"));
+        assert!(Rule::LossyCast.applies_to("energy/tech45.rs"));
+        assert!(!Rule::LossyCast.applies_to("noc/mod.rs"));
+        assert!(Rule::UnscopedThread.applies_to("sim/service/coordinator.rs"));
+        assert!(!Rule::UnscopedThread.applies_to("report.rs"));
+    }
+}

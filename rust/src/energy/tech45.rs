@@ -144,7 +144,7 @@ mod tests {
         // hierarchy" — i.e. MAC < PE↔MAC < L1↔MAC < L2↔MAC, with L2 orders
         // of magnitude above everything.
         let t = TechModel::tech45();
-        let rows: std::collections::HashMap<_, _> = t.fig3_rows().into_iter().collect();
+        let rows: std::collections::BTreeMap<_, _> = t.fig3_rows().into_iter().collect();
         let mac = rows["MAC"];
         assert!(rows["IN"] < mac);
         assert!(rows["C/D"] < mac);

@@ -73,6 +73,7 @@
 //! module docs) — no accelerator-layer changes required.
 
 pub mod accel;
+pub mod analysis;
 pub mod area;
 pub mod config;
 pub mod coordinator;

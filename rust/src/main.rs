@@ -22,6 +22,7 @@
 //! is in-tree (the offline build has no CLI dependency; DESIGN.md
 //! §Dependencies).
 
+use maple::analysis::{check, lint_path, ModelSpec, Mutation};
 use maple::config::{axis, AcceleratorConfig, ConfigAxis};
 use maple::coordinator::Policy;
 use maple::report;
@@ -180,6 +181,19 @@ COMMANDS:
            workers over loopback TCP with worker w0 executing the fault
            plan, then verify the merged grid is bit-identical to the
            unsharded sweep of the same space (exit non-zero otherwise).
+  vet    [--lint-only | --model-only] [--src DIR] [--shards N] [--workers M]
+           [--max-states N] [--mutant double-grant|quarantine-bypass]
+           Static analysis of the simulator itself: a determinism lint
+           over the crate sources (no HashMap/HashSet, no wall-clock in
+           sim paths, no lossy casts in accounting code, no unscoped
+           threads; escape hatch `// vet:allow(rule): reason`), plus a
+           bounded model checker that exhausts the lease/ledger protocol
+           over N shards x M workers and proves its safety invariants —
+           any violation renders a minimal counterexample trace with a
+           fault plan `maple chaos --fault <plan>` replays. Exits
+           non-zero on any finding, violation, or a non-exhausted
+           search. --mutant seeds a known protocol bug instead and exits
+           zero only if the checker catches it (the CI self-test).
   crossval [--scale N] [--datasets wv,fb,...] [--seed S] [--policy P]
            DES vs analytic cross-validation over the four paper configs;
            exits non-zero if any cell leaves the documented agreement band
@@ -759,6 +773,69 @@ fn chaos_cmd(args: &Args, csv: bool) -> CliResult {
     }
 }
 
+/// The `vet` command: static analysis and verification of the simulator
+/// itself. Runs the determinism lint over the crate sources and the
+/// bounded model checker over the lease/ledger protocol; exits non-zero on
+/// any finding, invariant violation, or a search that hit its state cap
+/// before exhausting the space. With `--mutant` the polarity flips: a
+/// known protocol bug is seeded into the transition relation and the
+/// command succeeds only if the checker catches it with a counterexample —
+/// the CI self-test that keeps the checker honest.
+fn vet_cmd(args: &Args) -> CliResult {
+    let lint_only = args.flag("--lint-only");
+    let model_only = args.flag("--model-only");
+    let mut failed = false;
+
+    if !model_only {
+        let root = match args.opt("--src") {
+            Some(dir) => std::path::PathBuf::from(dir),
+            // Work from either the repo root or the crate root.
+            None => ["rust/src", "src"]
+                .iter()
+                .map(std::path::PathBuf::from)
+                .find(|p| p.is_dir())
+                .ok_or("cannot find the crate sources (run from the repo or pass --src DIR)")?,
+        };
+        let report = lint_path(&root)?;
+        print!("{report}");
+        if !report.findings.is_empty() {
+            failed = true;
+        }
+    }
+
+    if !lint_only {
+        let mutation = match args.opt("--mutant") {
+            Some(m) => m.parse::<Mutation>()?,
+            None => Mutation::None,
+        };
+        let spec = ModelSpec {
+            shards: args.parse_or("--shards", 3usize)?,
+            workers: args.parse_or("--workers", 2usize)?,
+            max_states: args.parse_or("--max-states", 500_000usize)?,
+            mutation,
+            ..ModelSpec::default()
+        };
+        let report = check(&spec);
+        print!("{report}");
+        if mutation != Mutation::None {
+            if report.violations.is_empty() {
+                return Err("vet: seeded mutant escaped the model checker".into());
+            }
+            eprintln!("vet: seeded mutant caught with a replayable counterexample");
+            return Ok(());
+        }
+        if !report.violations.is_empty() || !report.exhausted {
+            failed = true;
+        }
+    }
+
+    if failed {
+        return Err("vet found violations (see the report above)".into());
+    }
+    eprintln!("vet OK");
+    Ok(())
+}
+
 #[cfg(feature = "runtime")]
 fn validate(args: &Args) -> CliResult {
     let dir = args
@@ -875,6 +952,7 @@ fn main() -> CliResult {
         "serve" => serve_cmd(&args, csv)?,
         "work" => work_cmd(&args)?,
         "chaos" => chaos_cmd(&args, csv)?,
+        "vet" => vet_cmd(&args)?,
         "crossval" => {
             let scale = args.parse_or("--scale", 16usize)?;
             let seed = args.parse_or("--seed", 7u64)?;
@@ -914,9 +992,9 @@ fn main() -> CliResult {
 
 /// Every dispatchable command name, kept in sync with the `main` match (a
 /// unit test walks USAGE against this list).
-const COMMANDS: [&str; 16] = [
+const COMMANDS: [&str; 17] = [
     "datasets", "fig3", "fig8", "fig9", "simulate", "sweep", "explore", "estval", "merge", "serve",
-    "work", "chaos", "crossval", "cache", "config", "validate",
+    "work", "chaos", "vet", "crossval", "cache", "config", "validate",
 ];
 
 /// The closest known command within a small edit distance — the

@@ -26,7 +26,7 @@
 //! i.e. bit-exact with the serial pass) that is independent of the fan-out
 //! width.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::ops::Range;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -61,7 +61,7 @@ pub enum EngineError {
 
 /// Cache key for one profiled workload: a Table-I dataset (by name or
 /// abbreviation) at a given seed and down-scale factor.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct WorkloadKey {
     pub dataset: String,
     pub seed: u64,
@@ -632,7 +632,8 @@ pub struct SimEngine {
     /// so results are bit-identical across fan-out widths; the default of 1
     /// reproduces the serial profile pass exactly (checksum included).
     profile_threads: usize,
-    cache: Mutex<HashMap<WorkloadKey, WorkloadSlot>>,
+    /// BTreeMap so cache-stat iteration is key-ordered and deterministic.
+    cache: Mutex<BTreeMap<WorkloadKey, WorkloadSlot>>,
     /// Second cache tier: persisted profiles shared across processes.
     disk: Option<DiskCache>,
     profiles_run: AtomicU64,
@@ -653,7 +654,7 @@ impl SimEngine {
         Self {
             threads,
             profile_threads: 1,
-            cache: Mutex::new(HashMap::new()),
+            cache: Mutex::new(BTreeMap::new()),
             disk: None,
             profiles_run: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
@@ -905,6 +906,7 @@ impl SimEngine {
         }
         let fingerprint = ex.fingerprint(spec.cell_model);
         let range = shard.range(ex.total_cells());
+        // vet:allow(wall-clock): lands only in volatile ShardMeta stats, zeroed before canonical comparison
         let start = Instant::now();
         let (profiles_before, hits_before) = (self.profiles_run(), self.disk_hits());
         let cells = self.run_range(&ex, spec.cell_model, range.clone())?;

@@ -695,6 +695,7 @@ impl<'e> Explorer<'e> {
     /// like fresh evaluations — so a warm run reproduces the cold run's
     /// answer with zero fresh simulations.
     pub fn run(&self) -> Result<ExploreResult, EngineError> {
+        // vet:allow(wall-clock): bench wall-clock for the explore report only, never a fitness input
         let t_run = Instant::now();
         let ex = self.space.expand()?;
         for cfg in &ex.configs {
@@ -762,6 +763,7 @@ impl<'e> Explorer<'e> {
         exact_state: &mut TierState,
         estimate_state: &mut TierState,
     ) -> Result<DatasetSearch, EngineError> {
+        // vet:allow(wall-clock): bench wall-clock for the per-dataset report only, never a fitness input
         let t0 = Instant::now();
         let spec = &self.spec;
         let exact_before = exact_state.snapshot();

@@ -133,18 +133,89 @@ pub enum SubmitError {
     Conflict { index: usize },
 }
 
+/// The pure first-valid-wins slot machine under [`SubmissionLedger`]: one
+/// optional canonical-bytes payload per shard index, nothing else. Split
+/// out so the `analysis` model checker can drive the *exact* acceptance
+/// logic the coordinator runs — store-on-first, duplicate on identical
+/// bytes, conflict on divergent bytes — without decoding real `MAPLESHD`
+/// artifacts.
+#[derive(Debug, Clone)]
+pub struct LedgerCore {
+    slots: Vec<Option<Vec<u8>>>,
+}
+
+impl LedgerCore {
+    pub fn new(shard_count: usize) -> Self {
+        Self { slots: vec![None; shard_count] }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Offer canonical bytes for `index`. First submission is stored;
+    /// byte-identical resubmissions are idempotent duplicates; divergent
+    /// ones are conflicts (the stored payload never changes).
+    pub fn offer(&mut self, index: usize, canonical: &[u8]) -> Result<SubmitOutcome, SubmitError> {
+        match &self.slots[index] {
+            None => {
+                self.slots[index] = Some(canonical.to_vec());
+                Ok(SubmitOutcome::Accepted)
+            }
+            Some(stored) if stored == canonical => Ok(SubmitOutcome::Duplicate),
+            Some(_) => Err(SubmitError::Conflict { index }),
+        }
+    }
+
+    /// The stored canonical bytes for `index`, if any.
+    pub fn payload(&self, index: usize) -> Option<&[u8]> {
+        self.slots.get(index).and_then(|s| s.as_deref())
+    }
+
+    pub fn completed(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.completed() == self.slots.len()
+    }
+
+    /// Missing shard indices (first 8 — the same bound as
+    /// [`crate::sim::shard::ShardError::MissingShards`]).
+    pub fn missing(&self) -> Vec<usize> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_none())
+            .map(|(i, _)| i)
+            .take(8)
+            .collect()
+    }
+
+    /// Mutation hook for `maple vet --mutant quarantine-bypass`: overwrite
+    /// a merged payload unconditionally — the bug [`LedgerCore::offer`]
+    /// exists to prevent. Only `analysis::model` calls this, and only when
+    /// that mutation is selected.
+    pub(crate) fn force_store(&mut self, index: usize, bytes: &[u8]) {
+        self.slots[index] = Some(bytes.to_vec());
+    }
+}
+
 /// Incremental, idempotent shard collection for one sweep. First valid
 /// submission per range wins; identical resubmissions are duplicates;
 /// divergent ones are conflicts. "Identical" means canonical-byte-identical:
 /// volatile [`crate::sim::shard::ShardMeta`] stats are zeroed before
 /// comparison (two workers computing the same cells at different speeds
-/// submit the *same* shard).
+/// submit the *same* shard). Validation (fingerprint, split arity, range,
+/// profile chunking) lives here; the acceptance state machine is the
+/// embedded [`LedgerCore`].
 pub struct SubmissionLedger {
     fingerprint: u64,
     shard_count: usize,
     total_cells: usize,
     profile_threads: usize,
-    slots: Vec<Option<(SweepShard, Vec<u8>)>>,
+    core: LedgerCore,
+    shards: Vec<Option<SweepShard>>,
     duplicates: u64,
     rejected: u64,
 }
@@ -156,14 +227,15 @@ impl SubmissionLedger {
         total_cells: usize,
         profile_threads: usize,
     ) -> Self {
-        let mut slots = Vec::with_capacity(shard_count);
-        slots.resize_with(shard_count, || None);
+        let mut shards = Vec::with_capacity(shard_count);
+        shards.resize_with(shard_count, || None);
         Self {
             fingerprint,
             shard_count,
             total_cells,
             profile_threads,
-            slots,
+            core: LedgerCore::new(shard_count),
+            shards,
             duplicates: 0,
             rejected: 0,
         }
@@ -220,43 +292,32 @@ impl SubmissionLedger {
         }
         let canonical = canonical_bytes(&shard);
         let index = shard.spec.index;
-        match &self.slots[index] {
-            None => {
-                self.slots[index] = Some((shard, canonical));
-                Ok((index, SubmitOutcome::Accepted))
-            }
-            Some((_, stored)) if *stored == canonical => {
-                self.duplicates += 1;
-                Ok((index, SubmitOutcome::Duplicate))
-            }
-            Some(_) => Err(SubmitError::Conflict { index }),
+        let outcome = self.core.offer(index, &canonical)?;
+        match outcome {
+            SubmitOutcome::Accepted => self.shards[index] = Some(shard),
+            SubmitOutcome::Duplicate => self.duplicates += 1,
         }
+        Ok((index, outcome))
     }
 
     pub fn completed(&self) -> usize {
-        self.slots.iter().filter(|s| s.is_some()).count()
+        self.core.completed()
     }
 
     pub fn is_complete(&self) -> bool {
-        self.completed() == self.shard_count
+        self.core.is_complete()
     }
 
     /// Missing shard indices (first 8 — the same bound as
     /// [`crate::sim::shard::ShardError::MissingShards`]).
     pub fn missing(&self) -> Vec<usize> {
-        self.slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| s.is_none())
-            .map(|(i, _)| i)
-            .take(8)
-            .collect()
+        self.core.missing()
     }
 
     /// The stored shards, index order (for [`shard::merge`] /
     /// [`shard::merge_partial`]).
     pub fn shards(&self) -> Vec<SweepShard> {
-        self.slots.iter().flatten().map(|(s, _)| s.clone()).collect()
+        self.shards.iter().flatten().cloned().collect()
     }
 
     pub fn duplicates(&self) -> u64 {
@@ -351,6 +412,7 @@ impl Coordinator {
             match self.listener.accept() {
                 Ok((stream, _)) => {
                     let shared = Arc::clone(&shared);
+                    // vet:allow(unscoped-thread): every handler is joined before run() returns
                     handlers.push(std::thread::spawn(move || handle_connection(&shared, stream)));
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => {}

@@ -65,8 +65,29 @@ struct WorkerState {
     quarantined: bool,
 }
 
-/// The coordinator's authoritative shard/worker state.
-#[derive(Debug)]
+/// A read-only snapshot of one slot — what [`LeaseTable::slot_views`]
+/// exposes to the `analysis` model checker (and anything else that wants
+/// to observe the table without reaching into its internals).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SlotView {
+    Pending { attempt: u32 },
+    Leased { worker: String, deadline: u64, attempt: u32 },
+    Done,
+}
+
+/// A read-only snapshot of one worker's failure record
+/// ([`LeaseTable::worker_views`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerView {
+    pub id: String,
+    pub failures: u32,
+    pub backoff_until: u64,
+    pub quarantined: bool,
+}
+
+/// The coordinator's authoritative shard/worker state. `Clone` so the
+/// model checker can fork it at every abstract event.
+#[derive(Debug, Clone)]
 pub struct LeaseTable {
     slots: Vec<Slot>,
     /// BTreeMap for deterministic iteration order in stats and tests.
@@ -211,6 +232,52 @@ impl LeaseTable {
 
     pub fn quarantined(&self) -> usize {
         self.workers.values().filter(|w| w.quarantined).count()
+    }
+
+    /// Snapshot every slot, index order.
+    pub fn slot_views(&self) -> Vec<SlotView> {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Pending { attempt } => SlotView::Pending { attempt: *attempt },
+                Slot::Leased { worker, deadline, attempt } => SlotView::Leased {
+                    worker: worker.clone(),
+                    deadline: *deadline,
+                    attempt: *attempt,
+                },
+                Slot::Done => SlotView::Done,
+            })
+            .collect()
+    }
+
+    /// Snapshot every registered worker, id order (the map is a BTreeMap).
+    pub fn worker_views(&self) -> Vec<WorkerView> {
+        self.workers
+            .iter()
+            .map(|(id, w)| WorkerView {
+                id: id.clone(),
+                failures: w.failures,
+                backoff_until: w.backoff_until,
+                quarantined: w.quarantined,
+            })
+            .collect()
+    }
+
+    /// Mutation hook for `maple vet --mutant double-grant`: re-assign a
+    /// *live* lease to another worker without reaping it — the classic
+    /// double-grant bug. Only `analysis::model` calls this, and only when
+    /// that mutation is selected; it exists so the checker's
+    /// bug-detection claim is tested against the real table, not a copy.
+    pub(crate) fn force_grant(&mut self, index: usize, id: &str, now: u64) -> Option<u32> {
+        self.register(id);
+        match self.slots.get_mut(index) {
+            Some(Slot::Leased { worker, deadline, attempt }) => {
+                *worker = id.to_string();
+                *deadline = now + self.policy.lease_ms;
+                Some(*attempt)
+            }
+            _ => None,
+        }
     }
 }
 

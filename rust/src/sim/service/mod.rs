@@ -27,11 +27,11 @@ pub mod proto;
 pub mod worker;
 
 pub use coordinator::{
-    Coordinator, ServiceConfig, ServiceStats, SubmissionLedger, SubmitError, SubmitOutcome,
-    SweepOutcome,
+    Coordinator, LedgerCore, ServiceConfig, ServiceStats, SubmissionLedger, SubmitError,
+    SubmitOutcome, SweepOutcome,
 };
 pub use fault::{run_chaos, ChaosReport, ChaosSpec, Fault, FaultEvent, FaultPlan};
-pub use lease::{Grant, LeasePolicy, LeaseTable};
+pub use lease::{Grant, LeasePolicy, LeaseTable, SlotView, WorkerView};
 pub use proto::{AckCode, Message, ProtoError, PROTO_VERSION};
 pub use worker::{WorkerConfig, WorkerReport};
 
