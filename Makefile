@@ -8,12 +8,13 @@
 #   make sweep-sharded  2-way sharded sweep + merge, diffed vs the unsharded run
 #   make chaos          fault-injection harness: coordinator + workers, one faulty
 #   make explore        guided search vs the exhaustive grid + estval gate
+#   make tiling         out-of-core ingest -> tiled profile, diffed vs whole-matrix
 #   make artifacts      AOT-lower the Pallas kernel to HLO text (needs jax)
 
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify fmt clippy test vet bench sweep-noc sweep-sharded chaos explore artifacts
+.PHONY: verify fmt clippy test vet bench sweep-noc sweep-sharded chaos explore tiling artifacts
 
 verify: fmt clippy test vet
 
@@ -84,6 +85,24 @@ explore:
 	        --axis noc=crossbar:2,crossbar:4,crossbar:8,crossbar:16,crossbar:32,crossbar:64,mesh:2x2,mesh:4x2,mesh:4x4,mesh:8x4,mesh:8x8,mesh:16x8 \
 	        --policy round-robin,chunked,greedy \
 	        --budget 32 --exhaustive --bench-json ../BENCH_explore.json
+
+# The CI out-of-core contract, laptop-sized: generate a banded matrix a
+# few times larger than a small --mem-budget, stream it into a row-group
+# container, profile it tile-by-tile through the partial cache, and diff
+# the artifact byte-for-byte against the whole-matrix profile.
+tiling:
+	cd $(RUST_DIR) && rm -rf target/tiling-demo && mkdir -p target/tiling-demo && \
+	$(CARGO) run --release -- ingest --gen banded:0.001:4 \
+	        --rows 13000 --nnz 312000 --seed 7 --mtx-out target/tiling-demo/oc.mtx && \
+	$(CARGO) run --release -- ingest target/tiling-demo/oc.mtx \
+	        --out target/tiling-demo/oc.mrg --mem-budget 630000 && \
+	$(CARGO) run --release -- ingest target/tiling-demo/oc.mrg --report --csv && \
+	MAPLE_CACHE_DIR=target/tiling-demo/cache $(CARGO) run --release -- ingest \
+	        target/tiling-demo/oc.mrg --profile-out target/tiling-demo/tiled.mwl --tile 650 && \
+	$(CARGO) run --release -- ingest target/tiling-demo/oc.mtx \
+	        --profile-out target/tiling-demo/whole.mwl --tile 1000000 && \
+	cmp target/tiling-demo/tiled.mwl target/tiling-demo/whole.mwl && \
+	echo "out-of-core profile == whole-matrix profile"
 
 # Skips the rebuild when the artifacts are newer than the Python sources.
 artifacts: artifacts/maple_pe.hlo.txt

@@ -20,11 +20,12 @@
 
 use super::AcceleratorConfig;
 use crate::noc::Topology;
+use crate::sparse::TileShape;
 
 /// Axis parse/validation error.
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 pub enum AxisError {
-    #[error("unknown sweep axis {0:?} (noc | macs | prefetch | pe-model)")]
+    #[error("unknown sweep axis {0:?} (noc | macs | prefetch | pe-model | tile)")]
     UnknownAxis(String),
     #[error("axis {axis}: bad point {value:?} ({reason})")]
     BadPoint { axis: &'static str, value: String, reason: String },
@@ -42,6 +43,13 @@ pub enum ConfigAxis {
     PrefetchDepth(Vec<usize>),
     /// Registered PE cost-model name (`pe-model`, see [`crate::pe::registry`]).
     PeModel(Vec<String>),
+    /// Out-of-core tile shape (`tile = RxC | N` for NxN). Setting it does
+    /// not change any simulated quantity — the tiled profile is
+    /// bit-identical to the whole-matrix profile by construction
+    /// ([`crate::sim::profile_workload_tiled`]) — but each point is
+    /// feasibility-checked against the config's scratchpad capacity at
+    /// sweep expansion, so the axis ranges over *deployable* tilings.
+    Tiling(Vec<TileShape>),
 }
 
 impl ConfigAxis {
@@ -53,6 +61,7 @@ impl ConfigAxis {
             ConfigAxis::MacsPerPe(_) => "macs",
             ConfigAxis::PrefetchDepth(_) => "prefetch",
             ConfigAxis::PeModel(_) => "pe-model",
+            ConfigAxis::Tiling(_) => "tile",
         }
     }
 
@@ -63,6 +72,7 @@ impl ConfigAxis {
             ConfigAxis::MacsPerPe(v) => v.len(),
             ConfigAxis::PrefetchDepth(v) => v.len(),
             ConfigAxis::PeModel(v) => v.len(),
+            ConfigAxis::Tiling(v) => v.len(),
         }
     }
 
@@ -73,6 +83,7 @@ impl ConfigAxis {
             ConfigAxis::MacsPerPe(v) => v.is_empty(),
             ConfigAxis::PrefetchDepth(v) => v.is_empty(),
             ConfigAxis::PeModel(v) => v.is_empty(),
+            ConfigAxis::Tiling(v) => v.is_empty(),
         }
     }
 
@@ -83,6 +94,7 @@ impl ConfigAxis {
             ConfigAxis::MacsPerPe(v) => v[i].to_string(),
             ConfigAxis::PrefetchDepth(v) => v[i].to_string(),
             ConfigAxis::PeModel(v) => v[i].clone(),
+            ConfigAxis::Tiling(v) => v[i].to_string(),
         }
     }
 
@@ -100,6 +112,7 @@ impl ConfigAxis {
             ConfigAxis::MacsPerPe(v) => cfg.pe.macs_per_pe = v[i],
             ConfigAxis::PrefetchDepth(v) => cfg.pe.prefetch_depth = v[i],
             ConfigAxis::PeModel(v) => cfg.pe.model = Some(v[i].clone()),
+            ConfigAxis::Tiling(v) => cfg.tiling = Some(v[i]),
         }
         cfg.name.push_str(&format!("+{}={}", self.name(), self.label(i)));
     }
@@ -124,6 +137,16 @@ impl ConfigAxis {
             ConfigAxis::PeModel(v) => {
                 if v.iter().any(|m| m.trim().is_empty()) {
                     return bad("\"\"".into(), "model name must be non-empty");
+                }
+            }
+            ConfigAxis::Tiling(v) => {
+                // TileShape construction clamps extents to ≥ 1, so the only
+                // degenerate form left is a repeated point (an aliased grid
+                // cell that would collide in reports and cache keys).
+                for (i, s) in v.iter().enumerate() {
+                    if v[..i].contains(s) {
+                        return bad(s.to_string(), "duplicate tile shape");
+                    }
                 }
             }
         }
@@ -180,6 +203,18 @@ impl ConfigAxis {
                 })
                 .collect::<Result<Vec<_>, _>>()
                 .map(ConfigAxis::PeModel),
+            "tile" => values
+                .split(',')
+                .map(|v| {
+                    let v = v.trim();
+                    TileShape::parse(v).map_err(|reason| AxisError::BadPoint {
+                        axis: "tile",
+                        value: v.to_string(),
+                        reason,
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(ConfigAxis::Tiling),
             other => Err(AxisError::UnknownAxis(other.to_string())),
         }
     }
@@ -240,6 +275,14 @@ mod tests {
             ConfigAxis::parse("pe-model", "maple,dummy-test-pe").unwrap(),
             ConfigAxis::PeModel(vec!["maple".into(), "dummy-test-pe".into()])
         );
+        assert_eq!(
+            ConfigAxis::parse("tile", "64x32, 128, 1x256").unwrap(),
+            ConfigAxis::Tiling(vec![
+                TileShape::new(64, 32),
+                TileShape::new(128, 128),
+                TileShape::new(1, 256),
+            ])
+        );
     }
 
     #[test]
@@ -257,6 +300,9 @@ mod tests {
             ("noc", "crossbar:"),
             ("noc", "torus:4x4"),
             ("pe-model", "maple,,gamma"),
+            ("tile", "64x"),
+            ("tile", "0x32"),
+            ("tile", "axb"),
         ] {
             assert!(
                 matches!(ConfigAxis::parse(name, values), Err(AxisError::BadPoint { .. })),
@@ -282,6 +328,10 @@ mod tests {
         let pm = ConfigAxis::PeModel(vec!["maple".into()]);
         pm.apply(0, &mut cfg);
         assert_eq!(cfg.pe.model.as_deref(), Some("maple"));
+        let tile = ConfigAxis::Tiling(vec![TileShape::new(64, 32)]);
+        tile.apply(0, &mut cfg);
+        assert_eq!(cfg.tiling, Some(TileShape::new(64, 32)));
+        assert!(cfg.name.ends_with("+tile=64x32"), "{}", cfg.name);
     }
 
     #[test]
@@ -293,6 +343,9 @@ mod tests {
             .is_err());
         assert!(ConfigAxis::PeModel(vec!["  ".into()]).validate().is_err());
         assert!(ConfigAxis::parse("macs", "1,2").unwrap().validate().is_ok());
+        let dup = ConfigAxis::Tiling(vec![TileShape::new(4, 4), TileShape::new(4, 4)]);
+        assert!(dup.validate().is_err());
+        assert!(ConfigAxis::parse("tile", "4x4,8x8").unwrap().validate().is_ok());
     }
 
     #[test]

@@ -14,6 +14,7 @@ pub use axis::{AxisError, ConfigAxis};
 
 use crate::mem::DramParams;
 use crate::noc::Topology;
+use crate::sparse::TileShape;
 
 /// Which reference accelerator the configuration instantiates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +107,14 @@ pub struct AcceleratorConfig {
     pub merge_passes: u32,
     /// POB bandwidth share per PE in words/cycle (Extensor baseline).
     pub pob_words_per_cycle_per_pe: f64,
+    /// Out-of-core tile shape for the streaming profile pass (`[tile]` in
+    /// TOML, `tile` sweep axis). `None` — every paper preset — profiles the
+    /// whole matrix resident. Setting it changes *how* the profile is
+    /// computed, never *what*: the tiled result is bit-identical
+    /// ([`crate::sim::profile_workload_tiled`]), so no simulated quantity
+    /// depends on it. Sweep expansion feasibility-checks each shape against
+    /// `l1_bytes` ([`crate::sparse::tile::check_fits`]).
+    pub tiling: Option<TileShape>,
 }
 
 impl AcceleratorConfig {
@@ -141,6 +150,7 @@ impl AcceleratorConfig {
             dram: DramParams::default(),
             merge_passes: (num_queues as f64).log2().ceil() as u32,
             pob_words_per_cycle_per_pe: 0.0,
+            tiling: None,
         }
     }
 
@@ -169,6 +179,7 @@ impl AcceleratorConfig {
             dram: DramParams::default(),
             merge_passes: 0,
             pob_words_per_cycle_per_pe: 0.0,
+            tiling: None,
         }
     }
 
@@ -197,6 +208,7 @@ impl AcceleratorConfig {
             dram: DramParams::default(),
             merge_passes: 0,
             pob_words_per_cycle_per_pe: 12.0,
+            tiling: None,
         }
     }
 
@@ -226,6 +238,7 @@ impl AcceleratorConfig {
             dram: DramParams::default(),
             merge_passes: 0,
             pob_words_per_cycle_per_pe: 0.0,
+            tiling: None,
         }
     }
 

@@ -5,6 +5,7 @@
 use super::{AcceleratorConfig, AcceleratorKind, PeConfig, PeKind, DEFAULT_PREFETCH_DEPTH};
 use crate::mem::DramParams;
 use crate::noc::Topology;
+use crate::sparse::TileShape;
 use std::collections::BTreeMap;
 
 /// Config (de)serialisation error.
@@ -162,6 +163,12 @@ pub fn to_toml(c: &AcceleratorConfig) -> String {
     s.push_str(&format!("queue_bytes = {}\n", c.pe.queue_bytes));
     s.push_str(&format!("peb_bytes = {}\n", c.pe.peb_bytes));
     s.push_str(&format!("prefetch_depth = {}\n", c.pe.prefetch_depth));
+    // Emitted only when set, like `[pe] model`: every config written before
+    // the knob existed parses unchanged, and `None` round-trips as absence.
+    if let Some(t) = c.tiling {
+        s.push_str("\n[tile]\n");
+        s.push_str(&format!("shape = \"{t}\"\n"));
+    }
     s.push_str("\n[noc]\n");
     // The canonical spec syntax (`Topology: Display`), shared with the CLI
     // `--axis noc=...` flag and report labels.
@@ -230,6 +237,13 @@ pub fn from_toml(s: &str) -> Result<AcceleratorConfig, ConfigError> {
         },
         merge_passes: get_usize(&m, "merge_passes")? as u32,
         pob_words_per_cycle_per_pe: get_f64(&m, "pob_words_per_cycle_per_pe")?,
+        tiling: match get_opt_str(&m, "tile.shape")? {
+            None => None,
+            Some(spec) => Some(
+                TileShape::parse(&spec)
+                    .map_err(|e| ConfigError::BadValue("tile.shape", format!("{spec}: {e}")))?,
+            ),
+        },
     })
 }
 
@@ -288,6 +302,23 @@ mod tests {
         let mut c = AcceleratorConfig::matraptor_maple();
         c.pe.prefetch_depth = 2;
         assert_eq!(from_toml(&to_toml(&c)).unwrap(), c);
+    }
+
+    #[test]
+    fn tile_shape_round_trips_and_rejects_garbage() {
+        // Absent section → None (configs written before the knob existed).
+        let c = AcceleratorConfig::extensor_maple();
+        assert!(!to_toml(&c).contains("[tile]"));
+        assert_eq!(from_toml(&to_toml(&c)).unwrap().tiling, None);
+        // An explicit shape round-trips through the [tile] section.
+        let mut c = AcceleratorConfig::extensor_maple();
+        c.tiling = Some(TileShape::new(64, 32));
+        let s = to_toml(&c);
+        assert!(s.contains("[tile]") && s.contains("shape = \"64x32\""), "{s}");
+        assert_eq!(from_toml(&s).unwrap(), c);
+        // A malformed shape is a typed error, not a silent None.
+        let bad = s.replace("shape = \"64x32\"", "shape = \"64x\"");
+        assert!(matches!(from_toml(&bad), Err(ConfigError::BadValue("tile.shape", _))));
     }
 
     #[test]

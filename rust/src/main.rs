@@ -27,12 +27,13 @@ use maple::config::{axis, AcceleratorConfig, ConfigAxis};
 use maple::coordinator::Policy;
 use maple::report;
 use maple::sim::{
-    check_against_exhaustive, explore, profile_workload, profile_workload_sampled, run_chaos, shard,
-    simulate_workload, Axis, CellModel, ChaosSpec, Coordinator, DesignSpace, DiskCache, ExploreSpec,
-    Explorer, FaultPlan, LeasePolicy, Objective, ServiceConfig, ShardSpec, SimEngine, Strategy,
-    SweepOutcome, SweepResult, Tier, WorkerConfig, WorkloadKey, ESTIMATE_BAND,
+    cache, check_against_exhaustive, explore, profile_container_tiled, profile_workload,
+    profile_workload_sampled, profile_workload_tiled_cached, run_chaos, shard, simulate_workload,
+    Axis, CellModel, ChaosSpec, Coordinator, DesignSpace, DiskCache, ExploreSpec, Explorer,
+    FaultPlan, LeasePolicy, Objective, ServiceConfig, ShardSpec, SimEngine, Strategy, SweepOutcome,
+    SweepResult, Tier, WorkerConfig, WorkloadKey, ESTIMATE_BAND,
 };
-use maple::sparse::{stats, suite};
+use maple::sparse::{gen, io as sparse_io, stats, suite, TileShape};
 
 /// Dependency-free CLI error type.
 type CliError = Box<dyn std::error::Error>;
@@ -194,6 +195,24 @@ COMMANDS:
            non-zero on any finding, violation, or a non-exhausted
            search. --mutant seeds a known protocol bug instead and exits
            zero only if the checker catches it (the CI self-test).
+  ingest --gen <dataset|family> --mtx-out <p.mtx> [--scale N] [--seed S]
+           [--rows N --cols N --nnz N]
+         <in.mtx> --out <c.mrg> [--mem-budget N[K|M|G]]
+         <in.mtx|in.mrg> --profile-out <w.mwl> [--tile RxC]
+           [--threads N] [--stats-json <p.json>] [--no-cache]
+         <in.mtx|in.mrg> --report [--tile RxC]
+           Out-of-core streaming ingest. --gen writes a Table-I suite
+           matrix (scaled by --scale) or a raw family — uniform,
+           powerlaw:ALPHA, banded:REL_BW:CLUSTER sized by --rows/--nnz —
+           as a Matrix-Market file. With --out, the .mtx streams
+           into a row-group container (.mrg) without ever holding more
+           than --mem-budget of it in memory (default 256M; a quarter of
+           the budget bounds each row group). With --profile-out, the
+           tiled profiler runs C = A x A and writes the workload
+           artifact — bit-identical to the whole-matrix profile of the
+           same matrix; .mrg inputs stay out-of-core and flow per-block
+           partials through the disk cache, so an interrupted profile
+           resumes warm. --report prints the per-row-group nnz balance.
   crossval [--scale N] [--datasets wv,fb,...] [--seed S] [--policy P]
            DES vs analytic cross-validation over the four paper configs;
            exits non-zero if any cell leaves the documented agreement band
@@ -468,7 +487,37 @@ fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
     }
 
     let grid = engine.sweep(&space)?;
-    render_grid(&grid, pivot, !csv)
+    render_grid(&grid, pivot, !csv)?;
+
+    // When the grid ranges over tile shapes, also surface the per-row-group
+    // nnz balance each shape induces on each dataset — the load skew a
+    // tiled out-of-core profile of the same key would see.
+    let shapes: &[TileShape] = space
+        .axes
+        .iter()
+        .find_map(|a| match a {
+            Axis::Config(ConfigAxis::Tiling(v)) => Some(v.as_slice()),
+            _ => None,
+        })
+        .unwrap_or(&[]);
+    if !shapes.is_empty() {
+        let keys: &[WorkloadKey] = space
+            .axes
+            .iter()
+            .find_map(|a| match a {
+                Axis::Dataset(keys) => Some(keys.as_slice()),
+                _ => None,
+            })
+            .unwrap_or(&[]);
+        for key in keys {
+            let a = explore::suite_matrix(key)?;
+            for &shape in shapes {
+                println!();
+                print!("{}", report::tiling_report(&key.dataset, &a, shape, !csv));
+            }
+        }
+    }
+    Ok(())
 }
 
 /// The `explore` command: guided search over the same design space `sweep`
@@ -836,6 +885,242 @@ fn vet_cmd(args: &Args) -> CliResult {
     Ok(())
 }
 
+/// `--mem-budget` byte counts: a plain number or one with a K/M/G
+/// binary-unit suffix (`64M` = 64 MiB).
+fn parse_mem_budget(spec: &str) -> CliResult<u64> {
+    let s = spec.trim();
+    let (digits, unit) = match s.as_bytes().last() {
+        Some(b'K' | b'k') => (&s[..s.len() - 1], 1u64 << 10),
+        Some(b'M' | b'm') => (&s[..s.len() - 1], 1u64 << 20),
+        Some(b'G' | b'g') => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    let n: u64 = digits
+        .parse()
+        .map_err(|_| CliError::from(format!("bad --mem-budget {spec} (expected N[K|M|G])")))?;
+    n.checked_mul(unit).ok_or_else(|| format!("--mem-budget {spec} overflows u64").into())
+}
+
+/// A `--gen` family spec that is not a Table-I name:
+/// `uniform`, `powerlaw:ALPHA`, or `banded:REL_BW:CLUSTER`.
+fn parse_gen_profile(spec: &str) -> CliResult<gen::Profile> {
+    let mut parts = spec.split(':');
+    let kind = parts.next().unwrap_or("");
+    let parsed = match kind {
+        "uniform" => Some(gen::Profile::Uniform),
+        "powerlaw" => parts
+            .next()
+            .and_then(|v| v.parse().ok())
+            .map(|alpha| gen::Profile::PowerLaw { alpha }),
+        "banded" => {
+            let bw = parts.next().and_then(|v| v.parse().ok());
+            let cl = parts.next().and_then(|v| v.parse().ok());
+            match (bw, cl) {
+                (Some(rel_bandwidth), Some(cluster)) => {
+                    Some(gen::Profile::Banded { rel_bandwidth, cluster })
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    };
+    match parsed {
+        Some(p) if parts.next().is_none() => Ok(p),
+        _ => Err(format!(
+            "bad --gen {spec}: expected a Table-I dataset name or \
+             uniform | powerlaw:ALPHA | banded:REL_BW:CLUSTER"
+        )
+        .into()),
+    }
+}
+
+/// The `--tile` flag as a [`TileShape`]; `4096x4096` when absent (a shape
+/// big enough that small matrices degenerate to the untiled pass).
+fn parse_tile(args: &Args) -> CliResult<TileShape> {
+    TileShape::parse(args.opt_or("--tile", "4096"))
+        .map_err(|e| format!("bad --tile value: {e}").into())
+}
+
+/// The `ingest` command: the out-of-core pipeline. Generate a Matrix-Market
+/// file (`--gen`), stream it into a row-group container under a memory
+/// budget (`--out`), run the tiled profiler over either form
+/// (`--profile-out`), or print the per-row-group nnz balance (`--report`).
+fn ingest_cmd(args: &Args, csv: bool) -> CliResult {
+    // Matrix synthesis: the suite generators already back every simulation
+    // command; here they give CI (and users) arbitrarily-large .mtx inputs.
+    // Accepts a Table-I name (scaled with --scale) or a raw family spec
+    // `uniform | powerlaw:ALPHA | banded:REL_BW:CLUSTER` sized with
+    // --rows/--cols/--nnz.
+    if let Some(spec) = args.opt("--gen") {
+        let out = args.opt("--mtx-out").ok_or("--gen requires --mtx-out <path.mtx>")?;
+        let seed = args.parse_or("--seed", 7u64)?;
+        let a = if suite::by_name(spec).is_some() {
+            let scale = args.parse_or("--scale", 4usize)?;
+            explore::suite_matrix(&WorkloadKey::suite(spec, seed, scale))?
+        } else {
+            let profile = parse_gen_profile(spec)?;
+            let rows = args.parse_or("--rows", 0usize)?;
+            let nnz = args.parse_or("--nnz", 0usize)?;
+            if rows == 0 || nnz == 0 {
+                return Err(format!("--gen {spec} needs --rows N and --nnz N").into());
+            }
+            let cols = args.parse_or("--cols", rows)?;
+            gen::generate(rows, cols, nnz.min(rows * cols), profile, seed)
+        };
+        sparse_io::write_matrix_market(std::path::Path::new(out), &a)?;
+        eprintln!("ingest: wrote {out} ({}x{}, {} nnz)", a.rows(), a.cols(), a.nnz());
+        return Ok(());
+    }
+
+    // The input path is positional; skip the values of value-bearing flags
+    // (same scan as `merge`).
+    const VALUE_FLAGS: [&str; 12] = [
+        "--out",
+        "--mem-budget",
+        "--profile-out",
+        "--tile",
+        "--threads",
+        "--stats-json",
+        "--scale",
+        "--seed",
+        "--mtx-out",
+        "--rows",
+        "--cols",
+        "--nnz",
+    ];
+    let input = args
+        .argv
+        .iter()
+        .enumerate()
+        .find(|(i, s)| {
+            !s.starts_with("--") && (*i == 0 || !VALUE_FLAGS.contains(&args.argv[i - 1].as_str()))
+        })
+        .map(|(_, s)| s.clone())
+        .ok_or("usage: maple ingest <in.mtx|in.mrg> [--out|--profile-out|--report] ...")?;
+    let path = std::path::Path::new(&input);
+    let is_container = input.ends_with(".mrg");
+
+    // Conversion: .mtx -> .mrg under the budget.
+    if let Some(out) = args.opt("--out") {
+        if is_container {
+            return Err("--out converts a .mtx input; this is already a container".into());
+        }
+        let budget = parse_mem_budget(args.opt_or("--mem-budget", "256M"))?;
+        let stream = sparse_io::stream_matrix_market(path, budget)?;
+        let groups = stream.group_count();
+        let file = sparse_io::RowGroupFile::create(std::path::Path::new(out), stream)?;
+        eprintln!(
+            "ingest: {input} -> {out} ({groups} row groups, {}x{}, {} nnz, budget {budget} B)",
+            file.rows(),
+            file.cols(),
+            file.nnz()
+        );
+        return Ok(());
+    }
+
+    // Tiled profiling: C = A x A through the partial cache.
+    if let Some(out) = args.opt("--profile-out") {
+        let shape = parse_tile(args)?;
+        let threads = args.parse_or("--threads", 1usize)?;
+        let t = std::time::Instant::now();
+        let (w, stats) = if is_container {
+            if args.flag("--no-cache") {
+                return Err("out-of-core profiling resumes through the partial cache; \
+                            --no-cache is not supported for .mrg inputs"
+                    .into());
+            }
+            let file = sparse_io::RowGroupFile::open(path)?;
+            let disk = DiskCache::from_env()
+                .map_err(|e| format!("cannot open workload cache dir: {e}"))?;
+            let key = format!("ingest-{:016x}", file.fingerprint());
+            profile_container_tiled(&file, shape, &disk, &key)?
+        } else {
+            let a = sparse_io::read_matrix_market(path)?;
+            profile_workload_tiled_cached(&a, &a, shape, threads, None)
+        };
+        let wall_ms = t.elapsed().as_millis() as u64;
+        std::fs::write(out, cache::encode_workload(&w))
+            .map_err(|e| format!("cannot write {out}: {e}"))?;
+        let blocks = stats.blocks_computed + stats.blocks_loaded;
+        let tiles_per_sec = blocks as f64 / (wall_ms.max(1) as f64 / 1e3);
+        eprintln!(
+            "ingest: profiled {input} at tile {shape} -> {out} \
+             ({} x {} row groups x col tiles, {} computed + {} warm, \
+             peak {} B resident, {wall_ms} ms)",
+            stats.row_groups,
+            stats.col_tiles,
+            stats.blocks_computed,
+            stats.blocks_loaded,
+            stats.peak_bytes
+        );
+        if let Some(json_path) = args.opt("--stats-json") {
+            let json = format!(
+                "{{\n  \"input\": \"{input}\",\n  \"rows\": {},\n  \"cols\": {},\n  \
+                 \"nnz\": {},\n  \"out_nnz\": {},\n  \"tile\": \"{shape}\",\n  \
+                 \"row_groups\": {},\n  \"col_tiles\": {},\n  \"blocks_computed\": {},\n  \
+                 \"blocks_loaded\": {},\n  \"peak_bytes\": {},\n  \"wall_ms\": {wall_ms},\n  \
+                 \"tiles_per_sec\": {tiles_per_sec:.2}\n}}\n",
+                w.rows,
+                w.cols,
+                w.nnz_a,
+                w.out_nnz,
+                stats.row_groups,
+                stats.col_tiles,
+                stats.blocks_computed,
+                stats.blocks_loaded,
+                stats.peak_bytes,
+            );
+            std::fs::write(json_path, json).map_err(|e| format!("cannot write {json_path}: {e}"))?;
+            eprintln!("bench: wrote {json_path}");
+        }
+        return Ok(());
+    }
+
+    // Balance report: per-row-group nnz summary (satellite of the tiled
+    // profiler — the skew a tiled run will see, before running it).
+    if args.flag("--report") {
+        let md = !csv;
+        if is_container {
+            let file = sparse_io::RowGroupFile::open(path)?;
+            let header =
+                ["Group", "Rows", "nnz", "Mean/row", "CV", "Max row", "Max share", "Heavy share"];
+            let mut rows = Vec::with_capacity(file.group_count());
+            for g in 0..file.group_count() {
+                let slice = file.load_group(g)?;
+                let s = stats::row_nnz_summary(&slice.matrix);
+                rows.push(vec![
+                    format!("{g} [{}, {})", slice.row_lo, slice.row_hi),
+                    s.rows.to_string(),
+                    s.nnz.to_string(),
+                    format!("{:.2}", s.mean),
+                    format!("{:.2}", s.cv),
+                    s.max.to_string(),
+                    format!("{:.3}", s.max_share),
+                    format!("{:.3}", s.heavy_share),
+                ]);
+            }
+            println!(
+                "tiling {input}: {}x{} in {} row groups",
+                file.rows(),
+                file.cols(),
+                file.group_count()
+            );
+            let table = if md {
+                report::markdown_table(&header, &rows)
+            } else {
+                report::csv(&header, &rows)
+            };
+            print!("{table}");
+        } else {
+            let a = sparse_io::read_matrix_market(path)?;
+            print!("{}", report::tiling_report(&input, &a, parse_tile(args)?, md));
+        }
+        return Ok(());
+    }
+
+    Err("ingest needs one of --gen/--out/--profile-out/--report (see --help)".into())
+}
+
 #[cfg(feature = "runtime")]
 fn validate(args: &Args) -> CliResult {
     let dir = args
@@ -953,6 +1238,7 @@ fn main() -> CliResult {
         "work" => work_cmd(&args)?,
         "chaos" => chaos_cmd(&args, csv)?,
         "vet" => vet_cmd(&args)?,
+        "ingest" => ingest_cmd(&args, csv)?,
         "crossval" => {
             let scale = args.parse_or("--scale", 16usize)?;
             let seed = args.parse_or("--seed", 7u64)?;
@@ -992,9 +1278,9 @@ fn main() -> CliResult {
 
 /// Every dispatchable command name, kept in sync with the `main` match (a
 /// unit test walks USAGE against this list).
-const COMMANDS: [&str; 17] = [
+const COMMANDS: [&str; 18] = [
     "datasets", "fig3", "fig8", "fig9", "simulate", "sweep", "explore", "estval", "merge", "serve",
-    "work", "chaos", "vet", "crossval", "cache", "config", "validate",
+    "work", "chaos", "vet", "ingest", "crossval", "cache", "config", "validate",
 ];
 
 /// The closest known command within a small edit distance — the

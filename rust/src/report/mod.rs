@@ -98,6 +98,7 @@ pub fn cache_stats_report(stats: &CacheStats, markdown: bool) -> String {
         vec!["workload artifacts (current codec)".into(), stats.workloads.to_string()],
         vec!["matrix artifacts (current codec)".into(), stats.matrices.to_string()],
         vec!["eval journals (current codec)".into(), stats.evals.to_string()],
+        vec!["tile partials (current codec)".into(), stats.tiles.to_string()],
         vec!["stale / foreign files".into(), stats.stale.to_string()],
         vec!["total bytes".into(), stats.bytes.to_string()],
     ];
@@ -106,6 +107,36 @@ pub fn cache_stats_report(stats: &CacheStats, markdown: bool) -> String {
     } else {
         csv(&header, &rows)
     }
+}
+
+/// Per-row-group nnz balance under a tile shape: one row per row group,
+/// built from [`crate::sparse::tile::row_group_summaries`]. Surfaces the
+/// load-skew a tiled out-of-core profile will see before running it.
+pub fn tiling_report(
+    name: &str,
+    a: &crate::sparse::Csr,
+    shape: crate::sparse::TileShape,
+    markdown: bool,
+) -> String {
+    let header = ["Group", "Rows", "nnz", "Mean/row", "CV", "Max row", "Max share", "Heavy share"];
+    let rows: Vec<Vec<String>> = crate::sparse::tile::row_group_summaries(a, shape)
+        .iter()
+        .map(|t| {
+            vec![
+                format!("{} [{}, {})", t.index, t.row_lo, t.row_hi),
+                t.summary.rows.to_string(),
+                t.summary.nnz.to_string(),
+                format!("{:.2}", t.summary.mean),
+                format!("{:.2}", t.summary.cv),
+                t.summary.max.to_string(),
+                format!("{:.3}", t.summary.max_share),
+                format!("{:.3}", t.summary.heavy_share),
+            ]
+        })
+        .collect();
+    let mut s = format!("tiling {name}: {}x{} at tile {shape}\n", a.rows(), a.cols());
+    s.push_str(&if markdown { markdown_table(&header, &rows) } else { csv(&header, &rows) });
+    s
 }
 
 /// One dataset's row in the Fig. 9 comparison.
@@ -733,15 +764,35 @@ mod tests {
             workloads: 14,
             matrices: 2,
             evals: 3,
+            tiles: 5,
             stale: 1,
             bytes: 4096,
         };
         let md = cache_stats_report(&stats, true);
-        for needle in ["/tmp/maple-cache", "workload artifacts", "eval journals", "14", "4096"] {
+        for needle in
+            ["/tmp/maple-cache", "workload artifacts", "eval journals", "tile partials", "14", "4096"]
+        {
             assert!(md.contains(needle), "missing {needle} in:\n{md}");
         }
         let c = cache_stats_report(&stats, false);
-        assert!(c.lines().count() == 7 && c.starts_with("Metric,Value"));
+        assert!(c.lines().count() == 8 && c.starts_with("Metric,Value"));
+    }
+
+    #[test]
+    fn tiling_report_covers_every_row_group() {
+        use crate::sparse::gen::{generate, Profile};
+        use crate::sparse::TileShape;
+        let a = generate(64, 64, 800, Profile::PowerLaw { alpha: 0.8 }, 7);
+        let shape = TileShape::new(16, 32);
+        let md = tiling_report("pl", &a, shape, true);
+        assert!(md.starts_with("tiling pl: 64x64 at tile 16x32"), "{md}");
+        for g in 0..4 {
+            assert!(md.contains(&format!("{} [{}, {})", g, g * 16, (g + 1) * 16)), "{md}");
+        }
+        let c = tiling_report("pl", &a, shape, false);
+        // Title line + header + one row per group.
+        assert_eq!(c.lines().count(), 6, "{c}");
+        assert!(c.lines().nth(1).unwrap().starts_with("Group,Rows,nnz"), "{c}");
     }
 
     #[test]

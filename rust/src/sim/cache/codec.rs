@@ -1,11 +1,15 @@
 //! Versioned, checksummed binary codec for cache artifacts.
 //!
-//! Four artifact kinds share one envelope: a CSR matrix, a profiled
+//! Five artifact kinds share one envelope: a CSR matrix, a profiled
 //! [`Workload`], a sweep shard ([`crate::sim::shard::SweepShard`] — one
-//! contiguous cell range of a design-space grid plus its metadata), and an
+//! contiguous cell range of a design-space grid plus its metadata), an
 //! explore eval journal ([`crate::sim::explore::EvalJournal`] — memoized
-//! search fitness evaluations keyed by design-space fingerprint).
-//! Everything is hand-rolled on `std` like the rest of the
+//! search fitness evaluations keyed by design-space fingerprint), and a
+//! tiled-profile block partial ([`TilePartial`] — one row-group ×
+//! column-tile unit of the out-of-core profile pass). The row-group
+//! container (`.mrg`, [`crate::sparse::io`]) reuses the same envelope for
+//! its header and per-group blocks, which is why [`seal`]/[`open`] are
+//! crate-visible. Everything is hand-rolled on `std` like the rest of the
 //! crate (DESIGN.md §Dependencies) and byte-stable across platforms: all
 //! integers are little-endian, floats are stored as their IEEE-754 bit
 //! patterns, so an artifact decodes to *bit-identical* values everywhere.
@@ -14,7 +18,8 @@
 //!
 //! ```text
 //! offset  size  field
-//! 0       8     magic            (b"MAPLECSR" | b"MAPLEWL\0" | b"MAPLESHD" | b"MAPLEEVL")
+//! 0       8     magic            (b"MAPLECSR" | b"MAPLEWL\0" | b"MAPLESHD" | b"MAPLEEVL"
+//!                                 | b"MAPLETIL" | b"MAPLERGS")
 //! 8       4     codec version    (u32, == CODEC_VERSION)
 //! 12      8     payload length   (u64, byte count of the payload section)
 //! 20      8     FNV-1a-64        (u64, over the payload bytes)
@@ -44,7 +49,7 @@ use crate::sim::des::{DesPeStats, DesResult};
 use crate::sim::engine::{coords_for, intern_dim_name, AxisDim, CellModel, CellResult, WorkloadKey};
 use crate::sim::explore::{EvalJournal, EvalRecord, TIER_ESTIMATE};
 use crate::sim::shard::{ShardMeta, ShardSpec, SweepShard};
-use crate::sim::{SimResult, Workload};
+use crate::sim::{SimResult, TilePartial, Workload};
 use crate::sparse::Csr;
 use crate::trace::Counters;
 
@@ -53,13 +58,22 @@ use crate::trace::Counters;
 /// its `actions/cache` entry on this file's hash (plus the profile-pass
 /// and generator sources, whose changes alter artifact contents without a
 /// layout change) for the same reason.
-pub const CODEC_VERSION: u32 = 1;
+///
+/// v2: the profile pass drains its SPA in ascending column order (the
+/// canonical order the tiled merge replays), which changes every stored
+/// workload's checksum bits — a semantic change, so old artifacts must be
+/// evicted, not reinterpreted.
+pub const CODEC_VERSION: u32 = 2;
 
-const MAGIC_CSR: [u8; 8] = *b"MAPLECSR";
+pub(crate) const MAGIC_CSR: [u8; 8] = *b"MAPLECSR";
 const MAGIC_WORKLOAD: [u8; 8] = *b"MAPLEWL\0";
 const MAGIC_SHARD: [u8; 8] = *b"MAPLESHD";
 const MAGIC_EVALS: [u8; 8] = *b"MAPLEEVL";
-const HEADER_LEN: usize = 28;
+const MAGIC_TILE: [u8; 8] = *b"MAPLETIL";
+/// Row-group container header magic — the container's per-group blocks are
+/// ordinary [`MAGIC_CSR`] envelopes (see [`crate::sparse::io`]).
+pub(crate) const MAGIC_RGS: [u8; 8] = *b"MAPLERGS";
+pub(crate) const HEADER_LEN: usize = 28;
 
 /// Codec errors. Every variant means "do not trust this artifact".
 #[derive(Debug, thiserror::Error)]
@@ -98,8 +112,10 @@ pub(crate) fn put_u64(buf: &mut Vec<u8>, v: u64) {
     buf.extend_from_slice(&v.to_le_bytes());
 }
 
-/// Wrap a payload in the versioned, checksummed envelope.
-fn seal(magic: [u8; 8], payload: &[u8]) -> Vec<u8> {
+/// Wrap a payload in the versioned, checksummed envelope. Crate-visible:
+/// the row-group container ([`crate::sparse::io`]) seals its header and
+/// per-group blocks with the same envelope.
+pub(crate) fn seal(magic: [u8; 8], payload: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(HEADER_LEN + payload.len());
     out.extend_from_slice(&magic);
     put_u32(&mut out, CODEC_VERSION);
@@ -445,8 +461,30 @@ impl<'a> Reader<'a> {
     }
 }
 
+/// The payload length a sealed envelope's first [`HEADER_LEN`] bytes
+/// declare — what a streaming reader ([`crate::sparse::io`]'s container)
+/// needs to know how many more bytes to pull before [`open`] can validate
+/// the whole block. Magic and version are checked here too, so a foreign
+/// file fails before any large read is sized from its length field.
+pub(crate) fn sealed_payload_len(magic: [u8; 8], header: &[u8]) -> Result<usize, CodecError> {
+    if header.len() < HEADER_LEN {
+        return Err(CodecError::Truncated { needed: HEADER_LEN, have: header.len() });
+    }
+    if header[..8] != magic {
+        return Err(CodecError::BadMagic);
+    }
+    let version = u32::from_le_bytes(header[8..12].try_into().expect("4-byte slice"));
+    if version != CODEC_VERSION {
+        return Err(CodecError::VersionMismatch { found: version, expected: CODEC_VERSION });
+    }
+    let len = u64::from_le_bytes(header[12..20].try_into().expect("8-byte slice"));
+    usize::try_from(len)
+        .map_err(|_| CodecError::Inconsistent(format!("payload length {len} overflows usize")))
+}
+
 /// Validate the envelope and return a reader positioned at the payload.
-fn open(magic: [u8; 8], bytes: &[u8]) -> Result<Reader<'_>, CodecError> {
+/// Crate-visible: see [`seal`].
+pub(crate) fn open(magic: [u8; 8], bytes: &[u8]) -> Result<Reader<'_>, CodecError> {
     if bytes.len() < HEADER_LEN {
         return Err(CodecError::Truncated { needed: HEADER_LEN, have: bytes.len() });
     }
@@ -547,6 +585,69 @@ pub fn decode_workload(bytes: &[u8]) -> Result<Workload, CodecError> {
         )));
     }
     Ok(Workload { rows, cols, rows_b, nnz_a, nnz_b, out_nnz, total_products, profiles, checksum })
+}
+
+/// Encode one tiled-profile block partial. Payload sections, in order:
+/// `row_lo`, `row_hi`, `col_lo`, `col_hi` (u64 each), `out_vals` count
+/// (u64), then per row in `[row_lo, row_hi)` its `products` (u64) and
+/// `out_count` (u32), then the f32 bit patterns of `out_vals`. The row
+/// count is implied by the bounds; [`decode_tile_partial`] cross-checks
+/// that the out counts sum to the value count.
+pub fn encode_tile_partial(p: &TilePartial) -> Vec<u8> {
+    let rows = p.rows();
+    let mut buf = Vec::with_capacity(40 + rows * 12 + p.out_vals.len() * 4);
+    put_u64(&mut buf, p.row_lo as u64);
+    put_u64(&mut buf, p.row_hi as u64);
+    put_u64(&mut buf, p.col_lo as u64);
+    put_u64(&mut buf, p.col_hi as u64);
+    put_u64(&mut buf, p.out_vals.len() as u64);
+    for i in 0..rows {
+        put_u64(&mut buf, p.products[i]);
+        put_u32(&mut buf, p.out_counts[i]);
+    }
+    for &v in &p.out_vals {
+        put_u32(&mut buf, v.to_bits());
+    }
+    seal(MAGIC_TILE, &buf)
+}
+
+/// Decode a tiled-profile block partial, cross-checking the block bounds
+/// and the out-count / value-count agreement.
+pub fn decode_tile_partial(bytes: &[u8]) -> Result<TilePartial, CodecError> {
+    let mut r = open(MAGIC_TILE, bytes)?;
+    let row_lo = r.index()?;
+    let row_hi = r.index()?;
+    let col_lo = r.index()?;
+    let col_hi = r.index()?;
+    if row_hi < row_lo || col_hi < col_lo {
+        return Err(CodecError::Inconsistent(format!(
+            "inverted block bounds r{row_lo}..{row_hi} c{col_lo}..{col_hi}"
+        )));
+    }
+    let rows = row_hi - row_lo;
+    let n_vals = r.index()?;
+    r.expect_items(rows, 12)?;
+    let mut products = Vec::with_capacity(rows);
+    let mut out_counts = Vec::with_capacity(rows);
+    let mut sum_out = 0u64;
+    for _ in 0..rows {
+        products.push(r.u64()?);
+        let c = r.u32()?;
+        sum_out += c as u64;
+        out_counts.push(c);
+    }
+    if sum_out != n_vals as u64 {
+        return Err(CodecError::Inconsistent(format!(
+            "out counts sum to {sum_out} but {n_vals} values are stored"
+        )));
+    }
+    r.expect_items(n_vals, 4)?;
+    let mut out_vals = Vec::with_capacity(n_vals);
+    for _ in 0..n_vals {
+        out_vals.push(f32::from_bits(r.u32()?));
+    }
+    r.done()?;
+    Ok(TilePartial { row_lo, row_hi, col_lo, col_hi, products, out_counts, out_vals })
 }
 
 fn read_sim_result(r: &mut Reader<'_>) -> Result<SimResult, CodecError> {
@@ -771,6 +872,79 @@ mod tests {
         let d = decode_workload(&encode_workload(&w)).unwrap();
         assert_eq!(d, w);
         assert_eq!(d.checksum.to_bits(), w.checksum.to_bits());
+    }
+
+    fn sample_partial() -> TilePartial {
+        TilePartial {
+            row_lo: 4,
+            row_hi: 7,
+            col_lo: 8,
+            col_hi: 16,
+            products: vec![5, 0, 9],
+            out_counts: vec![2, 0, 3],
+            out_vals: vec![1.5, -2.25, 0.75, 3.0, -0.5],
+        }
+    }
+
+    #[test]
+    fn tile_partial_round_trips_bit_exact() {
+        let p = sample_partial();
+        let d = decode_tile_partial(&encode_tile_partial(&p)).unwrap();
+        assert_eq!(d, p);
+        // Canonical encoding: re-encode is byte-identical.
+        assert_eq!(encode_tile_partial(&d), encode_tile_partial(&p));
+        // An empty block (no rows, no values) is a valid artifact.
+        let empty = TilePartial {
+            row_lo: 0,
+            row_hi: 0,
+            col_lo: 0,
+            col_hi: 4,
+            products: vec![],
+            out_counts: vec![],
+            out_vals: vec![],
+        };
+        assert_eq!(decode_tile_partial(&encode_tile_partial(&empty)).unwrap(), empty);
+    }
+
+    #[test]
+    fn tile_partial_structural_lies_are_rejected() {
+        // Out counts that disagree with the stored value count.
+        let mut p = sample_partial();
+        p.out_counts[0] = 7;
+        assert!(matches!(
+            decode_tile_partial(&encode_tile_partial(&p)),
+            Err(CodecError::Inconsistent(_))
+        ));
+        // Wrong magic and truncations.
+        assert!(matches!(
+            decode_tile_partial(&encode_workload(&sample_workload())),
+            Err(CodecError::BadMagic)
+        ));
+        let bytes = encode_tile_partial(&sample_partial());
+        for cut in [0, 12, 28, bytes.len() - 1] {
+            assert!(decode_tile_partial(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn sealed_payload_len_validates_the_prefix() {
+        let bytes = encode_tile_partial(&sample_partial());
+        let len = sealed_payload_len(MAGIC_TILE, &bytes[..HEADER_LEN]).unwrap();
+        assert_eq!(HEADER_LEN + len, bytes.len());
+        assert!(matches!(
+            sealed_payload_len(MAGIC_CSR, &bytes[..HEADER_LEN]),
+            Err(CodecError::BadMagic)
+        ));
+        assert!(matches!(
+            sealed_payload_len(MAGIC_TILE, &bytes[..10]),
+            Err(CodecError::Truncated { .. })
+        ));
+        let mut stale = bytes.clone();
+        stale[8..12].copy_from_slice(&(CODEC_VERSION - 1).to_le_bytes());
+        assert!(matches!(
+            sealed_payload_len(MAGIC_TILE, &stale[..HEADER_LEN]),
+            Err(CodecError::VersionMismatch { .. })
+        ));
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod codec;
 pub mod store;
 
 pub use codec::{
-    decode_csr, decode_shard, decode_workload, encode_csr, encode_shard, encode_workload,
-    CodecError, CODEC_VERSION,
+    decode_csr, decode_shard, decode_tile_partial, decode_workload, encode_csr, encode_shard,
+    encode_tile_partial, encode_workload, CodecError, CODEC_VERSION,
 };
 pub use store::{CacheStats, DiskCache, CACHE_DIR_ENV};

@@ -1,7 +1,8 @@
 //! The on-disk artifact store: [`WorkloadKey`] → cache file.
 //!
 //! A [`DiskCache`] owns one flat directory of codec-sealed artifacts
-//! (workloads `.mwl`, matrices `.mcsr`, explore eval journals `.mevl`).
+//! (workloads `.mwl`, matrices `.mcsr`, explore eval journals `.mevl`,
+//! tiled-profile partials `.mtp`).
 //! File names encode the full cache
 //! key — sanitized dataset name, seed, scale divisor, profile chunk count,
 //! an FNV-1a of the raw dataset name (collision-proofing the sanitization),
@@ -35,7 +36,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use super::codec::{self, CODEC_VERSION};
 use crate::sim::engine::WorkloadKey;
 use crate::sim::explore::EvalJournal;
-use crate::sim::Workload;
+use crate::sim::{TilePartial, Workload};
 use crate::sparse::Csr;
 
 /// Environment override for the cache directory (CLI and benches honour it).
@@ -44,6 +45,7 @@ pub const CACHE_DIR_ENV: &str = "MAPLE_CACHE_DIR";
 const WORKLOAD_EXT: &str = "mwl";
 const MATRIX_EXT: &str = "mcsr";
 const EVALS_EXT: &str = "mevl";
+const TILE_EXT: &str = "mtp";
 
 /// Distinguishes racing writers within one process; the pid handles racing
 /// processes.
@@ -84,6 +86,8 @@ pub struct CacheStats {
     pub matrices: usize,
     /// Explore eval-journal artifacts at the current codec version.
     pub evals: usize,
+    /// Tiled-profile partial-block artifacts at the current codec version.
+    pub tiles: usize,
     /// Old-version artifacts, orphaned temp files, foreign files.
     pub stale: usize,
     /// Total bytes across all files in the directory.
@@ -262,6 +266,80 @@ impl DiskCache {
         )
     }
 
+    /// The artifact file for one tiled-profile partial block. The block's
+    /// half-open row/column bounds — not the tile *shape* — name the
+    /// artifact, so two sweeps whose edge tiles clamp to the same bounds
+    /// share the identical partial. `key` names the workload (dataset +
+    /// parameterisation); the FNV component collision-proofs sanitization
+    /// exactly as for workloads.
+    pub fn tile_path(
+        &self,
+        key: &str,
+        row_lo: usize,
+        row_hi: usize,
+        col_lo: usize,
+        col_hi: usize,
+    ) -> PathBuf {
+        self.dir.join(format!(
+            "{}-{:016x}-r{row_lo}-{row_hi}-c{col_lo}-{col_hi}.v{}.{}",
+            sanitize(key),
+            codec::fnv1a(key.as_bytes()),
+            CODEC_VERSION,
+            TILE_EXT,
+        ))
+    }
+
+    /// Whether a partial for this block is already published. Used by the
+    /// out-of-core profiler to skip recomputing blocks on a warm resume
+    /// *without* paying the load (the merge phase loads them later).
+    pub fn has_tile_partial(
+        &self,
+        key: &str,
+        row_lo: usize,
+        row_hi: usize,
+        col_lo: usize,
+        col_hi: usize,
+    ) -> bool {
+        self.tile_path(key, row_lo, row_hi, col_lo, col_hi).is_file()
+    }
+
+    /// Load a cached tile partial (same miss/eviction contract as
+    /// workloads). A decoded partial whose embedded bounds disagree with the
+    /// requested block — a hand-renamed file — is evicted too.
+    pub fn load_tile_partial(
+        &self,
+        key: &str,
+        row_lo: usize,
+        row_hi: usize,
+        col_lo: usize,
+        col_hi: usize,
+    ) -> Option<TilePartial> {
+        let path = self.tile_path(key, row_lo, row_hi, col_lo, col_hi);
+        let bytes = fs::read(&path).ok()?;
+        match codec::decode_tile_partial(&bytes) {
+            Ok(p)
+                if p.row_lo == row_lo
+                    && p.row_hi == row_hi
+                    && p.col_lo == col_lo
+                    && p.col_hi == col_hi =>
+            {
+                Some(p)
+            }
+            _ => {
+                let _ = fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    /// Persist a tile partial under its own embedded bounds (atomic publish).
+    pub fn store_tile_partial(&self, key: &str, p: &TilePartial) -> io::Result<()> {
+        self.persist(
+            &self.tile_path(key, p.row_lo, p.row_hi, p.col_lo, p.col_hi),
+            &codec::encode_tile_partial(p),
+        )
+    }
+
     /// Atomic temp-file + rename publish (see [`atomic_publish`]).
     fn persist(&self, path: &Path, bytes: &[u8]) -> io::Result<()> {
         atomic_publish(path, bytes)
@@ -278,6 +356,7 @@ impl DiskCache {
         let workload_suffix = format!(".{WORKLOAD_EXT}");
         let matrix_suffix = format!(".{MATRIX_EXT}");
         let evals_suffix = format!(".{EVALS_EXT}");
+        let tile_suffix = format!(".{TILE_EXT}");
         for e in entries.flatten() {
             let path = e.path();
             if !path.is_file() {
@@ -294,6 +373,8 @@ impl DiskCache {
                 s.matrices += 1;
             } else if name.ends_with(&evals_suffix) && name.contains(&current) {
                 s.evals += 1;
+            } else if name.ends_with(&tile_suffix) && name.contains(&current) {
+                s.tiles += 1;
             } else {
                 s.stale += 1;
             }
@@ -342,6 +423,18 @@ mod tests {
         (WorkloadKey::suite("wv", 5, 8), profile_workload(&a, &a))
     }
 
+    fn sample_partial() -> TilePartial {
+        TilePartial {
+            row_lo: 0,
+            row_hi: 2,
+            col_lo: 4,
+            col_hi: 8,
+            products: vec![3, 1],
+            out_counts: vec![2, 1],
+            out_vals: vec![0.5, -1.25, 2.0],
+        }
+    }
+
     #[test]
     fn workload_store_load_round_trip() {
         let cache = tmp_cache("roundtrip");
@@ -388,13 +481,15 @@ mod tests {
         cache.store_workload(&key, 1, &w).unwrap();
         cache.store_matrix("m", &generate(10, 10, 20, Profile::Uniform, 1)).unwrap();
         cache.store_evals(&EvalJournal::empty(1, 0, 0, 0)).unwrap();
+        cache.store_tile_partial("wv", &sample_partial()).unwrap();
         fs::write(cache.dir().join("foreign.bin"), b"junk").unwrap();
         let s = cache.stats();
-        assert_eq!((s.workloads, s.matrices, s.evals, s.stale), (1, 1, 1, 1));
+        assert_eq!((s.workloads, s.matrices, s.evals, s.tiles, s.stale), (1, 1, 1, 1, 1));
         assert!(s.bytes > 0);
-        assert_eq!(cache.clear().unwrap(), 4);
+        assert_eq!(cache.clear().unwrap(), 5);
         let s = cache.stats();
-        assert_eq!((s.workloads, s.matrices, s.evals, s.stale, s.bytes), (0, 0, 0, 0, 0));
+        assert_eq!((s.workloads, s.matrices, s.evals, s.tiles, s.bytes), (0, 0, 0, 0, 0));
+        assert_eq!(s.stale, 0);
         let _ = fs::remove_dir_all(cache.dir());
     }
 
@@ -416,6 +511,35 @@ mod tests {
         fs::copy(cache.evals_path(0xABCD, 1, 128, 7), &wrong).unwrap();
         assert!(cache.load_evals(0xEEEE, 1, 128, 7).is_none());
         assert!(!wrong.exists(), "mismatched journal must be evicted");
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn tile_partial_round_trip_and_bounds_mismatch_evicts() {
+        let cache = tmp_cache("tile");
+        let p = sample_partial();
+        assert!(!cache.has_tile_partial("wv", 0, 2, 4, 8), "fresh dir must miss");
+        assert!(cache.load_tile_partial("wv", 0, 2, 4, 8).is_none());
+        cache.store_tile_partial("wv", &p).unwrap();
+        assert!(cache.has_tile_partial("wv", 0, 2, 4, 8));
+        assert_eq!(cache.load_tile_partial("wv", 0, 2, 4, 8).unwrap(), p);
+        // A different key or block is a different artifact.
+        assert!(cache.load_tile_partial("other", 0, 2, 4, 8).is_none());
+        assert!(cache.load_tile_partial("wv", 0, 2, 0, 4).is_none());
+        // A hand-renamed partial (embedded bounds disagree with the file
+        // name) must be evicted, not trusted.
+        let wrong = cache.tile_path("wv", 2, 4, 4, 8);
+        fs::copy(cache.tile_path("wv", 0, 2, 4, 8), &wrong).unwrap();
+        assert!(cache.load_tile_partial("wv", 2, 4, 4, 8).is_none());
+        assert!(!wrong.exists(), "mismatched partial must be evicted");
+        // Corruption is evicted, not trusted.
+        let path = cache.tile_path("wv", 0, 2, 4, 8);
+        let mut bytes = fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        assert!(cache.load_tile_partial("wv", 0, 2, 4, 8).is_none());
+        assert!(!path.exists(), "corrupt partial must be evicted");
         let _ = fs::remove_dir_all(cache.dir());
     }
 

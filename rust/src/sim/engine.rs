@@ -35,6 +35,7 @@ use std::time::Instant;
 use crate::config::axis::ConfigAxis;
 use crate::config::AcceleratorConfig;
 use crate::coordinator::Policy;
+use crate::mem::{Lane, Scratchpad};
 use crate::noc::Topology;
 use crate::sim::cache::DiskCache;
 use crate::sim::des::{agreement_band, simulate_des, DesResult};
@@ -174,6 +175,13 @@ impl Axis {
         Axis::Config(ConfigAxis::PeModel(points))
     }
 
+    /// Out-of-core tile-shape axis (`tile`). Results are tiling-invariant
+    /// by construction; expansion rejects shapes whose working set exceeds
+    /// the config's scratchpad ([`crate::sparse::tile::check_fits`]).
+    pub fn tiling(points: Vec<crate::sparse::TileShape>) -> Self {
+        Axis::Config(ConfigAxis::Tiling(points))
+    }
+
     /// The axis name used for grid dimensions, coordinates, and reports.
     pub fn name(&self) -> &'static str {
         match self {
@@ -237,8 +245,8 @@ pub struct AxisCoord {
 /// [`ConfigAxis`] kind must be added to this list before its grids can ride
 /// through shard artifacts.
 pub(crate) fn intern_dim_name(name: &str) -> Option<&'static str> {
-    const KNOWN: [&str; 7] =
-        ["dataset", "config", "policy", "noc", "macs", "prefetch", "pe-model"];
+    const KNOWN: [&str; 8] =
+        ["dataset", "config", "policy", "noc", "macs", "prefetch", "pe-model", "tile"];
     KNOWN.into_iter().find(|&k| k == name)
 }
 
@@ -392,6 +400,18 @@ impl DesignSpace {
                 }
                 for (a, &i) in config_axes.iter().zip(&point) {
                     a.apply(i, &mut cfg);
+                }
+                // Tiling feasibility is per expanded cell, not per axis:
+                // whether a tile's working set fits depends on the config's
+                // own scratchpad capacity, which other axes on this grid do
+                // not change but different base configs do.
+                if let Some(shape) = cfg.tiling {
+                    if cfg.l1_bytes > 0 {
+                        let spm = Scratchpad::new("l1", Lane::L1, cfg.l1_bytes);
+                        crate::sparse::tile::check_fits(shape, &spm).map_err(|msg| {
+                            EngineError::InvalidAxisPoint("tile", format!("{}: {msg}", cfg.name))
+                        })?;
+                    }
                 }
                 configs.push(cfg);
             }
@@ -1355,13 +1375,15 @@ mod tests {
             ConfigAxis::MacsPerPe(vec![2]),
             ConfigAxis::PrefetchDepth(vec![4]),
             ConfigAxis::PeModel(vec!["maple".into()]),
+            ConfigAxis::Tiling(vec![crate::sparse::TileShape::new(64, 64)]),
         ];
         for a in &axes {
             let name = match a {
                 ConfigAxis::Topology(_)
                 | ConfigAxis::MacsPerPe(_)
                 | ConfigAxis::PrefetchDepth(_)
-                | ConfigAxis::PeModel(_) => a.name(),
+                | ConfigAxis::PeModel(_)
+                | ConfigAxis::Tiling(_) => a.name(),
             };
             assert_eq!(intern_dim_name(name), Some(name), "axis {name} not internable");
         }

@@ -35,8 +35,9 @@ pub use explore::{
     TrajectoryPoint,
 };
 pub use profile::{
-    estimate_in_band, profile_workload, profile_workload_parallel, profile_workload_sampled,
-    StratumEstimate, Workload, WorkloadEstimate, ESTIMATE_BAND,
+    estimate_in_band, profile_container_tiled, profile_workload, profile_workload_parallel,
+    profile_workload_sampled, profile_workload_tiled, profile_workload_tiled_cached,
+    StratumEstimate, TilePartial, TiledStats, Workload, WorkloadEstimate, ESTIMATE_BAND,
 };
 pub use service::{
     run_chaos, ChaosReport, ChaosSpec, Coordinator, FaultPlan, LeasePolicy, ServiceConfig,

@@ -9,6 +9,9 @@
 //! profiling all fourteen Table-I workloads stays fast and memory-flat.
 
 use crate::pe::RowProfile;
+use crate::sim::cache::DiskCache;
+use crate::sparse::io::RowGroupFile;
+use crate::sparse::tile::{self, TileShape};
 use crate::sparse::{Csr, SplitMix64};
 
 /// Everything a simulation needs to know about one `C = A × B` workload.
@@ -183,13 +186,16 @@ fn profile_rows(a: &Csr, b: &Csr, lo: usize, hi: usize) -> (Vec<RowProfile>, u64
     (profiles, out_nnz, total_products, checksum)
 }
 
-/// The generation-tagged sparse accumulator, reusable across rows. Both the
-/// exact pass ([`profile_rows`]) and the sampled pass
-/// ([`profile_workload_sampled`]) run rows through this one implementation,
-/// so a sampled row's profile is bit-identical to the exact pass's — and
-/// the exact pass's checksum association order (touch order within a row,
-/// row order across rows) is preserved, which the disk cache's
-/// warm-equals-cold contract leans on.
+/// The generation-tagged sparse accumulator, reusable across rows. The
+/// exact pass ([`profile_rows`]), the sampled pass
+/// ([`profile_workload_sampled`]), and the tiled pass
+/// ([`profile_workload_tiled`]) all run rows through this one
+/// implementation, so a sampled or tiled row's profile is bit-identical to
+/// the exact pass's — and the exact pass's checksum association order
+/// (**ascending column order** within a row, row order across rows) is
+/// preserved, which both the disk cache's warm-equals-cold contract and
+/// the tiled merge's bit-identity proof lean on (see
+/// [`Spa::accumulate_row`] for why the drain is sorted).
 struct Spa {
     /// Interleaved (tag, acc) cells: one cache line per SPA touch instead
     /// of two (EXPERIMENTS.md §Perf iteration 2).
@@ -207,9 +213,19 @@ impl Spa {
         }
     }
 
-    /// Functionally execute output row `i` of `C = A × B`, adding the row's
-    /// value sum onto `checksum` in SPA touch order.
-    fn profile_row(&mut self, a: &Csr, b: &Csr, i: usize, checksum: &mut f64) -> RowProfile {
+    /// Accumulate output row `i` of `C = A × B` into the SPA cells, leaving
+    /// `touched` holding the row's distinct output columns **sorted
+    /// ascending**. Returns the row's scalar-product count.
+    ///
+    /// The sort canonicalises the drain order: every consumer folds the
+    /// row's values in ascending column order, independent of the SPA touch
+    /// sequence. That is what makes the tiled pass bit-identical to the
+    /// serial one — a column tile restricts this loop to a contiguous
+    /// column range without changing the `k` order or any per-cell f32
+    /// accumulation order, so per-cell values are bit-equal, and
+    /// concatenating the tiles' ascending drains in tile order replays the
+    /// serial pass's ascending drain exactly (`profile_workload_tiled`).
+    fn accumulate_row(&mut self, a: &Csr, b: &Csr, i: usize) -> u64 {
         self.generation = self.generation.wrapping_add(1);
         if self.generation == 0 {
             self.cells.fill((0, 0.0));
@@ -240,6 +256,14 @@ impl Spa {
                 }
             }
         }
+        self.touched.sort_unstable();
+        products
+    }
+
+    /// Functionally execute output row `i` of `C = A × B`, adding the row's
+    /// value sum onto `checksum` in ascending column order.
+    fn profile_row(&mut self, a: &Csr, b: &Csr, i: usize, checksum: &mut f64) -> RowProfile {
+        let products = self.accumulate_row(a, b, i);
         for &j in &self.touched {
             // SAFETY: every j in `touched` was bounds-validated (< cols)
             // when the lane loop pushed it, so the drain can skip the
@@ -252,6 +276,440 @@ impl Spa {
             out_nnz: self.touched.len() as u32,
         }
     }
+
+    /// Like [`Spa::profile_row`], but drains the row's accumulated values
+    /// into `out_vals` (ascending column order) instead of folding them —
+    /// the tiled pass's unit, which defers the checksum fold to the
+    /// canonical merge. Returns `(products, out_nnz)` for this row.
+    fn execute_row(&mut self, a: &Csr, b: &Csr, i: usize, out_vals: &mut Vec<f32>) -> (u64, u32) {
+        let products = self.accumulate_row(a, b, i);
+        for &j in &self.touched {
+            // SAFETY: see `profile_row` — `touched` holds validated ids.
+            out_vals.push(unsafe { self.cells.get_unchecked(j as usize) }.1);
+        }
+        (products, self.touched.len() as u32)
+    }
+}
+
+/// One (row-group × column-tile) block of the tiled profile pass:
+/// everything the canonical merge needs to reassemble the serial pass's
+/// [`Workload`] bit-for-bit. `PartialEq` compares every field bit-exactly
+/// (f32 values included) — the round-trip contract of the `.mtp` cache
+/// artifact ([`crate::sim::cache`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TilePartial {
+    /// Output-row range `[row_lo, row_hi)` of this block (global rows).
+    pub row_lo: usize,
+    pub row_hi: usize,
+    /// Output-column range `[col_lo, col_hi)` of this block.
+    pub col_lo: usize,
+    pub col_hi: usize,
+    /// Per row in the range: scalar products landing in this column tile.
+    /// Column tiles partition B's columns, so these sum across a row's
+    /// tiles to the untiled row product count exactly (u64 addition).
+    pub products: Vec<u64>,
+    /// Per row in the range: distinct output columns in this tile.
+    pub out_counts: Vec<u32>,
+    /// Accumulated output values, rows concatenated, ascending column
+    /// order within each row — bit-equal to the serial SPA's cell values
+    /// at drain time, so the merge can replay the serial checksum fold.
+    pub out_vals: Vec<f32>,
+}
+
+impl TilePartial {
+    /// Rows covered by this block.
+    pub fn rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+
+    /// Approximate resident bytes — the unit the out-of-core pass's memory
+    /// gauge tracks against the budget.
+    pub fn bytes(&self) -> u64 {
+        32 + 8 * self.products.len() as u64
+            + 4 * self.out_counts.len() as u64
+            + 4 * self.out_vals.len() as u64
+    }
+}
+
+/// Telemetry of one tiled profile run — what `BENCH_tiling.json` publishes.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TiledStats {
+    /// Row groups of A (ceil(rows / tile rows)).
+    pub row_groups: usize,
+    /// Column tiles of B (ceil(cols / tile cols)).
+    pub col_tiles: usize,
+    /// Blocks profiled from scratch this run.
+    pub blocks_computed: u64,
+    /// Blocks loaded warm from the disk cache (the resume path). Re-reads
+    /// of blocks produced earlier in the same run do not count.
+    pub blocks_loaded: u64,
+    /// Peak bytes of matrix slices + partials simultaneously resident in
+    /// the out-of-core pass (0 for the in-memory pass, which holds both
+    /// operands anyway). This is the quantity the `--mem-budget` contract
+    /// bounds; CI asserts it stays below the budget.
+    pub peak_bytes: u64,
+}
+
+/// Resident bytes of a CSR as held in RAM (usize row_ptr + u32 col ids +
+/// f32 values) — the gauge unit for the out-of-core budget model.
+fn resident_bytes(a: &Csr) -> u64 {
+    ((a.rows() + 1) * 8 + a.nnz() * 8) as u64
+}
+
+/// Running peak-memory gauge for the out-of-core pass. Deterministic —
+/// tracks exactly the bytes this module allocates for slices and partials,
+/// not process RSS (which adds code, allocator slack, and I/O buffers on
+/// top). This is the peak-RSS proxy `BENCH_tiling.json` publishes.
+#[derive(Default)]
+struct MemGauge {
+    resident: u64,
+    peak: u64,
+}
+
+impl MemGauge {
+    fn add(&mut self, bytes: u64) {
+        self.resident += bytes;
+        self.peak = self.peak.max(self.resident);
+    }
+
+    fn sub(&mut self, bytes: u64) {
+        self.resident = self.resident.saturating_sub(bytes);
+    }
+}
+
+/// Profile one block: `group` is the A row slice `[row_lo, row_hi)` with
+/// local row ids, `btile` the B column slice `[col_lo, col_lo+btile.cols())`
+/// with local column ids (all of B's rows, so A's `k` indices stay valid).
+fn profile_block(
+    group: &Csr,
+    row_lo: usize,
+    row_hi: usize,
+    btile: &Csr,
+    col_lo: usize,
+) -> TilePartial {
+    debug_assert_eq!(group.rows(), row_hi - row_lo);
+    let mut spa = Spa::new(btile.cols());
+    let rows = row_hi - row_lo;
+    let mut products = Vec::with_capacity(rows);
+    let mut out_counts = Vec::with_capacity(rows);
+    let mut out_vals = Vec::new();
+    for i in 0..rows {
+        let (p, o) = spa.execute_row(group, btile, i, &mut out_vals);
+        products.push(p);
+        out_counts.push(o);
+    }
+    TilePartial {
+        row_lo,
+        row_hi,
+        col_lo,
+        col_hi: col_lo + btile.cols(),
+        products,
+        out_counts,
+        out_vals,
+    }
+}
+
+/// Fold one row group's partials (ascending column-tile order) into the
+/// accumulating workload — the canonical merge. For each row, tile order ×
+/// within-tile ascending order is globally ascending column order, so the
+/// `checksum` fold here is the *same sequential f64 chain* the serial pass
+/// runs; products and out counts are exact integer sums.
+fn merge_group(
+    group: &Csr,
+    partials: &[TilePartial],
+    profiles: &mut Vec<RowProfile>,
+    out_nnz: &mut u64,
+    total_products: &mut u64,
+    checksum: &mut f64,
+) {
+    let rows = group.rows();
+    for p in partials {
+        assert_eq!(p.rows(), rows, "partial row span disagrees with the group");
+    }
+    let mut cursors = vec![0usize; partials.len()];
+    for i in 0..rows {
+        let mut row_products = 0u64;
+        let mut row_out = 0u64;
+        for (t, p) in partials.iter().enumerate() {
+            row_products += p.products[i];
+            let n = p.out_counts[i] as usize;
+            for &v in &p.out_vals[cursors[t]..cursors[t] + n] {
+                *checksum += v as f64;
+            }
+            cursors[t] += n;
+            row_out += n as u64;
+        }
+        profiles.push(RowProfile {
+            a_nnz: group.row_nnz(i) as u32,
+            products: row_products,
+            out_nnz: row_out as u32,
+        });
+        *out_nnz += row_out;
+        *total_products += row_products;
+    }
+}
+
+/// Tiled profile pass: stream A row-groups against B column-tiles and
+/// merge the per-block [`TilePartial`]s canonically. The result is
+/// **bit-identical** to [`profile_workload`] — checksum bits included —
+/// for every tile shape and every `threads` value (the bit-identity
+/// argument lives on [`Spa::accumulate_row`] and [`merge_group`]; the
+/// property tests in `tests/tiling.rs` pin it across shapes, generators,
+/// and thread counts).
+pub fn profile_workload_tiled(a: &Csr, b: &Csr, shape: TileShape, threads: usize) -> Workload {
+    profile_workload_tiled_cached(a, b, shape, threads, None).0
+}
+
+/// [`profile_workload_tiled`] with an optional disk-cache hookup: each
+/// block's [`TilePartial`] is loaded from `disk` under `key` when present
+/// and stored after a cold compute, so an interrupted tiled profile
+/// resumes warm — only the missing blocks are recomputed. `key` must
+/// identify the operand matrices (the store does not hash them); block
+/// bounds are part of the artifact name *and* embedded in the payload, so
+/// a stale or foreign partial is rejected and recomputed, never merged.
+pub fn profile_workload_tiled_cached(
+    a: &Csr,
+    b: &Csr,
+    shape: TileShape,
+    threads: usize,
+    cache: Option<(&DiskCache, &str)>,
+) -> (Workload, TiledStats) {
+    assert_eq!(a.cols(), b.rows(), "dimension mismatch");
+    let shape = TileShape::new(shape.rows, shape.cols);
+    let row_cuts = tile::cuts(a.rows(), shape.rows);
+    let col_cuts = tile::cuts(b.cols(), shape.cols);
+    let btiles: Vec<Csr> =
+        col_cuts.windows(2).map(|w| tile::extract_cols(b, w[0], w[1])).collect();
+    let n_tiles = btiles.len();
+    let mut stats = TiledStats {
+        row_groups: row_cuts.len() - 1,
+        col_tiles: n_tiles,
+        ..TiledStats::default()
+    };
+
+    let mut profiles = Vec::with_capacity(a.rows());
+    let (mut out_nnz, mut total_products, mut checksum) = (0u64, 0u64, 0f64);
+    for gw in row_cuts.windows(2) {
+        let (row_lo, row_hi) = (gw[0], gw[1]);
+        let group = tile::extract_rows(a, row_lo, row_hi);
+
+        // Warm blocks first: anything the cache already holds is a load.
+        let mut partials: Vec<Option<TilePartial>> = (0..n_tiles).map(|_| None).collect();
+        if let Some((disk, key)) = cache {
+            for (t, slot) in partials.iter_mut().enumerate() {
+                *slot = disk.load_tile_partial(key, row_lo, row_hi, col_cuts[t], col_cuts[t + 1]);
+            }
+        }
+        let missing: Vec<usize> =
+            (0..n_tiles).filter(|&t| partials[t].is_none()).collect();
+        stats.blocks_loaded += (n_tiles - missing.len()) as u64;
+        stats.blocks_computed += missing.len() as u64;
+
+        // Cold blocks fan out over `threads` scoped workers (round-robin
+        // over the missing tile indices — deterministic partition, and the
+        // blocks themselves are order-independent pure functions).
+        let computed: Vec<(usize, TilePartial)> = if threads <= 1 || missing.len() <= 1 {
+            missing
+                .iter()
+                .map(|&t| (t, profile_block(&group, row_lo, row_hi, &btiles[t], col_cuts[t])))
+                .collect()
+        } else {
+            let workers = threads.min(missing.len());
+            let (group_ref, missing_ref, btiles_ref, cuts_ref) =
+                (&group, &missing, &btiles, &col_cuts);
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|w| {
+                        scope.spawn(move || {
+                            let mut done = Vec::new();
+                            let mut at = w;
+                            while at < missing_ref.len() {
+                                let t = missing_ref[at];
+                                done.push((
+                                    t,
+                                    profile_block(
+                                        group_ref,
+                                        row_lo,
+                                        row_hi,
+                                        &btiles_ref[t],
+                                        cuts_ref[t],
+                                    ),
+                                ));
+                                at += workers;
+                            }
+                            done
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("tile worker panicked"))
+                    .collect()
+            })
+        };
+        for (t, p) in computed {
+            if let Some((disk, key)) = cache {
+                // Best-effort: a full disk must not fail the profile.
+                let _ = disk.store_tile_partial(key, &p);
+            }
+            partials[t] = Some(p);
+        }
+        let partials: Vec<TilePartial> =
+            partials.into_iter().map(|p| p.expect("every tile resolved")).collect();
+        merge_group(&group, &partials, &mut profiles, &mut out_nnz, &mut total_products, &mut checksum);
+    }
+
+    let w = Workload {
+        rows: a.rows(),
+        cols: b.cols(),
+        rows_b: b.rows(),
+        nnz_a: a.nnz() as u64,
+        nnz_b: b.nnz() as u64,
+        out_nnz,
+        total_products,
+        profiles,
+        checksum,
+    };
+    (w, stats)
+}
+
+/// Out-of-core tiled profile of `C = A × A` over a row-group container
+/// ([`RowGroupFile`]) — the whole matrix is never resident. Two phases:
+///
+/// 1. **Produce** (tile-major): for each column tile, assemble the B tile
+///    by streaming the container's groups, then profile every row group
+///    against it, publishing each block's [`TilePartial`] to `disk` under
+///    `key`. Blocks already present — from an interrupted run — are
+///    skipped, which is the warm-resume contract.
+/// 2. **Merge** (group-major): load each group's partials back in
+///    canonical tile order and fold them exactly as
+///    [`profile_workload_tiled`] does, so the result is bit-identical to
+///    [`profile_workload`] on the fully-resident matrix.
+///
+/// Peak residency is one column tile + one row group + one partial in
+/// phase 1, and one row group + its tile row of partials in phase 2 —
+/// reported in [`TiledStats::peak_bytes`] so callers can assert their
+/// `--mem-budget`. The disk cache is load-bearing here (partials bridge
+/// the phases), so a failed store is an error, not best-effort.
+pub fn profile_container_tiled(
+    file: &RowGroupFile,
+    shape: TileShape,
+    disk: &DiskCache,
+    key: &str,
+) -> std::io::Result<(Workload, TiledStats)> {
+    let (rows, cols) = (file.rows(), file.cols());
+    if rows != cols {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("container profiling computes C = A x A; matrix is {rows}x{cols}"),
+        ));
+    }
+    let shape = TileShape::new(shape.rows, shape.cols);
+    let col_cuts = tile::cuts(cols, shape.cols);
+    let n_tiles = col_cuts.len() - 1;
+    let n_groups = file.group_count();
+    let mut stats = TiledStats {
+        row_groups: n_groups,
+        col_tiles: n_tiles,
+        ..TiledStats::default()
+    };
+    let mut gauge = MemGauge::default();
+    // Blocks produced by THIS run: their phase-2 re-reads are not warm
+    // hits, so they must not count toward `blocks_loaded`.
+    let mut fresh = vec![false; n_groups * n_tiles];
+
+    // Phase 1 — produce. Tile-major so each B column tile is assembled
+    // once, not once per group.
+    for t in 0..n_tiles {
+        let (c0, c1) = (col_cuts[t], col_cuts[t + 1]);
+        let missing: Vec<usize> = (0..n_groups)
+            .filter(|&g| {
+                let (lo, hi) = file.group_rows(g);
+                !disk.has_tile_partial(key, lo, hi, c0, c1)
+            })
+            .collect();
+        if missing.is_empty() {
+            continue;
+        }
+        let btile = file.load_col_tile(c0, c1)?;
+        gauge.add(resident_bytes(&btile));
+        for &g in &missing {
+            let slice = file.load_group(g)?;
+            gauge.add(resident_bytes(&slice.matrix));
+            let p = profile_block(&slice.matrix, slice.row_lo, slice.row_hi, &btile, c0);
+            gauge.add(p.bytes());
+            disk.store_tile_partial(key, &p).map_err(|e| {
+                std::io::Error::new(
+                    e.kind(),
+                    format!("out-of-core profiling needs a writable partial cache: {e}"),
+                )
+            })?;
+            stats.blocks_computed += 1;
+            fresh[g * n_tiles + t] = true;
+            gauge.sub(p.bytes());
+            gauge.sub(resident_bytes(&slice.matrix));
+        }
+        gauge.sub(resident_bytes(&btile));
+    }
+
+    // Phase 2 — canonical group-major merge.
+    let mut profiles = Vec::with_capacity(rows);
+    let (mut out_nnz, mut total_products, mut checksum) = (0u64, 0u64, 0f64);
+    for g in 0..n_groups {
+        let slice = file.load_group(g)?;
+        gauge.add(resident_bytes(&slice.matrix));
+        let mut partials = Vec::with_capacity(n_tiles);
+        for t in 0..n_tiles {
+            let (c0, c1) = (col_cuts[t], col_cuts[t + 1]);
+            let p = match disk.load_tile_partial(key, slice.row_lo, slice.row_hi, c0, c1) {
+                Some(p) => {
+                    if !fresh[g * n_tiles + t] {
+                        stats.blocks_loaded += 1;
+                    }
+                    p
+                }
+                None => {
+                    // Evicted between phases (corruption, concurrent
+                    // `cache clear`): recompute the block from the
+                    // container rather than failing the whole run.
+                    let btile = file.load_col_tile(c0, c1)?;
+                    let p = profile_block(&slice.matrix, slice.row_lo, slice.row_hi, &btile, c0);
+                    let _ = disk.store_tile_partial(key, &p);
+                    stats.blocks_computed += 1;
+                    p
+                }
+            };
+            gauge.add(p.bytes());
+            partials.push(p);
+        }
+        merge_group(
+            &slice.matrix,
+            &partials,
+            &mut profiles,
+            &mut out_nnz,
+            &mut total_products,
+            &mut checksum,
+        );
+        for p in &partials {
+            gauge.sub(p.bytes());
+        }
+        gauge.sub(resident_bytes(&slice.matrix));
+    }
+    stats.peak_bytes = gauge.peak;
+
+    let nnz = file.nnz() as u64;
+    let w = Workload {
+        rows,
+        cols,
+        rows_b: rows,
+        nnz_a: nnz,
+        nnz_b: nnz,
+        out_nnz,
+        total_products,
+        profiles,
+        checksum,
+    };
+    Ok((w, stats))
 }
 
 /// Relative agreement band for estimated quantities (out_nnz, cycles,
@@ -668,5 +1126,50 @@ mod tests {
         assert_eq!(w.total_products, 0);
         assert_eq!(w.checksum, 0.0);
         assert_eq!(w.profiles.len(), 5);
+    }
+
+    #[test]
+    fn tiled_profile_is_bit_identical_to_serial() {
+        let a = generate(120, 120, 1400, Profile::PowerLaw { alpha: 0.8 }, 21);
+        let serial = profile_workload(&a, &a);
+        for shape in [
+            TileShape::new(32, 32),
+            TileShape::new(1, 120),
+            TileShape::new(120, 1),
+            TileShape::new(7, 13),
+            TileShape::new(4096, 4096), // tile larger than the matrix
+        ] {
+            for threads in [1, 4] {
+                let tiled = profile_workload_tiled(&a, &a, shape, threads);
+                // Full bit-identity, f64 checksum bits included — stronger
+                // than the parallel pass's tolerance comparison.
+                assert_eq!(tiled, serial, "shape {shape} threads {threads}");
+                assert_eq!(tiled.checksum.to_bits(), serial.checksum.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_profile_handles_rectangular_and_empty_inputs() {
+        let a = generate(30, 50, 220, Profile::Uniform, 5);
+        let b = generate(50, 20, 160, Profile::Uniform, 9);
+        let serial = profile_workload(&a, &b);
+        assert_eq!(profile_workload_tiled(&a, &b, TileShape::new(8, 6), 2), serial);
+        let z = crate::sparse::Csr::zero(4, 4);
+        assert_eq!(
+            profile_workload_tiled(&z, &z, TileShape::new(2, 2), 1),
+            profile_workload(&z, &z)
+        );
+    }
+
+    #[test]
+    fn tiled_stats_count_the_grid() {
+        let a = generate(40, 40, 300, Profile::Uniform, 2);
+        let (w, stats) =
+            profile_workload_tiled_cached(&a, &a, TileShape::new(16, 10), 1, None);
+        assert_eq!(w, profile_workload(&a, &a));
+        assert_eq!((stats.row_groups, stats.col_tiles), (3, 4));
+        assert_eq!(stats.blocks_computed, 12);
+        assert_eq!(stats.blocks_loaded, 0);
     }
 }

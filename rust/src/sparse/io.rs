@@ -1,15 +1,30 @@
-//! Matrix-Market I/O.
+//! Matrix-Market I/O and the out-of-core row-group container.
 //!
 //! The evaluation runs on synthetic Table-I workloads by default (no network
 //! in this environment), but any real SuiteSparse `.mtx` file dropped next to
 //! the binary loads through [`read_matrix_market`] and runs through the same
 //! pipeline.
+//!
+//! For matrices that do not fit in RAM, [`stream_matrix_market`] reads the
+//! same `.mtx` format in two streaming passes under an explicit memory
+//! budget, yielding bounded row-group [`CsrSlice`]s, and [`RowGroupFile`]
+//! persists those groups in a random-access binary container (`.mrg`) built
+//! from the cache codec's sealed envelopes
+//! ([`crate::sim::cache::codec`]): a `MAPLERGS` header (dimensions + group
+//! directory) followed by one ordinary `MAPLECSR` block per group, every
+//! piece versioned and FNV-checksummed. The tiled profiler
+//! ([`crate::sim::profile_container_tiled`]) streams groups and column
+//! tiles out of the container so the whole matrix is never resident.
 
+use super::tile;
 use super::{Coo, Csr};
-use std::io::{BufRead, BufReader, Write};
-use std::path::Path;
+use crate::sim::cache::codec;
+use std::fs;
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Error type for Matrix-Market parsing.
+/// Error type for Matrix-Market parsing and container I/O.
 #[derive(Debug, thiserror::Error)]
 pub enum MmError {
     #[error("io error: {0}")]
@@ -20,6 +35,174 @@ pub enum MmError {
     Unsupported(String),
     #[error("parse error at line {line}: {msg}")]
     Parse { line: usize, msg: String },
+    #[error("memory budget: {0}")]
+    Budget(String),
+    #[error("row-group container: {0}")]
+    Container(String),
+}
+
+/// MatrixMarket value field (`integer` is folded into `Real`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Field {
+    Real,
+    Pattern,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Symmetry {
+    General,
+    Symmetric,
+}
+
+/// Parsed banner + size line of a coordinate MatrixMarket file.
+#[derive(Debug, Clone, Copy)]
+struct MmHead {
+    field: Field,
+    symmetry: Symmetry,
+    rows: usize,
+    cols: usize,
+    /// Entry count the size line declares (file entries, before symmetric
+    /// mirroring).
+    nnz_decl: usize,
+    /// Line number of the size line (for the count-mismatch error).
+    size_line: usize,
+}
+
+/// Parse the banner and size line, leaving the reader at the first entry.
+fn read_head<R: BufRead>(
+    r: &mut R,
+    buf: &mut String,
+    line_no: &mut usize,
+) -> Result<MmHead, MmError> {
+    buf.clear();
+    if r.read_line(buf)? == 0 {
+        return Err(MmError::MissingHeader);
+    }
+    *line_no += 1;
+    let header = buf.trim_end();
+    if !header.starts_with("%%MatrixMarket") {
+        return Err(MmError::MissingHeader);
+    }
+    let mut toks = header.split_ascii_whitespace().skip(1);
+    let object = toks.next().map(str::to_ascii_lowercase);
+    let format = toks.next().map(str::to_ascii_lowercase);
+    let field_tok = toks.next().map(str::to_ascii_lowercase);
+    let sym_tok = toks.next().map(str::to_ascii_lowercase);
+    if object.as_deref() != Some("matrix") || format.as_deref() != Some("coordinate") {
+        return Err(MmError::Unsupported(header.to_string()));
+    }
+    let field = match field_tok.as_deref() {
+        Some("real") | Some("integer") => Field::Real,
+        Some("pattern") => Field::Pattern,
+        Some(f) => return Err(MmError::Unsupported(format!("field {f}"))),
+        None => return Err(MmError::Unsupported(header.to_string())),
+    };
+    let symmetry = match sym_tok.as_deref() {
+        Some("general") => Symmetry::General,
+        Some("symmetric") => Symmetry::Symmetric,
+        Some(s) => return Err(MmError::Unsupported(format!("symmetry {s}"))),
+        None => return Err(MmError::Unsupported(header.to_string())),
+    };
+
+    // Skip comments, read the size line.
+    loop {
+        buf.clear();
+        if r.read_line(buf)? == 0 {
+            return Err(MmError::Parse { line: *line_no, msg: "missing size line".into() });
+        }
+        *line_no += 1;
+        let t = buf.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_ascii_whitespace();
+        let (a, b, c) = (it.next(), it.next(), it.next());
+        let (Some(a), Some(b), Some(c)) = (a, b, c) else {
+            return Err(MmError::Parse { line: *line_no, msg: format!("bad size line: {t}") });
+        };
+        if it.next().is_some() {
+            return Err(MmError::Parse { line: *line_no, msg: format!("bad size line: {t}") });
+        }
+        let p = |s: &str| -> Result<usize, MmError> {
+            s.parse()
+                .map_err(|_| MmError::Parse { line: *line_no, msg: format!("bad int {s}") })
+        };
+        return Ok(MmHead {
+            field,
+            symmetry,
+            rows: p(a)?,
+            cols: p(b)?,
+            nnz_decl: p(c)?,
+            size_line: *line_no,
+        });
+    }
+}
+
+/// Drive `f` over every (0-indexed) entry of the body, mirroring symmetric
+/// off-diagonal entries, validating bounds and the declared entry count.
+/// The hot loop is allocation-free: one reused line buffer, tokens split in
+/// place — no per-line `Vec` — which is what makes the two-pass streaming
+/// ingest's parse cost acceptable at out-of-core scale.
+fn for_each_entry<R: BufRead>(
+    r: &mut R,
+    head: &MmHead,
+    buf: &mut String,
+    line_no: &mut usize,
+    f: &mut dyn FnMut(u32, u32, f32) -> Result<(), MmError>,
+) -> Result<(), MmError> {
+    let mut seen = 0usize;
+    loop {
+        buf.clear();
+        if r.read_line(buf)? == 0 {
+            break;
+        }
+        *line_no += 1;
+        let t = buf.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_ascii_whitespace();
+        let (Some(rs), Some(cs)) = (it.next(), it.next()) else {
+            return Err(MmError::Parse { line: *line_no, msg: format!("bad entry: {t}") });
+        };
+        let row: usize = rs
+            .parse()
+            .map_err(|_| MmError::Parse { line: *line_no, msg: format!("bad row {rs}") })?;
+        let col: usize = cs
+            .parse()
+            .map_err(|_| MmError::Parse { line: *line_no, msg: format!("bad col {cs}") })?;
+        if row == 0 || col == 0 || row > head.rows || col > head.cols {
+            return Err(MmError::Parse {
+                line: *line_no,
+                msg: format!("coordinate ({row},{col}) out of bounds"),
+            });
+        }
+        let v: f32 = match head.field {
+            Field::Pattern => 1.0,
+            Field::Real => {
+                let vs = it.next().ok_or_else(|| MmError::Parse {
+                    line: *line_no,
+                    msg: format!("bad entry: {t}"),
+                })?;
+                vs.parse().map_err(|_| MmError::Parse {
+                    line: *line_no,
+                    msg: format!("bad value {vs}"),
+                })?
+            }
+        };
+        f((row - 1) as u32, (col - 1) as u32, v)?;
+        if head.symmetry == Symmetry::Symmetric && row != col {
+            f((col - 1) as u32, (row - 1) as u32, v)?;
+        }
+        seen += 1;
+    }
+    if seen != head.nnz_decl {
+        return Err(MmError::Parse {
+            line: head.size_line,
+            msg: format!("declared {} entries, found {seen}", head.nnz_decl),
+        });
+    }
+    Ok(())
 }
 
 /// Read a MatrixMarket `coordinate` file into CSR.
@@ -33,114 +216,567 @@ pub fn read_matrix_market(path: &Path) -> Result<Csr, MmError> {
 }
 
 /// Parse MatrixMarket from any buffered reader (unit-testable without files).
-pub fn read_matrix_market_from<R: BufRead>(r: R) -> Result<Csr, MmError> {
-    let mut lines = r.lines().enumerate();
-
-    // Header: %%MatrixMarket matrix coordinate <field> <symmetry>
-    let (_, header) = lines.next().ok_or(MmError::MissingHeader)?;
-    let header = header?;
-    if !header.starts_with("%%MatrixMarket") {
-        return Err(MmError::MissingHeader);
-    }
-    let toks: Vec<String> = header.split_whitespace().map(|t| t.to_ascii_lowercase()).collect();
-    if toks.len() < 5 || toks[1] != "matrix" || toks[2] != "coordinate" {
-        return Err(MmError::Unsupported(header));
-    }
-    let field = toks[3].clone();
-    let symmetry = toks[4].clone();
-    if !matches!(field.as_str(), "real" | "integer" | "pattern") {
-        return Err(MmError::Unsupported(format!("field {field}")));
-    }
-    if !matches!(symmetry.as_str(), "general" | "symmetric") {
-        return Err(MmError::Unsupported(format!("symmetry {symmetry}")));
-    }
-
-    // Skip comments, read size line.
-    let (rows, cols, nnz_decl, size_line_no) = loop {
-        let (no, line) = lines
-            .next()
-            .ok_or(MmError::Parse { line: 0, msg: "missing size line".into() })?;
-        let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('%') {
-            continue;
-        }
-        let parts: Vec<&str> = t.split_whitespace().collect();
-        if parts.len() != 3 {
-            return Err(MmError::Parse { line: no + 1, msg: format!("bad size line: {t}") });
-        }
-        let p = |s: &str| -> Result<usize, MmError> {
-            s.parse().map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad int {s}") })
-        };
-        break (p(parts[0])?, p(parts[1])?, p(parts[2])?, no + 1);
-    };
-
-    let mut coo = Coo::zero(rows, cols);
-    let mut seen = 0usize;
-    for (no, line) in lines {
-        let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('%') {
-            continue;
-        }
-        let parts: Vec<&str> = t.split_whitespace().collect();
-        let need = if field == "pattern" { 2 } else { 3 };
-        if parts.len() < need {
-            return Err(MmError::Parse { line: no + 1, msg: format!("bad entry: {t}") });
-        }
-        let r: usize = parts[0]
-            .parse()
-            .map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad row {}", parts[0]) })?;
-        let c: usize = parts[1]
-            .parse()
-            .map_err(|_| MmError::Parse { line: no + 1, msg: format!("bad col {}", parts[1]) })?;
-        if r == 0 || c == 0 || r > rows || c > cols {
-            return Err(MmError::Parse {
-                line: no + 1,
-                msg: format!("coordinate ({r},{c}) out of bounds"),
-            });
-        }
-        let v: f32 = if field == "pattern" {
-            1.0
-        } else {
-            parts[2].parse().map_err(|_| MmError::Parse {
-                line: no + 1,
-                msg: format!("bad value {}", parts[2]),
-            })?
-        };
-        // MatrixMarket is 1-indexed.
-        coo.push((r - 1) as u32, (c - 1) as u32, v);
-        if symmetry == "symmetric" && r != c {
-            coo.push((c - 1) as u32, (r - 1) as u32, v);
-        }
-        seen += 1;
-    }
-    if seen != nnz_decl {
-        return Err(MmError::Parse {
-            line: size_line_no,
-            msg: format!("declared {nnz_decl} entries, found {seen}"),
-        });
-    }
+pub fn read_matrix_market_from<R: BufRead>(mut r: R) -> Result<Csr, MmError> {
+    let mut buf = String::new();
+    let mut line_no = 0usize;
+    let head = read_head(&mut r, &mut buf, &mut line_no)?;
+    let mut coo = Coo::zero(head.rows, head.cols);
+    for_each_entry(&mut r, &head, &mut buf, &mut line_no, &mut |row, col, v| {
+        coo.push(row, col, v);
+        Ok(())
+    })?;
     Ok(coo.to_csr())
+}
+
+/// The header form [`write_matrix_market_as`] emits.
+///
+/// Symmetric forms store only the lower triangle (readers mirror it back),
+/// pattern forms store coordinates only (readers assign value 1.0) — so a
+/// pattern round trip is faithful exactly when every value is 1.0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MmFormat {
+    RealGeneral,
+    RealSymmetric,
+    PatternGeneral,
+    PatternSymmetric,
+}
+
+impl MmFormat {
+    fn banner(self) -> &'static str {
+        match self {
+            MmFormat::RealGeneral => "real general",
+            MmFormat::RealSymmetric => "real symmetric",
+            MmFormat::PatternGeneral => "pattern general",
+            MmFormat::PatternSymmetric => "pattern symmetric",
+        }
+    }
+
+    fn symmetric(self) -> bool {
+        matches!(self, MmFormat::RealSymmetric | MmFormat::PatternSymmetric)
+    }
+
+    fn pattern(self) -> bool {
+        matches!(self, MmFormat::PatternGeneral | MmFormat::PatternSymmetric)
+    }
 }
 
 /// Write a CSR matrix as MatrixMarket `coordinate real general`.
 pub fn write_matrix_market(path: &Path, a: &Csr) -> std::io::Result<()> {
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "%%MatrixMarket matrix coordinate real general")?;
-    writeln!(f, "% written by maple (row-wise product accelerator framework)")?;
-    writeln!(f, "{} {} {}", a.rows(), a.cols(), a.nnz())?;
-    for i in 0..a.rows() {
-        for (c, v) in a.row_iter(i) {
-            writeln!(f, "{} {} {}", i + 1, c + 1, v)?;
+    write_matrix_market_as(path, a, MmFormat::RealGeneral)
+}
+
+/// Write a CSR matrix in the chosen MatrixMarket header form.
+///
+/// Symmetric forms require a square, numerically symmetric matrix — an
+/// asymmetric entry is an `InvalidInput` error, never a silently lossy
+/// file.
+pub fn write_matrix_market_as(path: &Path, a: &Csr, format: MmFormat) -> std::io::Result<()> {
+    let bad = |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidInput, msg);
+    let mut stored = a.nnz();
+    if format.symmetric() {
+        if a.rows() != a.cols() {
+            return Err(bad(format!(
+                "symmetric MatrixMarket needs a square matrix, got {}x{}",
+                a.rows(),
+                a.cols()
+            )));
+        }
+        stored = 0;
+        for i in 0..a.rows() {
+            for (c, v) in a.row_iter(i) {
+                let c = c as usize;
+                if c != i && a.get(c, i) != v {
+                    return Err(bad(format!(
+                        "matrix is not symmetric at ({i},{c}): {v} vs {}",
+                        a.get(c, i)
+                    )));
+                }
+                if c <= i {
+                    stored += 1;
+                }
+            }
         }
     }
-    Ok(())
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "%%MatrixMarket matrix coordinate {}", format.banner())?;
+    writeln!(f, "% written by maple (row-wise product accelerator framework)")?;
+    writeln!(f, "{} {} {}", a.rows(), a.cols(), stored)?;
+    for i in 0..a.rows() {
+        for (c, v) in a.row_iter(i) {
+            if format.symmetric() && c as usize > i {
+                continue;
+            }
+            if format.pattern() {
+                writeln!(f, "{} {}", i + 1, c + 1)?;
+            } else {
+                writeln!(f, "{} {} {}", i + 1, c + 1, v)?;
+            }
+        }
+    }
+    f.flush()
+}
+
+// ------------------------------------------------------------- streaming
+
+/// One contiguous row group of a larger matrix, with its position in the
+/// full matrix. `matrix` holds the group's rows re-based to local row 0
+/// over the **full** column space, so `matrix.rows() == row_hi - row_lo`
+/// and `matrix.cols() == cols`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrSlice {
+    pub row_lo: usize,
+    pub row_hi: usize,
+    /// Row count of the full matrix this slice was cut from.
+    pub rows_total: usize,
+    /// Column count of the full matrix (== `matrix.cols()`).
+    pub cols: usize,
+    pub matrix: Csr,
+}
+
+/// Distinguishes concurrent ingests within one process (the pid handles
+/// concurrent processes), mirroring the cache store's temp-file counter.
+static SPILL_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Stream a MatrixMarket file as bounded row groups under `budget_bytes`.
+///
+/// Two passes, both through the allocation-free entry parser:
+///
+/// 1. **Plan**: count per-row nonzeros (symmetric mirrors included) and cut
+///    greedy contiguous row groups whose CSR storage — `(rows+1)·8 + nnz·8`
+///    bytes — stays under the per-group target of `budget_bytes / 4`. The
+///    4× headroom covers the profiler's working set (one row group + one
+///    column tile + one partial) and the transient triplet buffers of group
+///    assembly. A single row too heavy for the target is a loud
+///    [`MmError::Budget`] error, never a silently oversized group.
+/// 2. **Spill**: route every entry to its group's temp file as a fixed
+///    12-byte record, so group assembly reads one small file per group
+///    instead of re-scanning the whole matrix per group.
+///
+/// The returned iterator yields each group as a [`CsrSlice`] (duplicate
+/// coordinates summed, exactly like [`read_matrix_market`]); the spill
+/// files are deleted when it drops.
+pub fn stream_matrix_market(path: &Path, budget_bytes: u64) -> Result<RowGroupStream, MmError> {
+    let target = budget_bytes / 4;
+    if target == 0 {
+        return Err(MmError::Budget(format!(
+            "budget of {budget_bytes} bytes leaves no room for a row group (target is budget / 4)"
+        )));
+    }
+
+    // Pass 1 — plan the group bounds from per-row entry counts.
+    let mut buf = String::new();
+    let mut line_no = 0usize;
+    let mut r = BufReader::new(fs::File::open(path)?);
+    let head = read_head(&mut r, &mut buf, &mut line_no)?;
+    let mut counts = vec![0u64; head.rows];
+    for_each_entry(&mut r, &head, &mut buf, &mut line_no, &mut |row, _col, _v| {
+        counts[row as usize] += 1;
+        Ok(())
+    })?;
+    let bounds = plan_groups(&counts, target)?;
+
+    // Pass 2 — spill each entry to its group's temp file.
+    let n = SPILL_COUNTER.fetch_add(1, Ordering::Relaxed);
+    let spill_dir = std::env::temp_dir()
+        .join(format!("maple-ingest-{}-{n}", std::process::id()));
+    fs::create_dir_all(&spill_dir)?;
+    let stream = RowGroupStream {
+        rows: head.rows,
+        cols: head.cols,
+        bounds,
+        spill_dir,
+        next: 0,
+    };
+    let mut writers = Vec::with_capacity(stream.bounds.len());
+    for g in 0..stream.bounds.len() {
+        writers.push(BufWriter::new(fs::File::create(stream.spill_path(g))?));
+    }
+    let mut line_no = 0usize;
+    let mut r = BufReader::new(fs::File::open(path)?);
+    let head = read_head(&mut r, &mut buf, &mut line_no)?;
+    let bounds = &stream.bounds;
+    for_each_entry(&mut r, &head, &mut buf, &mut line_no, &mut |row, col, v| {
+        let g = bounds.partition_point(|&(_, hi)| hi <= row as usize);
+        let w = &mut writers[g];
+        w.write_all(&row.to_le_bytes())?;
+        w.write_all(&col.to_le_bytes())?;
+        w.write_all(&v.to_bits().to_le_bytes())?;
+        Ok(())
+    })?;
+    for mut w in writers {
+        w.flush()?;
+    }
+    Ok(stream)
+}
+
+/// Greedy contiguous row groups whose CSR bytes stay under `target`.
+fn plan_groups(counts: &[u64], target: u64) -> Result<Vec<(usize, usize)>, MmError> {
+    if counts.is_empty() {
+        // One explicit empty group, mirroring `tile::cuts(0, t) == [0, 0]`.
+        return Ok(vec![(0, 0)]);
+    }
+    let mut bounds = Vec::new();
+    let mut lo = 0usize;
+    let mut bytes = 8u64; // row_ptr[0]
+    for (i, &nnz) in counts.iter().enumerate() {
+        let row_bytes = 8 + nnz * 8;
+        if row_bytes > target {
+            return Err(MmError::Budget(format!(
+                "row {} alone needs {row_bytes} bytes of CSR storage, more than the \
+                 per-group target of {target} bytes (budget / 4); raise --mem-budget",
+                i + 1,
+            )));
+        }
+        if bytes + row_bytes > target && i > lo {
+            bounds.push((lo, i));
+            lo = i;
+            bytes = 8;
+        }
+        bytes += row_bytes;
+    }
+    bounds.push((lo, counts.len()));
+    Ok(bounds)
+}
+
+/// The iterator [`stream_matrix_market`] returns: planned group bounds plus
+/// the spill directory the groups are assembled from. Yields groups in row
+/// order; dropping it deletes the spill files.
+#[derive(Debug)]
+pub struct RowGroupStream {
+    rows: usize,
+    cols: usize,
+    bounds: Vec<(usize, usize)>,
+    spill_dir: PathBuf,
+    next: usize,
+}
+
+impl RowGroupStream {
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// Half-open row bounds of group `g`.
+    pub fn group_rows(&self, g: usize) -> (usize, usize) {
+        self.bounds[g]
+    }
+
+    fn spill_path(&self, g: usize) -> PathBuf {
+        self.spill_dir.join(format!("g{g}.bin"))
+    }
+
+    fn read_group(&self, g: usize) -> Result<CsrSlice, MmError> {
+        let (lo, hi) = self.bounds[g];
+        let bytes = fs::read(self.spill_path(g))?;
+        if bytes.len() % 12 != 0 {
+            return Err(MmError::Container(format!(
+                "spill file for group {g} is torn ({} bytes)",
+                bytes.len()
+            )));
+        }
+        let mut coo = Coo::zero(hi - lo, self.cols);
+        for rec in bytes.chunks_exact(12) {
+            let row = u32::from_le_bytes(rec[0..4].try_into().expect("4-byte slice"));
+            let col = u32::from_le_bytes(rec[4..8].try_into().expect("4-byte slice"));
+            let v = f32::from_bits(u32::from_le_bytes(rec[8..12].try_into().expect("4-byte slice")));
+            coo.push(row - lo as u32, col, v);
+        }
+        Ok(CsrSlice {
+            row_lo: lo,
+            row_hi: hi,
+            rows_total: self.rows,
+            cols: self.cols,
+            matrix: coo.to_csr(),
+        })
+    }
+}
+
+impl Iterator for RowGroupStream {
+    type Item = Result<CsrSlice, MmError>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.next >= self.bounds.len() {
+            return None;
+        }
+        let g = self.next;
+        self.next += 1;
+        Some(self.read_group(g))
+    }
+}
+
+impl Drop for RowGroupStream {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.spill_dir);
+    }
+}
+
+// ------------------------------------------------------------- container
+
+/// Header payload: rows, cols, nnz, group count (u64 each)…
+const RGS_FIXED: usize = 32;
+/// …then per group: row_lo, row_hi, nnz, offset, len (u64 each).
+const RGS_PER_GROUP: usize = 40;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+struct GroupEntry {
+    row_lo: usize,
+    row_hi: usize,
+    nnz: usize,
+    offset: u64,
+    len: u64,
+}
+
+/// A random-access row-group container (`.mrg`): a sealed `MAPLERGS`
+/// header (dimensions + group directory) followed by one sealed `MAPLECSR`
+/// block per row group, all through the cache codec's envelope — versioned,
+/// FNV-checksummed, and bit-stable across platforms.
+///
+/// Unlike cache artifacts, a container is *user data*: a corrupt block is
+/// a hard [`std::io::ErrorKind::InvalidData`] error on load, never a
+/// silent eviction. Loads reopen the file per call, so `&self` methods are
+/// freely shareable across the profiler's phases.
+#[derive(Debug, Clone)]
+pub struct RowGroupFile {
+    path: PathBuf,
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    groups: Vec<GroupEntry>,
+    fingerprint: u64,
+}
+
+fn container_err(e: codec::CodecError) -> MmError {
+    MmError::Container(e.to_string())
+}
+
+impl RowGroupFile {
+    /// Consume a [`RowGroupStream`] into a container at `path`.
+    ///
+    /// The header's length is fixed once the group count is known, so the
+    /// header region is reserved up front, the group blocks stream out
+    /// behind it, and the sealed header (whose directory needs the final
+    /// offsets and nnz counts) is written back over the reservation last —
+    /// one sequential pass over the groups, no second copy of the data.
+    pub fn create(path: &Path, stream: RowGroupStream) -> Result<Self, MmError> {
+        let (rows, cols) = (stream.rows(), stream.cols());
+        let n_groups = stream.group_count();
+        let header_total = codec::HEADER_LEN + RGS_FIXED + n_groups * RGS_PER_GROUP;
+        let bounds: Vec<(usize, usize)> = (0..n_groups).map(|g| stream.group_rows(g)).collect();
+
+        let mut w = BufWriter::new(fs::File::create(path)?);
+        w.write_all(&vec![0u8; header_total])?;
+        let mut groups = Vec::with_capacity(n_groups);
+        let mut offset = header_total as u64;
+        let mut nnz = 0usize;
+        for (g, item) in stream.enumerate() {
+            let slice = item?;
+            if (slice.row_lo, slice.row_hi) != bounds[g] {
+                return Err(MmError::Container(format!(
+                    "stream yielded group {g} with bounds {}..{}, planned {}..{}",
+                    slice.row_lo, slice.row_hi, bounds[g].0, bounds[g].1
+                )));
+            }
+            let block = codec::encode_csr(&slice.matrix);
+            w.write_all(&block)?;
+            nnz += slice.matrix.nnz();
+            groups.push(GroupEntry {
+                row_lo: slice.row_lo,
+                row_hi: slice.row_hi,
+                nnz: slice.matrix.nnz(),
+                offset,
+                len: block.len() as u64,
+            });
+            offset += block.len() as u64;
+        }
+
+        let mut payload = Vec::with_capacity(RGS_FIXED + n_groups * RGS_PER_GROUP);
+        codec::put_u64(&mut payload, rows as u64);
+        codec::put_u64(&mut payload, cols as u64);
+        codec::put_u64(&mut payload, nnz as u64);
+        codec::put_u64(&mut payload, n_groups as u64);
+        for e in &groups {
+            codec::put_u64(&mut payload, e.row_lo as u64);
+            codec::put_u64(&mut payload, e.row_hi as u64);
+            codec::put_u64(&mut payload, e.nnz as u64);
+            codec::put_u64(&mut payload, e.offset);
+            codec::put_u64(&mut payload, e.len);
+        }
+        let sealed = codec::seal(codec::MAGIC_RGS, &payload);
+        debug_assert_eq!(sealed.len(), header_total);
+        let mut f = w.into_inner().map_err(|e| MmError::Io(e.into_error()))?;
+        f.seek(SeekFrom::Start(0))?;
+        f.write_all(&sealed)?;
+        f.flush()?;
+        Ok(Self {
+            path: path.to_path_buf(),
+            rows,
+            cols,
+            nnz,
+            groups,
+            fingerprint: codec::fnv1a(&payload),
+        })
+    }
+
+    /// Open a container, validating the sealed header and its directory
+    /// (contiguous row coverage, blocks inside the file, nnz totals).
+    pub fn open(path: &Path) -> Result<Self, MmError> {
+        let mut f = fs::File::open(path)?;
+        let file_len = f.metadata()?.len();
+        let mut head = [0u8; codec::HEADER_LEN];
+        f.read_exact(&mut head)?;
+        let payload_len = codec::sealed_payload_len(codec::MAGIC_RGS, &head).map_err(container_err)?;
+        let mut all = head.to_vec();
+        all.resize(codec::HEADER_LEN + payload_len, 0);
+        f.read_exact(&mut all[codec::HEADER_LEN..])?;
+        let mut r = codec::open(codec::MAGIC_RGS, &all).map_err(container_err)?;
+        let rows = r.index().map_err(container_err)?;
+        let cols = r.index().map_err(container_err)?;
+        let nnz = r.index().map_err(container_err)?;
+        let n_groups = r.index().map_err(container_err)?;
+        r.expect_items(n_groups, RGS_PER_GROUP).map_err(container_err)?;
+        let mut groups = Vec::with_capacity(n_groups);
+        let mut prev_hi = 0usize;
+        let mut nnz_sum = 0usize;
+        for g in 0..n_groups {
+            let e = GroupEntry {
+                row_lo: r.index().map_err(container_err)?,
+                row_hi: r.index().map_err(container_err)?,
+                nnz: r.index().map_err(container_err)?,
+                offset: r.u64().map_err(container_err)?,
+                len: r.u64().map_err(container_err)?,
+            };
+            if e.row_lo != prev_hi || e.row_hi < e.row_lo {
+                return Err(MmError::Container(format!(
+                    "group {g} bounds {}..{} do not continue coverage at row {prev_hi}",
+                    e.row_lo, e.row_hi
+                )));
+            }
+            match e.offset.checked_add(e.len) {
+                Some(end) if end <= file_len => {}
+                _ => {
+                    return Err(MmError::Container(format!(
+                        "group {g} block ({} bytes at offset {}) extends past the file \
+                         ({file_len} bytes)",
+                        e.len, e.offset
+                    )));
+                }
+            }
+            prev_hi = e.row_hi;
+            nnz_sum += e.nnz;
+            groups.push(e);
+        }
+        r.done().map_err(container_err)?;
+        if prev_hi != rows || nnz_sum != nnz {
+            return Err(MmError::Container(format!(
+                "directory covers {prev_hi} of {rows} rows with {nnz_sum} of {nnz} nonzeros"
+            )));
+        }
+        Ok(Self {
+            path: path.to_path_buf(),
+            rows,
+            cols,
+            nnz,
+            groups,
+            fingerprint: codec::fnv1a(&all[codec::HEADER_LEN..]),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Half-open row bounds of group `g`.
+    pub fn group_rows(&self, g: usize) -> (usize, usize) {
+        (self.groups[g].row_lo, self.groups[g].row_hi)
+    }
+
+    /// FNV-1a of the header payload — a cheap identity for cache keys: two
+    /// containers with the same dimensions, grouping, and block layout
+    /// share it, anything else (different matrix, budget, or codec
+    /// version) does not.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// Load one row group. A block that fails to decode or disagrees with
+    /// the header directory is `InvalidData` — user data, not a cache.
+    pub fn load_group(&self, g: usize) -> io::Result<CsrSlice> {
+        let e = self.groups[g];
+        let mut f = fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(e.offset))?;
+        let mut bytes = vec![0u8; e.len as usize];
+        f.read_exact(&mut bytes)?;
+        let bad = |msg: String| io::Error::new(io::ErrorKind::InvalidData, msg);
+        let matrix = codec::decode_csr(&bytes)
+            .map_err(|err| bad(format!("container group {g}: {err}")))?;
+        if matrix.rows() != e.row_hi - e.row_lo || matrix.cols() != self.cols
+            || matrix.nnz() != e.nnz
+        {
+            return Err(bad(format!(
+                "container group {g} ({}x{}, {} nnz) does not match its directory entry",
+                matrix.rows(),
+                matrix.cols(),
+                matrix.nnz()
+            )));
+        }
+        Ok(CsrSlice {
+            row_lo: e.row_lo,
+            row_hi: e.row_hi,
+            rows_total: self.rows,
+            cols: self.cols,
+            matrix,
+        })
+    }
+
+    /// Assemble the column tile `[col_lo, col_hi)` over **all** rows by
+    /// streaming the groups in order — the B-side tile of the out-of-core
+    /// profile pass. Column ids in the result are local (`j - col_lo`).
+    /// Peak residency is the assembled tile plus one group.
+    pub fn load_col_tile(&self, col_lo: usize, col_hi: usize) -> io::Result<Csr> {
+        let col_hi = col_hi.min(self.cols);
+        let col_lo = col_lo.min(col_hi);
+        let mut row_ptr = Vec::with_capacity(self.rows + 1);
+        row_ptr.push(0);
+        let mut col_id = Vec::new();
+        let mut value = Vec::new();
+        for g in 0..self.groups.len() {
+            let slice = self.load_group(g)?;
+            let t = tile::extract_cols(&slice.matrix, col_lo, col_hi);
+            let base = col_id.len();
+            for &p in &t.row_ptr[1..] {
+                row_ptr.push(base + p);
+            }
+            col_id.extend_from_slice(&t.col_id);
+            value.extend_from_slice(&t.value);
+        }
+        Csr::try_new(self.rows, col_hi - col_lo, row_ptr, col_id, value)
+            .map_err(|msg| io::Error::new(io::ErrorKind::InvalidData, msg))
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::sparse::gen::{generate, Profile};
     use std::io::Cursor;
 
     #[test]
@@ -187,18 +823,18 @@ mod tests {
         assert!(read_matrix_market_from(Cursor::new(wrong_count)).is_err());
         let oob = "%%MatrixMarket matrix coordinate real general\n2 2 1\n3 1 1.0\n";
         assert!(read_matrix_market_from(Cursor::new(oob)).is_err());
+        let complex = "%%MatrixMarket matrix coordinate complex general\n1 1 0\n";
+        assert!(read_matrix_market_from(Cursor::new(complex)).is_err());
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("maple-io-test-{}-{tag}", std::process::id()))
     }
 
     #[test]
     fn round_trip_through_file() {
-        let a = crate::sparse::gen::generate(
-            20,
-            30,
-            100,
-            crate::sparse::gen::Profile::Uniform,
-            11,
-        );
-        let p = std::env::temp_dir().join(format!("maple-io-test-{}.mtx", std::process::id()));
+        let a = generate(20, 30, 100, Profile::Uniform, 11);
+        let p = tmp("general.mtx");
         write_matrix_market(&p, &a).unwrap();
         let b = read_matrix_market(&p).unwrap();
         let _ = std::fs::remove_file(&p);
@@ -207,5 +843,209 @@ mod tests {
         for i in 0..a.rows() {
             assert_eq!(a.row_cols(i), b.row_cols(i));
         }
+    }
+
+    /// Symmetrize a generated matrix: keep the lower triangle, mirror it up.
+    fn symmetrized(n: usize, nnz: usize, seed: u64) -> Csr {
+        let a = generate(n, n, nnz, Profile::Uniform, seed);
+        let mut coo = Coo::zero(n, n);
+        for i in 0..n {
+            for (c, v) in a.row_iter(i) {
+                if c as usize <= i {
+                    coo.push(i as u32, c, v);
+                    if (c as usize) < i {
+                        coo.push(c, i as u32, v);
+                    }
+                }
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn symmetric_writer_round_trips() {
+        let a = symmetrized(25, 120, 3);
+        let p = tmp("symmetric.mtx");
+        write_matrix_market_as(&p, &a, MmFormat::RealSymmetric).unwrap();
+        // The file stores only the lower triangle.
+        let body = std::fs::read_to_string(&p).unwrap();
+        let declared: usize = body
+            .lines()
+            .find(|l| !l.starts_with('%'))
+            .and_then(|l| l.split_ascii_whitespace().nth(2))
+            .and_then(|n| n.parse().ok())
+            .unwrap();
+        assert!(declared < a.nnz(), "lower triangle ({declared}) vs full ({})", a.nnz());
+        let b = read_matrix_market(&p).unwrap();
+        let _ = std::fs::remove_file(&p);
+        assert_eq!(a, b, "symmetric round trip must be exact");
+    }
+
+    #[test]
+    fn symmetric_writer_rejects_asymmetry() {
+        let mut coo = Coo::zero(2, 2);
+        coo.push(0, 1, 2.0); // no mirrored (1, 0) entry
+        let p = tmp("asym.mtx");
+        let err = write_matrix_market_as(&p, &coo.to_csr(), MmFormat::RealSymmetric);
+        assert!(err.is_err());
+        let rect = generate(3, 4, 6, Profile::Uniform, 1);
+        assert!(write_matrix_market_as(&p, &rect, MmFormat::RealSymmetric).is_err());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn pattern_writer_round_trips_unit_values() {
+        // Pattern files carry no values; a round trip is exact when every
+        // value is 1.0.
+        let a = generate(15, 18, 60, Profile::Uniform, 7);
+        let ones = Csr::try_new(
+            a.rows(),
+            a.cols(),
+            a.row_ptr.clone(),
+            a.col_id.clone(),
+            vec![1.0; a.nnz()],
+        )
+        .unwrap();
+        let p = tmp("pattern.mtx");
+        write_matrix_market_as(&p, &ones, MmFormat::PatternGeneral).unwrap();
+        let b = read_matrix_market(&p).unwrap();
+        let _ = std::fs::remove_file(&p);
+        assert_eq!(ones, b, "pattern round trip must be exact for unit values");
+    }
+
+    #[test]
+    fn pattern_symmetric_round_trips() {
+        let s = symmetrized(20, 90, 9);
+        let ones = Csr::try_new(
+            s.rows(),
+            s.cols(),
+            s.row_ptr.clone(),
+            s.col_id.clone(),
+            vec![1.0; s.nnz()],
+        )
+        .unwrap();
+        let p = tmp("pattern-sym.mtx");
+        write_matrix_market_as(&p, &ones, MmFormat::PatternSymmetric).unwrap();
+        let b = read_matrix_market(&p).unwrap();
+        let _ = std::fs::remove_file(&p);
+        assert_eq!(ones, b);
+    }
+
+    #[test]
+    fn streamed_groups_reassemble_the_whole_matrix() {
+        let a = generate(60, 60, 900, Profile::PowerLaw { alpha: 0.8 }, 13);
+        let p = tmp("stream.mtx");
+        write_matrix_market(&p, &a).unwrap();
+        // A budget far below the matrix size forces many groups.
+        let budget = (a.storage_bytes(4, 8) as u64) / 2;
+        let stream = stream_matrix_market(&p, budget).unwrap();
+        assert_eq!((stream.rows(), stream.cols()), (60, 60));
+        assert!(stream.group_count() > 1, "budget must force multiple groups");
+        let target = budget / 4;
+        let mut nnz = 0;
+        let mut prev_hi = 0;
+        for item in stream {
+            let s = item.unwrap();
+            assert_eq!(s.row_lo, prev_hi, "groups must tile the rows contiguously");
+            prev_hi = s.row_hi;
+            assert_eq!(s.matrix.rows(), s.row_hi - s.row_lo);
+            assert_eq!(s.matrix.cols(), 60);
+            let bytes = ((s.matrix.rows() + 1) * 8 + s.matrix.nnz() * 8) as u64;
+            assert!(bytes <= target, "group {}..{} breaks the target", s.row_lo, s.row_hi);
+            nnz += s.matrix.nnz();
+            assert_eq!(s.matrix, tile::extract_rows(&a, s.row_lo, s.row_hi));
+        }
+        assert_eq!(prev_hi, 60);
+        assert_eq!(nnz, a.nnz(), "groups must partition the nonzeros exactly");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn stream_rejects_impossible_budgets() {
+        let a = generate(10, 10, 40, Profile::Uniform, 5);
+        let p = tmp("budget.mtx");
+        write_matrix_market(&p, &a).unwrap();
+        assert!(matches!(stream_matrix_market(&p, 0), Err(MmError::Budget(_))));
+        // A budget whose per-group target cannot hold the heaviest row.
+        match stream_matrix_market(&p, 16) {
+            Err(MmError::Budget(msg)) => assert!(msg.contains("raise --mem-budget"), "{msg}"),
+            other => panic!("expected a budget error, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn container_round_trips_groups_and_col_tiles() {
+        let a = generate(48, 48, 700, Profile::PowerLaw { alpha: 0.7 }, 29);
+        let mtx = tmp("container.mtx");
+        let mrg = tmp("container.mrg");
+        write_matrix_market(&mtx, &a).unwrap();
+        let budget = (a.storage_bytes(4, 8) as u64) / 2;
+        let stream = stream_matrix_market(&mtx, budget).unwrap();
+        let created = RowGroupFile::create(&mrg, stream).unwrap();
+        let opened = RowGroupFile::open(&mrg).unwrap();
+        assert_eq!(created.fingerprint(), opened.fingerprint());
+        for file in [&created, &opened] {
+            assert_eq!((file.rows(), file.cols(), file.nnz()), (48, 48, a.nnz()));
+            assert!(file.group_count() > 1);
+            for g in 0..file.group_count() {
+                let s = file.load_group(g).unwrap();
+                let (lo, hi) = file.group_rows(g);
+                assert_eq!((s.row_lo, s.row_hi), (lo, hi));
+                assert_eq!(s.matrix, tile::extract_rows(&a, lo, hi));
+            }
+            for (c0, c1) in [(0, 16), (16, 48), (0, 48), (40, 48)] {
+                assert_eq!(file.load_col_tile(c0, c1).unwrap(), tile::extract_cols(&a, c0, c1));
+            }
+        }
+        let _ = std::fs::remove_file(&mtx);
+        let _ = std::fs::remove_file(&mrg);
+    }
+
+    #[test]
+    fn container_rejects_corruption_loudly() {
+        let a = generate(30, 30, 300, Profile::Uniform, 41);
+        let mtx = tmp("corrupt.mtx");
+        let mrg = tmp("corrupt.mrg");
+        write_matrix_market(&mtx, &a).unwrap();
+        let stream = stream_matrix_market(&mtx, 1 << 20).unwrap();
+        RowGroupFile::create(&mrg, stream).unwrap();
+        let good = fs::read(&mrg).unwrap();
+        // Flip a byte in the header: open() must fail.
+        let mut bad = good.clone();
+        bad[codec::HEADER_LEN + 3] ^= 0xFF;
+        fs::write(&mrg, &bad).unwrap();
+        assert!(matches!(RowGroupFile::open(&mrg), Err(MmError::Container(_))));
+        // Flip a byte in a group block: the directory still opens, the
+        // group load is a hard InvalidData error — user data, not a cache.
+        let mut bad = good.clone();
+        let last = bad.len() - 5;
+        bad[last] ^= 0xFF;
+        fs::write(&mrg, &bad).unwrap();
+        let file = RowGroupFile::open(&mrg).unwrap();
+        let g = file.group_count() - 1;
+        let err = file.load_group(g).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // A truncated file fails at open.
+        fs::write(&mrg, &good[..good.len() / 2]).unwrap();
+        assert!(RowGroupFile::open(&mrg).is_err());
+        let _ = std::fs::remove_file(&mtx);
+        let _ = std::fs::remove_file(&mrg);
+    }
+
+    #[test]
+    fn empty_matrix_streams_and_containers() {
+        let a = Csr::zero(0, 7);
+        let mtx = tmp("empty.mtx");
+        let mrg = tmp("empty.mrg");
+        write_matrix_market(&mtx, &a).unwrap();
+        let stream = stream_matrix_market(&mtx, 4096).unwrap();
+        assert_eq!(stream.group_count(), 1);
+        assert_eq!(stream.group_rows(0), (0, 0));
+        let file = RowGroupFile::create(&mrg, stream).unwrap();
+        assert_eq!((file.rows(), file.cols(), file.nnz()), (0, 7, 0));
+        assert_eq!(file.load_col_tile(0, 7).unwrap(), Csr::zero(0, 7));
+        let _ = std::fs::remove_file(&mtx);
+        let _ = std::fs::remove_file(&mrg);
     }
 }

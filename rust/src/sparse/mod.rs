@@ -15,10 +15,12 @@ pub mod gen;
 pub mod io;
 pub mod stats;
 pub mod suite;
+pub mod tile;
 
 pub use coo::Coo;
 pub use csc::Csc;
 pub use csr::Csr;
+pub use tile::TileShape;
 
 /// Deterministic 64-bit SplitMix PRNG.
 ///

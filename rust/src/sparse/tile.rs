@@ -1,0 +1,314 @@
+//! Capacity-aware CSR tiling: row groups, column tiles, and 2-D blocks.
+//!
+//! The out-of-core profile pass (`crate::sim`'s `profile_workload_tiled`)
+//! streams A row-groups against B column-tiles, so tiling must uphold one
+//! invariant above all: **tiles exactly partition the nonzeros** — every
+//! nonzero of the source matrix lands in exactly one tile, and the tile
+//! boundaries are a pure function of `(extent, tile size)`. The property
+//! tests in `tests/tiling.rs` pin this for uniform, power-law, and banded
+//! generators.
+//!
+//! Tile sizes are validated against [`Scratchpad`] capacities before any
+//! work is scheduled (see [`check_fits`]): a tile whose working set cannot
+//! fit the scratchpad is rejected loudly at design-space expansion time
+//! ([`crate::sim::engine::DesignSpace::expand`]), or split down to a
+//! feasible shape via [`fit_shape`] — never silently truncated.
+
+use super::stats::{row_nnz_summary, RowNnzSummary};
+use super::Csr;
+use crate::mem::Scratchpad;
+
+/// A tile shape: `rows × cols` of the output partition. Parsed from and
+/// rendered as `RxC` (e.g. `256x128`) — the spelling used by the `tile`
+/// design-space axis labels, `--tile`, and the cache artifact names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TileShape {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl TileShape {
+    /// A shape with both extents clamped to ≥ 1 (a zero extent would make
+    /// the cut sequence degenerate instead of erroring usefully).
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows: rows.max(1), cols: cols.max(1) }
+    }
+
+    /// Parse the `RxC` spelling (also accepts a single integer `N` as the
+    /// square `NxN`).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        let (r, c) = match s.split_once(['x', 'X']) {
+            Some((r, c)) => (r, c),
+            None => (s, s),
+        };
+        let rows: usize =
+            r.trim().parse().map_err(|_| format!("bad tile rows {r:?} in {s:?}"))?;
+        let cols: usize =
+            c.trim().parse().map_err(|_| format!("bad tile cols {c:?} in {s:?}"))?;
+        if rows == 0 || cols == 0 {
+            return Err(format!("tile shape {s:?} has a zero extent"));
+        }
+        Ok(Self { rows, cols })
+    }
+
+    /// Conservative per-tile working set in 32-bit words: one accumulator
+    /// strip over the tile's output columns (tag + partial per column, the
+    /// generation-tagged SPA's footprint) plus the tile's row-pointer
+    /// strip. This is what must fit the scratchpad for the tile to be
+    /// schedulable — the feasibility rule documented in the README.
+    pub fn working_set_words(&self) -> u64 {
+        2 * self.cols as u64 + self.rows as u64 + 1
+    }
+}
+
+impl std::fmt::Display for TileShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}x{}", self.rows, self.cols)
+    }
+}
+
+impl std::str::FromStr for TileShape {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        Self::parse(s)
+    }
+}
+
+/// Cut boundaries for tiling `extent` into chunks of at most `tile`:
+/// `[0, tile, 2·tile, …, extent]`. Monotone, starts at 0, ends at
+/// `extent`; an empty extent yields the single empty range `[0, 0]`.
+/// Adjacent boundary pairs are exactly the tile ranges, so consumers
+/// iterate `cuts(..).windows(2)` — the same idiom as the profile pass's
+/// `nnz_balanced_bounds`.
+pub fn cuts(extent: usize, tile: usize) -> Vec<usize> {
+    let tile = tile.max(1);
+    let mut bounds = Vec::with_capacity(extent / tile + 2);
+    bounds.push(0);
+    let mut at = tile;
+    while at < extent {
+        bounds.push(at);
+        at += tile;
+    }
+    // An empty extent falls through to `[0, 0]` — one explicit empty range,
+    // so `windows(2)` consumers still see exactly one (empty) tile.
+    bounds.push(extent);
+    bounds
+}
+
+/// The row slice `a[lo..hi, :]` as its own CSR (same column space).
+pub fn extract_rows(a: &Csr, lo: usize, hi: usize) -> Csr {
+    assert!(lo <= hi && hi <= a.rows(), "row range {lo}..{hi} out of {}", a.rows());
+    let (s, e) = (a.row_ptr[lo], a.row_ptr[hi]);
+    let row_ptr = a.row_ptr[lo..=hi].iter().map(|&p| p - s).collect();
+    Csr::try_new(
+        hi - lo,
+        a.cols(),
+        row_ptr,
+        a.col_id[s..e].to_vec(),
+        a.value[s..e].to_vec(),
+    )
+    .expect("row slice of a valid CSR is valid")
+}
+
+/// The column slice `a[:, lo..hi)` as its own CSR with **local** column
+/// ids (`j - lo`). Column ids are ascending within each row, so the range
+/// is found per row with two binary searches — `O(nnz_in_range + rows·log)`
+/// overall, no full scan of out-of-range nonzeros' values.
+pub fn extract_cols(a: &Csr, lo: usize, hi: usize) -> Csr {
+    assert!(lo <= hi && hi <= a.cols(), "col range {lo}..{hi} out of {}", a.cols());
+    let (lo32, hi32) = (lo as u32, hi as u32);
+    let mut row_ptr = Vec::with_capacity(a.rows() + 1);
+    row_ptr.push(0usize);
+    let mut col_id = Vec::new();
+    let mut value = Vec::new();
+    for i in 0..a.rows() {
+        let cols = a.row_cols(i);
+        let vals = a.row_values(i);
+        let s = cols.partition_point(|&c| c < lo32);
+        let e = cols.partition_point(|&c| c < hi32);
+        for p in s..e {
+            col_id.push(cols[p] - lo32);
+            value.push(vals[p]);
+        }
+        row_ptr.push(col_id.len());
+    }
+    Csr::try_new(a.rows(), hi - lo, row_ptr, col_id, value)
+        .expect("column slice of a valid CSR is valid")
+}
+
+/// The 2-D block `a[r0..r1, c0..c1)` with local row and column ids.
+pub fn extract_block(a: &Csr, r0: usize, r1: usize, c0: usize, c1: usize) -> Csr {
+    extract_cols(&extract_rows(a, r0, r1), c0, c1)
+}
+
+/// Whether `shape`'s working set fits `spm`; the loud rejection path —
+/// the error names both sides of the inequality so a failed sweep or
+/// ingest says exactly which capacity was exceeded by how much.
+pub fn check_fits(shape: TileShape, spm: &Scratchpad) -> Result<(), String> {
+    let need = shape.working_set_words();
+    let have = spm.capacity_words();
+    if need > have {
+        return Err(format!(
+            "tile {shape} working set ({need} words) exceeds scratchpad {:?} capacity \
+             ({have} words); shrink the tile or use fit_shape to split it",
+            spm.name(),
+        ));
+    }
+    Ok(())
+}
+
+/// Split `shape` (halving the larger extent first) until its working set
+/// fits `spm`. Errors if even a 1×1 tile cannot fit — a scratchpad that
+/// small cannot schedule any tile.
+pub fn fit_shape(shape: TileShape, spm: &Scratchpad) -> Result<TileShape, String> {
+    let mut s = TileShape::new(shape.rows, shape.cols);
+    loop {
+        if check_fits(s, spm).is_ok() {
+            return Ok(s);
+        }
+        if s.rows == 1 && s.cols == 1 {
+            return Err(format!(
+                "scratchpad {:?} ({} words) cannot hold even a 1x1 tile ({} words)",
+                spm.name(),
+                spm.capacity_words(),
+                TileShape::new(1, 1).working_set_words(),
+            ));
+        }
+        if s.cols >= s.rows {
+            s.cols = (s.cols / 2).max(1);
+        } else {
+            s.rows = (s.rows / 2).max(1);
+        }
+    }
+}
+
+/// One row-group's entry in the tiling report: the group's row range and
+/// its [`RowNnzSummary`] — the skew statistics that make heavy-row tiles
+/// visible in sweep output (a group whose `heavy_share` dominates is the
+/// one that serialises a tiled schedule).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TileSummary {
+    pub index: usize,
+    pub row_lo: usize,
+    pub row_hi: usize,
+    pub summary: RowNnzSummary,
+}
+
+/// Per-row-group [`RowNnzSummary`] under `shape` (column tiling does not
+/// change row-nnz shape, so the report is per row group).
+pub fn row_group_summaries(a: &Csr, shape: TileShape) -> Vec<TileSummary> {
+    cuts(a.rows(), shape.rows)
+        .windows(2)
+        .enumerate()
+        .map(|(index, w)| TileSummary {
+            index,
+            row_lo: w[0],
+            row_hi: w[1],
+            summary: row_nnz_summary(&extract_rows(a, w[0], w[1])),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Lane;
+    use crate::sparse::gen::{generate, Profile};
+
+    #[test]
+    fn shape_parses_and_renders() {
+        assert_eq!(TileShape::parse("256x128").unwrap(), TileShape { rows: 256, cols: 128 });
+        assert_eq!(TileShape::parse(" 8X4 ").unwrap(), TileShape { rows: 8, cols: 4 });
+        assert_eq!(TileShape::parse("64").unwrap(), TileShape { rows: 64, cols: 64 });
+        assert_eq!(TileShape::parse("16x32").unwrap().to_string(), "16x32");
+        assert!(TileShape::parse("0x4").is_err());
+        assert!(TileShape::parse("axb").is_err());
+        assert!(TileShape::parse("").is_err());
+    }
+
+    #[test]
+    fn cuts_tile_the_extent_exactly() {
+        assert_eq!(cuts(10, 4), vec![0, 4, 8, 10]);
+        assert_eq!(cuts(8, 4), vec![0, 4, 8]);
+        assert_eq!(cuts(3, 100), vec![0, 3]);
+        assert_eq!(cuts(5, 1), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(cuts(0, 4), vec![0, 0]);
+        for (extent, tile) in [(17usize, 5usize), (100, 7), (1, 1), (64, 64)] {
+            let b = cuts(extent, tile);
+            assert_eq!(b[0], 0);
+            assert_eq!(*b.last().unwrap(), extent);
+            assert!(b.windows(2).all(|w| w[0] < w[1] || extent == 0), "{b:?}");
+            assert!(b.windows(2).all(|w| w[1] - w[0] <= tile), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn row_and_col_slices_preserve_entries() {
+        let a = generate(40, 30, 250, Profile::PowerLaw { alpha: 0.8 }, 5);
+        let top = extract_rows(&a, 0, 17);
+        let bot = extract_rows(&a, 17, 40);
+        assert_eq!(top.nnz() + bot.nnz(), a.nnz());
+        for i in 0..17 {
+            assert_eq!(top.row_cols(i), a.row_cols(i));
+            assert_eq!(top.row_values(i), a.row_values(i));
+        }
+        let left = extract_cols(&a, 0, 11);
+        let right = extract_cols(&a, 11, 30);
+        assert_eq!(left.nnz() + right.nnz(), a.nnz());
+        assert_eq!((left.cols(), right.cols()), (11, 19));
+        // Local ids shift back to the originals.
+        for i in 0..a.rows() {
+            let mut merged: Vec<u32> = left.row_cols(i).to_vec();
+            merged.extend(right.row_cols(i).iter().map(|&c| c + 11));
+            assert_eq!(merged, a.row_cols(i), "row {i}");
+        }
+    }
+
+    #[test]
+    fn blocks_partition_nnz_for_every_generator() {
+        for profile in [
+            Profile::Uniform,
+            Profile::PowerLaw { alpha: 0.9 },
+            Profile::Banded { rel_bandwidth: 0.2, cluster: 0.5 },
+        ] {
+            let a = generate(60, 45, 500, profile, 9);
+            for shape in [TileShape::new(16, 16), TileShape::new(1, 45), TileShape::new(60, 1)] {
+                let mut total = 0usize;
+                for rw in cuts(a.rows(), shape.rows).windows(2) {
+                    for cw in cuts(a.cols(), shape.cols).windows(2) {
+                        total += extract_block(&a, rw[0], rw[1], cw[0], cw[1]).nnz();
+                    }
+                }
+                assert_eq!(total, a.nnz(), "{profile:?} {shape}");
+            }
+        }
+    }
+
+    #[test]
+    fn capacity_check_rejects_and_fit_shape_splits() {
+        // 1 KiB = 256 words: a 256-col tile needs 2*256 + rows + 1 words.
+        let spm = Scratchpad::new("l1", Lane::L1, 1024);
+        assert!(check_fits(TileShape::new(4, 64), &spm).is_ok());
+        let err = check_fits(TileShape::new(4, 256), &spm).unwrap_err();
+        assert!(err.contains("exceeds scratchpad"), "{err}");
+        assert!(err.contains("517 words"), "{err}");
+        let fitted = fit_shape(TileShape::new(4, 256), &spm).unwrap();
+        assert!(check_fits(fitted, &spm).is_ok());
+        assert_eq!(fitted, TileShape::new(4, 128));
+        // A scratchpad too small for any tile errors instead of looping.
+        let tiny = Scratchpad::new("tiny", Lane::L1, 8);
+        assert!(fit_shape(TileShape::new(64, 64), &tiny).is_err());
+    }
+
+    #[test]
+    fn row_group_summaries_cover_all_rows_and_nnz() {
+        let a = generate(50, 50, 400, Profile::PowerLaw { alpha: 0.9 }, 3);
+        let groups = row_group_summaries(&a, TileShape::new(16, 50));
+        assert_eq!(groups.len(), 4);
+        assert_eq!(groups.iter().map(|g| g.row_hi - g.row_lo).sum::<usize>(), 50);
+        assert_eq!(groups.iter().map(|g| g.summary.nnz).sum::<usize>(), a.nnz());
+        assert_eq!(groups.last().unwrap().row_hi, 50);
+    }
+}

@@ -1,0 +1,303 @@
+//! Acceptance tests for the out-of-core tiling pipeline: tiles exactly
+//! partition the matrix for every generator family, the tiled profiler is
+//! bit-identical to the whole-matrix profile across tile shapes and thread
+//! counts (including degenerate shapes), the streamed row-group container
+//! round-trips and profiles out-of-core under its memory budget, an
+//! interrupted tiled profile resumes warm from the partial cache, and the
+//! `tile` sweep axis expands with a per-cell scratchpad feasibility gate.
+//!
+//! Same property-test discipline as `proptest_invariants.rs`: no proptest
+//! crate, deterministic SplitMix64-driven case sweeps, failures print the
+//! offending seed.
+
+use std::path::PathBuf;
+
+use maple::config::{AcceleratorConfig, ConfigAxis};
+use maple::sim::cache::encode_workload;
+use maple::sim::{
+    profile_container_tiled, profile_workload, profile_workload_tiled,
+    profile_workload_tiled_cached, Axis, DesignSpace, DiskCache, EngineError, SimEngine,
+    WorkloadKey,
+};
+use maple::sparse::gen::{generate, Profile};
+use maple::sparse::io::{stream_matrix_market, write_matrix_market, MmError, RowGroupFile};
+use maple::sparse::{tile, Csr, SplitMix64, TileShape};
+
+/// A fresh per-test scratch directory (tests run concurrently in one
+/// process, so the tag keeps them disjoint).
+fn scratch_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("maple-tiling-test-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// One matrix from each generator family, plus a rectangular one.
+fn family_matrices(seed: u64) -> Vec<(&'static str, Csr)> {
+    vec![
+        ("uniform", generate(70, 70, 900, Profile::Uniform, seed)),
+        ("power-law", generate(64, 64, 800, Profile::PowerLaw { alpha: 0.9 }, seed + 1)),
+        (
+            "banded",
+            generate(80, 80, 700, Profile::Banded { rel_bandwidth: 0.15, cluster: 3 }, seed + 2),
+        ),
+        ("rect", generate(50, 90, 600, Profile::Uniform, seed + 3)),
+    ]
+}
+
+#[test]
+fn prop_tiles_exactly_partition_nnz_for_every_generator() {
+    let shapes = [
+        TileShape::new(16, 16),
+        TileShape::new(7, 13),
+        TileShape::new(1, 64),
+        TileShape::new(64, 1),
+        TileShape::new(4096, 4096), // larger than the matrix
+    ];
+    for seed in [3, 19] {
+        for (family, a) in family_matrices(seed) {
+            for shape in shapes {
+                let row_cuts = tile::cuts(a.rows(), shape.rows);
+                let col_cuts = tile::cuts(a.cols(), shape.cols);
+                let mut nnz = 0usize;
+                for rw in row_cuts.windows(2) {
+                    for cw in col_cuts.windows(2) {
+                        let block = tile::extract_block(&a, rw[0], rw[1], cw[0], cw[1]);
+                        nnz += block.nnz();
+                        // Blocks carry the tile-local shape.
+                        assert!(block.rows() == rw[1] - rw[0] && block.cols() == cw[1] - cw[0]);
+                    }
+                }
+                assert_eq!(
+                    nnz,
+                    a.nnz(),
+                    "{family} seed {seed} tile {shape}: tiles must partition nnz exactly"
+                );
+                // Row-only and column-only partitions agree too.
+                let row_nnz: usize = row_cuts
+                    .windows(2)
+                    .map(|w| tile::extract_rows(&a, w[0], w[1]).nnz())
+                    .sum();
+                let col_nnz: usize = col_cuts
+                    .windows(2)
+                    .map(|w| tile::extract_cols(&a, w[0], w[1]).nnz())
+                    .sum();
+                assert_eq!(row_nnz, a.nnz(), "{family} seed {seed} tile {shape}");
+                assert_eq!(col_nnz, a.nnz(), "{family} seed {seed} tile {shape}");
+            }
+        }
+    }
+}
+
+#[test]
+fn tiled_profile_is_bit_identical_to_whole_for_every_shape_and_thread_count() {
+    let shapes = [
+        TileShape::new(32, 32),
+        TileShape::new(7, 13),
+        TileShape::new(1, 128),
+        TileShape::new(128, 1),
+        TileShape::new(4096, 4096),
+    ];
+    for (family, a) in family_matrices(29) {
+        if a.rows() != a.cols() {
+            continue; // C = A × A needs square A
+        }
+        let whole = profile_workload(&a, &a);
+        let whole_bytes = encode_workload(&whole);
+        for shape in shapes {
+            for threads in [1, 4] {
+                let tiled = profile_workload_tiled(&a, &a, shape, threads);
+                assert_eq!(
+                    tiled, whole,
+                    "{family} tile {shape} x{threads}: tiled profile diverged"
+                );
+                assert_eq!(
+                    tiled.checksum.to_bits(),
+                    whole.checksum.to_bits(),
+                    "{family} tile {shape} x{threads}: checksum bits diverged"
+                );
+                assert_eq!(
+                    encode_workload(&tiled),
+                    whole_bytes,
+                    "{family} tile {shape} x{threads}: artifact bytes diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn streamed_container_round_trips_and_respects_the_budget() {
+    let dir = scratch_dir("container");
+    let a = generate(96, 96, 2400, Profile::PowerLaw { alpha: 0.8 }, 41);
+    let mtx = dir.join("a.mtx");
+    write_matrix_market(&mtx, &a).unwrap();
+
+    // A budget ~¼ of the matrix's resident size forces several groups.
+    let resident = ((a.rows() + 1) * 8 + a.nnz() * 8) as u64;
+    let budget = resident / 4;
+    let stream = stream_matrix_market(&mtx, budget).unwrap();
+    assert!(stream.group_count() > 1, "budget {budget} did not force multiple groups");
+    let mrg = dir.join("a.mrg");
+    let file = RowGroupFile::create(&mrg, stream).unwrap();
+    assert_eq!((file.rows(), file.cols(), file.nnz()), (a.rows(), a.cols(), a.nnz()));
+
+    let opened = RowGroupFile::open(&mrg).unwrap();
+    assert_eq!(opened.fingerprint(), file.fingerprint());
+    let mut covered = 0usize;
+    for g in 0..opened.group_count() {
+        let slice = opened.load_group(g).unwrap();
+        assert_eq!(slice.row_lo, covered, "groups must tile the rows contiguously");
+        covered = slice.row_hi;
+        assert_eq!(slice.matrix, tile::extract_rows(&a, slice.row_lo, slice.row_hi));
+        // The budget contract: each group's resident bytes stay within the
+        // per-group target (budget / 4).
+        let group_bytes = ((slice.matrix.rows() + 1) * 8 + slice.matrix.nnz() * 8) as u64;
+        assert!(group_bytes <= budget / 4, "group {g}: {group_bytes} B > target {} B", budget / 4);
+    }
+    assert_eq!(covered, a.rows());
+
+    // Column tiles cut across all groups exactly like in-memory extraction.
+    for (lo, hi) in [(0, 24), (24, 96), (0, 96), (90, 96)] {
+        assert_eq!(opened.load_col_tile(lo, hi).unwrap(), tile::extract_cols(&a, lo, hi));
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn container_profile_matches_whole_and_resumes_warm() {
+    let dir = scratch_dir("resume");
+    let a = generate(80, 80, 1600, Profile::PowerLaw { alpha: 0.7 }, 53);
+    let mtx = dir.join("a.mtx");
+    write_matrix_market(&mtx, &a).unwrap();
+    let resident = ((a.rows() + 1) * 8 + a.nnz() * 8) as u64;
+    let stream = stream_matrix_market(&mtx, resident / 2).unwrap();
+    let mrg = dir.join("a.mrg");
+    let file = RowGroupFile::create(&mrg, stream).unwrap();
+
+    let disk = DiskCache::new(dir.join("cache")).unwrap();
+    let key = format!("tiling-test-{:016x}", file.fingerprint());
+    let shape = TileShape::new(16, 24);
+
+    let whole = profile_workload(&a, &a);
+    let (cold, cold_stats) = profile_container_tiled(&file, shape, &disk, &key).unwrap();
+    assert_eq!(cold, whole, "out-of-core profile diverged from the whole-matrix profile");
+    assert_eq!(encode_workload(&cold), encode_workload(&whole));
+    assert!(cold_stats.blocks_computed > 0 && cold_stats.blocks_loaded == 0);
+    assert!(
+        cold_stats.peak_bytes > 0 && cold_stats.peak_bytes < resident * 2,
+        "peak gauge {} B is not plausible for a {} B matrix",
+        cold_stats.peak_bytes,
+        resident
+    );
+
+    // Second run: every block comes back warm from the partial cache and
+    // the merged artifact is still byte-identical.
+    let (warm, warm_stats) = profile_container_tiled(&file, shape, &disk, &key).unwrap();
+    assert_eq!(warm, whole);
+    assert_eq!(warm_stats.blocks_computed, 0, "warm resume recomputed blocks");
+    assert_eq!(warm_stats.blocks_loaded, cold_stats.blocks_computed);
+
+    // The in-memory cached variant interoperates with the same store: it
+    // also resumes warm under the same key and shape.
+    let (mem, mem_stats) = profile_workload_tiled_cached(&a, &a, shape, 1, Some((&disk, &key)));
+    assert_eq!(mem, whole);
+    assert_eq!(mem_stats.blocks_computed, 0, "store partials did not carry across entry points");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn stream_rejects_budgets_too_small_for_a_row() {
+    let dir = scratch_dir("budget");
+    let a = generate(40, 40, 600, Profile::Uniform, 61);
+    let mtx = dir.join("a.mtx");
+    write_matrix_market(&mtx, &a).unwrap();
+    match stream_matrix_market(&mtx, 64) {
+        Err(MmError::Budget(msg)) => {
+            assert!(msg.contains("raise --mem-budget"), "budget error must say how to fix: {msg}")
+        }
+        other => panic!("tiny budget must fail loudly, got {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tile_axis_expands_with_a_scratchpad_feasibility_gate() {
+    // The tile axis parses next to the other config axes…
+    let axis = ConfigAxis::parse("tile", "8x8,16x16").unwrap();
+    assert_eq!(axis.name(), "tile");
+    assert_eq!(axis.len(), 2);
+
+    // …and sweeping over it yields one expanded config per shape, with the
+    // shape in the cell's config name and identical simulated results
+    // (tiling changes how the profile is computed, never what it reports).
+    let engine = SimEngine::new();
+    let key = WorkloadKey::suite("wv", 7, 64);
+    let base = AcceleratorConfig::extensor_maple();
+    let space = DesignSpace::over(vec![base.clone()])
+        .with_axis(Axis::Dataset(vec![key.clone()]))
+        .with_axis(Axis::tiling(vec![TileShape::new(8, 8), TileShape::new(16, 16)]))
+        .with_axis(Axis::Policy(vec![maple::coordinator::Policy::RoundRobin]));
+    let grid = engine.sweep(&space).unwrap();
+    assert_eq!(grid.configs.len(), 2);
+    assert!(grid.configs[0].ends_with("+tile=8x8"), "{:?}", grid.configs);
+    assert!(grid.configs[1].ends_with("+tile=16x16"), "{:?}", grid.configs);
+    let (a_cell, b_cell) = (grid.get(0, 0, 0), grid.get(0, 1, 0));
+    assert_eq!(a_cell.analytic.cycles, b_cell.analytic.cycles);
+    assert_eq!(a_cell.analytic.checksum.to_bits(), b_cell.analytic.checksum.to_bits());
+
+    // A shape whose working set exceeds the config's own scratchpad is
+    // rejected loudly at expansion, naming the axis and the config.
+    let huge = TileShape::new(1, 10_000_000);
+    let infeasible = DesignSpace::over(vec![base])
+        .with_axis(Axis::Dataset(vec![key]))
+        .with_axis(Axis::tiling(vec![huge]))
+        .with_axis(Axis::Policy(vec![maple::coordinator::Policy::RoundRobin]));
+    match engine.sweep(&infeasible) {
+        Err(EngineError::InvalidAxisPoint(axis, msg)) => {
+            assert_eq!(axis, "tile");
+            assert!(msg.contains("extensor-maple"), "{msg}");
+        }
+        other => panic!("infeasible tile must fail expansion, got {other:?}"),
+    }
+}
+
+#[test]
+fn prop_streamed_groups_match_in_memory_rows_across_seeds() {
+    // Random (matrix, budget) pairs: the streamed decomposition must agree
+    // with in-memory row extraction regardless of where the cuts land.
+    for seed in 0..12u64 {
+        let mut r = SplitMix64::new(seed ^ 0x7117);
+        let n = 24 + r.below(60) as usize;
+        let nnz = (n + r.below((n * n / 3) as u64) as usize).max(1);
+        let a = generate(n, n, nnz, Profile::PowerLaw { alpha: 0.6 + r.unit_f64() }, seed);
+        let dir = scratch_dir(&format!("prop-{seed}"));
+        let mtx = dir.join("a.mtx");
+        write_matrix_market(&mtx, &a).unwrap();
+        let resident = ((a.rows() + 1) * 8 + a.nnz() * 8) as u64;
+        // Budgets from "one group" down to "many groups"; the floor keeps
+        // the per-group target (budget / 4) above any single row's bytes,
+        // so the stream never hits the loud oversized-row rejection here.
+        let budget = (resident / (1 + r.below(6))).max((4 * (16 + 8 * n)) as u64);
+        let stream = stream_matrix_market(&mtx, budget).unwrap_or_else(|e| {
+            panic!("seed {seed}: budget {budget} on {resident} B matrix: {e}")
+        });
+        let mut covered = 0usize;
+        let mut nnz_seen = 0usize;
+        for slice in stream {
+            let slice = slice.unwrap();
+            assert_eq!(slice.row_lo, covered, "seed {seed}");
+            covered = slice.row_hi;
+            nnz_seen += slice.matrix.nnz();
+            assert_eq!(
+                slice.matrix,
+                tile::extract_rows(&a, slice.row_lo, slice.row_hi),
+                "seed {seed}"
+            );
+        }
+        assert_eq!((covered, nnz_seen), (a.rows(), a.nnz()), "seed {seed}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
