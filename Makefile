@@ -5,6 +5,7 @@
 #   make vet            determinism lint + lease-protocol model checker
 #   make bench          all harness-less benches, release mode
 #   make sweep-noc      topology × MACs design-space sweep on the wv workload
+#   make sweep-format   compression-format axis sweep, pivoted on fmt
 #   make sweep-sharded  2-way sharded sweep + merge, diffed vs the unsharded run
 #   make chaos          fault-injection harness: coordinator + workers, one faulty
 #   make explore        guided search vs the exhaustive grid + estval gate
@@ -14,7 +15,7 @@
 CARGO ?= cargo
 RUST_DIR := rust
 
-.PHONY: verify fmt clippy test vet bench sweep-noc sweep-sharded chaos explore tiling artifacts
+.PHONY: verify fmt clippy test vet bench sweep-noc sweep-format sweep-sharded chaos explore tiling artifacts
 
 verify: fmt clippy test vet
 
@@ -46,6 +47,14 @@ bench:
 sweep-noc:
 	cd $(RUST_DIR) && $(CARGO) run --release -- sweep --dataset wv --scale 64 \
 	        --axis noc=crossbar:8,mesh:4x2 --axis macs=2,4,8,16
+
+# Compression-format axis: re-price the wv/fb workloads under every
+# operand format and pivot the cycle grid on fmt (the csr column is the
+# formatless baseline; CI additionally asserts thread determinism and
+# publishes BENCH_format.json from the same grid).
+sweep-format:
+	cd $(RUST_DIR) && $(CARGO) run --release -- sweep --dataset wv,fb --scale 64 \
+	        --axis fmt=csr,csc,coo,bitmap,blocked --pivot fmt
 
 # The CI shard-matrix logic, reproducible on a laptop: run a small grid
 # 2-way sharded, merge the artifacts, and diff the merged CSV against the

@@ -19,6 +19,7 @@
 use crate::config::{AcceleratorConfig, AcceleratorKind, PeKind};
 use crate::noc::{Noc, Topology};
 use crate::sim::Workload;
+use crate::sparse::SparseFormat;
 use crate::trace::Counters;
 
 /// Mean hop count from the L1/DRAM port (endpoint 0) to all endpoints.
@@ -31,17 +32,23 @@ fn mean_hops(topology: Topology) -> f64 {
 
 /// Account all run-level flows for `cfg` into `c`.
 pub fn account_run_flows(cfg: &AcceleratorConfig, w: &Workload, c: &mut Counters) {
-    let a_words = 2 * w.nnz_a + w.rows as u64 + 1;
-    let b_words = 2 * w.nnz_b + w.rows_b as u64 + 1;
-    let c_words = 2 * w.out_nnz + w.rows as u64 + 1;
+    let a_words = w.fmt.a_words;
+    let b_words = w.fmt.b_words;
+    let c_words = w.fmt.c_words;
     let operand_delivery = 2 * w.total_products + 2 * w.nnz_a; // B + A streams to PEs
 
-    // -- DRAM: compulsory CSR streaming (identical across configs) --
-    c.dram_read += a_words + b_words;
-    c.dram_write += c_words;
+    // -- DRAM: compulsory operand streaming in the configured format, plus
+    //    the plan's gather and conversion terms (all zero for native CSR,
+    //    so CSR traffic is identical across configs) --
+    c.dram_read += a_words + b_words + w.fmt.gather_words + w.fmt.convert_read_words;
+    c.dram_write += c_words + w.fmt.convert_write_words;
 
-    // -- CSR codec at the DRAM boundary (all configs) --
+    // -- codec at the DRAM boundary (all configs); a non-CSR operand
+    //    format also re-encodes both operands through the converter --
     c.cd_elems += w.nnz_a + w.nnz_b + w.out_nnz;
+    if w.fmt.format != SparseFormat::Csr {
+        c.cd_elems += w.nnz_a + w.nnz_b;
+    }
 
     let hops = mean_hops(cfg.noc).max(1.0);
     let flit = |words: u64, h: f64| (words as f64 * h).round() as u64;
@@ -134,6 +141,27 @@ mod tests {
         account_run_flows(&AcceleratorConfig::extensor_maple(), &w, &mut c);
         assert!(c.l1_read > 0 && c.l1_write > 0);
         assert_eq!(c.pob_read + c.pob_write, 0);
+    }
+
+    #[test]
+    fn non_csr_plans_add_gather_and_conversion_traffic() {
+        let mut w = workload();
+        let mut base = Counters::default();
+        account_run_flows(&AcceleratorConfig::matraptor_maple(), &w, &mut base);
+        w.fmt = crate::sparse::FormatPlan::from_totals(
+            SparseFormat::Csc,
+            w.rows,
+            w.cols,
+            w.rows_b,
+            w.nnz_a,
+            w.nnz_b,
+            w.out_nnz,
+        );
+        let mut c = Counters::default();
+        account_run_flows(&AcceleratorConfig::matraptor_maple(), &w, &mut c);
+        assert!(c.dram_read > base.dram_read, "gather + convert reads charged");
+        assert!(c.dram_write > base.dram_write, "convert writes charged");
+        assert_eq!(c.cd_elems, base.cd_elems + w.nnz_a + w.nnz_b);
     }
 
     #[test]

@@ -73,8 +73,11 @@ impl Accelerator {
         // Run-level memory-hierarchy and interconnect flows.
         flows::account_run_flows(&self.cfg, w, &mut counters);
 
+        // Format conversion is a serial pre-pass through the converter, so
+        // its cycles add to the DRAM-bound time rather than overlapping it.
         let dram_words = w.compulsory_dram_words();
-        let cycles_dram_bound = (dram_words as f64 / self.cfg.dram.words_per_cycle).ceil() as u64;
+        let cycles_dram_bound = (dram_words as f64 / self.cfg.dram.words_per_cycle).ceil() as u64
+            + w.fmt.convert_cycles;
 
         let energy = EnergyBreakdown::from_counters(
             &counters,

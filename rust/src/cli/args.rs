@@ -1,0 +1,361 @@
+//! The flag scanner and shared argument parsers of the `maple` CLI.
+//!
+//! One grid definition, many drivers: [`space_from_args`] builds the
+//! design space that `sweep`, `explore`, `serve`, and `chaos` all run, so
+//! an explore result is always checkable against the sweep of the same
+//! flags. The legacy `--macs` shorthand is deprecated: it still works, but
+//! warns and rewrites itself to the typed `--axis macs=...` form.
+
+use crate::config::{axis, AcceleratorConfig, ConfigAxis};
+use crate::coordinator::Policy;
+use crate::sim::{Axis, CellModel, DesignSpace, SimEngine, WorkloadKey};
+use crate::sparse::{gen, suite, TileShape};
+
+/// Dependency-free CLI error type.
+pub type CliError = Box<dyn std::error::Error>;
+pub type CliResult<T = ()> = Result<T, CliError>;
+
+/// Minimal `--key value` / flag argument scanner.
+pub struct Args {
+    pub argv: Vec<String>,
+}
+
+impl Args {
+    pub fn new(argv: Vec<String>) -> Self {
+        Self { argv }
+    }
+
+    /// Value of `--key`, if present.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.argv
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.argv.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    /// Value of `--key` or a default.
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    /// Every value of a repeatable `--key` flag, in argv order. A trailing
+    /// occurrence with no following value yields nothing — compare against
+    /// [`Args::count`] to reject it instead of silently dropping it.
+    pub fn opt_all(&self, key: &str) -> Vec<&str> {
+        self.argv
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.as_str() == key)
+            .filter_map(|(i, _)| self.argv.get(i + 1))
+            .map(|s| s.as_str())
+            .collect()
+    }
+
+    /// How many times `--key` appears.
+    pub fn count(&self, key: &str) -> usize {
+        self.argv.iter().filter(|a| a.as_str() == key).count()
+    }
+
+    /// Presence of a bare flag.
+    pub fn flag(&self, key: &str) -> bool {
+        self.argv.iter().any(|a| a == key)
+    }
+
+    /// Parsed value of `--key` or a default.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> CliResult<T> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("bad value for {key}: {v}").into()),
+        }
+    }
+}
+
+/// The first positional (non-flag) argument, skipping the *values* of the
+/// listed value-bearing flags — `merge --bench-json out.json shards/` must
+/// not read `out.json` as the directory. Shared by `merge` and `ingest`.
+pub fn positional<'a>(args: &'a Args, value_flags: &[&str]) -> Option<&'a str> {
+    args.argv
+        .iter()
+        .enumerate()
+        .find(|(i, s)| {
+            !s.starts_with("--")
+                && (*i == 0 || !value_flags.contains(&args.argv[i - 1].as_str()))
+        })
+        .map(|(_, s)| s.as_str())
+}
+
+/// A built-in preset configuration, if `name` names one.
+pub fn parse_preset(name: &str) -> Option<AcceleratorConfig> {
+    match name {
+        "matraptor-baseline" => Some(AcceleratorConfig::matraptor_baseline()),
+        "matraptor-maple" => Some(AcceleratorConfig::matraptor_maple()),
+        "extensor-baseline" => Some(AcceleratorConfig::extensor_baseline()),
+        "extensor-maple" => Some(AcceleratorConfig::extensor_maple()),
+        _ => None,
+    }
+}
+
+/// The raw text of a `--config` file argument.
+pub fn read_config_file(path: &str) -> CliResult<String> {
+    std::fs::read_to_string(path)
+        .map_err(|e| format!("config {path} is not a preset and not readable: {e}").into())
+}
+
+/// A `--config` argument: a preset name first, then a TOML file path.
+pub fn parse_config(name: &str) -> CliResult<AcceleratorConfig> {
+    match parse_preset(name) {
+        Some(cfg) => Ok(cfg),
+        None => Ok(AcceleratorConfig::from_toml(&read_config_file(name)?)?),
+    }
+}
+
+/// Engine for one CLI invocation: disk-cache-backed (warm-start) per the
+/// shared env contract ([`SimEngine::from_env`]: `MAPLE_CACHE_DIR`,
+/// `MAPLE_NO_CACHE`) unless the user passed `--no-cache`.
+pub fn make_engine(args: &Args) -> SimEngine {
+    if args.flag("--no-cache") {
+        return SimEngine::new();
+    }
+    SimEngine::from_env()
+}
+
+/// A `--policy` point.
+pub fn parse_policy(name: &str) -> CliResult<Policy> {
+    match name {
+        "round-robin" => Ok(Policy::RoundRobin),
+        "chunked" => Ok(Policy::Chunked),
+        "greedy" => Ok(Policy::GreedyBalance),
+        other => Err(format!("unknown policy {other}").into()),
+    }
+}
+
+/// The `--cell-model` flag (analytic when absent).
+pub fn parse_cell_model(args: &Args) -> CliResult<CellModel> {
+    args.opt_or("--cell-model", "analytic").parse::<CellModel>().map_err(CliError::from)
+}
+
+/// Canonical Table-I abbreviations for a `--datasets` list (comma-separated
+/// names or abbreviations); the whole suite when the flag is absent or
+/// spelled `all`.
+pub fn dataset_names(datasets: Option<&str>) -> CliResult<Vec<&'static str>> {
+    match datasets {
+        Some("all") => Ok(suite::TABLE_I.iter().map(|d| d.abbrev).collect()),
+        Some(list) => list
+            .split(',')
+            .map(|s| {
+                suite::by_name(s.trim())
+                    .map(|d| d.abbrev)
+                    .ok_or_else(|| CliError::from(format!("unknown dataset {s}")))
+            })
+            .collect(),
+        None => Ok(suite::TABLE_I.iter().map(|d| d.abbrev).collect()),
+    }
+}
+
+/// `--mem-budget` byte counts: a plain number or one with a K/M/G
+/// binary-unit suffix (`64M` = 64 MiB).
+pub fn parse_mem_budget(spec: &str) -> CliResult<u64> {
+    let s = spec.trim();
+    let (digits, unit) = match s.as_bytes().last() {
+        Some(b'K' | b'k') => (&s[..s.len() - 1], 1u64 << 10),
+        Some(b'M' | b'm') => (&s[..s.len() - 1], 1u64 << 20),
+        Some(b'G' | b'g') => (&s[..s.len() - 1], 1u64 << 30),
+        _ => (s, 1),
+    };
+    let n: u64 = digits
+        .parse()
+        .map_err(|_| CliError::from(format!("bad --mem-budget {spec} (expected N[K|M|G])")))?;
+    n.checked_mul(unit).ok_or_else(|| format!("--mem-budget {spec} overflows u64").into())
+}
+
+/// A `--gen` family spec that is not a Table-I name:
+/// `uniform`, `powerlaw:ALPHA`, or `banded:REL_BW:CLUSTER`.
+pub fn parse_gen_profile(spec: &str) -> CliResult<gen::Profile> {
+    let mut parts = spec.split(':');
+    let kind = parts.next().unwrap_or("");
+    let parsed = match kind {
+        "uniform" => Some(gen::Profile::Uniform),
+        "powerlaw" => parts
+            .next()
+            .and_then(|v| v.parse().ok())
+            .map(|alpha| gen::Profile::PowerLaw { alpha }),
+        "banded" => {
+            let bw = parts.next().and_then(|v| v.parse().ok());
+            let cl = parts.next().and_then(|v| v.parse().ok());
+            match (bw, cl) {
+                (Some(rel_bandwidth), Some(cluster)) => {
+                    Some(gen::Profile::Banded { rel_bandwidth, cluster })
+                }
+                _ => None,
+            }
+        }
+        _ => None,
+    };
+    match parsed {
+        Some(p) if parts.next().is_none() => Ok(p),
+        _ => Err(format!(
+            "bad --gen {spec}: expected a Table-I dataset name or \
+             uniform | powerlaw:ALPHA | banded:REL_BW:CLUSTER"
+        )
+        .into()),
+    }
+}
+
+/// The `--tile` flag as a [`TileShape`]; `4096x4096` when absent (a shape
+/// big enough that small matrices degenerate to the untiled pass).
+pub fn parse_tile(args: &Args) -> CliResult<TileShape> {
+    TileShape::parse(args.opt_or("--tile", "4096"))
+        .map_err(|e| format!("bad --tile value: {e}").into())
+}
+
+/// Build the design space shared by `sweep`, `explore`, `serve`, and
+/// `chaos` from the `--config`/`--datasets`/`--axis`/`--policy`/`--scale`/
+/// `--seed` flags (one grid definition, many drivers — an explore result
+/// is always checkable against the sweep of the same flags).
+///
+/// Config axes: the [sweep] block of a --config TOML file first, then
+/// every repeatable --axis flag (including the operand-format axis,
+/// `--axis fmt=csr,csc,coo,bitmap,blocked`), then the deprecated --macs
+/// shorthand — which warns and rewrites itself to `--axis macs=...`; with
+/// no axis at all (and a single base config), the historical default
+/// MACs/PE sweep. Presets resolve before the filesystem (same order as
+/// [`parse_config`]), so only a genuinely loaded file contributes a
+/// [sweep] block. `--config paper` sweeps the four paper configurations as
+/// the base set — the Table-I / Fig.-9 grid — with no implicit default
+/// axis. `--pivot`, when present, is validated against the axis names here
+/// so a typo fails in milliseconds, not after minutes of simulation.
+pub fn space_from_args(args: &Args) -> CliResult<DesignSpace> {
+    let config_arg = args.opt_or("--config", "extensor-maple");
+    let (bases, mut axes): (Vec<AcceleratorConfig>, Vec<ConfigAxis>) = if config_arg == "paper" {
+        (AcceleratorConfig::paper_configs(), Vec::new())
+    } else {
+        match parse_preset(config_arg) {
+            Some(cfg) => (vec![cfg], Vec::new()),
+            None => {
+                let s = read_config_file(config_arg)?;
+                (vec![AcceleratorConfig::from_toml(&s)?], axis::sweep_axes_from_toml(&s)?)
+            }
+        }
+    };
+    let scale = args.parse_or("--scale", 4usize)?;
+    let seed = args.parse_or("--seed", 7u64)?;
+    let datasets = args.opt("--datasets").or_else(|| args.opt("--dataset"));
+    let keys: Vec<WorkloadKey> = dataset_names(Some(datasets.unwrap_or("wikiVote")))?
+        .iter()
+        .map(|&n| WorkloadKey::suite(n, seed, scale))
+        .collect();
+
+    let axis_flags = args.opt_all("--axis");
+    if axis_flags.len() != args.count("--axis") {
+        return Err("--axis expects a following name=v1,v2,... value".into());
+    }
+    for spec in axis_flags {
+        let (name, values) = spec.split_once('=').ok_or_else(|| {
+            CliError::from(format!("--axis expects name=v1,v2,... (got {spec:?})"))
+        })?;
+        axes.push(ConfigAxis::parse(name, values)?);
+    }
+    // The retired shorthand: still honoured, loudly, as its typed form.
+    if let Some(macs) = args.opt("--macs") {
+        eprintln!("warning: --macs is deprecated, use --axis macs={macs}");
+        axes.push(ConfigAxis::parse("macs", macs)?);
+    }
+    if axes.is_empty() && bases.len() == 1 {
+        axes.push(ConfigAxis::parse("macs", "1,2,4,8,16,32")?);
+    }
+    if let Some(p) = args.opt("--pivot") {
+        let mut known = vec!["dataset", "config"];
+        known.extend(axes.iter().map(|a| a.name()));
+        known.push("policy");
+        if !known.contains(&p) {
+            return Err(format!(
+                "--pivot {p}: not an axis of this sweep (expected one of: {})",
+                known.join(", ")
+            )
+            .into());
+        }
+    }
+    let policies: Vec<Policy> = args
+        .opt_or("--policy", "round-robin")
+        .split(',')
+        .map(|p| parse_policy(p.trim()))
+        .collect::<CliResult<_>>()?;
+
+    let model = parse_cell_model(args)?;
+    let mut space = DesignSpace::over(bases).with_cell_model(model).with_axis(Axis::Dataset(keys));
+    for a in axes {
+        space = space.with_axis(Axis::Config(a));
+    }
+    Ok(space.with_axis(Axis::Policy(policies)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(list: &[&str]) -> Args {
+        Args::new(list.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn flag_scanner_basics() {
+        let a = args(&["--seed", "9", "--axis", "macs=2,4", "--axis", "fmt=csr,coo", "--csv"]);
+        assert_eq!(a.opt("--seed"), Some("9"));
+        assert_eq!(a.opt_or("--scale", "4"), "4");
+        assert_eq!(a.opt_all("--axis"), ["macs=2,4", "fmt=csr,coo"]);
+        assert_eq!(a.count("--axis"), 2);
+        assert!(a.flag("--csv") && !a.flag("--quiet"));
+        assert_eq!(a.parse_or("--seed", 7u64).unwrap(), 9);
+        assert!(a.parse_or("--axis", 0u64).is_err());
+    }
+
+    #[test]
+    fn positional_skips_value_flag_values() {
+        let a = args(&["--bench-json", "out.json", "shards"]);
+        assert_eq!(positional(&a, &["--bench-json"]), Some("shards"));
+        assert_eq!(positional(&a, &[]), Some("out.json"));
+        assert_eq!(positional(&args(&["--csv"]), &[]), None);
+    }
+
+    #[test]
+    fn deprecated_macs_rewrites_to_the_typed_axis() {
+        let legacy = space_from_args(&args(&["--dataset", "wv", "--macs", "2,4"])).unwrap();
+        let typed = space_from_args(&args(&["--dataset", "wv", "--axis", "macs=2,4"])).unwrap();
+        assert_eq!(legacy.fingerprint().unwrap(), typed.fingerprint().unwrap());
+    }
+
+    #[test]
+    fn format_axis_parses_and_defaults_stay_put() {
+        let space = space_from_args(&args(&[
+            "--dataset",
+            "wv",
+            "--axis",
+            "fmt=csr,csc,coo,bitmap,blocked",
+        ]))
+        .unwrap();
+        let fmt = space.axes.iter().find(|a| a.name() == "fmt").expect("fmt axis");
+        assert_eq!(fmt.len(), 5);
+        // No axis at all still expands the historical default MACs sweep.
+        let plain = space_from_args(&args(&["--dataset", "wv"])).unwrap();
+        assert!(plain.axes.iter().any(|a| a.name() == "macs"));
+        // A typo'd pivot fails fast, before any simulation.
+        let bad = space_from_args(&args(&["--dataset", "wv", "--pivot", "warp"]));
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn dataset_lists_and_misc_parsers() {
+        assert_eq!(dataset_names(Some("wv,fb")).unwrap(), ["wv", "fb"]);
+        assert_eq!(dataset_names(Some("all")).unwrap().len(), suite::TABLE_I.len());
+        assert!(dataset_names(Some("nope")).is_err());
+        assert_eq!(parse_mem_budget("64M").unwrap(), 64 << 20);
+        assert_eq!(parse_mem_budget("123").unwrap(), 123);
+        assert!(parse_mem_budget("lots").is_err());
+        assert!(matches!(parse_gen_profile("uniform").unwrap(), gen::Profile::Uniform));
+        assert!(parse_gen_profile("banded:0.1").is_err());
+        assert!(parse_preset("extensor-maple").is_some());
+        assert!(parse_preset("warp-core").is_none());
+        assert!(parse_policy("greedy").is_ok() && parse_policy("jittery").is_err());
+    }
+}

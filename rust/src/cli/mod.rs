@@ -1,0 +1,18 @@
+//! Command-line front-end support shared by the `maple` binary.
+//!
+//! The binary itself ([`crate`]'s `main.rs`) only dispatches commands and
+//! renders output; everything that *interprets* arguments — the flag
+//! scanner, the config/preset/policy parsers, and the design-space builder
+//! shared by `sweep`, `explore`, `serve`, and `chaos` — lives in
+//! [`args`], so every command parses the same flag the same way and unit
+//! tests can exercise parsing without spawning a process. Argument parsing
+//! is in-tree: the offline build has no CLI dependency (DESIGN.md
+//! §Dependencies).
+
+pub mod args;
+
+pub use args::{
+    dataset_names, make_engine, parse_cell_model, parse_config, parse_gen_profile,
+    parse_mem_budget, parse_policy, parse_preset, parse_tile, positional, read_config_file,
+    space_from_args, Args, CliError, CliResult,
+};

@@ -20,12 +20,12 @@
 
 use super::AcceleratorConfig;
 use crate::noc::Topology;
-use crate::sparse::TileShape;
+use crate::sparse::{SparseFormat, TileShape};
 
 /// Axis parse/validation error.
 #[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
 pub enum AxisError {
-    #[error("unknown sweep axis {0:?} (noc | macs | prefetch | pe-model | tile)")]
+    #[error("unknown sweep axis {0:?} (noc | macs | prefetch | pe-model | tile | fmt)")]
     UnknownAxis(String),
     #[error("axis {axis}: bad point {value:?} ({reason})")]
     BadPoint { axis: &'static str, value: String, reason: String },
@@ -50,6 +50,11 @@ pub enum ConfigAxis {
     /// feasibility-checked against the config's scratchpad capacity at
     /// sweep expansion, so the axis ranges over *deployable* tilings.
     Tiling(Vec<TileShape>),
+    /// Operand compression format (`fmt = csr | csc | coo | bitmap |
+    /// blocked`). Each point swaps the operand images in the DRAM traffic
+    /// model ([`crate::sparse::FormatPlan`]); the `csr` point reproduces
+    /// the formatless sweep bit-for-bit.
+    Format(Vec<SparseFormat>),
 }
 
 impl ConfigAxis {
@@ -62,6 +67,7 @@ impl ConfigAxis {
             ConfigAxis::PrefetchDepth(_) => "prefetch",
             ConfigAxis::PeModel(_) => "pe-model",
             ConfigAxis::Tiling(_) => "tile",
+            ConfigAxis::Format(_) => "fmt",
         }
     }
 
@@ -73,6 +79,7 @@ impl ConfigAxis {
             ConfigAxis::PrefetchDepth(v) => v.len(),
             ConfigAxis::PeModel(v) => v.len(),
             ConfigAxis::Tiling(v) => v.len(),
+            ConfigAxis::Format(v) => v.len(),
         }
     }
 
@@ -84,6 +91,7 @@ impl ConfigAxis {
             ConfigAxis::PrefetchDepth(v) => v.is_empty(),
             ConfigAxis::PeModel(v) => v.is_empty(),
             ConfigAxis::Tiling(v) => v.is_empty(),
+            ConfigAxis::Format(v) => v.is_empty(),
         }
     }
 
@@ -95,6 +103,7 @@ impl ConfigAxis {
             ConfigAxis::PrefetchDepth(v) => v[i].to_string(),
             ConfigAxis::PeModel(v) => v[i].clone(),
             ConfigAxis::Tiling(v) => v[i].to_string(),
+            ConfigAxis::Format(v) => v[i].to_string(),
         }
     }
 
@@ -113,6 +122,7 @@ impl ConfigAxis {
             ConfigAxis::PrefetchDepth(v) => cfg.pe.prefetch_depth = v[i],
             ConfigAxis::PeModel(v) => cfg.pe.model = Some(v[i].clone()),
             ConfigAxis::Tiling(v) => cfg.tiling = Some(v[i]),
+            ConfigAxis::Format(v) => cfg.operand_format = v[i],
         }
         cfg.name.push_str(&format!("+{}={}", self.name(), self.label(i)));
     }
@@ -146,6 +156,15 @@ impl ConfigAxis {
                 for (i, s) in v.iter().enumerate() {
                     if v[..i].contains(s) {
                         return bad(s.to_string(), "duplicate tile shape");
+                    }
+                }
+            }
+            ConfigAxis::Format(v) => {
+                // The format set is closed, so — like tile shapes — the
+                // only degenerate form is a repeated point.
+                for (i, f) in v.iter().enumerate() {
+                    if v[..i].contains(f) {
+                        return bad(f.to_string(), "duplicate format");
                     }
                 }
             }
@@ -215,6 +234,18 @@ impl ConfigAxis {
                 })
                 .collect::<Result<Vec<_>, _>>()
                 .map(ConfigAxis::Tiling),
+            "fmt" => values
+                .split(',')
+                .map(|v| {
+                    let v = v.trim();
+                    v.parse::<SparseFormat>().map_err(|reason| AxisError::BadPoint {
+                        axis: "fmt",
+                        value: v.to_string(),
+                        reason,
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()
+                .map(ConfigAxis::Format),
             other => Err(AxisError::UnknownAxis(other.to_string())),
         }
     }
@@ -283,6 +314,10 @@ mod tests {
                 TileShape::new(1, 256),
             ])
         );
+        assert_eq!(
+            ConfigAxis::parse("fmt", "csr, csc,coo,bitmap, blocked").unwrap(),
+            ConfigAxis::Format(SparseFormat::ALL.to_vec())
+        );
     }
 
     #[test]
@@ -303,6 +338,9 @@ mod tests {
             ("tile", "64x"),
             ("tile", "0x32"),
             ("tile", "axb"),
+            ("fmt", "csr,csx"),
+            ("fmt", ""),
+            ("fmt", "CSR"),
         ] {
             assert!(
                 matches!(ConfigAxis::parse(name, values), Err(AxisError::BadPoint { .. })),
@@ -332,6 +370,10 @@ mod tests {
         tile.apply(0, &mut cfg);
         assert_eq!(cfg.tiling, Some(TileShape::new(64, 32)));
         assert!(cfg.name.ends_with("+tile=64x32"), "{}", cfg.name);
+        let fmt = ConfigAxis::Format(vec![SparseFormat::Csr, SparseFormat::Bitmap]);
+        fmt.apply(1, &mut cfg);
+        assert_eq!(cfg.operand_format, SparseFormat::Bitmap);
+        assert!(cfg.name.ends_with("+fmt=bitmap"), "{}", cfg.name);
     }
 
     #[test]
@@ -346,6 +388,12 @@ mod tests {
         let dup = ConfigAxis::Tiling(vec![TileShape::new(4, 4), TileShape::new(4, 4)]);
         assert!(dup.validate().is_err());
         assert!(ConfigAxis::parse("tile", "4x4,8x8").unwrap().validate().is_ok());
+        let dup = ConfigAxis::Format(vec![SparseFormat::Coo, SparseFormat::Coo]);
+        assert!(dup.validate().is_err());
+        assert!(ConfigAxis::parse("fmt", "csr,csc,coo,bitmap,blocked")
+            .unwrap()
+            .validate()
+            .is_ok());
     }
 
     #[test]

@@ -4,8 +4,8 @@
 //! paper configurations (§IV.B) ship as presets and any variant can be
 //! loaded from TOML (see `configs/*.toml` and the `design_space` example).
 //! Design-space sweeps vary configs along typed [`axis::ConfigAxis`] values
-//! (NoC topology, MACs/PE, prefetch depth, PE model), each point a pure
-//! transform of a base config.
+//! (NoC topology, MACs/PE, prefetch depth, PE model, tile shape, operand
+//! format), each point a pure transform of a base config.
 
 pub mod axis;
 pub mod toml_io;
@@ -14,7 +14,7 @@ pub use axis::{AxisError, ConfigAxis};
 
 use crate::mem::DramParams;
 use crate::noc::Topology;
-use crate::sparse::TileShape;
+use crate::sparse::{SparseFormat, TileShape};
 
 /// Which reference accelerator the configuration instantiates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -115,6 +115,13 @@ pub struct AcceleratorConfig {
     /// depends on it. Sweep expansion feasibility-checks each shape against
     /// `l1_bytes` ([`crate::sparse::tile::check_fits`]).
     pub tiling: Option<TileShape>,
+    /// Operand compression format the accelerator streams from DRAM
+    /// (`[format] operand` in TOML, `fmt` sweep axis). [`SparseFormat::Csr`]
+    /// — every paper preset — reproduces the legacy traffic model exactly;
+    /// any other format swaps the operand images in the DRAM model
+    /// ([`crate::sparse::FormatPlan`]) and charges the one-time CSR →
+    /// format conversion of A and B.
+    pub operand_format: SparseFormat,
 }
 
 impl AcceleratorConfig {
@@ -151,6 +158,7 @@ impl AcceleratorConfig {
             merge_passes: (num_queues as f64).log2().ceil() as u32,
             pob_words_per_cycle_per_pe: 0.0,
             tiling: None,
+            operand_format: SparseFormat::Csr,
         }
     }
 
@@ -180,6 +188,7 @@ impl AcceleratorConfig {
             merge_passes: 0,
             pob_words_per_cycle_per_pe: 0.0,
             tiling: None,
+            operand_format: SparseFormat::Csr,
         }
     }
 
@@ -209,6 +218,7 @@ impl AcceleratorConfig {
             merge_passes: 0,
             pob_words_per_cycle_per_pe: 12.0,
             tiling: None,
+            operand_format: SparseFormat::Csr,
         }
     }
 
@@ -239,6 +249,7 @@ impl AcceleratorConfig {
             merge_passes: 0,
             pob_words_per_cycle_per_pe: 0.0,
             tiling: None,
+            operand_format: SparseFormat::Csr,
         }
     }
 

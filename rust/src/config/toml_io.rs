@@ -5,7 +5,7 @@
 use super::{AcceleratorConfig, AcceleratorKind, PeConfig, PeKind, DEFAULT_PREFETCH_DEPTH};
 use crate::mem::DramParams;
 use crate::noc::Topology;
-use crate::sparse::TileShape;
+use crate::sparse::{SparseFormat, TileShape};
 use std::collections::BTreeMap;
 
 /// Config (de)serialisation error.
@@ -169,6 +169,13 @@ pub fn to_toml(c: &AcceleratorConfig) -> String {
         s.push_str("\n[tile]\n");
         s.push_str(&format!("shape = \"{t}\"\n"));
     }
+    // Same optional-section contract as `[tile]`: CSR (the default and
+    // every paper preset) is absence, so pre-format configs and their
+    // serialisations are byte-identical to today's.
+    if c.operand_format != SparseFormat::Csr {
+        s.push_str("\n[format]\n");
+        s.push_str(&format!("operand = \"{}\"\n", c.operand_format));
+    }
     s.push_str("\n[noc]\n");
     // The canonical spec syntax (`Topology: Display`), shared with the CLI
     // `--axis noc=...` flag and report labels.
@@ -243,6 +250,12 @@ pub fn from_toml(s: &str) -> Result<AcceleratorConfig, ConfigError> {
                 TileShape::parse(&spec)
                     .map_err(|e| ConfigError::BadValue("tile.shape", format!("{spec}: {e}")))?,
             ),
+        },
+        operand_format: match get_opt_str(&m, "format.operand")? {
+            None => SparseFormat::Csr,
+            Some(spec) => spec
+                .parse::<SparseFormat>()
+                .map_err(|e| ConfigError::BadValue("format.operand", format!("{spec}: {e}")))?,
         },
     })
 }
@@ -319,6 +332,31 @@ mod tests {
         // A malformed shape is a typed error, not a silent None.
         let bad = s.replace("shape = \"64x32\"", "shape = \"64x\"");
         assert!(matches!(from_toml(&bad), Err(ConfigError::BadValue("tile.shape", _))));
+    }
+
+    #[test]
+    fn operand_format_round_trips_and_rejects_garbage() {
+        // Absent section → CSR, and CSR serialises as absence: pre-format
+        // configs (and the paper presets) are byte-identical to before.
+        let c = AcceleratorConfig::extensor_maple();
+        assert!(!to_toml(&c).contains("[format]"));
+        assert_eq!(from_toml(&to_toml(&c)).unwrap().operand_format, SparseFormat::Csr);
+        // Every non-CSR format round-trips through the [format] section.
+        for f in SparseFormat::ALL.into_iter().filter(|&f| f != SparseFormat::Csr) {
+            let mut c = AcceleratorConfig::extensor_maple();
+            c.operand_format = f;
+            let s = to_toml(&c);
+            assert!(
+                s.contains("[format]") && s.contains(&format!("operand = \"{f}\"")),
+                "{s}"
+            );
+            assert_eq!(from_toml(&s).unwrap(), c);
+        }
+        // A malformed format is a typed error, not a silent CSR.
+        let mut c = AcceleratorConfig::extensor_maple();
+        c.operand_format = SparseFormat::Bitmap;
+        let bad = to_toml(&c).replace("operand = \"bitmap\"", "operand = \"bitmop\"");
+        assert!(matches!(from_toml(&bad), Err(ConfigError::BadValue("format.operand", _))));
     }
 
     #[test]

@@ -75,6 +75,7 @@
 pub mod accel;
 pub mod analysis;
 pub mod area;
+pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod energy;
@@ -104,5 +105,5 @@ pub mod prelude {
         ExploreResult, ExploreSpec, Explorer, Objective, ShardSpec, SimEngine, SimResult,
         Strategy, SweepResult, SweepShard, SweepSpec, Tier, WorkloadKey,
     };
-    pub use crate::sparse::{Coo, Csc, Csr};
+    pub use crate::sparse::{Coo, Csc, Csr, FormatPlan, SparseFormat};
 }

@@ -19,11 +19,15 @@
 //! to an on-disk cache ([`maple::sim::cache`]) so repeated runs start warm —
 //! `--no-cache` (or `MAPLE_NO_CACHE=1`) opts out, `MAPLE_CACHE_DIR`
 //! relocates it, and `maple cache stats|clear` inspects it. Argument parsing
-//! is in-tree (the offline build has no CLI dependency; DESIGN.md
-//! §Dependencies).
+//! lives in [`maple::cli`] — in-tree, shared by every command, no CLI
+//! dependency (DESIGN.md §Dependencies).
 
 use maple::analysis::{check, lint_path, ModelSpec, Mutation};
-use maple::config::{axis, AcceleratorConfig, ConfigAxis};
+use maple::cli::{
+    dataset_names, make_engine, parse_cell_model, parse_config, parse_gen_profile,
+    parse_mem_budget, parse_policy, parse_tile, positional, space_from_args, Args, CliResult,
+};
+use maple::config::{AcceleratorConfig, ConfigAxis};
 use maple::coordinator::Policy;
 use maple::report;
 use maple::sim::{
@@ -34,66 +38,6 @@ use maple::sim::{
     SweepResult, Tier, WorkerConfig, WorkloadKey, ESTIMATE_BAND,
 };
 use maple::sparse::{gen, io as sparse_io, stats, suite, TileShape};
-
-/// Dependency-free CLI error type.
-type CliError = Box<dyn std::error::Error>;
-type CliResult<T = ()> = Result<T, CliError>;
-
-/// Minimal `--key value` / flag argument scanner.
-struct Args {
-    argv: Vec<String>,
-}
-
-impl Args {
-    fn new(argv: Vec<String>) -> Self {
-        Self { argv }
-    }
-
-    /// Value of `--key`, if present.
-    fn opt(&self, key: &str) -> Option<&str> {
-        self.argv
-            .iter()
-            .position(|a| a == key)
-            .and_then(|i| self.argv.get(i + 1))
-            .map(|s| s.as_str())
-    }
-
-    /// Value of `--key` or a default.
-    fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
-        self.opt(key).unwrap_or(default)
-    }
-
-    /// Every value of a repeatable `--key` flag, in argv order. A trailing
-    /// occurrence with no following value yields nothing — compare against
-    /// [`Args::count`] to reject it instead of silently dropping it.
-    fn opt_all(&self, key: &str) -> Vec<&str> {
-        self.argv
-            .iter()
-            .enumerate()
-            .filter(|(_, a)| a.as_str() == key)
-            .filter_map(|(i, _)| self.argv.get(i + 1))
-            .map(|s| s.as_str())
-            .collect()
-    }
-
-    /// How many times `--key` appears.
-    fn count(&self, key: &str) -> usize {
-        self.argv.iter().filter(|a| a.as_str() == key).count()
-    }
-
-    /// Presence of a bare flag.
-    fn flag(&self, key: &str) -> bool {
-        self.argv.iter().any(|a| a == key)
-    }
-
-    /// Parsed value of `--key` or a default.
-    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> CliResult<T> {
-        match self.opt(key) {
-            None => Ok(default),
-            Some(v) => v.parse().map_err(|_| format!("bad value for {key}: {v}").into()),
-        }
-    }
-}
 
 const USAGE: &str = "\
 maple — row-wise product sparse tensor accelerator framework
@@ -113,14 +57,20 @@ COMMANDS:
   sweep  [--config <preset|file.toml|paper>] [--dataset wv[,fb,...]|all]
            [--axis noc=crossbar:8,mesh:4x2] [--axis macs=2,4,8,16]
            [--axis prefetch=2,4,8] [--axis pe-model=name,...]
+           [--axis fmt=csr,csc,coo,bitmap,blocked]
            [--policy round-robin[,chunked,greedy]] [--pivot <axis>]
-           [--macs 1,2,4,...] [--scale N] [--seed S] [--threads N]
-           [--cell-model analytic|des|both]
+           [--scale N] [--seed S] [--threads N]
+           [--cell-model analytic|des|both] [--bench-json <path>]
            [--shard i/n --out <dir>] [--fingerprint]
            Design-space sweep over the base config: each repeatable --axis
            adds one typed grid dimension (axes also load from a [sweep]
            block in the --config TOML); --pivot renders the cycle grid
-           pivoted on that axis. --macs is shorthand for --axis macs=...
+           pivoted on that axis. The fmt axis re-prices each workload
+           under an operand compression format (the csr point is
+           bit-identical to a formatless sweep); with a fmt axis,
+           --bench-json writes the per-format BENCH_format.json. The old
+           --macs flag is deprecated; it warns and rewrites itself to
+           --axis macs=...
            --config paper sweeps the four paper configurations (no default
            axis), --datasets all is the whole Table-I suite. --shard i/n
            computes only that contiguous slice of the cell grid and writes
@@ -228,71 +178,6 @@ Simulation commands warm-start from the on-disk workload cache
 --no-cache (or set MAPLE_NO_CACHE=1) to recompute from scratch.
 ";
 
-/// A built-in preset configuration, if `name` names one.
-fn parse_preset(name: &str) -> Option<AcceleratorConfig> {
-    match name {
-        "matraptor-baseline" => Some(AcceleratorConfig::matraptor_baseline()),
-        "matraptor-maple" => Some(AcceleratorConfig::matraptor_maple()),
-        "extensor-baseline" => Some(AcceleratorConfig::extensor_baseline()),
-        "extensor-maple" => Some(AcceleratorConfig::extensor_maple()),
-        _ => None,
-    }
-}
-
-/// The raw text of a `--config` file argument.
-fn read_config_file(path: &str) -> CliResult<String> {
-    std::fs::read_to_string(path)
-        .map_err(|e| format!("config {path} is not a preset and not readable: {e}").into())
-}
-
-fn parse_config(name: &str) -> CliResult<AcceleratorConfig> {
-    match parse_preset(name) {
-        Some(cfg) => Ok(cfg),
-        None => Ok(AcceleratorConfig::from_toml(&read_config_file(name)?)?),
-    }
-}
-
-/// Engine for one CLI invocation: disk-cache-backed (warm-start) per the
-/// shared env contract ([`SimEngine::from_env`]: `MAPLE_CACHE_DIR`,
-/// `MAPLE_NO_CACHE`) unless the user passed `--no-cache`.
-fn make_engine(args: &Args) -> SimEngine {
-    if args.flag("--no-cache") {
-        return SimEngine::new();
-    }
-    SimEngine::from_env()
-}
-
-fn parse_policy(name: &str) -> CliResult<Policy> {
-    match name {
-        "round-robin" => Ok(Policy::RoundRobin),
-        "chunked" => Ok(Policy::Chunked),
-        "greedy" => Ok(Policy::GreedyBalance),
-        other => Err(format!("unknown policy {other}").into()),
-    }
-}
-
-fn parse_cell_model(args: &Args) -> CliResult<CellModel> {
-    args.opt_or("--cell-model", "analytic").parse::<CellModel>().map_err(CliError::from)
-}
-
-/// Canonical Table-I abbreviations for a `--datasets` list (comma-separated
-/// names or abbreviations); the whole suite when the flag is absent or
-/// spelled `all`.
-fn dataset_names(datasets: Option<&str>) -> CliResult<Vec<&'static str>> {
-    match datasets {
-        Some("all") => Ok(suite::TABLE_I.iter().map(|d| d.abbrev).collect()),
-        Some(list) => list
-            .split(',')
-            .map(|s| {
-                suite::by_name(s.trim())
-                    .map(|d| d.abbrev)
-                    .ok_or_else(|| CliError::from(format!("unknown dataset {s}")))
-            })
-            .collect(),
-        None => Ok(suite::TABLE_I.iter().map(|d| d.abbrev).collect()),
-    }
-}
-
 /// DES vs analytic cross-validation: one `CellModel::Both` sweep over the
 /// four paper configurations, rendered as the agreement table; any cell
 /// outside the documented band is a hard error (the CI gate).
@@ -370,86 +255,11 @@ fn render_grid(grid: &SweepResult, pivot: Option<&str>, md: bool) -> CliResult {
     Ok(())
 }
 
-/// Build the design space shared by `sweep` and `explore` from the
-/// `--config`/`--datasets`/`--axis`/`--macs`/`--policy`/`--scale`/`--seed`
-/// flags (one grid definition, two drivers — an explore result is always
-/// checkable against the sweep of the same flags).
-///
-/// Config axes: the [sweep] block of a --config TOML file first, then
-/// every repeatable --axis flag, then the legacy --macs shorthand; with no
-/// axis at all (and a single base config), the historical default MACs/PE
-/// sweep. Presets resolve before the filesystem (same order as
-/// `parse_config`), so only a genuinely loaded file contributes a [sweep]
-/// block. `--config paper` sweeps the four paper configurations as the
-/// base set — the Table-I / Fig.-9 grid — with no implicit default axis.
-/// `--pivot`, when present, is validated against the axis names here so a
-/// typo fails in milliseconds, not after minutes of simulation.
-fn space_from_args(args: &Args) -> CliResult<DesignSpace> {
-    let config_arg = args.opt_or("--config", "extensor-maple");
-    let (bases, mut axes): (Vec<AcceleratorConfig>, Vec<ConfigAxis>) = if config_arg == "paper" {
-        (AcceleratorConfig::paper_configs(), Vec::new())
-    } else {
-        match parse_preset(config_arg) {
-            Some(cfg) => (vec![cfg], Vec::new()),
-            None => {
-                let s = read_config_file(config_arg)?;
-                (vec![AcceleratorConfig::from_toml(&s)?], axis::sweep_axes_from_toml(&s)?)
-            }
-        }
-    };
-    let scale = args.parse_or("--scale", 4usize)?;
-    let seed = args.parse_or("--seed", 7u64)?;
-    let datasets = args.opt("--datasets").or_else(|| args.opt("--dataset"));
-    let keys: Vec<WorkloadKey> = dataset_names(Some(datasets.unwrap_or("wikiVote")))?
-        .iter()
-        .map(|&n| WorkloadKey::suite(n, seed, scale))
-        .collect();
-
-    let axis_flags = args.opt_all("--axis");
-    if axis_flags.len() != args.count("--axis") {
-        return Err("--axis expects a following name=v1,v2,... value".into());
-    }
-    for spec in axis_flags {
-        let (name, values) = spec.split_once('=').ok_or_else(|| {
-            CliError::from(format!("--axis expects name=v1,v2,... (got {spec:?})"))
-        })?;
-        axes.push(ConfigAxis::parse(name, values)?);
-    }
-    if let Some(macs) = args.opt("--macs") {
-        axes.push(ConfigAxis::parse("macs", macs)?);
-    }
-    if axes.is_empty() && bases.len() == 1 {
-        axes.push(ConfigAxis::parse("macs", "1,2,4,8,16,32")?);
-    }
-    if let Some(p) = args.opt("--pivot") {
-        let mut known = vec!["dataset", "config"];
-        known.extend(axes.iter().map(|a| a.name()));
-        known.push("policy");
-        if !known.contains(&p) {
-            return Err(format!(
-                "--pivot {p}: not an axis of this sweep (expected one of: {})",
-                known.join(", ")
-            )
-            .into());
-        }
-    }
-    let policies: Vec<Policy> = args
-        .opt_or("--policy", "round-robin")
-        .split(',')
-        .map(|p| parse_policy(p.trim()))
-        .collect::<CliResult<_>>()?;
-
-    let model = parse_cell_model(args)?;
-    let mut space = DesignSpace::over(bases).with_cell_model(model).with_axis(Axis::Dataset(keys));
-    for a in axes {
-        space = space.with_axis(Axis::Config(a));
-    }
-    Ok(space.with_axis(Axis::Policy(policies)))
-}
-
-/// The `sweep` command: build the design space from flags/TOML, then run
-/// it whole, run one shard of it (`--shard i/n --out dir`), or just print
-/// its fingerprint (`--fingerprint`).
+/// The `sweep` command: build the design space from flags/TOML
+/// ([`space_from_args`]), then run it whole, run one shard of it
+/// (`--shard i/n --out dir`), or just print its fingerprint
+/// (`--fingerprint`). With a `fmt` axis, `--bench-json` writes the
+/// per-format BENCH_format.json.
 fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
     let space = space_from_args(args)?;
     let pivot = args.opt("--pivot");
@@ -486,8 +296,17 @@ fn sweep_cmd(args: &Args, csv: bool) -> CliResult {
         return Ok(());
     }
 
+    let t = std::time::Instant::now();
     let grid = engine.sweep(&space)?;
+    let wall_ms = t.elapsed().as_millis() as u64;
     render_grid(&grid, pivot, !csv)?;
+
+    if let Some(path) = args.opt("--bench-json") {
+        let json = report::bench_format_json(&grid, wall_ms)
+            .ok_or("sweep --bench-json needs a fmt axis (--axis fmt=csr,coo,...)")?;
+        std::fs::write(path, json).map_err(|e| format!("cannot write {path}: {e}"))?;
+        eprintln!("bench: wrote {path}");
+    }
 
     // When the grid ranges over tile shapes, also surface the per-row-group
     // nnz balance each shape induces on each dataset — the load skew a
@@ -643,23 +462,13 @@ fn estval_cmd(args: &Args, csv: bool) -> CliResult {
 /// Corrupt or incompatible artifacts stay fatal even then.
 fn merge_cmd(args: &Args, csv: bool) -> CliResult {
     // The shard directory is positional but may come before or after the
-    // flags; skip over flags *and* the values of the value-bearing ones
-    // (`merge --bench-json out.json shards/` must not read `out.json` as
-    // the directory).
-    const VALUE_FLAGS: [&str; 2] = ["--pivot", "--bench-json"];
-    let dir = args
-        .argv
-        .iter()
-        .enumerate()
-        .find(|(i, s)| {
-            !s.starts_with("--")
-                && (*i == 0 || !VALUE_FLAGS.contains(&args.argv[i - 1].as_str()))
-        })
-        .map(|(_, s)| s)
-        .ok_or(
-            "usage: maple merge <dir> [--allow-partial] [--pivot <axis>] [--bench-json <path>]",
-        )?;
-    let shards = shard::read_dir(std::path::Path::new(dir.as_str()))?;
+    // flags; `positional` skips flags *and* the values of the value-bearing
+    // ones (`merge --bench-json out.json shards/` must not read `out.json`
+    // as the directory).
+    let dir = positional(args, &["--pivot", "--bench-json"]).ok_or(
+        "usage: maple merge <dir> [--allow-partial] [--pivot <axis>] [--bench-json <path>]",
+    )?;
+    let shards = shard::read_dir(std::path::Path::new(dir))?;
     let grid = match shard::merge(&shards) {
         Ok(grid) => grid,
         Err(e @ shard::ShardError::MissingShards { .. }) if args.flag("--allow-partial") => {
@@ -885,62 +694,6 @@ fn vet_cmd(args: &Args) -> CliResult {
     Ok(())
 }
 
-/// `--mem-budget` byte counts: a plain number or one with a K/M/G
-/// binary-unit suffix (`64M` = 64 MiB).
-fn parse_mem_budget(spec: &str) -> CliResult<u64> {
-    let s = spec.trim();
-    let (digits, unit) = match s.as_bytes().last() {
-        Some(b'K' | b'k') => (&s[..s.len() - 1], 1u64 << 10),
-        Some(b'M' | b'm') => (&s[..s.len() - 1], 1u64 << 20),
-        Some(b'G' | b'g') => (&s[..s.len() - 1], 1u64 << 30),
-        _ => (s, 1),
-    };
-    let n: u64 = digits
-        .parse()
-        .map_err(|_| CliError::from(format!("bad --mem-budget {spec} (expected N[K|M|G])")))?;
-    n.checked_mul(unit).ok_or_else(|| format!("--mem-budget {spec} overflows u64").into())
-}
-
-/// A `--gen` family spec that is not a Table-I name:
-/// `uniform`, `powerlaw:ALPHA`, or `banded:REL_BW:CLUSTER`.
-fn parse_gen_profile(spec: &str) -> CliResult<gen::Profile> {
-    let mut parts = spec.split(':');
-    let kind = parts.next().unwrap_or("");
-    let parsed = match kind {
-        "uniform" => Some(gen::Profile::Uniform),
-        "powerlaw" => parts
-            .next()
-            .and_then(|v| v.parse().ok())
-            .map(|alpha| gen::Profile::PowerLaw { alpha }),
-        "banded" => {
-            let bw = parts.next().and_then(|v| v.parse().ok());
-            let cl = parts.next().and_then(|v| v.parse().ok());
-            match (bw, cl) {
-                (Some(rel_bandwidth), Some(cluster)) => {
-                    Some(gen::Profile::Banded { rel_bandwidth, cluster })
-                }
-                _ => None,
-            }
-        }
-        _ => None,
-    };
-    match parsed {
-        Some(p) if parts.next().is_none() => Ok(p),
-        _ => Err(format!(
-            "bad --gen {spec}: expected a Table-I dataset name or \
-             uniform | powerlaw:ALPHA | banded:REL_BW:CLUSTER"
-        )
-        .into()),
-    }
-}
-
-/// The `--tile` flag as a [`TileShape`]; `4096x4096` when absent (a shape
-/// big enough that small matrices degenerate to the untiled pass).
-fn parse_tile(args: &Args) -> CliResult<TileShape> {
-    TileShape::parse(args.opt_or("--tile", "4096"))
-        .map_err(|e| format!("bad --tile value: {e}").into())
-}
-
 /// The `ingest` command: the out-of-core pipeline. Generate a Matrix-Market
 /// file (`--gen`), stream it into a row-group container under a memory
 /// budget (`--out`), run the tiled profiler over either form
@@ -988,15 +741,9 @@ fn ingest_cmd(args: &Args, csv: bool) -> CliResult {
         "--cols",
         "--nnz",
     ];
-    let input = args
-        .argv
-        .iter()
-        .enumerate()
-        .find(|(i, s)| {
-            !s.starts_with("--") && (*i == 0 || !VALUE_FLAGS.contains(&args.argv[i - 1].as_str()))
-        })
-        .map(|(_, s)| s.clone())
-        .ok_or("usage: maple ingest <in.mtx|in.mrg> [--out|--profile-out|--report] ...")?;
+    let input = positional(args, &VALUE_FLAGS)
+        .ok_or("usage: maple ingest <in.mtx|in.mrg> [--out|--profile-out|--report] ...")?
+        .to_string();
     let path = std::path::Path::new(&input);
     let is_container = input.ends_with(".mrg");
 

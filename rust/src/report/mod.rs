@@ -480,6 +480,51 @@ pub fn bench_sweep_json(shards: &[SweepShard], grid: &SweepResult) -> String {
     s
 }
 
+/// The machine-readable format-axis benchmark (`BENCH_format.json`),
+/// emitted by the CI format job: the grid shape, sweep wall-clock and
+/// throughput, and one entry per `fmt` point with its cell count,
+/// authoritative cycle total, modeled DRAM traffic, and per-format
+/// throughput. `None` when the grid has no `fmt` dimension. Hand-rolled
+/// JSON like [`bench_sweep_json`].
+pub fn bench_format_json(grid: &SweepResult, wall_ms: u64) -> Option<String> {
+    let p = grid.dims.iter().position(|d| d.name == "fmt")?;
+    let cells_per_sec = |cells: usize, ms: u64| cells as f64 * 1000.0 / ms.max(1) as f64;
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"format\",\n");
+    s.push_str(&format!("  \"grid\": \"{}\",\n", grid.shape_line()));
+    s.push_str(&format!("  \"cells\": {},\n", grid.cell_count()));
+    s.push_str(&format!("  \"wall_ms\": {wall_ms},\n"));
+    s.push_str(&format!(
+        "  \"cells_per_sec\": {:.3},\n",
+        cells_per_sec(grid.cell_count(), wall_ms)
+    ));
+    s.push_str("  \"formats\": [\n");
+    let labels = &grid.dims[p].labels;
+    for (fi, label) in labels.iter().enumerate() {
+        let mut cells = 0usize;
+        let mut cycles = 0u64;
+        let mut dram = 0u64;
+        for idx in 0..grid.cell_count() {
+            let cell = grid.cell(idx);
+            if cell.coords[p].index != fi {
+                continue;
+            }
+            cells += 1;
+            cycles += cell.cycles(grid.cell_model);
+            dram += cell.analytic.counters.dram_read + cell.analytic.counters.dram_write;
+        }
+        s.push_str(&format!(
+            "    {{\"format\": \"{label}\", \"cells\": {cells}, \"cycles\": {cycles}, \
+             \"dram_words\": {dram}, \"cells_per_sec\": {:.3}}}{}\n",
+            cells_per_sec(cells, wall_ms),
+            if fi + 1 < labels.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    Some(s)
+}
+
 /// The `maple explore` report: one row per dataset search — sub-grid size,
 /// the best point's axis coordinates and fitness, the fresh-simulation
 /// counts per tier, and the memo/journal hit split — followed by each
@@ -908,6 +953,45 @@ mod tests {
             assert!(json.contains(needle), "missing {needle} in:\n{json}");
         }
         assert_eq!(json.matches("\"index\":").count(), 2, "{json}");
+    }
+
+    #[test]
+    fn bench_format_json_covers_every_format_point() {
+        use crate::sim::{Axis, DesignSpace, SimEngine, WorkloadKey};
+        use crate::sparse::SparseFormat;
+        let engine = SimEngine::new();
+        let grid = engine
+            .sweep(
+                &DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+                    .with_axis(Axis::Dataset(vec![WorkloadKey::suite("wv", 7, 64)]))
+                    .with_axis(Axis::format(SparseFormat::ALL.to_vec())),
+            )
+            .unwrap();
+        let json = bench_format_json(&grid, 40).unwrap();
+        for needle in [
+            "\"bench\": \"format\"",
+            "\"cells\": 5",
+            "\"wall_ms\": 40",
+            "\"format\": \"csr\"",
+            "\"format\": \"csc\"",
+            "\"format\": \"coo\"",
+            "\"format\": \"bitmap\"",
+            "\"format\": \"blocked\"",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        assert_eq!(json.matches("\"cells\": 1,").count(), 5, "{json}");
+        // The `fmt` pivot rides the generic pivot report.
+        let pv = sweep_pivot_report(&grid, "fmt", true).unwrap();
+        assert!(pv.contains("fmt=csr") && pv.contains("fmt=blocked"), "{pv}");
+        // A formatless grid has no format benchmark.
+        let plain = engine
+            .sweep(
+                &DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+                    .with_axis(Axis::Dataset(vec![WorkloadKey::suite("wv", 7, 64)])),
+            )
+            .unwrap();
+        assert!(bench_format_json(&plain, 40).is_none());
     }
 
     #[test]

@@ -33,9 +33,13 @@
 //!
 //! Workload payload sections, in order: `rows`, `cols`, `rows_b`, `nnz_a`,
 //! `nnz_b`, `out_nnz`, `total_products` (u64 each), `checksum` (f64 bits),
-//! `profile count` (u64, must equal `rows`), then one 16-byte record per
-//! row profile (`a_nnz` u32, `products` u64, `out_nnz` u32). The summed
-//! per-row `out_nnz`/`products` must reproduce the header totals.
+//! the operand-format plan (format tag byte, then `a_words`, `b_words`,
+//! `c_words`, `gather_words`, `convert_read_words`, `convert_write_words`,
+//! `convert_cycles` as u64 each), `profile count` (u64, must equal
+//! `rows`), then one 16-byte record per row profile (`a_nnz` u32,
+//! `products` u64, `out_nnz` u32). The summed per-row `out_nnz`/`products`
+//! must reproduce the header totals, and a CSR plan must reproduce the
+//! closed-form CSR word counts for the stored totals.
 //!
 //! CSR payload sections: `rows`, `cols`, `nnz` (u64 each), `row_ptr`
 //! ((rows+1) × u64), `col_id` (nnz × u32), `value` (nnz × f32 bits). The
@@ -50,7 +54,7 @@ use crate::sim::engine::{coords_for, intern_dim_name, AxisDim, CellModel, CellRe
 use crate::sim::explore::{EvalJournal, EvalRecord, TIER_ESTIMATE};
 use crate::sim::shard::{ShardMeta, ShardSpec, SweepShard};
 use crate::sim::{SimResult, TilePartial, Workload};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, FormatPlan, SparseFormat};
 use crate::trace::Counters;
 
 /// Bump on any layout change: old artifacts are rejected (and evicted) on
@@ -63,7 +67,12 @@ use crate::trace::Counters;
 /// canonical order the tiled merge replays), which changes every stored
 /// workload's checksum bits — a semantic change, so old artifacts must be
 /// evicted, not reinterpreted.
-pub const CODEC_VERSION: u32 = 2;
+///
+/// v3: workload artifacts carry the operand-format plan
+/// ([`crate::sparse::FormatPlan`]) — pre-format artifacts have no plan
+/// section and must be evicted, not defaulted, or a warm sweep under a
+/// `fmt` axis would silently alias every format to CSR.
+pub const CODEC_VERSION: u32 = 3;
 
 pub(crate) const MAGIC_CSR: [u8; 8] = *b"MAPLECSR";
 const MAGIC_WORKLOAD: [u8; 8] = *b"MAPLEWL\0";
@@ -145,7 +154,7 @@ pub fn encode_csr(a: &Csr) -> Vec<u8> {
 
 /// Encode a profiled workload.
 pub fn encode_workload(w: &Workload) -> Vec<u8> {
-    let mut p = Vec::with_capacity(72 + w.profiles.len() * 16);
+    let mut p = Vec::with_capacity(137 + w.profiles.len() * 16);
     put_u64(&mut p, w.rows as u64);
     put_u64(&mut p, w.cols as u64);
     put_u64(&mut p, w.rows_b as u64);
@@ -154,6 +163,14 @@ pub fn encode_workload(w: &Workload) -> Vec<u8> {
     put_u64(&mut p, w.out_nnz);
     put_u64(&mut p, w.total_products);
     put_u64(&mut p, w.checksum.to_bits());
+    p.push(w.fmt.format.tag());
+    put_u64(&mut p, w.fmt.a_words);
+    put_u64(&mut p, w.fmt.b_words);
+    put_u64(&mut p, w.fmt.c_words);
+    put_u64(&mut p, w.fmt.gather_words);
+    put_u64(&mut p, w.fmt.convert_read_words);
+    put_u64(&mut p, w.fmt.convert_write_words);
+    put_u64(&mut p, w.fmt.convert_cycles);
     put_u64(&mut p, w.profiles.len() as u64);
     for r in &w.profiles {
         put_u32(&mut p, r.a_nnz);
@@ -558,6 +575,26 @@ pub fn decode_workload(bytes: &[u8]) -> Result<Workload, CodecError> {
     let out_nnz = r.u64()?;
     let total_products = r.u64()?;
     let checksum = f64::from_bits(r.u64()?);
+    let tag = r.byte()?;
+    let format = SparseFormat::from_tag(tag)
+        .ok_or_else(|| CodecError::Inconsistent(format!("unknown format tag {tag}")))?;
+    let fmt = FormatPlan {
+        format,
+        a_words: r.u64()?,
+        b_words: r.u64()?,
+        c_words: r.u64()?,
+        gather_words: r.u64()?,
+        convert_read_words: r.u64()?,
+        convert_write_words: r.u64()?,
+        convert_cycles: r.u64()?,
+    };
+    // The CSR plan is a pure function of the totals — a stored plan that
+    // disagrees is corrupt, not merely stale.
+    if format == SparseFormat::Csr && fmt != FormatPlan::csr(rows, rows_b, nnz_a, nnz_b, out_nnz) {
+        return Err(CodecError::Inconsistent(
+            "CSR format plan disagrees with the workload totals".into(),
+        ));
+    }
     let n_profiles = r.index()?;
     if n_profiles != rows {
         return Err(CodecError::Inconsistent(format!(
@@ -584,7 +621,18 @@ pub fn decode_workload(bytes: &[u8]) -> Result<Workload, CodecError> {
             "profile product sum {sum_products} != stored total {total_products}"
         )));
     }
-    Ok(Workload { rows, cols, rows_b, nnz_a, nnz_b, out_nnz, total_products, profiles, checksum })
+    Ok(Workload {
+        rows,
+        cols,
+        rows_b,
+        nnz_a,
+        nnz_b,
+        out_nnz,
+        total_products,
+        profiles,
+        checksum,
+        fmt,
+    })
 }
 
 /// Encode one tiled-profile block partial. Payload sections, in order:
@@ -872,6 +920,38 @@ mod tests {
         let d = decode_workload(&encode_workload(&w)).unwrap();
         assert_eq!(d, w);
         assert_eq!(d.checksum.to_bits(), w.checksum.to_bits());
+    }
+
+    #[test]
+    fn workload_format_plans_round_trip_and_are_validated() {
+        // Non-CSR plans survive the round trip bit-exactly.
+        let mut w = sample_workload();
+        w.fmt = FormatPlan::from_totals(
+            SparseFormat::Bitmap,
+            w.rows,
+            w.cols,
+            w.rows_b,
+            w.nnz_a,
+            w.nnz_b,
+            w.out_nnz,
+        );
+        let d = decode_workload(&encode_workload(&w)).unwrap();
+        assert_eq!(d, w);
+        // A CSR plan that disagrees with the stored totals is corrupt.
+        let mut w = sample_workload();
+        w.fmt.a_words += 1;
+        assert!(matches!(
+            decode_workload(&encode_workload(&w)),
+            Err(CodecError::Inconsistent(_))
+        ));
+        // Unknown format tags are rejected (re-seal so the checksum holds).
+        let sealed = encode_workload(&sample_workload());
+        let mut payload = sealed[HEADER_LEN..].to_vec();
+        payload[64] = 9; // the tag byte follows the eight u64 header fields
+        assert!(matches!(
+            decode_workload(&seal(MAGIC_WORKLOAD, &payload)),
+            Err(CodecError::Inconsistent(_))
+        ));
     }
 
     fn sample_partial() -> TilePartial {

@@ -37,7 +37,7 @@ use super::codec::{self, CODEC_VERSION};
 use crate::sim::engine::WorkloadKey;
 use crate::sim::explore::EvalJournal;
 use crate::sim::{TilePartial, Workload};
-use crate::sparse::Csr;
+use crate::sparse::{Csr, SparseFormat};
 
 /// Environment override for the cache directory (CLI and benches honour it).
 pub const CACHE_DIR_ENV: &str = "MAPLE_CACHE_DIR";
@@ -154,6 +154,29 @@ impl DiskCache {
         ))
     }
 
+    /// The artifact file for a workload *derived* for a non-CSR operand
+    /// format: the base workload key plus a `-f{label}` component, so a
+    /// format axis point never aliases the native-CSR artifact or another
+    /// format's.
+    pub fn workload_fmt_path(
+        &self,
+        key: &WorkloadKey,
+        profile_chunks: usize,
+        fmt: SparseFormat,
+    ) -> PathBuf {
+        self.dir.join(format!(
+            "{}-s{}-d{}-pt{}-f{}-{:016x}.v{}.{}",
+            sanitize(&key.dataset),
+            key.seed,
+            key.scale,
+            profile_chunks,
+            fmt.label(),
+            codec::fnv1a(key.dataset.as_bytes()),
+            CODEC_VERSION,
+            WORKLOAD_EXT,
+        ))
+    }
+
     /// The artifact file for a named matrix.
     pub fn matrix_path(&self, name: &str) -> PathBuf {
         self.dir.join(format!(
@@ -167,13 +190,15 @@ impl DiskCache {
 
     /// Load a cached workload. A missing file is a plain miss; an artifact
     /// that fails to decode is **evicted** (deleted) and reported as a miss,
-    /// so the caller recomputes instead of trusting bad bytes.
+    /// so the caller recomputes instead of trusting bad bytes. The base
+    /// workload name holds the native-CSR plan only — a non-CSR plan here
+    /// (a hand-renamed format artifact) is evicted the same way.
     pub fn load_workload(&self, key: &WorkloadKey, profile_chunks: usize) -> Option<Workload> {
         let path = self.workload_path(key, profile_chunks);
         let bytes = fs::read(&path).ok()?;
         match codec::decode_workload(&bytes) {
-            Ok(w) => Some(w),
-            Err(_) => {
+            Ok(w) if w.fmt.format == SparseFormat::Csr => Some(w),
+            _ => {
                 let _ = fs::remove_file(&path);
                 None
             }
@@ -188,6 +213,41 @@ impl DiskCache {
         w: &Workload,
     ) -> io::Result<()> {
         self.persist(&self.workload_path(key, profile_chunks), &codec::encode_workload(w))
+    }
+
+    /// Load a cached format-derived workload (same miss/eviction contract
+    /// as [`DiskCache::load_workload`]); an artifact whose embedded plan
+    /// format disagrees with the requested one — a hand-renamed file — is
+    /// evicted too.
+    pub fn load_workload_fmt(
+        &self,
+        key: &WorkloadKey,
+        profile_chunks: usize,
+        fmt: SparseFormat,
+    ) -> Option<Workload> {
+        let path = self.workload_fmt_path(key, profile_chunks, fmt);
+        let bytes = fs::read(&path).ok()?;
+        match codec::decode_workload(&bytes) {
+            Ok(w) if w.fmt.format == fmt => Some(w),
+            _ => {
+                let _ = fs::remove_file(&path);
+                None
+            }
+        }
+    }
+
+    /// Persist a format-derived workload under its own plan's format
+    /// (atomic publish).
+    pub fn store_workload_fmt(
+        &self,
+        key: &WorkloadKey,
+        profile_chunks: usize,
+        w: &Workload,
+    ) -> io::Result<()> {
+        self.persist(
+            &self.workload_fmt_path(key, profile_chunks, w.fmt.format),
+            &codec::encode_workload(w),
+        )
     }
 
     /// Load a cached matrix (same miss/eviction contract as workloads).
@@ -446,6 +506,45 @@ mod tests {
         assert_eq!(loaded.checksum.to_bits(), w.checksum.to_bits());
         // A different profile chunk count is a different artifact.
         assert!(cache.load_workload(&key, 4).is_none());
+        let _ = fs::remove_dir_all(cache.dir());
+    }
+
+    #[test]
+    fn format_derived_workloads_never_alias_the_csr_artifact() {
+        let cache = tmp_cache("fmt");
+        let (key, w) = sample();
+        cache.store_workload(&key, 1, &w).unwrap();
+        // A derived CSC workload stores under its own `-f` name...
+        let mut wc = w.clone();
+        wc.fmt = crate::sparse::FormatPlan::from_totals(
+            SparseFormat::Csc,
+            wc.rows,
+            wc.cols,
+            wc.rows_b,
+            wc.nnz_a,
+            wc.nnz_b,
+            wc.out_nnz,
+        );
+        cache.store_workload_fmt(&key, 1, &wc).unwrap();
+        assert_ne!(
+            cache.workload_path(&key, 1),
+            cache.workload_fmt_path(&key, 1, SparseFormat::Csc)
+        );
+        // ...and each name loads back its own plan.
+        assert_eq!(cache.load_workload(&key, 1).unwrap(), w);
+        assert_eq!(cache.load_workload_fmt(&key, 1, SparseFormat::Csc).unwrap(), wc);
+        // A format that was never stored is a plain miss.
+        assert!(cache.load_workload_fmt(&key, 1, SparseFormat::Coo).is_none());
+        // A hand-renamed artifact (CSC plan under the COO name) is evicted.
+        let wrong = cache.workload_fmt_path(&key, 1, SparseFormat::Coo);
+        fs::copy(cache.workload_fmt_path(&key, 1, SparseFormat::Csc), &wrong).unwrap();
+        assert!(cache.load_workload_fmt(&key, 1, SparseFormat::Coo).is_none());
+        assert!(!wrong.exists(), "mismatched format artifact must be evicted");
+        // A non-CSR plan under the base workload name is evicted too.
+        let base = cache.workload_path(&key, 1);
+        fs::copy(cache.workload_fmt_path(&key, 1, SparseFormat::Csc), &base).unwrap();
+        assert!(cache.load_workload(&key, 1).is_none());
+        assert!(!base.exists(), "non-CSR plan must not hide under the CSR name");
         let _ = fs::remove_dir_all(cache.dir());
     }
 

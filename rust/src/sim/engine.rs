@@ -41,7 +41,7 @@ use crate::sim::cache::DiskCache;
 use crate::sim::des::{agreement_band, simulate_des, DesResult};
 use crate::sim::shard::{ShardMeta, ShardSpec, SweepShard};
 use crate::sim::{profile_workload_parallel, simulate_workload, SimResult, Workload};
-use crate::sparse::{suite, Csr};
+use crate::sparse::{suite, Csr, FormatPlan, SparseFormat};
 
 /// Engine errors.
 #[derive(Debug, thiserror::Error)]
@@ -182,6 +182,13 @@ impl Axis {
         Axis::Config(ConfigAxis::Tiling(points))
     }
 
+    /// Operand compression-format axis (`fmt`). Each point re-prices the
+    /// same profiled workload under a different [`SparseFormat`] traffic
+    /// plan; the CSR point is bit-identical to a formatless sweep.
+    pub fn format(points: Vec<SparseFormat>) -> Self {
+        Axis::Config(ConfigAxis::Format(points))
+    }
+
     /// The axis name used for grid dimensions, coordinates, and reports.
     pub fn name(&self) -> &'static str {
         match self {
@@ -245,8 +252,8 @@ pub struct AxisCoord {
 /// [`ConfigAxis`] kind must be added to this list before its grids can ride
 /// through shard artifacts.
 pub(crate) fn intern_dim_name(name: &str) -> Option<&'static str> {
-    const KNOWN: [&str; 8] =
-        ["dataset", "config", "policy", "noc", "macs", "prefetch", "pe-model", "tile"];
+    const KNOWN: [&str; 9] =
+        ["dataset", "config", "policy", "noc", "macs", "prefetch", "pe-model", "tile", "fmt"];
     KNOWN.into_iter().find(|&k| k == name)
 }
 
@@ -656,6 +663,10 @@ pub struct SimEngine {
     cache: Mutex<BTreeMap<WorkloadKey, WorkloadSlot>>,
     /// Second cache tier: persisted profiles shared across processes.
     disk: Option<DiskCache>,
+    /// Derived non-CSR workloads, memoized per (canonical key, format).
+    /// Derivation is a closed form of the base totals, so entries are
+    /// cheap; the map only avoids re-cloning profile vectors per cell.
+    fmt_cache: Mutex<BTreeMap<(WorkloadKey, SparseFormat), Arc<Workload>>>,
     profiles_run: AtomicU64,
     disk_hits: AtomicU64,
     disk_stores: AtomicU64,
@@ -676,6 +687,7 @@ impl SimEngine {
             profile_threads: 1,
             cache: Mutex::new(BTreeMap::new()),
             disk: None,
+            fmt_cache: Mutex::new(BTreeMap::new()),
             profiles_run: AtomicU64::new(0),
             disk_hits: AtomicU64::new(0),
             disk_stores: AtomicU64::new(0),
@@ -822,6 +834,75 @@ impl SimEngine {
         Ok(w)
     }
 
+    /// The profiled workload for `key` under an operand format: the native
+    /// CSR workload itself for [`SparseFormat::Csr`], otherwise a derived
+    /// copy whose [`FormatPlan`] charges that format's storage, gather, and
+    /// conversion traffic. The plan is a closed form of the base workload's
+    /// *totals* ([`FormatPlan::from_totals`]), never of matrix internals,
+    /// so a warm (disk-loaded) derivation is bit-identical to a cold one.
+    /// Derived artifacts persist under format-keyed names and never alias
+    /// the CSR artifact; loading one is not a [`SimEngine::disk_hits`] —
+    /// the base profile above is the expensive artifact either way.
+    pub fn workload_for(
+        &self,
+        key: &WorkloadKey,
+        fmt: SparseFormat,
+    ) -> Result<Arc<Workload>, EngineError> {
+        if fmt == SparseFormat::Csr {
+            return self.workload(key);
+        }
+        let base = self.workload(key)?;
+        // Canonicalise suite keys exactly as `workload` does. Caller-named
+        // keys (workload_from_matrices) pass through unchanged and stay
+        // memory-only — their keys don't describe the matrices.
+        let (canonical, persist) = match suite::by_name(&key.dataset) {
+            Some(spec) => (
+                WorkloadKey {
+                    dataset: spec.abbrev.to_string(),
+                    seed: key.seed,
+                    scale: key.scale.max(1),
+                },
+                true,
+            ),
+            None => (key.clone(), false),
+        };
+        let cache_key = (canonical.clone(), fmt);
+        if let Some(w) = self.fmt_cache.lock().expect("format cache poisoned").get(&cache_key) {
+            return Ok(Arc::clone(w));
+        }
+        let loaded = if persist {
+            self.disk
+                .as_ref()
+                .and_then(|d| d.load_workload_fmt(&canonical, self.profile_threads, fmt))
+        } else {
+            None
+        };
+        let derived = match loaded {
+            Some(w) => Arc::new(w),
+            None => {
+                let mut w = (*base).clone();
+                w.fmt = FormatPlan::from_totals(
+                    fmt,
+                    w.rows,
+                    w.cols,
+                    w.rows_b,
+                    w.nnz_a,
+                    w.nnz_b,
+                    w.out_nnz,
+                );
+                if persist {
+                    if let Some(disk) = &self.disk {
+                        // Best-effort: a full disk must not fail the sweep.
+                        let _ = disk.store_workload_fmt(&canonical, self.profile_threads, &w);
+                    }
+                }
+                Arc::new(w)
+            }
+        };
+        let mut cache = self.fmt_cache.lock().expect("format cache poisoned");
+        Ok(Arc::clone(cache.entry(cache_key).or_insert(derived)))
+    }
+
     /// Profile a caller-supplied `C = A × B` (rectangular allowed) and
     /// cache it under `key` for subsequent [`SimEngine::simulate`] /
     /// [`SimEngine::workload`] calls with the same key.
@@ -845,7 +926,8 @@ impl SimEngine {
         policy: Policy,
     ) -> Result<SimResult, EngineError> {
         crate::pe::registry::build(cfg)?; // clean error before any profiling
-        Ok(simulate_workload(cfg, &self.workload(key)?, policy))
+        let w = self.workload_for(key, cfg.operand_format)?;
+        Ok(simulate_workload(cfg, &w, policy))
     }
 
     /// One sweep cell under an explicit [`CellModel`] — profile-cached,
@@ -865,7 +947,8 @@ impl SimEngine {
             AxisDim { name: "config", labels: vec![cfg.name.clone()] },
             AxisDim { name: "policy", labels: vec![format!("{policy:?}")] },
         ];
-        Ok(Self::run_cell(cfg, &self.workload(key)?, policy, model, coords_for(&dims, 0)))
+        let w = self.workload_for(key, cfg.operand_format)?;
+        Ok(Self::run_cell(cfg, &w, policy, model, coords_for(&dims, 0)))
     }
 
     /// The per-cell dispatch shared by [`SimEngine::simulate_cell`] and the
@@ -1014,12 +1097,31 @@ impl SimEngine {
         // view; the named coordinates decompose the same index over the
         // full dimension list — both are row-major, so they address the
         // same cell.
-        let workloads: Vec<Option<Arc<Workload>>> = ex
+        // Each dataset resolves once per distinct operand format among the
+        // expanded configs (a CSR-only sweep sees exactly the base
+        // workload); the derivations are closed-form and happen here, so
+        // the cell workers below never fault.
+        let formats: Vec<SparseFormat> = {
+            let mut v: Vec<SparseFormat> = ex.configs.iter().map(|c| c.operand_format).collect();
+            v.sort_unstable();
+            v.dedup();
+            v
+        };
+        let workloads: Vec<Option<BTreeMap<SparseFormat, Arc<Workload>>>> = ex
             .datasets
             .iter()
             .enumerate()
-            .map(|(d, k)| if span.contains(&d) { self.workload(k).map(Some) } else { Ok(None) })
-            .collect::<Result<_, _>>()?;
+            .map(|(d, k)| {
+                if !span.contains(&d) {
+                    return Ok(None);
+                }
+                let mut per_fmt = BTreeMap::new();
+                for &fmt in &formats {
+                    per_fmt.insert(fmt, self.workload_for(k, fmt)?);
+                }
+                Ok(Some(per_fmt))
+            })
+            .collect::<Result<_, EngineError>>()?;
         let count = range.len();
         let next = AtomicUsize::new(0);
         let cell_workers = self.threads.clamp(1, count);
@@ -1036,7 +1138,11 @@ impl SimEngine {
                             let idx = range.start + o;
                             let (d, rem) = (idx / (nc * np), idx % (nc * np));
                             let (c, p) = (rem / np, rem % np);
-                            let w = workloads[d].as_ref().expect("dataset in range profiled");
+                            let per_fmt =
+                                workloads[d].as_ref().expect("dataset in range profiled");
+                            let w = per_fmt
+                                .get(&ex.configs[c].operand_format)
+                                .expect("format derived for every config");
                             out.push((
                                 o,
                                 Self::run_cell(
@@ -1376,6 +1482,7 @@ mod tests {
             ConfigAxis::PrefetchDepth(vec![4]),
             ConfigAxis::PeModel(vec!["maple".into()]),
             ConfigAxis::Tiling(vec![crate::sparse::TileShape::new(64, 64)]),
+            ConfigAxis::Format(vec![SparseFormat::Csr]),
         ];
         for a in &axes {
             let name = match a {
@@ -1383,7 +1490,8 @@ mod tests {
                 | ConfigAxis::MacsPerPe(_)
                 | ConfigAxis::PrefetchDepth(_)
                 | ConfigAxis::PeModel(_)
-                | ConfigAxis::Tiling(_) => a.name(),
+                | ConfigAxis::Tiling(_)
+                | ConfigAxis::Format(_) => a.name(),
             };
             assert_eq!(intern_dim_name(name), Some(name), "axis {name} not internable");
         }
@@ -1447,5 +1555,94 @@ mod tests {
             mesh.analytic.counters.noc_flit_hops > xbar.analytic.counters.noc_flit_hops
         );
         assert!(mesh.analytic.energy.noc_pj > xbar.analytic.energy.noc_pj);
+    }
+
+    #[test]
+    fn workload_for_derives_from_one_shared_profile() {
+        let engine = SimEngine::new();
+        let key = small_key();
+        let csr = engine.workload_for(&key, SparseFormat::Csr).unwrap();
+        assert!(Arc::ptr_eq(&csr, &engine.workload(&key).unwrap()));
+        let coo = engine.workload_for(&key, SparseFormat::Coo).unwrap();
+        let alias = WorkloadKey::suite("wikiVote", 7, 64);
+        let coo2 = engine.workload_for(&alias, SparseFormat::Coo).unwrap();
+        assert!(Arc::ptr_eq(&coo, &coo2), "key aliases share one derivation");
+        assert_eq!(engine.profiles_run(), 1);
+        // Same profile, different traffic plan.
+        assert_eq!(coo.profiles, csr.profiles);
+        assert_eq!(coo.checksum.to_bits(), csr.checksum.to_bits());
+        let plan = FormatPlan::from_totals(
+            SparseFormat::Coo,
+            csr.rows,
+            csr.cols,
+            csr.rows_b,
+            csr.nnz_a,
+            csr.nnz_b,
+            csr.out_nnz,
+        );
+        assert_eq!(coo.fmt, plan);
+        let native = FormatPlan::csr(csr.rows, csr.rows_b, csr.nnz_a, csr.nnz_b, csr.out_nnz);
+        assert_eq!(csr.fmt, native);
+    }
+
+    #[test]
+    fn format_axis_reprices_one_profile_and_keeps_csr_identical() {
+        let engine = SimEngine::new();
+        let base = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+            .with_axis(Axis::Dataset(vec![small_key()]))
+            .with_axis(Axis::macs_per_pe(vec![2, 4]));
+        let plain = engine.sweep(&base).unwrap();
+        let grid = engine
+            .sweep(&base.clone().with_axis(Axis::format(SparseFormat::ALL.to_vec())))
+            .unwrap();
+        assert_eq!(grid.shape(), vec![1, 1, 2, 5, 1]);
+        let names: Vec<&str> = grid.dims.iter().map(|d| d.name).collect();
+        assert_eq!(names, ["dataset", "config", "macs", "fmt", "policy"]);
+        assert_eq!(grid.configs[0], "extensor-maple+macs=2+fmt=csr");
+        assert_eq!(grid.configs[9], "extensor-maple+macs=4+fmt=blocked");
+        // The whole grid re-prices the one profiled workload.
+        assert_eq!(engine.profiles_run(), 1);
+        for m in 0..2 {
+            // The `fmt=csr` point is bit-identical to the formatless sweep;
+            // only the expanded config label differs (`+fmt=csr`).
+            let csr = grid.at(&[0, 0, m, 0, 0]);
+            let base = &plain.at(&[0, 0, m, 0]).analytic;
+            let mut relabeled = csr.analytic.clone();
+            assert_eq!(relabeled.config, format!("{}+fmt=csr", base.config));
+            relabeled.config = base.config.clone();
+            assert_eq!(&relabeled, base);
+            // Every non-CSR point pays its conversion pre-pass on top of
+            // its own operand footprint, so its DRAM-bound time is longer.
+            for f in 1..5 {
+                let cell = grid.at(&[0, 0, m, f, 0]);
+                assert!(
+                    cell.analytic.cycles_dram_bound > csr.analytic.cycles_dram_bound,
+                    "fmt point {f} not charged over CSR"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn format_axis_disk_tier_never_aliases_and_stays_deterministic() {
+        let dir = std::env::temp_dir().join(format!("maple-engine-fmt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let spec = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+            .with_axis(Axis::Dataset(vec![small_key()]))
+            .with_axis(Axis::format(SparseFormat::ALL.to_vec()));
+        let cold = SimEngine::new().with_disk_cache(DiskCache::new(&dir).unwrap());
+        let cold_grid = cold.sweep(&spec).unwrap();
+        assert_eq!((cold.profiles_run(), cold.disk_hits(), cold.disk_stores()), (1, 0, 1));
+        // Warm run at a different fan-out: the base artifact and the four
+        // format-keyed derivations load from disk (the latter are not disk
+        // hits — the base profile is the expensive artifact). Nothing
+        // aliases, so the grid is bit-identical to the cold one.
+        let warm = SimEngine::new()
+            .with_threads(4)
+            .with_disk_cache(DiskCache::new(&dir).unwrap());
+        let warm_grid = warm.sweep(&spec).unwrap();
+        assert_eq!((warm.profiles_run(), warm.disk_hits()), (0, 1));
+        assert_eq!(warm_grid, cold_grid);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -12,7 +12,7 @@ use crate::pe::RowProfile;
 use crate::sim::cache::DiskCache;
 use crate::sparse::io::RowGroupFile;
 use crate::sparse::tile::{self, TileShape};
-use crate::sparse::{Csr, SplitMix64};
+use crate::sparse::{Csr, FormatPlan, SplitMix64};
 
 /// Everything a simulation needs to know about one `C = A × B` workload.
 /// `PartialEq` compares every field bit-for-bit (profiles and the f64
@@ -37,6 +37,10 @@ pub struct Workload {
     pub profiles: Vec<RowProfile>,
     /// Σ C[i,j] in f64 — the numeric fingerprint of the run.
     pub checksum: f64,
+    /// The operand-format traffic plan. Every profile pass produces the
+    /// native CSR plan; the engine derives non-CSR plans from it when a
+    /// `fmt` axis point asks for one ([`crate::sim::SimEngine`]).
+    pub fmt: FormatPlan,
 }
 
 impl Workload {
@@ -50,15 +54,14 @@ impl Workload {
         }
     }
 
-    /// Compulsory DRAM traffic in 32-bit words: stream both operands' CSR
-    /// images in and the result's out (value + col_id per nonzero, row_ptr
-    /// per row). Both baseline and Maple configurations incur exactly this
-    /// (see DESIGN.md §Modeling).
+    /// Compulsory DRAM traffic in 32-bit words under the workload's
+    /// operand-format plan ([`FormatPlan::compulsory_dram_words`]). For the
+    /// default CSR plan this is exactly the legacy formula — stream both
+    /// operands' CSR images in and the result's out (value + col_id per
+    /// nonzero, row_ptr per row); non-CSR plans add their gather and
+    /// conversion terms on top (see DESIGN.md §Modeling).
     pub fn compulsory_dram_words(&self) -> u64 {
-        let a = 2 * self.nnz_a + self.rows as u64 + 1;
-        let b = 2 * self.nnz_b + self.rows_b as u64 + 1;
-        let c = 2 * self.out_nnz + self.rows as u64 + 1;
-        a + b + c
+        self.fmt.compulsory_dram_words()
     }
 }
 
@@ -106,6 +109,7 @@ pub fn profile_workload_parallel(a: &Csr, b: &Csr, threads: usize) -> Workload {
         total_products,
         profiles,
         checksum,
+        fmt: FormatPlan::csr(a.rows(), b.rows(), a.nnz() as u64, b.nnz() as u64, out_nnz),
     }
 }
 
@@ -165,6 +169,7 @@ pub fn profile_workload(a: &Csr, b: &Csr) -> Workload {
         total_products,
         profiles,
         checksum,
+        fmt: FormatPlan::csr(a.rows(), b.rows(), a.nnz() as u64, b.nnz() as u64, out_nnz),
     }
 }
 
@@ -569,6 +574,7 @@ pub fn profile_workload_tiled_cached(
         total_products,
         profiles,
         checksum,
+        fmt: FormatPlan::csr(a.rows(), b.rows(), a.nnz() as u64, b.nnz() as u64, out_nnz),
     };
     (w, stats)
 }
@@ -708,6 +714,7 @@ pub fn profile_container_tiled(
         total_products,
         profiles,
         checksum,
+        fmt: FormatPlan::csr(rows, rows, nnz, nnz, out_nnz),
     };
     Ok((w, stats))
 }
@@ -988,6 +995,7 @@ pub fn profile_workload_sampled(a: &Csr, b: &Csr, budget: usize, seed: u64) -> W
         total_products: row_products.iter().sum(),
         profiles,
         checksum,
+        fmt: FormatPlan::csr(rows, b.rows(), a.nnz() as u64, b.nnz() as u64, out_nnz),
     };
     WorkloadEstimate {
         workload,

@@ -2,7 +2,7 @@
 //! operates on a sparse coordinate format per paper §IV.A) and as the
 //! interchange format for Matrix-Market I/O.
 
-use super::Csr;
+use super::{Csc, Csr};
 
 /// A sparse matrix as parallel (row, col, value) triplet vectors.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,6 +44,13 @@ impl Coo {
             .collect();
         Csr::from_triplets(self.rows, self.cols, t)
     }
+
+    /// Convert to CSC. Canonical like every conversion here: routes
+    /// through [`Csr::from_triplets`], so duplicates are summed and the
+    /// result is identical to `self.to_csr().to_csc()`.
+    pub fn to_csc(&self) -> Csc {
+        self.to_csr().to_csc()
+    }
 }
 
 #[cfg(test)]
@@ -61,6 +68,20 @@ mod tests {
         assert_eq!(c.nnz(), 2);
         assert_eq!(c.get(2, 1), 5.5);
         assert_eq!(c.get(0, 0), 1.0);
+    }
+
+    #[test]
+    fn to_csc_is_canonical() {
+        // Direct COO -> CSC equals the CSR route exactly: duplicates are
+        // summed and the column-major arrays come out sorted.
+        let mut m = Coo::zero(3, 3);
+        m.push(2, 1, 4.0);
+        m.push(0, 0, 1.0);
+        m.push(2, 1, 1.5);
+        let c = m.to_csc();
+        assert_eq!(c, m.to_csr().to_csc());
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.to_csr().get(2, 1), 5.5);
     }
 
     #[test]

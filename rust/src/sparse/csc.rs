@@ -1,7 +1,7 @@
 //! Compressed Sparse Column — needed by the inner-product dataflow baseline
 //! (B is traversed by column when computing C[i,j] = A[i,:]·B[:,j]).
 
-use super::Csr;
+use super::{Coo, Csr};
 
 /// A sparse matrix in CSC form: the column-major dual of [`Csr`].
 #[derive(Debug, Clone, PartialEq)]
@@ -17,6 +17,11 @@ pub struct Csc {
 }
 
 impl Csc {
+    /// An empty `rows × cols` matrix.
+    pub fn zero(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, col_ptr: vec![0; cols + 1], row_id: Vec::new(), value: Vec::new() }
+    }
+
     /// Number of stored nonzeros.
     pub fn nnz(&self) -> usize {
         self.value.len()
@@ -55,11 +60,42 @@ impl Csc {
         }
         Csr::from_triplets(self.rows, self.cols, t)
     }
+
+    /// Convert to COO, in canonical (row-major, duplicate-summed) order —
+    /// the symmetric inverse of [`Coo::to_csc`], not a raw column-major
+    /// dump of the CSC arrays.
+    pub fn to_coo(&self) -> Coo {
+        self.to_csr().to_coo()
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    use super::super::Csr;
+    use super::super::{Csc, Csr};
+
+    #[test]
+    fn to_coo_is_canonical_row_major() {
+        let a = Csr::from_triplets(
+            3,
+            4,
+            vec![(0, 1, 1.0), (0, 3, 2.0), (1, 1, 3.0), (2, 0, 4.0)],
+        );
+        let c = a.to_csc();
+        let coo = c.to_coo();
+        // Canonical (row-major) order, not a column-major dump of the
+        // CSC arrays — the symmetric inverse of `Coo::to_csc`.
+        assert_eq!(coo.row, vec![0, 0, 1, 2]);
+        assert_eq!(coo.col, vec![1, 3, 1, 0]);
+        assert_eq!(coo.to_csc(), c);
+    }
+
+    #[test]
+    fn zero_is_empty() {
+        let z = Csc::zero(2, 5);
+        assert_eq!(z.nnz(), 0);
+        assert_eq!(z.col_ptr.len(), 6);
+        assert_eq!(z.to_csr(), Csr::zero(2, 5));
+    }
 
     #[test]
     fn csc_columns_match_csr_rows_of_transpose() {

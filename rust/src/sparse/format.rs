@@ -1,0 +1,746 @@
+//! The unified compression-format layer.
+//!
+//! The paper fixes CSR as the one true operand encoding (§II.B), but the
+//! format choice itself is a results dimension: per sparsity regime a
+//! bitmap or blocked encoding can shrink the operand image (and therefore
+//! the compulsory DRAM traffic) well below CSR, while COO/CSC pay for
+//! their redundant or column-major metadata. This module promotes the
+//! format to a first-class value:
+//!
+//! * [`SparseFormat`] — the closed set of supported encodings, with stable
+//!   CLI labels (`csr | csc | coo | bitmap | blocked`) and codec tags.
+//! * [`SparseMatrix`] — one dispatch point over concrete encodings
+//!   ([`Csr`], [`Csc`], [`Coo`], [`Bitmap`], [`BlockedCsr`]) with uniform
+//!   constructors, dims/nnz accessors, canonical triplet iteration, exact
+//!   per-format storage accounting ([`StorageWords`]), and explicit
+//!   [`SparseMatrix::convert`] whose cost ([`ConvertCost`]) is modeled
+//!   from the streamed words, not hand-waved.
+//! * [`FormatPlan`] — the closed-form operand-traffic plan the simulator
+//!   charges per workload: per-matrix format images, the column-major
+//!   gather penalty, and the CSR→format conversion cost when the dataset's
+//!   native encoding differs from the axis point.
+//!
+//! Storage model (32-bit index and value words, an `m × n` matrix with
+//! `nnz` stored entries):
+//!
+//! | format    | index words                  | value words    |
+//! |-----------|------------------------------|----------------|
+//! | `csr`     | `nnz + m + 1`                | `nnz`          |
+//! | `csc`     | `nnz + n + 1`                | `nnz`          |
+//! | `coo`     | `2·nnz`                      | `nnz`          |
+//! | `bitmap`  | `m · ⌈n/32⌉`                 | `nnz`          |
+//! | `blocked` | `occupied + ⌈m/4⌉ + 1`       | `16·occupied`  |
+//!
+//! `occupied` is the number of nonempty 4×4 blocks. The *engine-side*
+//! estimate ([`SparseFormat::estimate_words`]) upper-bounds it as
+//! `min(nnz, ⌈m/4⌉·⌈n/4⌉)` so the traffic plan is a pure function of the
+//! workload totals — cold (matrix in hand) and warm (profile loaded from
+//! disk) runs charge identical traffic by construction.
+
+use std::collections::BTreeMap;
+
+use super::{Coo, Csc, Csr};
+
+/// A supported sparse compression format. The CLI label (`Display` /
+/// `FromStr`) and the codec tag are both stable: artifacts and sweep
+/// labels written today decode tomorrow.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum SparseFormat {
+    /// Compressed sparse row — the paper's native operand encoding.
+    #[default]
+    Csr,
+    /// Compressed sparse column: CSR's column-major dual.
+    Csc,
+    /// Coordinate triplets.
+    Coo,
+    /// Per-row occupancy bitmap (32-bit mask words) + packed values.
+    Bitmap,
+    /// CSR over dense 4×4 blocks (one block-column id + 16 values each).
+    BlockedCsr,
+}
+
+impl SparseFormat {
+    /// Every format, in label order — the full `--axis fmt=` point set.
+    pub const ALL: [SparseFormat; 5] = [
+        SparseFormat::Csr,
+        SparseFormat::Csc,
+        SparseFormat::Coo,
+        SparseFormat::Bitmap,
+        SparseFormat::BlockedCsr,
+    ];
+
+    /// The stable CLI/report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            SparseFormat::Csr => "csr",
+            SparseFormat::Csc => "csc",
+            SparseFormat::Coo => "coo",
+            SparseFormat::Bitmap => "bitmap",
+            SparseFormat::BlockedCsr => "blocked",
+        }
+    }
+
+    /// Stable on-disk tag (workload codec, cache filenames).
+    pub fn tag(self) -> u8 {
+        match self {
+            SparseFormat::Csr => 0,
+            SparseFormat::Csc => 1,
+            SparseFormat::Coo => 2,
+            SparseFormat::Bitmap => 3,
+            SparseFormat::BlockedCsr => 4,
+        }
+    }
+
+    /// Inverse of [`SparseFormat::tag`]; `None` for a foreign tag.
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        SparseFormat::ALL.into_iter().find(|f| f.tag() == tag)
+    }
+
+    /// Closed-form storage estimate (total 32-bit words) for an
+    /// `rows × cols` matrix with `nnz` stored entries.
+    ///
+    /// Exact for `csr`/`csc`/`coo`/`bitmap`; for `blocked` the occupied
+    /// block count is upper-bounded by `min(nnz, ⌈m/4⌉·⌈n/4⌉)` (every
+    /// nonzero occupies at most one block, and there are only so many
+    /// block slots), so the estimate depends on workload totals alone and
+    /// the traffic plan stays identical between cold and warm runs.
+    pub fn estimate_words(self, rows: usize, cols: usize, nnz: u64) -> u64 {
+        let (m, n) = (rows as u64, cols as u64);
+        match self {
+            SparseFormat::Csr => 2 * nnz + m + 1,
+            SparseFormat::Csc => 2 * nnz + n + 1,
+            SparseFormat::Coo => 3 * nnz,
+            SparseFormat::Bitmap => nnz + m * n.div_ceil(32),
+            SparseFormat::BlockedCsr => {
+                let occupied = nnz.min(m.div_ceil(4) * n.div_ceil(4));
+                17 * occupied + m.div_ceil(4) + 1
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for SparseFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for SparseFormat {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        SparseFormat::ALL
+            .into_iter()
+            .find(|f| f.label() == s)
+            .ok_or_else(|| format!("unknown format {s:?} (csr | csc | coo | bitmap | blocked)"))
+    }
+}
+
+/// A sparse matrix as a per-row occupancy bitmap plus packed values:
+/// `mask` holds `rows · ⌈cols/32⌉` 32-bit words row-major (bit `c % 32` of
+/// word `⌊c/32⌋` marks column `c`), and `value` holds the nonzeros in
+/// (row, ascending column) order. Metadata cost is independent of `nnz`,
+/// which beats CSR once density clears ~1/32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Bitmap {
+    rows: usize,
+    cols: usize,
+    /// Occupancy words, row-major; length `rows * words_per_row()`.
+    pub mask: Vec<u32>,
+    /// Nonzero values in (row, ascending column) order.
+    pub value: Vec<f32>,
+}
+
+impl Bitmap {
+    /// Encode a CSR matrix. Lossless: stored zeros keep their mask bit.
+    pub fn from_csr(a: &Csr) -> Self {
+        let wpr = a.cols().div_ceil(32);
+        let mut mask = vec![0u32; a.rows() * wpr];
+        let mut value = Vec::with_capacity(a.nnz());
+        for i in 0..a.rows() {
+            for (c, v) in a.row_iter(i) {
+                mask[i * wpr + c as usize / 32] |= 1u32 << (c % 32);
+                value.push(v);
+            }
+        }
+        Self { rows: a.rows(), cols: a.cols(), mask, value }
+    }
+
+    /// Decode back to canonical CSR.
+    pub fn to_csr(&self) -> Csr {
+        let wpr = self.words_per_row();
+        let mut t = Vec::with_capacity(self.value.len());
+        let mut p = 0;
+        for i in 0..self.rows {
+            for w in 0..wpr {
+                let mut bits = self.mask[i * wpr + w];
+                while bits != 0 {
+                    let b = bits.trailing_zeros();
+                    bits &= bits - 1;
+                    t.push((i as u32, (w * 32) as u32 + b, self.value[p]));
+                    p += 1;
+                }
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, t)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored values (set mask bits).
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.value.len()
+    }
+
+    /// 32-bit mask words per row, `⌈cols/32⌉`.
+    #[inline]
+    pub fn words_per_row(&self) -> usize {
+        self.cols.div_ceil(32)
+    }
+}
+
+/// CSR over dense 4×4 blocks (Labini-style): block rows are compressed
+/// like CSR rows, each occupied block carrying one block-column id and a
+/// dense 16-value payload (row-major inside the block). Explicit zeros
+/// *inside* an occupied block are representable, but a stored zero cannot
+/// be told apart from structural absence on decode — [`BlockedCsr::to_csr`]
+/// drops exact-zero entries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockedCsr {
+    rows: usize,
+    cols: usize,
+    /// Offset of each block row's first occupied block; length
+    /// `⌈rows/4⌉ + 1`.
+    pub block_ptr: Vec<usize>,
+    /// Block-column coordinate of each occupied block, ascending per
+    /// block row.
+    pub block_col: Vec<u32>,
+    /// Dense 4×4 payload per occupied block, row-major inside the block.
+    pub block_values: Vec<[f32; 16]>,
+}
+
+impl BlockedCsr {
+    /// Side length of the dense blocks.
+    pub const BLOCK: usize = 4;
+
+    /// Encode a CSR matrix, materialising every 4×4 block that holds at
+    /// least one nonzero.
+    pub fn from_csr(a: &Csr) -> Self {
+        let mut blocks: BTreeMap<(u32, u32), [f32; 16]> = BTreeMap::new();
+        for i in 0..a.rows() {
+            for (c, v) in a.row_iter(i) {
+                let slot = blocks.entry(((i / 4) as u32, c / 4)).or_insert([0.0; 16]);
+                slot[(i % 4) * 4 + (c % 4) as usize] = v;
+            }
+        }
+        let block_rows = a.rows().div_ceil(4);
+        let mut block_ptr = vec![0usize; block_rows + 1];
+        let mut block_col = Vec::with_capacity(blocks.len());
+        let mut block_values = Vec::with_capacity(blocks.len());
+        for (&(br, bc), vals) in &blocks {
+            block_ptr[br as usize + 1] += 1;
+            block_col.push(bc);
+            block_values.push(*vals);
+        }
+        for i in 0..block_rows {
+            block_ptr[i + 1] += block_ptr[i];
+        }
+        Self { rows: a.rows(), cols: a.cols(), block_ptr, block_col, block_values }
+    }
+
+    /// Decode back to canonical CSR, dropping exact-zero block slots.
+    pub fn to_csr(&self) -> Csr {
+        let mut t = Vec::new();
+        for br in 0..self.block_ptr.len() - 1 {
+            for p in self.block_ptr[br]..self.block_ptr[br + 1] {
+                let bc = self.block_col[p];
+                for (k, &v) in self.block_values[p].iter().enumerate() {
+                    if v != 0.0 {
+                        t.push(((br * 4 + k / 4) as u32, bc * 4 + (k % 4) as u32, v));
+                    }
+                }
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, t)
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of nonzero entries across all occupied blocks.
+    pub fn nnz(&self) -> usize {
+        self.block_values.iter().flatten().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Number of occupied (materialised) 4×4 blocks.
+    #[inline]
+    pub fn occupied_blocks(&self) -> usize {
+        self.block_col.len()
+    }
+}
+
+/// Exact storage footprint of one encoded matrix, split into index
+/// (metadata) and value words — both 32-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StorageWords {
+    /// Structural metadata: pointers, coordinates, mask words.
+    pub index_words: u64,
+    /// Payload values (16 per block for `blocked`, `nnz` otherwise).
+    pub value_words: u64,
+}
+
+impl StorageWords {
+    /// Total words streamed when the image crosses DRAM.
+    #[inline]
+    pub fn total(self) -> u64 {
+        self.index_words + self.value_words
+    }
+}
+
+/// The modeled cost of one format conversion: the converter streams the
+/// source image in and the destination image out (one word per cycle), so
+/// both terms are pure functions of the two footprints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ConvertCost {
+    /// Cycles spent converting (read + write words at one word/cycle).
+    pub cycles: u64,
+    /// DRAM words moved (source image read + destination image written).
+    pub dram_words: u64,
+}
+
+/// One sparse matrix behind one dispatch point: every encoding supported
+/// by [`SparseFormat`], with uniform constructors, accessors, exact
+/// storage accounting, and modeled conversion.
+///
+/// All conversions are *canonical*: they route through [`Csr`] (sorted,
+/// duplicate-summed — see the module docs of [`crate::sparse`]), so any
+/// conversion chain that starts and ends at the same format is an exact
+/// identity on canonical matrices.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SparseMatrix {
+    Csr(Csr),
+    Csc(Csc),
+    Coo(Coo),
+    Bitmap(Bitmap),
+    BlockedCsr(BlockedCsr),
+}
+
+impl SparseMatrix {
+    /// Encode a CSR matrix (the suite's native form) as `format`.
+    pub fn from_csr(format: SparseFormat, a: &Csr) -> Self {
+        match format {
+            SparseFormat::Csr => SparseMatrix::Csr(a.clone()),
+            SparseFormat::Csc => SparseMatrix::Csc(a.to_csc()),
+            SparseFormat::Coo => SparseMatrix::Coo(a.to_coo()),
+            SparseFormat::Bitmap => SparseMatrix::Bitmap(Bitmap::from_csr(a)),
+            SparseFormat::BlockedCsr => SparseMatrix::BlockedCsr(BlockedCsr::from_csr(a)),
+        }
+    }
+
+    /// Which encoding this matrix is stored in.
+    pub fn format(&self) -> SparseFormat {
+        match self {
+            SparseMatrix::Csr(_) => SparseFormat::Csr,
+            SparseMatrix::Csc(_) => SparseFormat::Csc,
+            SparseMatrix::Coo(_) => SparseFormat::Coo,
+            SparseMatrix::Bitmap(_) => SparseFormat::Bitmap,
+            SparseMatrix::BlockedCsr(_) => SparseFormat::BlockedCsr,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            SparseMatrix::Csr(m) => m.rows(),
+            SparseMatrix::Csc(m) => m.rows,
+            SparseMatrix::Coo(m) => m.rows,
+            SparseMatrix::Bitmap(m) => m.rows(),
+            SparseMatrix::BlockedCsr(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            SparseMatrix::Csr(m) => m.cols(),
+            SparseMatrix::Csc(m) => m.cols,
+            SparseMatrix::Coo(m) => m.cols,
+            SparseMatrix::Bitmap(m) => m.cols(),
+            SparseMatrix::BlockedCsr(m) => m.cols(),
+        }
+    }
+
+    /// Number of stored nonzero entries.
+    pub fn nnz(&self) -> usize {
+        match self {
+            SparseMatrix::Csr(m) => m.nnz(),
+            SparseMatrix::Csc(m) => m.nnz(),
+            SparseMatrix::Coo(m) => m.nnz(),
+            SparseMatrix::Bitmap(m) => m.nnz(),
+            SparseMatrix::BlockedCsr(m) => m.nnz(),
+        }
+    }
+
+    /// Decode to canonical CSR.
+    pub fn to_csr(&self) -> Csr {
+        match self {
+            SparseMatrix::Csr(m) => m.clone(),
+            SparseMatrix::Csc(m) => m.to_csr(),
+            SparseMatrix::Coo(m) => m.to_csr(),
+            SparseMatrix::Bitmap(m) => m.to_csr(),
+            SparseMatrix::BlockedCsr(m) => m.to_csr(),
+        }
+    }
+
+    /// Canonical `(row, col, value)` triplets: row-major, ascending column
+    /// within a row, duplicates summed — identical for any two encodings
+    /// of the same matrix.
+    pub fn triplets(&self) -> Vec<(u32, u32, f32)> {
+        let a = self.to_csr();
+        let mut t = Vec::with_capacity(a.nnz());
+        for i in 0..a.rows() {
+            for (c, v) in a.row_iter(i) {
+                t.push((i as u32, c, v));
+            }
+        }
+        t
+    }
+
+    /// Exact storage footprint of this concrete image (see the module-doc
+    /// table; `blocked` uses the *actual* occupied block count).
+    pub fn storage_words(&self) -> StorageWords {
+        match self {
+            SparseMatrix::Csr(m) => StorageWords {
+                index_words: m.nnz() as u64 + m.rows() as u64 + 1,
+                value_words: m.nnz() as u64,
+            },
+            SparseMatrix::Csc(m) => StorageWords {
+                index_words: m.nnz() as u64 + m.cols as u64 + 1,
+                value_words: m.nnz() as u64,
+            },
+            SparseMatrix::Coo(m) => StorageWords {
+                index_words: 2 * m.nnz() as u64,
+                value_words: m.nnz() as u64,
+            },
+            SparseMatrix::Bitmap(m) => StorageWords {
+                index_words: m.mask.len() as u64,
+                value_words: m.nnz() as u64,
+            },
+            SparseMatrix::BlockedCsr(m) => StorageWords {
+                index_words: m.occupied_blocks() as u64 + m.block_ptr.len() as u64,
+                value_words: 16 * m.occupied_blocks() as u64,
+            },
+        }
+    }
+
+    /// Convert to `to`, returning the re-encoded matrix and the modeled
+    /// cost: the converter streams the source image in and the destination
+    /// image out, so `dram_words = src.total() + dst.total()` and
+    /// `cycles = dram_words` (one word per cycle). Converting to the
+    /// current format is free and returns a clone.
+    pub fn convert(&self, to: SparseFormat) -> (SparseMatrix, ConvertCost) {
+        if self.format() == to {
+            return (self.clone(), ConvertCost::default());
+        }
+        let read = self.storage_words().total();
+        let out = SparseMatrix::from_csr(to, &self.to_csr());
+        let write = out.storage_words().total();
+        let cost = ConvertCost { cycles: read + write, dram_words: read + write };
+        (out, cost)
+    }
+}
+
+/// The per-workload operand-traffic plan for one format: how many DRAM
+/// words each matrix image costs, plus the format-specific penalties the
+/// accelerator model charges. A plan is a **pure function of the workload
+/// totals** (dims + nnz counts) via [`FormatPlan::from_totals`], never of
+/// the concrete matrices — that keeps cold and warm (disk-cached) runs
+/// bit-identical.
+///
+/// Terms:
+/// * `a/b/c_words` — the format images of A (`rows × rows_b`),
+///   B (`rows_b × cols`) and C (`rows × cols`).
+/// * `gather_words` — extra operand traffic for column-major layouts: the
+///   row-wise dataflow walks A and B by row, so a CSC image pays one
+///   extra pointer-chase word per nonzero.
+/// * `convert_*` — charged when the axis format differs from the suite's
+///   native CSR: A and B are re-encoded once up front (read the CSR
+///   images, write the format images), at one word per cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FormatPlan {
+    /// The operand encoding this plan charges for.
+    pub format: SparseFormat,
+    /// DRAM words of the A image (`rows × rows_b`, `nnz_a` nonzeros).
+    pub a_words: u64,
+    /// DRAM words of the B image (`rows_b × cols`, `nnz_b` nonzeros).
+    pub b_words: u64,
+    /// DRAM words of the C image (`rows × cols`, `out_nnz` nonzeros).
+    pub c_words: u64,
+    /// Extra row-gather traffic for column-major operand layouts.
+    pub gather_words: u64,
+    /// Words read by the one-time CSR→format conversion of A and B.
+    pub convert_read_words: u64,
+    /// Words written by the one-time CSR→format conversion of A and B.
+    pub convert_write_words: u64,
+    /// Cycles spent in that conversion (one word per cycle).
+    pub convert_cycles: u64,
+}
+
+impl FormatPlan {
+    /// The native-CSR plan — exactly the legacy traffic formulas
+    /// (`2·nnz + rows + 1` per image), with no gather or conversion terms.
+    pub fn csr(rows: usize, rows_b: usize, nnz_a: u64, nnz_b: u64, out_nnz: u64) -> Self {
+        Self {
+            format: SparseFormat::Csr,
+            a_words: 2 * nnz_a + rows as u64 + 1,
+            b_words: 2 * nnz_b + rows_b as u64 + 1,
+            c_words: 2 * out_nnz + rows as u64 + 1,
+            gather_words: 0,
+            convert_read_words: 0,
+            convert_write_words: 0,
+            convert_cycles: 0,
+        }
+    }
+
+    /// Derive the plan for any format from workload totals alone
+    /// (`C[rows × cols] = A[rows × rows_b] × B[rows_b × cols]`).
+    /// `from_totals(Csr, ..)` equals [`FormatPlan::csr`] exactly.
+    pub fn from_totals(
+        format: SparseFormat,
+        rows: usize,
+        cols: usize,
+        rows_b: usize,
+        nnz_a: u64,
+        nnz_b: u64,
+        out_nnz: u64,
+    ) -> Self {
+        let a_words = format.estimate_words(rows, rows_b, nnz_a);
+        let b_words = format.estimate_words(rows_b, cols, nnz_b);
+        let c_words = format.estimate_words(rows, cols, out_nnz);
+        let gather_words = match format {
+            SparseFormat::Csc => nnz_a + nnz_b,
+            _ => 0,
+        };
+        let (convert_read_words, convert_write_words) = if format == SparseFormat::Csr {
+            (0, 0)
+        } else {
+            let read = SparseFormat::Csr.estimate_words(rows, rows_b, nnz_a)
+                + SparseFormat::Csr.estimate_words(rows_b, cols, nnz_b);
+            (read, a_words + b_words)
+        };
+        Self {
+            format,
+            a_words,
+            b_words,
+            c_words,
+            gather_words,
+            convert_read_words,
+            convert_write_words,
+            convert_cycles: convert_read_words + convert_write_words,
+        }
+    }
+
+    /// Total compulsory DRAM words under this plan: the three images plus
+    /// the gather and conversion terms. For the CSR plan this is exactly
+    /// the legacy `(2·nnz_a + rows + 1) + (2·nnz_b + rows_b + 1) +
+    /// (2·out_nnz + rows + 1)`.
+    pub fn compulsory_dram_words(&self) -> u64 {
+        self.a_words
+            + self.b_words
+            + self.c_words
+            + self.gather_words
+            + self.convert_read_words
+            + self.convert_write_words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 1 example: 4×4, 6 nonzeros.
+    fn fig1() -> Csr {
+        Csr::from_triplets(
+            4,
+            4,
+            vec![
+                (0, 1, 1.0),
+                (0, 2, 2.0),
+                (1, 0, 3.0),
+                (2, 2, 4.0),
+                (2, 3, 5.0),
+                (3, 1, 6.0),
+            ],
+        )
+    }
+
+    #[test]
+    fn labels_and_tags_round_trip() {
+        for f in SparseFormat::ALL {
+            assert_eq!(f.label().parse::<SparseFormat>(), Ok(f));
+            assert_eq!(format!("{f}"), f.label());
+            assert_eq!(SparseFormat::from_tag(f.tag()), Some(f));
+        }
+        assert!("csr2".parse::<SparseFormat>().is_err());
+        assert_eq!(SparseFormat::from_tag(9), None);
+        assert_eq!(SparseFormat::default(), SparseFormat::Csr);
+    }
+
+    #[test]
+    fn every_format_round_trips_fig1() {
+        let a = fig1();
+        for f in SparseFormat::ALL {
+            let m = SparseMatrix::from_csr(f, &a);
+            assert_eq!(m.format(), f);
+            assert_eq!((m.rows(), m.cols(), m.nnz()), (4, 4, 6), "{f}");
+            assert_eq!(m.to_csr(), a, "{f}");
+        }
+    }
+
+    #[test]
+    fn triplets_are_canonical_across_formats() {
+        let a = fig1();
+        let reference = SparseMatrix::Csr(a.clone()).triplets();
+        assert_eq!(reference[0], (0, 1, 1.0));
+        for f in SparseFormat::ALL {
+            assert_eq!(SparseMatrix::from_csr(f, &a).triplets(), reference, "{f}");
+        }
+    }
+
+    #[test]
+    fn storage_words_match_hand_counts_on_fig1() {
+        // 4×4, 6 nnz, one mask word per row, and 5 occupied 4×4 blocks is
+        // impossible here: the whole matrix is a single block row of one
+        // 4×4 block grid cell -> occupied = 1.
+        let a = fig1();
+        let words = |f| SparseMatrix::from_csr(f, &a).storage_words();
+        // csr: (6 col ids + 5 row ptrs) + 6 values
+        assert_eq!(words(SparseFormat::Csr), StorageWords { index_words: 11, value_words: 6 });
+        // csc: (6 row ids + 5 col ptrs) + 6 values
+        assert_eq!(words(SparseFormat::Csc), StorageWords { index_words: 11, value_words: 6 });
+        // coo: (6 rows + 6 cols) + 6 values
+        assert_eq!(words(SparseFormat::Coo), StorageWords { index_words: 12, value_words: 6 });
+        // bitmap: 4 rows × 1 mask word + 6 values
+        assert_eq!(
+            words(SparseFormat::Bitmap),
+            StorageWords { index_words: 4, value_words: 6 }
+        );
+        // blocked: 1 occupied block + 2 block ptrs, 16 dense values
+        assert_eq!(
+            words(SparseFormat::BlockedCsr),
+            StorageWords { index_words: 3, value_words: 16 }
+        );
+    }
+
+    #[test]
+    fn estimates_cover_the_exact_images_on_fig1() {
+        let a = fig1();
+        for f in SparseFormat::ALL {
+            let exact = SparseMatrix::from_csr(f, &a).storage_words().total();
+            let est = f.estimate_words(4, 4, 6);
+            assert!(est >= exact, "{f}: estimate {est} < exact {exact}");
+        }
+        // And the estimate is exact for the non-blocked formats.
+        assert_eq!(SparseFormat::Csr.estimate_words(4, 4, 6), 17);
+        assert_eq!(SparseFormat::Csc.estimate_words(4, 4, 6), 17);
+        assert_eq!(SparseFormat::Coo.estimate_words(4, 4, 6), 18);
+        assert_eq!(SparseFormat::Bitmap.estimate_words(4, 4, 6), 10);
+        // blocked estimate: min(6 nnz, 1 block slot) = 1 -> 17 + 1 + 1.
+        assert_eq!(SparseFormat::BlockedCsr.estimate_words(4, 4, 6), 19);
+    }
+
+    #[test]
+    fn convert_is_canonical_and_costed() {
+        let a = fig1();
+        let src = SparseMatrix::from_csr(SparseFormat::Coo, &a);
+        // Same-format conversion is free.
+        let (same, cost) = src.convert(SparseFormat::Coo);
+        assert_eq!(same, src);
+        assert_eq!(cost, ConvertCost::default());
+        // Cross-format conversion streams both images.
+        let (bm, cost) = src.convert(SparseFormat::Bitmap);
+        assert_eq!(bm.to_csr(), a);
+        let expect = src.storage_words().total() + bm.storage_words().total();
+        assert_eq!(cost, ConvertCost { cycles: expect, dram_words: expect });
+        // Any chain back to the source format is the identity.
+        let (back, _) = bm.convert(SparseFormat::Coo);
+        assert_eq!(back, src);
+    }
+
+    #[test]
+    fn csr_plan_reproduces_the_legacy_traffic_formula() {
+        let plan = FormatPlan::csr(100, 80, 500, 400, 900);
+        assert_eq!(plan.a_words, 2 * 500 + 101);
+        assert_eq!(plan.b_words, 2 * 400 + 81);
+        assert_eq!(plan.c_words, 2 * 900 + 101);
+        assert_eq!(plan.gather_words + plan.convert_cycles, 0);
+        assert_eq!(
+            plan.compulsory_dram_words(),
+            (2 * 500 + 101) + (2 * 400 + 81) + (2 * 900 + 101)
+        );
+        // from_totals(Csr, ..) is the same plan.
+        assert_eq!(FormatPlan::from_totals(SparseFormat::Csr, 100, 60, 80, 500, 400, 900), plan);
+    }
+
+    #[test]
+    fn non_csr_plans_charge_gather_and_conversion() {
+        let (rows, cols, rows_b) = (100, 60, 80);
+        let (nnz_a, nnz_b, out_nnz) = (500, 400, 900);
+        for f in SparseFormat::ALL {
+            let plan = FormatPlan::from_totals(f, rows, cols, rows_b, nnz_a, nnz_b, out_nnz);
+            assert_eq!(plan.format, f);
+            assert_eq!(plan.a_words, f.estimate_words(rows, rows_b, nnz_a));
+            assert_eq!(plan.b_words, f.estimate_words(rows_b, cols, nnz_b));
+            assert_eq!(plan.c_words, f.estimate_words(rows, cols, out_nnz));
+            if f == SparseFormat::Csr {
+                assert_eq!(plan.convert_cycles, 0);
+            } else {
+                assert_eq!(
+                    plan.convert_read_words,
+                    SparseFormat::Csr.estimate_words(rows, rows_b, nnz_a)
+                        + SparseFormat::Csr.estimate_words(rows_b, cols, nnz_b)
+                );
+                assert_eq!(plan.convert_write_words, plan.a_words + plan.b_words);
+                assert_eq!(
+                    plan.convert_cycles,
+                    plan.convert_read_words + plan.convert_write_words
+                );
+            }
+            let gather = if f == SparseFormat::Csc { nnz_a + nnz_b } else { 0 };
+            assert_eq!(plan.gather_words, gather, "{f}");
+        }
+    }
+
+    #[test]
+    fn rectangular_and_empty_matrices_encode_in_every_format() {
+        let rect = Csr::from_triplets(2, 70, vec![(0, 0, 1.0), (1, 69, 2.0)]);
+        let empty = Csr::zero(3, 5);
+        for f in SparseFormat::ALL {
+            let m = SparseMatrix::from_csr(f, &rect);
+            assert_eq!(m.to_csr(), rect, "{f} rect");
+            let e = SparseMatrix::from_csr(f, &empty);
+            assert_eq!((e.rows(), e.cols(), e.nnz()), (3, 5, 0), "{f} empty");
+            assert_eq!(e.to_csr(), empty, "{f} empty");
+        }
+        // 70 columns -> 3 mask words per row.
+        let bm = SparseMatrix::from_csr(SparseFormat::Bitmap, &rect);
+        assert_eq!(bm.storage_words().index_words, 2 * 3);
+        // Two entries in two different block rows -> 2 occupied blocks.
+        let bl = SparseMatrix::from_csr(SparseFormat::BlockedCsr, &rect);
+        assert_eq!(bl.storage_words(), StorageWords { index_words: 2 + 2, value_words: 32 });
+    }
+}

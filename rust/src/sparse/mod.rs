@@ -4,13 +4,34 @@
 //! format (paper §II.B): a sparse matrix is three vectors — `value` (the
 //! nonzeros), `col_id` (the column coordinate of each nonzero) and `row_ptr`
 //! (the offset of each row's first nonzero in `value`). This module provides
-//! CSR plus the CSC / COO formats used by the dataflow baselines, conversion
-//! between them, Matrix-Market I/O, synthetic workload generators, and the
-//! Table-I dataset registry.
+//! CSR plus the CSC / COO / bitmap / blocked formats behind the unified
+//! [`format::SparseFormat`] API, conversion between them, Matrix-Market
+//! I/O, synthetic workload generators, and the Table-I dataset registry.
+//!
+//! # Ordering contract
+//!
+//! Every conversion in this module is **canonical**: the result is sorted
+//! row-major (ascending row, then ascending column within a row) with
+//! duplicate coordinates summed into one entry. [`Csr::from_triplets`] is
+//! the single canonicalisation point — all pairwise conversions
+//! (`Coo ↔ Csc`, `Csc ↔ Csr`, bitmap/blocked decode, …) route through it,
+//! so for any formats `X`, `Y`, `Z` and canonical matrix `m`:
+//!
+//! * `m.to_x().to_y()` equals `m.to_y()` (path independence), and
+//! * any conversion chain `X → Y → … → X` is the exact identity,
+//!   bit-for-bit on the stored values.
+//!
+//! Column-major ([`Csc`]) data is stored column-major internally but
+//! converts back to the same canonical row-major form as everyone else.
+//! The one documented lossy edge: [`format::BlockedCsr`] stores dense 4×4
+//! blocks, so an *explicitly stored zero* value cannot be distinguished
+//! from structural absence and is dropped on decode (canonical matrices
+//! built from the generators never contain stored zeros).
 
 mod coo;
 mod csc;
 mod csr;
+pub mod format;
 pub mod gen;
 pub mod io;
 pub mod stats;
@@ -20,6 +41,9 @@ pub mod tile;
 pub use coo::Coo;
 pub use csc::Csc;
 pub use csr::Csr;
+pub use format::{
+    Bitmap, BlockedCsr, ConvertCost, FormatPlan, SparseFormat, SparseMatrix, StorageWords,
+};
 pub use tile::TileShape;
 
 /// Deterministic 64-bit SplitMix PRNG.

@@ -1,0 +1,173 @@
+//! Integration tests for the unified [`SparseFormat`] substrate.
+//!
+//! The offline build has no proptest crate; properties are checked over
+//! deterministic SplitMix64-driven case sweeps (DESIGN.md §Dependencies),
+//! same discipline as `proptest_invariants.rs`: each test states an
+//! invariant and hammers it with many random instances, and failures
+//! print the offending case. Storage-footprint formulas are additionally
+//! pinned against hand-counted fixtures.
+
+use maple::prelude::*;
+use maple::sparse::gen::{generate, Profile};
+use maple::sparse::{ConvertCost, SparseMatrix, SplitMix64, StorageWords};
+
+/// Random CSR matrix drawn from a seed-indexed family: uniform, power-law
+/// and banded profiles over (mostly rectangular) shapes.
+fn arb_matrix(seed: u64) -> Csr {
+    let mut r = SplitMix64::new(seed);
+    let rows = 4 + r.below(60) as usize;
+    let cols = 4 + r.below(60) as usize;
+    let cap = rows * cols;
+    let nnz = 1 + r.below((cap / 2) as u64) as usize;
+    let profile = match r.below(3) {
+        0 => Profile::Uniform,
+        1 => Profile::PowerLaw { alpha: 0.5 + r.unit_f64() },
+        _ => Profile::Banded {
+            rel_bandwidth: 0.05 + 0.1 * r.unit_f64(),
+            cluster: 1 + r.below(5) as usize,
+        },
+    };
+    generate(rows, cols, nnz, profile, seed.wrapping_mul(0x9E37_79B9))
+}
+
+/// The random family plus the shapes it under-samples: strongly tall,
+/// strongly wide, and empty matrices.
+fn case_matrices() -> Vec<(String, Csr)> {
+    let mut cases: Vec<(String, Csr)> =
+        (0..32).map(|s| (format!("seed {s}"), arb_matrix(s))).collect();
+    cases.push(("tall".into(), generate(70, 3, 40, Profile::Uniform, 11)));
+    cases.push(("wide".into(), generate(3, 70, 40, Profile::PowerLaw { alpha: 1.1 }, 12)));
+    cases.push(("empty".into(), Csr::zero(6, 9)));
+    cases.push(("unit-empty".into(), Csr::zero(1, 1)));
+    cases
+}
+
+#[test]
+fn prop_every_pairwise_conversion_is_an_exact_identity() {
+    for (name, a) in case_matrices() {
+        let reference = SparseMatrix::Csr(a.clone()).triplets();
+        for from in SparseFormat::ALL {
+            let enc = SparseMatrix::from_csr(from, &a);
+            assert_eq!(enc.format(), from, "{name}");
+            assert_eq!(enc.rows(), a.rows(), "{name}: {from}");
+            assert_eq!(enc.cols(), a.cols(), "{name}: {from}");
+            assert_eq!(enc.nnz(), a.nnz(), "{name}: {from}");
+            assert_eq!(enc.to_csr(), a, "{name}: {from} must decode canonically");
+            assert_eq!(enc.triplets(), reference, "{name}: {from}");
+            for to in SparseFormat::ALL {
+                let (out, _) = enc.convert(to);
+                assert_eq!(out.format(), to, "{name}: {from}->{to}");
+                assert_eq!(out.triplets(), reference, "{name}: {from}->{to}");
+                let (back, _) = out.convert(from);
+                assert_eq!(back.to_csr(), a, "{name}: {from}->{to}->{from}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_conversion_cost_is_the_sum_of_both_images() {
+    for seed in 0..24 {
+        let a = arb_matrix(seed);
+        for from in SparseFormat::ALL {
+            let enc = SparseMatrix::from_csr(from, &a);
+            let (same, free) = enc.convert(from);
+            assert_eq!(same, enc, "seed {seed}: {from}");
+            assert_eq!(free, ConvertCost::default(), "seed {seed}: same-format must be free");
+            for to in SparseFormat::ALL {
+                if to == from {
+                    continue;
+                }
+                let (out, cost) = enc.convert(to);
+                let words = enc.storage_words().total() + out.storage_words().total();
+                assert_eq!(cost.dram_words, words, "seed {seed}: {from}->{to}");
+                assert_eq!(cost.cycles, words, "seed {seed}: one word per cycle");
+            }
+        }
+    }
+}
+
+#[test]
+fn storage_footprints_match_hand_counted_fixtures() {
+    // 4×5, nnz 6, columns 0..=4: the first four columns share one 4×4
+    // block and column 4 opens a second, so `blocked` materialises exactly
+    // two blocks. On this shape every closed-form estimate is exact.
+    let a = Csr::from_triplets(
+        4,
+        5,
+        vec![(0, 0, 1.0), (0, 4, 2.0), (1, 2, 3.0), (2, 1, 4.0), (3, 3, 5.0), (3, 4, 6.0)],
+    );
+    let expect = [
+        (SparseFormat::Csr, 11, 6),        // nnz + rows + 1 pointer words
+        (SparseFormat::Csc, 12, 6),        // nnz + cols + 1 pointer words
+        (SparseFormat::Coo, 12, 6),        // two coordinate words per entry
+        (SparseFormat::Bitmap, 4, 6),      // 4 rows × ⌈5/32⌉ mask words
+        (SparseFormat::BlockedCsr, 4, 32), // 2 ids + ⌈4/4⌉+1 ptrs, 16 values/block
+    ];
+    for (fmt, index_words, value_words) in expect {
+        let got = SparseMatrix::from_csr(fmt, &a).storage_words();
+        assert_eq!(got, StorageWords { index_words, value_words }, "{fmt}");
+        assert_eq!(got.total(), fmt.estimate_words(4, 5, 6), "{fmt} estimate must be exact here");
+    }
+}
+
+#[test]
+fn prop_closed_form_estimates_are_exact_for_position_free_formats() {
+    // csr/csc/coo/bitmap footprints depend only on (rows, cols, nnz) —
+    // the closed form the traffic planner uses is exact for any matrix.
+    let flat = [SparseFormat::Csr, SparseFormat::Csc, SparseFormat::Coo, SparseFormat::Bitmap];
+    for seed in 0..24 {
+        let a = arb_matrix(seed);
+        for fmt in flat {
+            let got = SparseMatrix::from_csr(fmt, &a).storage_words().total();
+            let est = fmt.estimate_words(a.rows(), a.cols(), a.nnz() as u64);
+            assert_eq!(got, est, "seed {seed}: {fmt}");
+        }
+    }
+}
+
+#[test]
+fn blocked_estimate_upper_bounds_the_exact_footprint() {
+    // 8×8 identity: eight nonzeros but only two occupied diagonal blocks.
+    // The totals-only bound (min(nnz, block slots) = 4) over-counts by
+    // design: the traffic plan must be a pure function of workload totals
+    // so cold and warm (disk-cached) runs price cells identically.
+    let eye = Csr::from_triplets(8, 8, (0..8).map(|i| (i, i, 1.0)).collect());
+    let exact = SparseMatrix::from_csr(SparseFormat::BlockedCsr, &eye).storage_words();
+    assert_eq!(exact, StorageWords { index_words: 2 + 3, value_words: 32 });
+    assert!(SparseFormat::BlockedCsr.estimate_words(8, 8, 8) >= exact.total());
+    for seed in 0..24 {
+        let a = arb_matrix(seed);
+        let est = SparseFormat::BlockedCsr.estimate_words(a.rows(), a.cols(), a.nnz() as u64);
+        let got = SparseMatrix::from_csr(SparseFormat::BlockedCsr, &a).storage_words();
+        assert!(est >= got.total(), "seed {seed}: {est} < {}", got.total());
+    }
+}
+
+#[test]
+fn format_axis_sweep_is_deterministic_and_csr_matches_formatless() {
+    let space = |formats: bool| {
+        let mut s = DesignSpace::over(vec![AcceleratorConfig::extensor_maple()])
+            .with_axis(Axis::Dataset(vec![WorkloadKey::suite("wv", 7, 16)]))
+            .with_axis(Axis::macs_per_pe(vec![2, 4]));
+        if formats {
+            s = s.with_axis(Axis::format(SparseFormat::ALL.to_vec()));
+        }
+        s
+    };
+    let grid = SimEngine::new().sweep(&space(true)).unwrap();
+    assert_eq!(grid.shape(), vec![1, 1, 2, 5, 1]);
+    // The CSR point is bit-identical to the formatless sweep; only the
+    // expanded config label differs (`+fmt=csr`).
+    let plain = SimEngine::new().sweep(&space(false)).unwrap();
+    for m in 0..2 {
+        let base = &plain.at(&[0, 0, m, 0]).analytic;
+        let mut relabeled = grid.at(&[0, 0, m, 0, 0]).analytic.clone();
+        assert_eq!(relabeled.config, format!("{}+fmt=csr", base.config), "macs index {m}");
+        relabeled.config = base.config.clone();
+        assert_eq!(&relabeled, base, "macs index {m}");
+    }
+    // The whole grid is invariant under the worker-thread count.
+    let par = SimEngine::new().with_threads(4).sweep(&space(true)).unwrap();
+    assert_eq!(par, grid);
+}
